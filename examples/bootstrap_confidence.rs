@@ -1,0 +1,69 @@
+//! Bootstrap edge-confidence estimation — the companion workflow the
+//! reference `lingam` package ships: resample → refit → per-edge
+//! selection probabilities, fanned across coordinator workers.
+//!
+//!     cargo run --release --example bootstrap_confidence [-- --resamples 100]
+//!
+//! Also cross-checks DirectLiNGAM against ICA-LiNGAM (Shimizu et al.
+//! 2006), the original estimator: two independent algorithms for the
+//! same identifiable model class should agree on stable edges.
+
+use alingam::coordinator::{bootstrap_direct, BootstrapOpts, Engine, EngineChoice};
+use alingam::lingam::IcaLingam;
+use alingam::prelude::*;
+use alingam::util::cli::{opt, Args};
+use alingam::util::table::{f, Table};
+
+fn main() -> alingam::util::Result<()> {
+    let args = Args::parse(
+        "bootstrap confidence demo",
+        &[
+            opt("dims", "number of variables", Some("8")),
+            opt("samples", "number of samples", Some("3000")),
+            opt("resamples", "bootstrap resamples", Some("60")),
+            opt("engine", "sequential|vectorized|xla", Some("vectorized")),
+            opt("seed", "random seed", Some("2024")),
+        ],
+    );
+    let d = args.usize("dims");
+    let mut rng = Pcg64::seed_from_u64(args.usize("seed") as u64);
+    let ds = sim::simulate_sem(&sim::SemSpec::layered(d, 2, 0.6), args.usize("samples"), &mut rng);
+    let engine = Engine::build(EngineChoice::parse(&args.req("engine"))?)?;
+
+    let opts = BootstrapOpts { resamples: args.usize("resamples"), workers: 2, ..Default::default() };
+    let boot = bootstrap_direct(&ds.data, engine.as_ordering(), &opts)?;
+
+    // ICA-LiNGAM as an independent cross-check
+    let ica = IcaLingam::new().fit(&ds.data)?;
+
+    let mut t = Table::new(
+        "edges with bootstrap probability ≥ 0.5",
+        &["edge", "boot prob", "mean weight", "true weight", "ICA-LiNGAM agrees"],
+    );
+    let mut agree = 0;
+    let mut total = 0;
+    for (from, to, p, w) in boot.stable_edges(0.5) {
+        let truth = ds.adjacency[(to, from)];
+        let ica_has = ica.adjacency[(to, from)].abs() > 0.05;
+        if truth != 0.0 {
+            total += 1;
+            if ica_has {
+                agree += 1;
+            }
+        }
+        t.row(&[
+            format!("x{from} → x{to}"),
+            f(p, 2),
+            f(w, 3),
+            f(truth, 3),
+            if ica_has { "yes" } else { "no" }.into(),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nstable true edges also found by ICA-LiNGAM: {agree}/{total} \
+         (two independent estimators agreeing on the identifiable structure)"
+    );
+    println!("bootstrap resamples: {}", boot.resamples);
+    Ok(())
+}

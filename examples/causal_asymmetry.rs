@@ -1,0 +1,45 @@
+//! Figure 1: the causal-asymmetry principle underpinning LiNGAM.
+//!
+//! For x → y with non-Gaussian noise, the regression residual is
+//! independent of the regressor only in the correct direction; with
+//! Gaussian noise the asymmetry vanishes and the direction is
+//! unidentifiable.
+//!
+//!     cargo run --release --example causal_asymmetry
+
+use alingam::apps::simbench::asymmetry_demo;
+use alingam::sim::Noise;
+use alingam::util::table::{f, Table};
+
+fn main() -> alingam::util::Result<()> {
+    let mut t = Table::new(
+        "Figure 1: MI(regressor, residual) by direction and noise",
+        &["noise", "theta", "MI forward (x->y)", "MI backward (y->x)", "identifiable"],
+    );
+    let n = 60_000;
+    for (name, noise) in [
+        ("Uniform(0,1)", Noise::Uniform01),
+        ("Laplace(1)", Noise::Laplace(1.0)),
+        ("Exponential(1)", Noise::Exponential(1.0)),
+        ("Gaussian(1)", Noise::Gaussian(1.0)),
+    ] {
+        for theta in [0.8, 1.5] {
+            let (fwd, bwd) = asymmetry_demo(noise, n, theta, 42)?;
+            let identifiable = bwd > 5.0 * fwd.max(1e-3);
+            t.row(&[
+                name.into(),
+                f(theta, 1),
+                f(fwd, 4),
+                f(bwd, 4),
+                if identifiable { "yes".into() } else { "no (symmetric)".into() },
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\nReading: non-Gaussian rows show MI ≈ 0 forward but > 0 backward — the\n\
+         asymmetry DirectLiNGAM exploits. The Gaussian rows are symmetric: no\n\
+         direction information exists (LiNGAM's non-Gaussianity assumption)."
+    );
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! §4.1 / Table 1: gene-regulatory-network discovery from interventional
+//! (Perturb-seq-style) expression data, with Stein-VI interventional
+//! evaluation against a DCD-FG-like continuous-optimization baseline.
+//!
+//!     cargo run --release --example gene_networks [-- --scale medium --engine xla]
+//!
+//! The synthetic generator preserves the paper's experimental structure
+//! (sparse GRN, targeted knockouts, three conditions, 20% held-out
+//! interventions); see DESIGN.md §Substitutions.
+
+use alingam::apps::genes::{run_table1, GeneScale, GenesConfig};
+use alingam::baselines::SvgdOpts;
+use alingam::coordinator::{Engine, EngineChoice};
+use alingam::util::cli::{opt, Args};
+use alingam::util::table::{f, secs, Table};
+
+fn main() -> alingam::util::Result<()> {
+    let args = Args::parse(
+        "Table-1 gene pipeline",
+        &[
+            opt("scale", "small|medium|paper", Some("small")),
+            opt("engine", "sequential|vectorized|xla", Some("vectorized")),
+            opt("seed", "random seed", Some("2024")),
+            opt("svgd-iters", "Stein VI iterations", Some("300")),
+            opt("svgd-particles", "Stein VI particles", Some("50")),
+        ],
+    );
+    let engine = Engine::build(EngineChoice::parse(&args.req("engine"))?)?;
+    let cfg = GenesConfig {
+        scale: GeneScale::parse(&args.req("scale")).expect("bad --scale"),
+        seed: args.usize("seed") as u64,
+        svgd: SvgdOpts {
+            iters: args.usize("svgd-iters"),
+            particles: args.usize("svgd-particles"),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+
+    println!("engine: {}  scale: {:?}", engine.as_ordering().name(), cfg.scale);
+    let rows = run_table1(&cfg, engine.as_ordering())?;
+
+    let mut t = Table::new(
+        "Table 1: I-NLL / I-MAE across held-out interventions (lower is better)",
+        &["condition", "method", "I-NLL", "I-MAE", "leaves", "fit time"],
+    );
+    for r in &rows {
+        t.row(&[
+            r.condition.name().into(),
+            r.method.into(),
+            f(r.metrics.nll, 2),
+            f(r.metrics.mae, 2),
+            r.leaves.to_string(),
+            secs(r.fit_secs),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nPaper's Table 1 (real Perturb-CITE-seq): DirectLiNGAM nll/mae = \n\
+         co-culture 1.5/0.7, IFN 1.5/0.9, control 3/1.6; DCD-FG ≈ 1.1/0.7 each.\n\
+         The shape to reproduce: comparable I-MAE, LiNGAM I-NLL slightly higher,\n\
+         control the hardest condition for LiNGAM."
+    );
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! §4.2 / Figure 4 + Table 2: VarLiNGAM on S&P-500-style hourly data —
+//! instantaneous-graph degree distributions and total-causal-influence
+//! rankings.
+//!
+//!     cargo run --release --example stock_var [-- --dims 487 --engine vectorized]
+//!
+//! The synthetic market preserves the paper's pipeline end to end
+//! (missing values → interpolation → differencing → VAR(1) → LiNGAM);
+//! see DESIGN.md §Substitutions.
+
+use alingam::apps::stocks::run_stocks;
+use alingam::coordinator::{Engine, EngineChoice};
+use alingam::sim::MarketSpec;
+use alingam::util::cli::{opt, Args};
+use alingam::util::table::{f, histogram, secs, Table};
+
+fn main() -> alingam::util::Result<()> {
+    let args = Args::parse(
+        "Figure-4 / Table-2 stock pipeline",
+        &[
+            opt("dims", "number of tickers (487 = paper scale)", Some("60")),
+            opt("samples", "hourly observations", Some("1500")),
+            opt("engine", "sequential|vectorized|xla", Some("vectorized")),
+            opt("seed", "random seed", Some("2024")),
+        ],
+    );
+    let engine = Engine::build(EngineChoice::parse(&args.req("engine"))?)?;
+    let dims = args.usize("dims");
+    let spec = MarketSpec {
+        dim: dims,
+        t_len: args.usize("samples"),
+        ..if dims >= 200 { MarketSpec::default() } else { MarketSpec::small() }
+    };
+
+    println!("market: {} tickers × {} hours, engine {}", spec.dim, spec.t_len, engine.as_ordering().name());
+    let r = run_stocks(&spec, args.usize("seed") as u64, engine.as_ordering(), 5)?;
+
+    let mut t = Table::new(
+        "Table 2: top-5 total causal influence (exerting / receiving)",
+        &["rank", "entity", "score", "role"],
+    );
+    for (k, (name, lag, score)) in r.top_exerting.iter().enumerate() {
+        t.row(&[(k + 1).to_string(), format!("{name}_tau-{lag}"), f(*score, 3), "exerting".into()]);
+    }
+    for (k, (name, lag, score)) in r.top_receiving.iter().enumerate() {
+        t.row(&[(k + 1).to_string(), format!("{name}_tau-{lag}"), f(*score, 3), "receiving".into()]);
+    }
+    t.print();
+
+    print!("{}", histogram("Figure 4: in-degree distribution of θ0", &r.in_degrees, 12));
+    print!("{}", histogram("Figure 4: out-degree distribution of θ0", &r.out_degrees, 12));
+    println!("\nleaf tickers (influence nothing): {:?}", r.leaves);
+    println!("designated exerters in top-5: {}/5   USB/FITB as leaves: {}/2", r.exerter_hits, r.leaf_hits);
+    println!("fit: {} ({:.1}% in causal ordering)", secs(r.fit_secs), 100.0 * r.ordering_frac);
+    println!(
+        "\nPaper's qualitative findings to compare: in/out degrees roughly\n\
+         symmetric with no dominant hubs; holding companies USB & FITB are leaves;\n\
+         consumer-facing firms (NVR, AZO, CMG, BKNG, MTD) exert the most influence."
+    );
+    Ok(())
+}

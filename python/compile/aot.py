@@ -1,0 +1,130 @@
+"""AOT lowering: jax -> stablehlo -> XLA computation -> **HLO text**.
+
+HLO text (not a serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emits one artifact per (computation, shape-bucket):
+
+    artifacts/order_scores_n{N}_d{D}.hlo.txt
+    artifacts/order_step_n{N}_d{D}.hlo.txt
+    artifacts/var_fit_t{T}_d{D}.hlo.txt
+
+plus ``artifacts/manifest.txt`` (one line per artifact:
+``kind n d path``) that the Rust ArtifactRegistry reads to pick the
+smallest bucket covering a request.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--full]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Default shape buckets. Scores/step buckets: (n_samples, dims);
+# var_fit buckets: (t_len, dims). --full adds the larger sizes used by
+# the paper-scale benches.
+ORDER_BUCKETS = [
+    (256, 8),
+    (1024, 8),
+    (1024, 16),
+    (4096, 16),
+    (4096, 32),
+    (4096, 64),
+    (16384, 32),
+]
+ORDER_BUCKETS_FULL = ORDER_BUCKETS + [
+    (16384, 64),
+    (16384, 128),
+    (65536, 128),
+]
+VAR_BUCKETS = [(512, 16), (2048, 32), (4096, 64)]
+VAR_BUCKETS_FULL = VAR_BUCKETS + [(4096, 128)]
+
+DTYPE = jnp.float32
+
+
+def to_hlo_text(fn, *specs):
+    """Lower a jax function at the given ShapeDtypeStructs to HLO text."""
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(out_dir, name, text, manifest, kind, n, d):
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    manifest.append(f"{kind} {n} {d} {name}")
+    print(f"  wrote {name}  ({len(text) / 1024:.0f} KiB)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--full", action="store_true", help="emit paper-scale buckets too")
+    ap.add_argument(
+        "--only", default=None, help="emit a single kind (order_scores|order_step|var_fit)"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    order_buckets = ORDER_BUCKETS_FULL if args.full else ORDER_BUCKETS
+    var_buckets = VAR_BUCKETS_FULL if args.full else VAR_BUCKETS
+    manifest = []
+
+    for n, d in order_buckets:
+        x = jax.ShapeDtypeStruct((n, d), DTYPE)
+        rm = jax.ShapeDtypeStruct((n,), DTYPE)
+        cm = jax.ShapeDtypeStruct((d,), DTYPE)
+        if args.only in (None, "order_scores"):
+            emit(
+                args.out_dir,
+                f"order_scores_n{n}_d{d}.hlo.txt",
+                to_hlo_text(model.order_scores, x, rm, cm),
+                manifest,
+                "order_scores",
+                n,
+                d,
+            )
+        if args.only in (None, "order_step"):
+            emit(
+                args.out_dir,
+                f"order_step_n{n}_d{d}.hlo.txt",
+                to_hlo_text(model.order_step, x, rm, cm),
+                manifest,
+                "order_step",
+                n,
+                d,
+            )
+
+    for t, d in var_buckets:
+        if args.only in (None, "var_fit"):
+            s = jax.ShapeDtypeStruct((t, d), DTYPE)
+            rm = jax.ShapeDtypeStruct((t,), DTYPE)
+            emit(
+                args.out_dir,
+                f"var_fit_t{t}_d{d}.hlo.txt",
+                to_hlo_text(model.var_fit, s, rm),
+                manifest,
+                "var_fit",
+                t,
+                d,
+            )
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(sorted(manifest)) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: the residual-entropy matrix — DirectLiNGAM's O(D^2 N)
+hot spot (Algorithm 1's inner pair loop).
+
+Parallelization scheme (the TPU re-think of the paper's CUDA design, see
+DESIGN.md #Hardware-Adaptation):
+
+  * CUDA: one thread-block per candidate root i, threads over j, shared-
+    memory tree reductions.
+  * Here: 2-D Pallas grid over (i, j-tile). Each program owns one
+    (candidate i, tile of j) pair, streams x_i plus a [N, BJ] panel tile
+    through VMEM, and reduces the log-cosh / gauss-score expectations with
+    vectorized sums over the sample axis (VPU lanes play the role of the
+    warp; no atomics are needed because every program owns its own output
+    tile, mirroring the paper's observation that k_list updates need no
+    ordering).
+
+The kernel is lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so the interpret path (plain HLO) is the
+correctness + artifact route; real-TPU performance is *estimated* in
+DESIGN.md from the VMEM/MXU model, never measured here.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_J = 128
+
+
+def _kernel(xi_ref, xs_ref, rho_ref, nv_ref, out_ref):
+    """One (i, j-tile) program.
+
+    xi_ref:  [N, 1]   — candidate root column i (standardized)
+    xs_ref:  [N, BJ]  — tile of the standardized panel
+    rho_ref: [1, BJ]  — correlations rho[i, j] for the tile
+    nv_ref:  [1, 1]   — n_valid
+    out_ref: [1, BJ]  — HR[i, j] for the tile
+    """
+    xi = xi_ref[...]  # [N, 1]
+    xs = xs_ref[...]  # [N, BJ]
+    rho = rho_ref[...]  # [1, BJ]
+    nv = nv_ref[0, 0]
+    denom = jnp.sqrt(jnp.maximum(1.0 - rho * rho, ref.DENOM_EPS))  # [1, BJ]
+    r = (xi - rho * xs) / denom  # [N, BJ]; padded rows stay exactly 0
+    e_lc = jnp.sum(ref.log_cosh(r), axis=0, keepdims=True) / nv  # [1, BJ]
+    e_gs = jnp.sum(ref.gauss_score(r), axis=0, keepdims=True) / nv
+    out_ref[...] = ref.H_NU - ref.K1 * (e_lc - ref.GAMMA) ** 2 - ref.K2 * e_gs**2
+
+
+@functools.partial(jax.jit, static_argnames=("block_j",))
+def residual_entropy_matrix(xs, rho, n_valid, *, block_j=None):
+    """HR[i, j] = H((xs_i - rho_ij xs_j)/sqrt(1-rho_ij^2)) via Pallas.
+
+    xs: [N, D] standardized masked panel; rho: [D, D]; n_valid: scalar.
+    The panel is passed twice: once blocked as the candidate column i
+    (BlockSpec picks column i of the array), once as the j-tile.
+    """
+    n, d = xs.shape
+    bj = min(d, block_j or DEFAULT_BLOCK_J)
+    assert d % bj == 0, f"D={d} must be a multiple of the j-tile {bj}"
+    nv = jnp.asarray(n_valid, xs.dtype).reshape(1, 1)
+    return pl.pallas_call(
+        _kernel,
+        grid=(d, d // bj),
+        in_specs=[
+            pl.BlockSpec((n, 1), lambda i, j: (0, i)),  # x_i column
+            pl.BlockSpec((n, bj), lambda i, j: (0, j)),  # panel j-tile
+            pl.BlockSpec((1, bj), lambda i, j: (i, j)),  # rho row-tile
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),  # n_valid
+        ],
+        out_specs=pl.BlockSpec((1, bj), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, d), xs.dtype),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(xs, xs, rho.astype(xs.dtype), nv)
+
+
+def vmem_bytes(n, d, block_j=DEFAULT_BLOCK_J, dtype_bytes=4):
+    """VMEM footprint model for one program (DESIGN.md #Perf):
+    x_i column + panel tile + residual tile + rho/output rows."""
+    bj = min(d, block_j)
+    return dtype_bytes * (n + 2 * n * bj + 2 * bj)
+
+
+def flops(n, d):
+    """Approximate flop count of the full HR matrix (for the roofline
+    estimate): ~14 flops per (t, i, j) element for residual + both
+    nonlinearities + reductions."""
+    return 14 * n * d * d

@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: least-squares residualization update.
+
+After the exogenous variable m is chosen, every remaining active column
+is replaced by its regression residual on x_m:
+
+    x_j' = (x_j - mean_j) - beta_j (x_m - mean_m)
+
+The O(N D) elementwise update runs as a j-tiled Pallas kernel; the scalar
+regression coefficients beta (one matvec) are computed in L2 and streamed
+in. Padded rows and the deactivated column are re-zeroed inside the
+kernel, preserving the buffer invariant the masked statistics rely on.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_J = 128
+
+
+def _kernel(xc_ref, xm_ref, beta_ref, keep_ref, out_ref):
+    """One j-tile program.
+
+    xc_ref:   [N, BJ] — centered panel tile (padded rows already 0)
+    xm_ref:   [N, 1]  — centered chosen column
+    beta_ref: [1, BJ] — regression coefficients cov(j,m)/var(m)
+    keep_ref: [1, BJ] — col_mask * (1 - onehot_m)
+    out_ref:  [N, BJ]
+    """
+    xc = xc_ref[...]
+    xm = xm_ref[...]
+    beta = beta_ref[...]
+    keep = keep_ref[...]
+    out_ref[...] = (xc - xm * beta) * keep
+
+
+@functools.partial(jax.jit, static_argnames=("block_j",))
+def residualize_panel(centered, xm, beta, keep, *, block_j=None):
+    """Apply the update on a centered panel. Shapes: [N,D], [N], [D], [D]."""
+    n, d = centered.shape
+    bj = min(d, block_j or DEFAULT_BLOCK_J)
+    assert d % bj == 0, f"D={d} must be a multiple of the j-tile {bj}"
+    return pl.pallas_call(
+        _kernel,
+        grid=(d // bj,),
+        in_specs=[
+            pl.BlockSpec((n, bj), lambda j: (0, j)),
+            pl.BlockSpec((n, 1), lambda j: (0, 0)),
+            pl.BlockSpec((1, bj), lambda j: (0, j)),
+            pl.BlockSpec((1, bj), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((n, bj), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, d), centered.dtype),
+        interpret=True,
+    )(centered, xm.reshape(n, 1), beta.reshape(1, d), keep.reshape(1, d))

@@ -1,0 +1,102 @@
+"""L2: the JAX compute graph around the Pallas kernels.
+
+Three exported computations, each AOT-lowered to HLO text by ``aot.py``
+for a set of shape buckets and executed from the Rust coordinator via
+PJRT (python never runs on the request path):
+
+- ``order_scores(x, row_mask, col_mask) -> k_list``
+    Algorithm 1 over a zero-padded panel. Standardization, the
+    correlation matmul (the MXU-friendly hoist) and the entropy
+    composition live here; the O(D^2 N) residual-entropy sweep is the
+    Pallas kernel.
+
+- ``order_step(x, row_mask, col_mask) -> (x', m, k_list)``
+    The fused hot-path step: scores -> argmax -> residualize. One
+    artifact call per DirectLiNGAM iteration instead of two, halving
+    host<->device round trips (see EXPERIMENTS.md #Perf).
+
+- ``var_fit(series, row_mask) -> (m1, resid)``
+    Masked VAR(1) least squares for VarLiNGAM (normal equations; the
+    SPD inverse is a Newton-Schulz iteration so the artifact stays free
+    of LAPACK custom-calls).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import causal_order, residualize, ref
+
+
+def order_scores(x, row_mask, col_mask):
+    """k_list over active variables; inactive entries = ref.INACTIVE."""
+    xs, n_valid = ref.masked_standardize(x, row_mask, col_mask)
+    rho = xs.T @ xs / n_valid
+    h = ref.column_entropies(xs, n_valid)
+    hr = causal_order.residual_entropy_matrix(xs, rho, n_valid)
+    diff = (h[None, :] + hr) - (h[:, None] + hr.T)
+    pen = jnp.minimum(0.0, diff) ** 2
+    k = -jnp.sum(pen * col_mask[None, :], axis=1)
+    return jnp.where(col_mask > 0, k, ref.INACTIVE)
+
+
+def order_step(x, row_mask, col_mask):
+    """Fused DirectLiNGAM iteration. Returns (x_next, m, k_list)."""
+    k_list = order_scores(x, row_mask, col_mask)
+    m = jnp.argmax(k_list)
+    m_onehot = jnp.zeros_like(col_mask).at[m].set(1.0)
+
+    rm = row_mask[:, None]
+    n_valid = jnp.maximum(jnp.sum(row_mask), 1.0)
+    mean = jnp.sum(x * rm, axis=0) / n_valid
+    centered = (x - mean[None, :]) * rm
+    xm = centered @ m_onehot
+    var_m = jnp.maximum(jnp.sum(xm * xm) / n_valid, 1e-30)
+    beta = (centered.T @ xm) / n_valid / var_m
+    keep = col_mask * (1.0 - m_onehot)
+    x_next = residualize.residualize_panel(centered, xm, beta, keep)
+    return x_next, m.astype(jnp.int32), k_list
+
+
+def var_fit(series, row_mask):
+    """Masked VAR(1) least squares.
+
+    series: [T, D] zero-padded; row_mask: [T] with the first t_valid
+    entries 1. Returns (M1 [D, D], residuals [T-1, D] zero-padded).
+    """
+    past = series[:-1, :]
+    future = series[1:, :]
+    # a (past, future) pair is valid iff both rows are valid
+    pm = (row_mask[:-1] * row_mask[1:])[:, None]
+    n_valid = jnp.maximum(jnp.sum(pm), 1.0)
+    p_mean = jnp.sum(past * pm, axis=0) / n_valid
+    f_mean = jnp.sum(future * pm, axis=0) / n_valid
+    pc = (past - p_mean[None, :]) * pm
+    fc = (future - f_mean[None, :]) * pm
+    d = series.shape[1]
+    # relative ridge keeps the gram well-conditioned at any data scale
+    gram = pc.T @ pc
+    ridge = 1e-6 * (jnp.trace(gram) / d + 1.0)
+    gram = gram + ridge * jnp.eye(d, dtype=series.dtype)
+    m1t = _spd_inverse(gram) @ (pc.T @ fc)  # [D, D], M1 transposed
+    resid = (fc - pc @ m1t) * pm
+    return m1t.T, resid
+
+
+def _spd_inverse(a, iters=40):
+    """SPD matrix inverse via Newton-Schulz iteration (pure matmuls).
+
+    jnp.linalg.solve/cholesky lower to LAPACK typed-FFI custom-calls that
+    the pinned xla_extension (0.5.1) cannot execute; Newton-Schulz
+    X <- X (2I - A X) stays in plain HLO, is MXU-friendly on real TPUs,
+    and converges quadratically from X0 = I / gershgorin_bound(A).
+    """
+    d = a.shape[0]
+    eye2 = 2.0 * jnp.eye(d, dtype=a.dtype)
+    # Gershgorin upper bound on the spectral radius (A is SPD)
+    bound = jnp.max(jnp.sum(jnp.abs(a), axis=1))
+    x = jnp.eye(d, dtype=a.dtype) / bound
+
+    def body(_, x):
+        return x @ (eye2 - a @ x)
+
+    return jax.lax.fori_loop(0, iters, body, x)

@@ -1,0 +1,110 @@
+"""L1/L2 performance model report (DESIGN.md / EXPERIMENTS.md #Perf).
+
+``interpret=True`` Pallas timings are CPU emulation — NOT a TPU proxy —
+so real-TPU performance is *estimated* structurally:
+
+- VMEM footprint of one (i, j-tile) program of the residual-entropy
+  kernel, vs the ~16 MiB VMEM budget of a TPUv4 core;
+- FLOP balance between the MXU-bound correlation matmul and the
+  VPU-bound entropy sweep;
+- arithmetic intensity of the kernel (flops per HBM byte), which decides
+  whether the kernel is compute- or bandwidth-bound at TPU ratios;
+- per-iteration host<->device transfer volume of the fused order_step
+  artifact.
+
+Also dumps XLA HLO op statistics per artifact as a cheap fusion audit:
+the interpret-mode pallas kernel should lower to a single while-loop
+with fused elementwise bodies, not a soup of standalone kernels.
+
+Usage: python -m compile.perf_report [--buckets "4096x32,16384x64"]
+"""
+
+import argparse
+
+import jax
+
+from compile import model
+from compile.kernels import causal_order
+
+VMEM_BUDGET = 16 * 1024 * 1024  # TPUv4 ~16 MiB/core
+# TPUv4 reference ratios (per chip): 275 TF/s bf16 MXU, ~75 TF/s f32 VPU
+# (vector), 1200 GB/s HBM.
+MXU_FLOPS = 275e12
+VPU_FLOPS = 75e12 / 4  # f32 transcendental-heavy estimate
+HBM_BPS = 1200e9
+
+
+def report_bucket(n, d, block_j):
+    bj = min(d, block_j)
+    # shrink the j-tile until one program fits the VMEM budget — the
+    # schedule knob BlockSpec exposes (results are tile-invariant, see
+    # python/tests/test_kernel.py::test_hr_kernel_blocking_invariant)
+    while bj > 1 and causal_order.vmem_bytes(n, d, bj) > VMEM_BUDGET:
+        bj //= 2
+    vmem = causal_order.vmem_bytes(n, d, bj)
+    # entropy sweep: ~14 flops per (t, i, j) element (residual + both
+    # nonlinearities + reductions)
+    sweep_flops = causal_order.flops(n, d)
+    # correlation matmul: 2 n d^2 (the MXU hoist)
+    mxu_flops = 2 * n * d * d
+    # HBM traffic per full HR computation: panel read once per i (no
+    # reuse across i without a second-level cache) + outputs
+    hbm_bytes = 4 * (d * (n + n * d) + d * d)
+    intensity = sweep_flops / hbm_bytes
+
+    t_vpu = sweep_flops / VPU_FLOPS
+    t_hbm = hbm_bytes / HBM_BPS
+    bound = "compute (VPU)" if t_vpu > t_hbm else "bandwidth (HBM)"
+    t_est = max(t_vpu, t_hbm)
+
+    print(f"\n  bucket {n}x{d} (j-tile {bj})")
+    print(f"    VMEM/program      : {vmem / 1024:.0f} KiB  ({100 * vmem / VMEM_BUDGET:.1f}% of budget)")
+    print(f"    entropy sweep     : {sweep_flops / 1e9:.2f} GFLOP (VPU)")
+    print(f"    correlation matmul: {mxu_flops / 1e9:.3f} GFLOP (MXU) — {100 * mxu_flops / sweep_flops:.1f}% of sweep")
+    print(f"    HBM traffic       : {hbm_bytes / 1e6:.1f} MB, intensity {intensity:.1f} flop/B → {bound}")
+    print(f"    est. TPUv4 time   : {t_est * 1e3:.3f} ms per HR matrix "
+          f"({d - 1} calls/fit → {t_est * (d - 1) * 1e3:.1f} ms ordering est.)")
+    # transfer per fused order_step call (pad + masks up, panel + k down)
+    up = 4 * (n * d + n + d)
+    down = 4 * (n * d + 1 + d)
+    print(f"    PJRT transfer/call: {up / 1e6:.2f} MB up, {down / 1e6:.2f} MB down")
+
+
+def hlo_op_stats(n, d):
+    """Fusion audit: op histogram of the lowered order_step HLO."""
+    import collections
+
+    import jax.numpy as jnp
+
+    x = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    rm = jax.ShapeDtypeStruct((n,), jnp.float32)
+    cm = jax.ShapeDtypeStruct((d,), jnp.float32)
+    lowered = jax.jit(model.order_step).lower(x, rm, cm)
+    shlo = str(lowered.compiler_ir("stablehlo"))
+    ops = collections.Counter()
+    for tok in shlo.replace("(", " ").split():
+        if tok.startswith("stablehlo."):
+            ops[tok.split("stablehlo.")[1].strip('"')] += 1
+    top = ", ".join(f"{k}:{v}" for k, v in ops.most_common(12))
+    print(f"\n  order_step {n}x{d} stablehlo op histogram (top12): {top}")
+    print(f"    while loops: {ops.get('while', 0)} (pallas grid) — "
+          f"dot_general: {ops.get('dot_general', 0)} (MXU candidates)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--buckets", default="1024x16,4096x32,16384x64,65536x128")
+    ap.add_argument("--block-j", type=int, default=causal_order.DEFAULT_BLOCK_J)
+    args = ap.parse_args()
+
+    print("== L1 kernel performance model (structural; interpret-mode wallclock is NOT a TPU proxy) ==")
+    for spec in args.buckets.split(","):
+        n, d = spec.strip().split("x")
+        report_bucket(int(n), int(d), args.block_j)
+
+    print("\n== L2 fusion audit ==")
+    hlo_op_stats(1024, 16)
+
+
+if __name__ == "__main__":
+    main()

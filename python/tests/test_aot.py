@@ -1,0 +1,69 @@
+"""AOT emission sanity: the HLO-text artifacts are well-formed, the
+manifest matches the files on disk, and the interchange constraints the
+Rust loader relies on hold (ENTRY computation present, tuple root,
+expected parameter shapes)."""
+
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+ART = os.path.join(REPO, "artifacts")
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    manifest = os.path.join(ART, "manifest.txt")
+    if not os.path.exists(manifest):
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", ART],
+            cwd=os.path.join(REPO, "python"),
+            check=True,
+        )
+    with open(manifest) as f:
+        lines = [l.split() for l in f.read().splitlines() if l.strip()]
+    return lines
+
+
+def test_manifest_entries_exist_and_unique(artifacts):
+    assert len(artifacts) >= 10
+    names = [row[3] for row in artifacts]
+    assert len(set(names)) == len(names), "duplicate artifact names"
+    for kind, n, d, name in artifacts:
+        assert kind in {"order_scores", "order_step", "var_fit"}
+        assert int(n) > 0 and int(d) > 0
+        path = os.path.join(ART, name)
+        assert os.path.exists(path), f"missing {name}"
+        assert os.path.getsize(path) > 1_000, f"{name} suspiciously small"
+
+
+def test_hlo_text_is_parsable_shape(artifacts):
+    for kind, n, d, name in artifacts[:6]:
+        text = open(os.path.join(ART, name)).read()
+        assert "ENTRY" in text, f"{name}: no ENTRY computation"
+        # root must be a tuple (return_tuple=True contract with the loader)
+        assert re.search(r"ROOT\s+\S+\s*=\s*\(", text), f"{name}: non-tuple root"
+        # declared parameter shape matches the bucket
+        if kind in ("order_scores", "order_step"):
+            assert f"f32[{n},{d}]" in text, f"{name}: missing panel param shape"
+            assert f"f32[{n}]" in text and f"f32[{d}]" in text, f"{name}: missing masks"
+
+
+def test_no_custom_calls(artifacts):
+    """xla_extension 0.5.1 cannot run typed-FFI custom-calls (LAPACK etc.);
+    every artifact must lower to plain HLO (the Newton-Schulz / pallas-
+    interpret design constraint)."""
+    for _, _, _, name in artifacts:
+        text = open(os.path.join(ART, name)).read()
+        assert "custom-call" not in text, f"{name} contains a custom-call"
+
+
+def test_filename_matches_manifest_row(artifacts):
+    for kind, n, d, name in artifacts:
+        if kind == "var_fit":
+            assert name == f"var_fit_t{n}_d{d}.hlo.txt"
+        else:
+            assert name == f"{kind}_n{n}_d{d}.hlo.txt"

@@ -1,0 +1,162 @@
+"""L1 correctness: the Pallas kernels against the pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes, masks and data distributions; every
+case asserts allclose between `causal_order.residual_entropy_matrix` /
+`residualize.residualize_panel` and their ref.py counterparts.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import causal_order, ref, residualize
+
+hypothesis.settings.register_profile(
+    "kernels", max_examples=25, deadline=None, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def make_panel(n, d, n_valid, d_active, seed, dtype=np.float32, dist="uniform"):
+    """Zero-padded panel with SEM-ish dependent columns + masks."""
+    rng = np.random.default_rng(seed)
+    if dist == "uniform":
+        base = rng.uniform(0.0, 1.0, size=(n_valid, d))
+    elif dist == "laplace":
+        base = rng.laplace(0.0, 1.0, size=(n_valid, d))
+    else:
+        base = rng.normal(0.0, 1.0, size=(n_valid, d))
+    # chain-like dependence so correlations are non-trivial
+    for j in range(1, d):
+        base[:, j] += 0.8 * base[:, j - 1]
+    x = np.zeros((n, d), dtype=dtype)
+    x[:n_valid, :] = base.astype(dtype)
+    row_mask = np.zeros(n, dtype=dtype)
+    row_mask[:n_valid] = 1.0
+    col_mask = np.zeros(d, dtype=dtype)
+    col_mask[:d_active] = 1.0
+    # inactive columns zeroed (the Rust engine maintains this invariant)
+    x[:, d_active:] = 0.0
+    return jnp.asarray(x), jnp.asarray(row_mask), jnp.asarray(col_mask)
+
+
+def tol(dtype):
+    return dict(rtol=2e-4, atol=2e-4) if dtype == np.float32 else dict(rtol=1e-9, atol=1e-9)
+
+
+def offdiag(m):
+    """The HR diagonal is the degenerate self-pair (rho = 1, residual = 0/eps):
+    catastrophic in f32 and *never consumed* (diff_ii = hr_ii - hr_ii = 0),
+    so comparisons exclude it."""
+    m = np.array(m, copy=True)
+    np.fill_diagonal(m, 0.0)
+    return m
+
+
+# ---------------------------------------------------------------- HR kernel
+
+
+@hypothesis.given(
+    n=st.sampled_from([32, 64, 256]),
+    d=st.sampled_from([4, 8, 16]),
+    frac_valid=st.floats(0.3, 1.0),
+    dist=st.sampled_from(["uniform", "laplace", "normal"]),
+    seed=st.integers(0, 10_000),
+)
+def test_hr_kernel_matches_ref(n, d, frac_valid, dist, seed):
+    n_valid = max(8, int(n * frac_valid))
+    x, rm, cm = make_panel(n, d, n_valid, d, seed, dist=dist)
+    xs, nv = ref.masked_standardize(x, rm, cm)
+    rho = xs.T @ xs / nv
+    got = causal_order.residual_entropy_matrix(xs, rho, nv)
+    want = ref.residual_entropy_matrix_ref(xs, rho, nv)
+    np.testing.assert_allclose(offdiag(got), offdiag(want), **tol(np.float32))
+
+
+@hypothesis.given(
+    block_j=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(0, 1000),
+)
+def test_hr_kernel_blocking_invariant(block_j, seed):
+    """Tiling must not change the result (VMEM schedule is semantics-free)."""
+    x, rm, cm = make_panel(128, 8, 100, 8, seed)
+    xs, nv = ref.masked_standardize(x, rm, cm)
+    rho = xs.T @ xs / nv
+    full = causal_order.residual_entropy_matrix(xs, rho, nv)
+    tiled = causal_order.residual_entropy_matrix(xs, rho, nv, block_j=block_j)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(tiled), rtol=1e-6, atol=1e-6)
+
+
+def test_hr_diagonal_never_reaches_scores():
+    """Self-pairs are degenerate but cancel: diff_ii = 0 exactly, so the
+    diagonal can never contribute to k_list."""
+    x, rm, cm = make_panel(64, 4, 64, 4, 3)
+    xs, nv = ref.masked_standardize(x, rm, cm)
+    rho = xs.T @ xs / nv
+    hr = np.asarray(causal_order.residual_entropy_matrix(xs, rho, nv))
+    h = np.asarray(ref.column_entropies(xs, nv))
+    diff = (h[None, :] + hr) - (h[:, None] + hr.T)
+    np.testing.assert_array_equal(np.diag(diff), 0.0)
+
+
+def test_hr_kernel_f64():
+    """dtype sweep: float64 path agrees with the oracle tightly."""
+    x, rm, cm = make_panel(128, 8, 100, 8, 7, dtype=np.float64)
+    xs, nv = ref.masked_standardize(x, rm, cm)
+    rho = xs.T @ xs / nv
+    got = causal_order.residual_entropy_matrix(xs, rho, nv)
+    want = ref.residual_entropy_matrix_ref(xs, rho, nv)
+    assert got.dtype == jnp.float64 or not jax.config.jax_enable_x64
+    np.testing.assert_allclose(offdiag(got), offdiag(want), rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------- residualize
+
+
+@hypothesis.given(
+    n=st.sampled_from([32, 128]),
+    d=st.sampled_from([4, 8]),
+    m=st.integers(0, 7),
+    seed=st.integers(0, 1000),
+)
+def test_residualize_kernel_matches_ref(n, d, m, seed):
+    m = m % d
+    x, rm, cm = make_panel(n, d, n - 5, d, seed)
+    onehot = jnp.zeros(d, dtype=x.dtype).at[m].set(1.0)
+    want = ref.residualize_ref(x, rm, cm, onehot)
+
+    # drive the pallas kernel exactly the way model.order_step does
+    rmc = rm[:, None]
+    nv = jnp.maximum(jnp.sum(rm), 1.0)
+    mean = jnp.sum(x * rmc, axis=0) / nv
+    centered = (x - mean[None, :]) * rmc
+    xm = centered @ onehot
+    var_m = jnp.maximum(jnp.sum(xm * xm) / nv, 1e-30)
+    beta = (centered.T @ xm) / nv / var_m
+    keep = cm * (1.0 - onehot)
+    got = residualize.residualize_panel(centered, xm, beta, keep)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_residualize_kills_correlation():
+    x, rm, cm = make_panel(256, 6, 200, 6, 11)
+    onehot = jnp.zeros(6, dtype=x.dtype).at[2].set(1.0)
+    out = np.asarray(ref.residualize_ref(x, rm, cm, onehot))
+    xm = np.asarray(x)[:200, 2] - np.asarray(x)[:200, 2].mean()
+    for j in [0, 1, 3, 4, 5]:
+        c = np.abs(np.corrcoef(out[:200, j], xm)[0, 1])
+        assert c < 1e-3, f"col {j} corr {c}"
+    # chosen column zeroed, padded rows zeroed
+    assert np.all(out[:, 2] == 0.0)
+    assert np.all(out[200:, :] == 0.0)
+
+
+def test_residualize_preserves_padding_invariant():
+    x, rm, cm = make_panel(64, 4, 40, 3, 13)  # one inactive column
+    onehot = jnp.zeros(4, dtype=x.dtype).at[0].set(1.0)
+    out = np.asarray(ref.residualize_ref(x, rm, cm, onehot))
+    assert np.all(out[40:, :] == 0.0)  # padding
+    assert np.all(out[:, 3] == 0.0)  # inactive column stays zero

@@ -1,0 +1,136 @@
+"""L2 correctness: order_scores / order_step / var_fit semantics.
+
+Checks Algorithm-1-level behaviour (the right variable wins on known
+causal structures), the fused-step composition, masking semantics, and
+the VAR fit against numpy lstsq.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "model", max_examples=15, deadline=None, derandomize=True
+)
+hypothesis.settings.load_profile("model")
+
+
+def chain_data(n, d, seed, theta=1.2):
+    """x_0 -> x_1 -> ... with uniform noise: causal order = identity."""
+    rng = np.random.default_rng(seed)
+    x = np.zeros((n, d), dtype=np.float32)
+    x[:, 0] = rng.uniform(size=n)
+    for j in range(1, d):
+        x[:, j] = theta * x[:, j - 1] + rng.uniform(size=n)
+    return jnp.asarray(x)
+
+
+def masks(n, d, n_valid=None, dtype=jnp.float32):
+    rm = np.zeros(n, dtype=np.float32)
+    rm[: (n_valid or n)] = 1.0
+    return jnp.asarray(rm), jnp.ones(d, dtype=dtype)
+
+
+def test_scores_pick_root_of_chain():
+    x = chain_data(4096, 6, 0)
+    rm, cm = masks(4096, 6)
+    k = np.asarray(model.order_scores(x, rm, cm))
+    assert int(np.argmax(k)) == 0, k
+
+
+def test_scores_match_ref_oracle():
+    x = chain_data(512, 8, 1)
+    rm, cm = masks(512, 8)
+    got = np.asarray(model.order_scores(x, rm, cm))
+    want = np.asarray(ref.order_scores_ref(x, rm, cm))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@hypothesis.given(seed=st.integers(0, 500), n_valid=st.sampled_from([300, 512]))
+def test_padding_does_not_change_scores(seed, n_valid):
+    """Zero-padding rows + row mask must equal the unpadded computation."""
+    x_small = chain_data(n_valid, 6, seed)
+    rm_s, cm = masks(n_valid, 6)
+    k_small = np.asarray(model.order_scores(x_small, rm_s, cm))
+
+    x_pad = jnp.zeros((1024, 6), dtype=x_small.dtype).at[:n_valid].set(x_small)
+    rm_p, _ = masks(1024, 6, n_valid)
+    k_pad = np.asarray(model.order_scores(x_pad, rm_p, cm))
+    np.testing.assert_allclose(k_small, k_pad, rtol=2e-3, atol=2e-3)
+
+
+@hypothesis.given(seed=st.integers(0, 500))
+def test_inactive_columns_excluded(seed):
+    """Masking a column must equal physically removing it (up to layout)."""
+    d = 6
+    x = chain_data(512, d, seed)
+    rm, cm = masks(512, d)
+    cm = cm.at[3].set(0.0)
+    x_masked = x.at[:, 3].set(0.0)
+    k = np.asarray(model.order_scores(x_masked, rm, cm))
+    assert k[3] == ref.INACTIVE
+    # compare against a panel where column 3 is truly absent
+    keep = [0, 1, 2, 4, 5]
+    x_sub = x[:, keep]
+    rm2, cm2 = masks(512, 5)
+    k_sub = np.asarray(model.order_scores(x_sub, rm2, cm2))
+    np.testing.assert_allclose(k[keep], k_sub, rtol=2e-3, atol=2e-3)
+
+
+def test_order_step_full_iteration_matches_ref():
+    x = chain_data(512, 6, 3)
+    rm, cm = masks(512, 6)
+    x1, m, k = model.order_step(x, rm, cm)
+    x1r, mr, kr = ref.order_step_ref(x, rm, cm)
+    assert int(m) == int(mr)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(kr), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x1r), rtol=2e-3, atol=2e-3)
+
+
+def test_iterated_steps_recover_chain_order():
+    d = 5
+    x = chain_data(4096, d, 4)
+    rm, cm = masks(4096, d)
+    order = []
+    for _ in range(d - 1):
+        x, m, _ = model.order_step(x, rm, cm)
+        m = int(m)
+        order.append(m)
+        cm = cm.at[m].set(0.0)
+    order.append(int(np.argmax(np.asarray(cm))))
+    assert order == [0, 1, 2, 3, 4], order
+
+
+def test_var_fit_matches_numpy():
+    rng = np.random.default_rng(0)
+    d, t = 4, 2000
+    m1_true = 0.3 * rng.standard_normal((d, d))
+    x = np.zeros((t, d), dtype=np.float32)
+    for tt in range(1, t):
+        x[tt] = m1_true @ x[tt - 1] + rng.laplace(size=d)
+    rm = jnp.ones(t, dtype=jnp.float32)
+    m1, resid = model.var_fit(jnp.asarray(x), rm)
+    m1 = np.asarray(m1)
+    np.testing.assert_allclose(m1, m1_true, atol=0.08)
+    # residuals should be uncorrelated with the past
+    r = np.asarray(resid)
+    past = x[:-1] - x[:-1].mean(0)
+    cross = np.abs(past.T @ r) / t
+    assert cross.max() < 0.1, cross.max()
+
+
+def test_var_fit_masked_equals_truncated():
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((256, 4)).astype(np.float32)
+    x[200:] = 0.0
+    rm = np.zeros(256, dtype=np.float32)
+    rm[:200] = 1.0
+    m1_pad, _ = model.var_fit(jnp.asarray(x), jnp.asarray(rm))
+    m1_cut, _ = model.var_fit(
+        jnp.asarray(x[:200]), jnp.ones(200, dtype=jnp.float32)
+    )
+    np.testing.assert_allclose(np.asarray(m1_pad), np.asarray(m1_cut), rtol=1e-3, atol=1e-4)

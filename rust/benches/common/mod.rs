@@ -1,0 +1,25 @@
+//! Shared bench-harness plumbing (criterion is not in the offline crate
+//! set; every bench is a `harness = false` binary that prints the same
+//! rows/series its paper figure or table reports).
+
+/// `ALINGAM_BENCH_FULL=1` switches benches to paper-scale workloads.
+pub fn full_scale() -> bool {
+    std::env::var("ALINGAM_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Standard bench header.
+pub fn header(id: &str, claim: &str) {
+    println!("\n################################################################");
+    println!("# {id}");
+    println!("# paper claim: {claim}");
+    println!("# full-scale: {} (set ALINGAM_BENCH_FULL=1 for paper sizes)", full_scale());
+    println!("################################################################");
+}
+
+/// Wall-clock one closure.
+#[allow(dead_code)] // not every bench uses it
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = std::time::Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}

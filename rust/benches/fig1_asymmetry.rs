@@ -1,0 +1,50 @@
+//! Figure 1: the causal-asymmetry illustration.
+//!
+//! Paper: "the regression residual can only be independent of the
+//! independent variable in the correct causal direction ... for any
+//! distribution of the noise except Gaussian."
+//!
+//! Regenerates the figure as a table: MI(regressor, residual) in the
+//! correct and reversed directions for non-Gaussian vs Gaussian noise.
+
+mod common;
+
+use alingam::apps::simbench::asymmetry_demo;
+use alingam::sim::Noise;
+use alingam::util::table::{f, Table};
+
+fn main() {
+    common::header(
+        "Figure 1 — causal asymmetry of LiNGAM pairs",
+        "MI ≈ 0 in the causal direction, > 0 reversed; symmetric for Gaussian",
+    );
+    let n = if common::full_scale() { 200_000 } else { 60_000 };
+    let mut t = Table::new(
+        "MI(regressor, residual) by direction",
+        &["noise", "theta", "MI fwd", "MI bwd", "asymmetry", "direction identified"],
+    );
+    for (name, noise) in [
+        ("uniform(0,1)", Noise::Uniform01),
+        ("laplace(1)", Noise::Laplace(1.0)),
+        ("exp(1)", Noise::Exponential(1.0)),
+        ("gaussian(1)", Noise::Gaussian(1.0)),
+    ] {
+        for theta in [0.5, 1.0, 2.0] {
+            let (fwd, bwd) = asymmetry_demo(noise, n, theta, 7).expect("demo");
+            let asym = bwd - fwd;
+            t.row(&[
+                name.into(),
+                f(theta, 1),
+                f(fwd, 4),
+                f(bwd, 4),
+                f(asym, 4),
+                if asym > 0.01 { "yes" } else { "no" }.into(),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\nshape check vs paper: every non-Gaussian row identifies the direction;\n\
+         every Gaussian row does not."
+    );
+}

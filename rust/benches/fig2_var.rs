@@ -1,0 +1,67 @@
+//! Figure 2 (bottom-right) + Figure 3 (bottom): VarLiNGAM — sequential
+//! profile and accelerated speed-up.
+//!
+//! Paper claims: the DirectLiNGAM causal-ordering sub-procedure also
+//! dominates VarLiNGAM's runtime (≈96%), and the GPU implementation
+//! yields a ~30× speed-up.
+
+mod common;
+
+use alingam::coordinator::{profile_var, Engine, EngineChoice};
+use alingam::lingam::VarLingam;
+use alingam::sim::{simulate_var, VarSpec};
+use alingam::util::rng::Pcg64;
+use alingam::util::table::{f, secs, Table};
+
+fn main() {
+    common::header(
+        "Figure 2 (bottom-right) / Figure 3 (bottom) — VarLiNGAM",
+        "ordering dominates VarLiNGAM too; accelerated speed-up ≈ 30×",
+    );
+    let grid: Vec<(usize, usize)> = if common::full_scale() {
+        vec![(2_000, 8), (2_000, 16), (4_000, 32), (4_000, 48)]
+    } else {
+        vec![(1_000, 8), (2_000, 12), (2_000, 16)]
+    };
+
+    let seq = Engine::build(EngineChoice::Sequential).unwrap();
+    let vec_e = Engine::build(EngineChoice::Vectorized).unwrap();
+    let xla = Engine::build(EngineChoice::Xla).ok();
+
+    let mut t = Table::new(
+        "VarLiNGAM: sequential profile + engine speed-ups",
+        &["T", "dims", "seq total", "ordering %", "vectorized", "xla", "vec ×", "xla ×"],
+    );
+    for &(t_len, d) in &grid {
+        let mut rng = Pcg64::seed_from_u64(29);
+        let ds = simulate_var(&VarSpec { dim: d, ..Default::default() }, t_len, &mut rng);
+
+        let prof = profile_var(&ds.data, seq.as_ordering()).expect("profile");
+        let (fit_v, t_vec) =
+            common::time(|| VarLingam::new().fit(&ds.data, vec_e.as_ordering()).unwrap());
+        let t_xla = xla.as_ref().map(|x| {
+            let _ = VarLingam::new().fit(&ds.data, x.as_ordering()).unwrap(); // compile warm-up
+            let (fit_x, dt) =
+                common::time(|| VarLingam::new().fit(&ds.data, x.as_ordering()).unwrap());
+            assert_eq!(fit_x.order, fit_v.order, "engine disagreement at T={t_len} d={d}");
+            dt
+        });
+
+        t.row(&[
+            t_len.to_string(),
+            d.to_string(),
+            secs(prof.total_secs),
+            f(100.0 * prof.ordering_frac, 1),
+            secs(t_vec),
+            t_xla.map(secs).unwrap_or_else(|| "—".into()),
+            f(prof.total_secs / t_vec, 1),
+            t_xla.map(|x| f(prof.total_secs / x, 1)).unwrap_or_else(|| "—".into()),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nshape check vs paper: the ordering fraction matches DirectLiNGAM's\n\
+         (same inner algorithm — Figure 3 bottom), and the speed-up column\n\
+         tracks the DirectLiNGAM one (paper: ~30× vs ~32×)."
+    );
+}

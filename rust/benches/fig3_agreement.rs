@@ -1,0 +1,93 @@
+//! Figure 3 (top): parallel vs sequential DirectLiNGAM on simulated data
+//! — F1, recall and SHD over 50 seeds, plus the exact-agreement check.
+//!
+//! Paper claim: "Comparison of the sequential and parallel implementation
+//! ... show that they produce the exact same result, and recover the true
+//! causal graph accurately." Workload: linear FCM, 10 000 samples, 10
+//! variables, 50 random seeds.
+
+mod common;
+
+use alingam::apps::simbench::{agreement_sweep, fig3_spec};
+use alingam::coordinator::{Engine, EngineChoice};
+use alingam::lingam::SequentialEngine;
+use alingam::metrics::mean_std;
+use alingam::util::table::Table;
+
+fn main() {
+    common::header(
+        "Figure 3 (top) — parallel ≡ sequential over 50 seeds",
+        "identical results; F1/recall ≈ 1, SHD ≈ 0 at n=10 000, d=10",
+    );
+    let (n_samples, n_seeds, xla_seeds) =
+        if common::full_scale() { (10_000, 50, 50) } else { (10_000, 50, 8) };
+    let seeds: Vec<u64> = (0..n_seeds as u64).collect();
+
+    let vec_e = Engine::build(EngineChoice::Vectorized).unwrap();
+    let runs = agreement_sweep(
+        &fig3_spec(),
+        n_samples,
+        &seeds,
+        &SequentialEngine,
+        vec_e.as_ordering(),
+        2,
+    );
+
+    let mut t = Table::new(
+        "recovery metrics over seeds (sequential vs vectorized)",
+        &["engine", "F1", "recall", "SHD", "identical orders", "max |Δadj|"],
+    );
+    let agg = |get: &dyn Fn(&alingam::apps::simbench::AgreementRun) -> f64| {
+        mean_std(&runs.iter().map(get).collect::<Vec<_>>())
+    };
+    let max_diff = runs.iter().map(|r| r.adj_max_diff).fold(0.0, f64::max);
+    let identical = runs.iter().filter(|r| r.orders_identical).count();
+    t.row(&[
+        "sequential".into(),
+        agg(&|r| r.metrics_a.f1).to_string(),
+        agg(&|r| r.metrics_a.recall).to_string(),
+        agg(&|r| r.metrics_a.shd as f64).to_string(),
+        String::new(),
+        String::new(),
+    ]);
+    t.row(&[
+        "vectorized".into(),
+        agg(&|r| r.metrics_b.f1).to_string(),
+        agg(&|r| r.metrics_b.recall).to_string(),
+        agg(&|r| r.metrics_b.shd as f64).to_string(),
+        format!("{identical}/{}", runs.len()),
+        format!("{max_diff:.2e}"),
+    ]);
+    t.print();
+
+    // XLA engine agreement (fewer seeds by default — each fit crosses the
+    // PJRT boundary d−1 times)
+    if let Ok(xla) = Engine::build(EngineChoice::Xla) {
+        let seeds: Vec<u64> = (0..xla_seeds as u64).collect();
+        let runs =
+            agreement_sweep(&fig3_spec(), n_samples, &seeds, &SequentialEngine, xla.as_ordering(), 1);
+        let identical = runs.iter().filter(|r| r.orders_identical).count();
+        let same_shd = runs.iter().filter(|r| r.metrics_a.shd == r.metrics_b.shd).count();
+        let f1 = mean_std(&runs.iter().map(|r| r.metrics_b.f1).collect::<Vec<_>>());
+        println!(
+            "\nXLA (AOT pallas artifact, f32) vs sequential (f64): identical orders \
+             {identical}/{}, identical SHD {same_shd}/{}, F1 {}",
+            runs.len(),
+            runs.len(),
+            f1
+        );
+    } else {
+        println!("\n(xla engine unavailable — run `make artifacts`)");
+    }
+    println!(
+        "\nshape check vs paper: all engines produce the same orders; F1/recall\n\
+         near 1 and SHD near 0; the f32 XLA path may differ in adjacency weights\n\
+         by ≤1e-3 (float width), never in the discovered structure. For\n\
+         reference the paper reports {}",
+        "F1 ≈ 1, recall ≈ 1, SHD ≈ 0 over its 50 simulations (Fig. 3)."
+    );
+    println!(
+        "\ncontext (§3.1): NOTEARS on the same data achieves F1 0.79 ± 0.2,\n\
+         recall 0.69 ± 0.2, SHD 2.52 ± 1.67 — run `cargo bench --bench sec31_notears`."
+    );
+}

@@ -1,0 +1,54 @@
+//! Figure 4 + Table 2: VarLiNGAM on S&P-500-style hourly stock data.
+//!
+//! Paper: in/out-degree distributions of θ₀ are roughly symmetric with no
+//! dominant hubs; USB and FITB (holding companies) are leaves; the top-5
+//! exerting nodes are consumer-facing firms (NVR, AZO, CMG, BKNG, MTD)
+//! and the top receivers include NWSA, CNP, FOXA, AMCR.
+//!
+//! Synthetic market per DESIGN.md §Substitutions (487 real+padded
+//! tickers, sector-block VAR(1), heavy-tailed innovations, injected
+//! gaps). Full scale (487 × 3500) runs with ALINGAM_BENCH_FULL=1.
+
+mod common;
+
+use alingam::apps::stocks::run_stocks;
+use alingam::coordinator::{Engine, EngineChoice};
+use alingam::sim::MarketSpec;
+use alingam::util::table::{f, histogram, secs, Table};
+
+fn main() {
+    common::header(
+        "Figure 4 + Table 2 — VarLiNGAM on the stock panel",
+        "balanced in/out degrees; USB+FITB leaves; consumer firms exert",
+    );
+    let spec = if common::full_scale() {
+        MarketSpec::default() // 487 × 3500, the paper's dimensions
+    } else {
+        MarketSpec { dim: 80, t_len: 2_000, ..MarketSpec::small() }
+    };
+    let engine = Engine::build(EngineChoice::Vectorized).unwrap();
+    let r = run_stocks(&spec, 2024, engine.as_ordering(), 5).expect("stocks pipeline");
+
+    let mut t = Table::new("Table 2 analogue: total causal influence", &["rank", "entity", "score", "role"]);
+    for (k, (name, lag, score)) in r.top_exerting.iter().enumerate() {
+        t.row(&[(k + 1).to_string(), format!("{name}_tau-{lag}"), f(*score, 3), "exerting".into()]);
+    }
+    for (k, (name, lag, score)) in r.top_receiving.iter().enumerate() {
+        t.row(&[(k + 1).to_string(), format!("{name}_tau-{lag}"), f(*score, 3), "receiving".into()]);
+    }
+    t.print();
+
+    print!("{}", histogram("Figure 4: in-degree distribution of θ0", &r.in_degrees, 12));
+    print!("{}", histogram("Figure 4: out-degree distribution of θ0", &r.out_degrees, 12));
+
+    let mean = |v: &[usize]| v.iter().sum::<usize>() as f64 / v.len() as f64;
+    println!("\nshape checks:");
+    println!(
+        "  in/out mean degree (paper: similar): {:.2} vs {:.2}",
+        mean(&r.in_degrees),
+        mean(&r.out_degrees)
+    );
+    println!("  designated exerters (NVR/AZO/CMG/BKNG/MTD) in top-5: {}/5", r.exerter_hits);
+    println!("  USB/FITB recovered as leaves: {}/2  (all leaves: {:?})", r.leaf_hits, r.leaves);
+    println!("  fit {}  ({:.1}% in causal ordering)", secs(r.fit_secs), 100.0 * r.ordering_frac);
+}

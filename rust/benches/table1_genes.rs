@@ -1,0 +1,87 @@
+//! Table 1: interventional evaluation on Perturb-seq-style gene data.
+//!
+//! Paper numbers (real Perturb-CITE-seq, d≈964):
+//!     DirectLiNGAM+VI : co-culture 1.5/0.7, IFN 1.5/0.9, control 3/1.6
+//!     DCD-FG          : ≈1.1/0.7 on all three            (I-NLL/I-MAE)
+//!
+//! The dataset here is the synthetic Perturb-seq generator (the real one
+//! is access-controlled — DESIGN.md §Substitutions); the comparator is
+//! NOTEARS-LR, DCD-FG's published low-rank ancestor. The shape to check:
+//! comparable I-MAE between methods, DirectLiNGAM I-NLL slightly higher,
+//! control the hardest condition.
+
+mod common;
+
+use alingam::apps::genes::{run_table1, GeneScale, GenesConfig};
+use alingam::baselines::SvgdOpts;
+use alingam::coordinator::{Engine, EngineChoice};
+use alingam::util::table::{f, secs, Table};
+
+fn main() {
+    common::header(
+        "Table 1 — I-NLL / I-MAE on interventional gene expression",
+        "DirectLiNGAM+VI competitive with DCD-FG; lower is better",
+    );
+    let full = common::full_scale();
+    let engine = Engine::build(EngineChoice::Vectorized).unwrap();
+    let cfg = GenesConfig {
+        scale: if full { GeneScale::Medium } else { GeneScale::Small },
+        seed: 2024,
+        svgd: if full {
+            SvgdOpts { particles: 200, iters: 1000, step: 0.05, seed: 0 }
+        } else {
+            SvgdOpts { particles: 24, iters: 150, step: 0.1, seed: 0 }
+        },
+        max_train_rows: if full { 1_000 } else { 300 },
+        max_test_cells: if full { 400 } else { 120 },
+        with_baseline: true,
+    };
+
+    let (rows, dt) = common::time(|| run_table1(&cfg, engine.as_ordering()).expect("table1"));
+    let mut t = Table::new(
+        "Table 1 analogue (synthetic Perturb-seq)",
+        &["condition", "method", "I-NLL", "I-MAE", "leaves", "fit"],
+    );
+    for r in &rows {
+        t.row(&[
+            r.condition.name().into(),
+            r.method.into(),
+            f(r.metrics.nll, 2),
+            f(r.metrics.mae, 2),
+            r.leaves.to_string(),
+            secs(r.fit_secs),
+        ]);
+    }
+    t.row(&["paper co-culture".into(), "DirectLiNGAM / DCD-FG".into(), "1.5 / 1.1".into(), "0.7 / 0.7".into(), "1".into(), String::new()]);
+    t.row(&["paper IFN".into(), "DirectLiNGAM / DCD-FG".into(), "1.5 / 1.2".into(), "0.9 / 0.7".into(), "1".into(), String::new()]);
+    t.row(&["paper control".into(), "DirectLiNGAM / DCD-FG".into(), "3.0 / 1.1".into(), "1.6 / 0.7".into(), "2".into(), String::new()]);
+    t.print();
+
+    // shape checks
+    let get = |cond: &str, method_prefix: &str| {
+        rows.iter()
+            .find(|r| r.condition.name() == cond && r.method.starts_with(method_prefix))
+            .expect("row")
+    };
+    let dl_control = get("control", "DirectLiNGAM");
+    let dl_coc = get("co-culture", "DirectLiNGAM");
+    println!("\nshape checks:");
+    println!(
+        "  control hardest for LiNGAM (paper: 3.0 vs 1.5): {} (nll {} vs {})",
+        dl_control.metrics.nll > dl_coc.metrics.nll,
+        f(dl_control.metrics.nll, 2),
+        f(dl_coc.metrics.nll, 2)
+    );
+    let mae_gap: f64 = rows
+        .iter()
+        .filter(|r| r.method.starts_with("DirectLiNGAM"))
+        .map(|r| r.metrics.mae)
+        .sum::<f64>()
+        - rows
+            .iter()
+            .filter(|r| r.method.starts_with("NOTEARS"))
+            .map(|r| r.metrics.mae)
+            .sum::<f64>();
+    println!("  I-MAE comparable across methods (paper: ±0.2): total gap {:.2}", mae_gap / 3.0);
+    println!("total bench time: {}", secs(dt));
+}

@@ -1,0 +1,11 @@
+//! Experiment pipelines — one module per paper application:
+//!
+//! - [`genes`] — §4.1 / Table 1: DirectLiNGAM + Stein VI vs a factor-graph
+//!   continuous-optimization baseline on Perturb-seq-style data.
+//! - [`stocks`] — §4.2 / Figure 4 + Table 2: VarLiNGAM on an S&P-500-style
+//!   hourly market panel.
+//! - [`simbench`] — the simulation workloads behind Figures 1-3 and §3.1.
+
+pub mod genes;
+pub mod simbench;
+pub mod stocks;

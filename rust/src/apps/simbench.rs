@@ -1,0 +1,199 @@
+//! Simulation workloads behind Figures 1-3 and §3.1: the Figure-3
+//! agreement sweep (parallel vs sequential over 50 seeds), the Figure-1
+//! asymmetry demonstration, and the §3.1 NOTEARS comparison.
+
+use crate::baselines::{notears, NotearsOpts};
+use crate::coordinator::parallel_map;
+use crate::lingam::{DirectLingam, OrderingEngine};
+use crate::metrics::{graph_metrics, GraphMetrics};
+use crate::sim::{sample_from_dag, simulate_sem, Noise, SemSpec};
+use crate::stats;
+use crate::util::rng::Pcg64;
+use crate::util::Result;
+
+/// The paper's Figure-3 workload: layered DAG, 10 000 samples, 10
+/// variables, ε ~ U(0,1).
+pub fn fig3_spec() -> SemSpec {
+    SemSpec::layered(10, 2, 0.5)
+}
+
+/// Result of one seed of the agreement sweep.
+#[derive(Debug, Clone)]
+pub struct AgreementRun {
+    pub seed: u64,
+    pub metrics_a: GraphMetrics,
+    pub metrics_b: GraphMetrics,
+    /// Did both engines produce the identical causal order?
+    pub orders_identical: bool,
+    /// Max |Δ| between the two estimated adjacencies.
+    pub adj_max_diff: f64,
+}
+
+/// Figure 3: run engine A and engine B on identical simulated datasets
+/// across seeds; report recovery metrics for both plus exact-agreement
+/// statistics.
+pub fn agreement_sweep(
+    spec: &SemSpec,
+    n_samples: usize,
+    seeds: &[u64],
+    engine_a: &dyn OrderingEngine,
+    engine_b: &dyn OrderingEngine,
+    workers: usize,
+) -> Vec<AgreementRun> {
+    parallel_map(seeds, workers, |seed| {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let ds = simulate_sem(spec, n_samples, &mut rng);
+        let fit_a = DirectLingam::new().fit(&ds.data, engine_a).expect("fit a");
+        let fit_b = DirectLingam::new().fit(&ds.data, engine_b).expect("fit b");
+        AgreementRun {
+            seed,
+            metrics_a: graph_metrics(&ds.adjacency, &fit_a.adjacency, 0.05),
+            metrics_b: graph_metrics(&ds.adjacency, &fit_b.adjacency, 0.05),
+            orders_identical: fit_a.order == fit_b.order,
+            adj_max_diff: crate::metrics::adjacency_max_diff(&fit_a.adjacency, &fit_b.adjacency),
+        }
+    })
+}
+
+/// §3.1: NOTEARS on the same simulated data, best-of-λ-grid (the paper
+/// searches {0.001, 0.005, 0.01, 0.05, 0.1} and reports the best).
+pub fn notears_sweep(
+    spec: &SemSpec,
+    n_samples: usize,
+    seeds: &[u64],
+    lambdas: &[f64],
+    standardize: bool,
+    workers: usize,
+) -> Vec<GraphMetrics> {
+    parallel_map(seeds, workers, |seed| {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let ds = simulate_sem(spec, n_samples, &mut rng);
+        let mut best: Option<GraphMetrics> = None;
+        for &lambda in lambdas {
+            let opts = NotearsOpts { lambda, standardize, ..Default::default() };
+            if let Ok(adj) = notears(&ds.data, &opts) {
+                let m = graph_metrics(&ds.adjacency, &adj, 0.0);
+                if best.map(|b| m.f1 > b.f1).unwrap_or(true) {
+                    best = Some(m);
+                }
+            }
+        }
+        best.expect("at least one lambda succeeded")
+    })
+}
+
+/// Figure 1: the causal-asymmetry demonstration. Returns
+/// (mi_forward, mi_backward) estimates for a 2-variable pair x → y:
+/// the mutual information between the regressor and the residual in the
+/// correct and reversed directions (correct ≈ 0, reversed > 0 for
+/// non-Gaussian noise; both ≈ 0 for Gaussian).
+pub fn asymmetry_demo(noise: Noise, n: usize, theta: f64, seed: u64) -> Result<(f64, f64)> {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut adj = crate::linalg::Mat::zeros(2, 2);
+    adj[(1, 0)] = theta;
+    let dag = crate::graph::Dag::new(adj).expect("2-node chain");
+    let x = sample_from_dag(&dag, noise, n, &mut rng);
+
+    let mut x0 = x.col(0);
+    let mut x1 = x.col(1);
+    stats::standardize(&mut x0);
+    stats::standardize(&mut x1);
+    let rho = stats::cov(&x0, &x1);
+    let denom = (1.0 - rho * rho).sqrt().max(1e-12);
+
+    // forward: residual of y on x must be independent of x
+    let r_fwd: Vec<f64> = x1.iter().zip(&x0).map(|(&y, &a)| (y - rho * a) / denom).collect();
+    // backward: residual of x on y against y
+    let r_bwd: Vec<f64> = x0.iter().zip(&x1).map(|(&a, &y)| (a - rho * y) / denom).collect();
+
+    Ok((pair_mi(&x0, &r_fwd), pair_mi(&x1, &r_bwd)))
+}
+
+/// Binned mutual-information estimate between two variables (equi-width
+/// 2-D histogram over ±4σ). OLS residuals are *uncorrelated* with the
+/// regressor in both directions by construction; what Figure 1
+/// illustrates is the remaining *nonlinear* dependence in the wrong
+/// direction, which a histogram MI captures and a correlation-based
+/// proxy cannot.
+pub fn pair_mi(a: &[f64], b: &[f64]) -> f64 {
+    const BINS: usize = 24;
+    const RANGE: f64 = 4.0; // standardized inputs: cover ±4σ
+    let n = a.len().min(b.len());
+    let bin = |v: f64| {
+        (((v + RANGE) / (2.0 * RANGE) * BINS as f64) as isize).clamp(0, BINS as isize - 1)
+            as usize
+    };
+    let mut joint = vec![0.0f64; BINS * BINS];
+    let mut pa = vec![0.0f64; BINS];
+    let mut pb = vec![0.0f64; BINS];
+    for t in 0..n {
+        let (ia, ib) = (bin(a[t]), bin(b[t]));
+        joint[ia * BINS + ib] += 1.0;
+        pa[ia] += 1.0;
+        pb[ib] += 1.0;
+    }
+    let inv_n = 1.0 / n as f64;
+    let mut mi = 0.0;
+    for ia in 0..BINS {
+        for ib in 0..BINS {
+            let pj = joint[ia * BINS + ib] * inv_n;
+            if pj > 0.0 {
+                mi += pj * (pj / (pa[ia] * inv_n * pb[ib] * inv_n)).ln();
+            }
+        }
+    }
+    // small-sample bias correction (Miller–Madow)
+    let occupied = joint.iter().filter(|&&c| c > 0.0).count() as f64;
+    let occ_a = pa.iter().filter(|&&c| c > 0.0).count() as f64;
+    let occ_b = pb.iter().filter(|&&c| c > 0.0).count() as f64;
+    (mi - (occupied - occ_a - occ_b + 1.0).max(0.0) / (2.0 * n as f64)).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lingam::{SequentialEngine, VectorizedEngine};
+
+    #[test]
+    fn agreement_sweep_engines_match() {
+        let seeds: Vec<u64> = (0..4).collect();
+        let runs = agreement_sweep(
+            &fig3_spec(),
+            1_500,
+            &seeds,
+            &SequentialEngine,
+            &VectorizedEngine,
+            2,
+        );
+        assert_eq!(runs.len(), 4);
+        for r in &runs {
+            assert!(r.orders_identical, "seed {} orders diverged", r.seed);
+            assert!(r.adj_max_diff < 1e-8);
+            assert!(r.metrics_a.f1 > 0.5);
+        }
+    }
+
+    #[test]
+    fn asymmetry_uniform_noise() {
+        let (fwd, bwd) = asymmetry_demo(Noise::Uniform01, 40_000, 1.5, 1).unwrap();
+        assert!(fwd < bwd, "forward MI {fwd} should be < backward {bwd}");
+        assert!(fwd < 0.02, "forward MI should be ~0, got {fwd}");
+        assert!(bwd > 0.03, "backward MI should be clearly positive, got {bwd}");
+    }
+
+    #[test]
+    fn asymmetry_vanishes_for_gaussian() {
+        let (fwd, bwd) = asymmetry_demo(Noise::Gaussian(1.0), 40_000, 1.5, 2).unwrap();
+        assert!(fwd < 0.02 && bwd < 0.02, "Gaussian case should be symmetric: {fwd} vs {bwd}");
+    }
+
+    #[test]
+    fn notears_sweep_reports_imperfect_recovery() {
+        let seeds: Vec<u64> = (0..2).collect();
+        let ms = notears_sweep(&fig3_spec(), 1_000, &seeds, &[0.01, 0.1], false, 2);
+        assert_eq!(ms.len(), 2);
+        for m in &ms {
+            assert!(m.f1 > 0.2 && m.f1 <= 1.0);
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Baselines and evaluation machinery the paper compares against:
+//!
+//! - [`notears`] — NOTEARS (Zheng et al. 2018), the continuous-
+//!   optimization method §3.1 shows failing on simple LiNGAM data.
+//! - [`notears_lr`] — a low-rank factor variant (W = UVᵀ) standing in for
+//!   DCD-FG (Lopez et al. 2022) in Table 1; see DESIGN.md §Substitutions.
+//! - [`svgd`] — Stein variational gradient descent (Liu & Wang 2016),
+//!   replacing the paper's Pyro Stein VI.
+//! - [`interv`] — interventional evaluation: I-NLL and I-MAE over
+//!   held-out genetic interventions (Table 1's metrics).
+
+pub mod interv;
+pub mod notears;
+pub mod notears_lr;
+pub mod svgd;
+
+pub use interv::{evaluate_interventions, evaluate_point, IntervMetrics, SemPosterior};
+pub use notears::{notears, NotearsOpts};
+pub use notears_lr::{notears_lr, NotearsLrOpts};
+pub use svgd::{Svgd, SvgdOpts};

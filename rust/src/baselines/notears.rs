@@ -1,0 +1,282 @@
+//! NOTEARS (Zheng et al. 2018): score-based DAG learning by continuous
+//! optimization with the trace-exponential acyclicity constraint
+//!
+//!   min_W  1/(2n) ‖X − XW‖²_F + λ‖W‖₁   s.t.  h(W) = tr(e^{W∘W}) − d = 0
+//!
+//! solved with the standard augmented-Lagrangian outer loop and proximal
+//! gradient (ISTA) inner loop. §3.1 of the paper evaluates this on simple
+//! layered-DAG LiNGAM data — where it underperforms DirectLiNGAM — so the
+//! baseline must be a faithful implementation, not a strawman: we use the
+//! reference hyper-parameters (ρ ×10 escalation, h-reduction 0.25,
+//! threshold 0.3) from the authors' released code.
+//!
+//! NOTEARS' native convention is `X ≈ XW` with `W[i,j]` meaning i → j;
+//! results are transposed on return to this crate's `adj[(i,j)] = j → i`.
+
+use crate::linalg::{expm, Mat};
+use crate::stats;
+use crate::util::{Error, Result};
+
+/// NOTEARS hyper-parameters (defaults follow the reference code).
+#[derive(Clone, Debug)]
+pub struct NotearsOpts {
+    /// ℓ1 penalty λ.
+    pub lambda: f64,
+    /// Augmented-Lagrangian outer iterations.
+    pub max_outer: usize,
+    /// ISTA inner iterations per outer step.
+    pub max_inner: usize,
+    /// Stop when h(W) < h_tol.
+    pub h_tol: f64,
+    /// ρ escalation cap.
+    pub rho_max: f64,
+    /// Final edge threshold (reference uses 0.3).
+    pub w_threshold: f64,
+    /// Standardize columns first. The reference implementation (and the
+    /// paper's §3.1 run of it) operates on *raw* data, where the layered
+    /// SEM's growing marginal variances (varsortability — Reisach et al.
+    /// 2021) help NOTEARS considerably; standardized data removes that
+    /// crutch. Both protocols are exposed; the §3.1 bench reports both.
+    pub standardize: bool,
+}
+
+impl Default for NotearsOpts {
+    fn default() -> Self {
+        NotearsOpts {
+            lambda: 0.01,
+            max_outer: 20,
+            max_inner: 250,
+            h_tol: 1e-8,
+            rho_max: 1e16,
+            w_threshold: 0.3,
+            standardize: false,
+        }
+    }
+}
+
+/// Run NOTEARS; returns the weighted adjacency in this crate's
+/// convention (`adj[(i,j)] ≠ 0` ⇔ j → i), thresholded.
+pub fn notears(x: &Mat, opts: &NotearsOpts) -> Result<Mat> {
+    let (n, d) = (x.rows(), x.cols());
+    if n < 2 || d < 2 {
+        return Err(Error::InvalidArgument("need n ≥ 2, d ≥ 2".into()));
+    }
+    // center always; standardize only if asked (see NotearsOpts docs)
+    let xs = if opts.standardize {
+        stats::standardize_cols(x)
+    } else {
+        let mut c = x.clone();
+        for col in 0..d {
+            let m = stats::mean(&x.col(col));
+            for r in 0..n {
+                c[(r, col)] -= m;
+            }
+        }
+        c
+    };
+    let cov = xs.t().matmul(&xs).scale(1.0 / n as f64); // C = XᵀX/n
+
+    let mut w = Mat::zeros(d, d);
+    let mut rho = 1.0;
+    let mut alpha = 0.0;
+    let mut h = f64::INFINITY;
+
+    for _outer in 0..opts.max_outer {
+        // inner: minimize smooth part + λ‖·‖₁ at fixed (ρ, α) via ISTA
+        let mut h_new = h;
+        for _ in 0..1 {
+            (w, h_new) = ista(&cov, w, rho, alpha, opts)?;
+        }
+        if h_new > 0.25 * h && rho < opts.rho_max {
+            rho *= 10.0;
+        }
+        alpha += rho * h_new;
+        h = h_new;
+        if h < opts.h_tol || rho >= opts.rho_max {
+            break;
+        }
+    }
+
+    // threshold and transpose into this crate's convention
+    let mut adj = Mat::zeros(d, d);
+    for i in 0..d {
+        for j in 0..d {
+            let v = w[(i, j)]; // i → j in NOTEARS convention
+            if v.abs() > opts.w_threshold {
+                adj[(j, i)] = v;
+            }
+        }
+    }
+    // safety: thresholding almost always yields a DAG; if not, greedily
+    // drop the weakest cycle-closing edges
+    while crate::graph::topological_order(&adj).is_none() {
+        let (mut bi, mut bj, mut bv) = (0, 0, f64::INFINITY);
+        for i in 0..d {
+            for j in 0..d {
+                let v = adj[(i, j)].abs();
+                if v > 0.0 && v < bv {
+                    (bi, bj, bv) = (i, j, v);
+                }
+            }
+        }
+        adj[(bi, bj)] = 0.0;
+    }
+    Ok(adj)
+}
+
+/// Proximal-gradient (ISTA) minimization of
+/// F(W) = ½/n‖X−XW‖² + α h(W) + ½ρ h(W)² at fixed (ρ, α), plus λ‖W‖₁.
+fn ista(cov: &Mat, mut w: Mat, rho: f64, alpha: f64, opts: &NotearsOpts) -> Result<(Mat, f64)> {
+    let mut step = 1.0;
+    let (mut f_cur, mut h_cur, mut grad) = f_and_grad(cov, &w, rho, alpha)?;
+    for _ in 0..opts.max_inner {
+        // backtracking line search on the smooth part
+        let mut improved = false;
+        for _ in 0..30 {
+            let w_try = prox_step(&w, &grad, step, opts.lambda);
+            let (f_try, h_try, grad_try) = f_and_grad(cov, &w_try, rho, alpha)?;
+            // sufficient decrease on the full objective (incl. ℓ1)
+            let obj_cur = f_cur + opts.lambda * l1(&w);
+            let obj_try = f_try + opts.lambda * l1(&w_try);
+            if obj_try <= obj_cur - 1e-12 {
+                let delta = w_try.sub(&w).max_abs();
+                w = w_try;
+                f_cur = f_try;
+                h_cur = h_try;
+                grad = grad_try;
+                improved = true;
+                step *= 1.25;
+                if delta < 1e-7 {
+                    return Ok((w, h_cur));
+                }
+                break;
+            }
+            step *= 0.5;
+            if step < 1e-12 {
+                return Ok((w, h_cur));
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    Ok((w, h_cur))
+}
+
+/// Smooth objective value, h(W), and smooth gradient.
+fn f_and_grad(cov: &Mat, w: &Mat, rho: f64, alpha: f64) -> Result<(f64, f64, Mat)> {
+    let d = cov.rows();
+    // loss = ½ tr((I−W)ᵀ C (I−W));  grad = C(W − I)
+    let i_minus_w = Mat::eye(d).sub(w);
+    let c_imw = cov.matmul(&i_minus_w);
+    let loss = 0.5 * i_minus_w.t().matmul(&c_imw).trace();
+    let g_loss = c_imw.scale(-1.0);
+
+    // h = tr(e^{W∘W}) − d;  ∇h = (e^{W∘W})ᵀ ∘ 2W
+    let e = expm(&w.hadamard(w))?;
+    let h = e.trace() - d as f64;
+    let g_h = e.t().hadamard(&w.scale(2.0));
+
+    let f = loss + alpha * h + 0.5 * rho * h * h;
+    let g = g_loss.add(&g_h.scale(alpha + rho * h));
+    Ok((f, h, g))
+}
+
+/// One proximal step: soft-threshold(W − step·∇, step·λ) with zero
+/// diagonal (self-loops are never allowed).
+fn prox_step(w: &Mat, grad: &Mat, step: f64, lambda: f64) -> Mat {
+    let d = w.rows();
+    let mut out = Mat::zeros(d, d);
+    let t = step * lambda;
+    for i in 0..d {
+        for j in 0..d {
+            if i == j {
+                continue;
+            }
+            let v = w[(i, j)] - step * grad[(i, j)];
+            out[(i, j)] = if v > t {
+                v - t
+            } else if v < -t {
+                v + t
+            } else {
+                0.0
+            };
+        }
+    }
+    out
+}
+
+fn l1(w: &Mat) -> f64 {
+    w.as_slice().iter().map(|v| v.abs()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::graph_metrics;
+    use crate::sim::{simulate_sem, SemSpec};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn returns_a_dag() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let ds = simulate_sem(&SemSpec::layered(6, 2, 0.5), 1_000, &mut rng);
+        let adj = notears(&ds.data, &NotearsOpts::default()).unwrap();
+        assert!(crate::graph::topological_order(&adj).is_some());
+    }
+
+    #[test]
+    fn recovers_strong_two_node_edge() {
+        // x0 → x1 with weight 2 and standardized data: NOTEARS should at
+        // least find a single edge between them
+        let mut rng = Pcg64::seed_from_u64(2);
+        let mut adj = Mat::zeros(2, 2);
+        adj[(1, 0)] = 2.0;
+        let dag = crate::graph::Dag::new(adj).unwrap();
+        let x = crate::sim::sem::sample_from_dag(&dag, crate::sim::Noise::Uniform01, 3_000, &mut rng);
+        let est = notears(&x, &NotearsOpts::default()).unwrap();
+        let edges = est.as_slice().iter().filter(|v| **v != 0.0).count();
+        assert_eq!(edges, 1, "est = {est:?}");
+    }
+
+    #[test]
+    fn imperfect_on_layered_lingam_data() {
+        // §3.1's point: NOTEARS is *not* reliable on this data. We check
+        // it runs and produces something plausible but do not demand
+        // perfect recovery (it typically misses/reverses edges).
+        let mut rng = Pcg64::seed_from_u64(3);
+        let ds = simulate_sem(&SemSpec::layered(10, 2, 0.5), 3_000, &mut rng);
+        let est = notears(&ds.data, &NotearsOpts { lambda: 0.05, ..Default::default() }).unwrap();
+        let m = graph_metrics(&ds.adjacency, &est, 0.0);
+        assert!(m.est_edges > 0, "degenerate empty graph");
+        assert!(m.f1 > 0.2, "f1 collapsed: {}", m.f1);
+    }
+
+    #[test]
+    fn h_decreases_to_tolerance() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        let ds = simulate_sem(&SemSpec::layered(5, 2, 0.6), 800, &mut rng);
+        let xs = stats::standardize_cols(&ds.data);
+        let cov = xs.t().matmul(&xs).scale(1.0 / xs.rows() as f64);
+        // run the full driver then verify acyclicity value at the solution
+        let adj = notears(&ds.data, &NotearsOpts::default()).unwrap();
+        let w = adj.t(); // back to notears convention
+        let h = expm(&w.hadamard(&w)).unwrap().trace() - 5.0;
+        assert!(h.abs() < 1e-4, "h={h}, cov trace {}", cov.trace());
+    }
+
+    #[test]
+    fn lambda_controls_sparsity() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        let ds = simulate_sem(&SemSpec::layered(8, 2, 0.6), 1_500, &mut rng);
+        let nnz = |lam: f64| {
+            let est = notears(
+                &ds.data,
+                &NotearsOpts { lambda: lam, w_threshold: 0.05, ..Default::default() },
+            )
+            .unwrap();
+            est.as_slice().iter().filter(|v| **v != 0.0).count()
+        };
+        assert!(nnz(0.5) <= nnz(0.001));
+    }
+}

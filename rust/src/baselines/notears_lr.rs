@@ -1,0 +1,248 @@
+//! Low-rank factor NOTEARS — the stand-in for DCD-FG (Lopez et al. 2022)
+//! in the Table-1 comparison.
+//!
+//! DCD-FG parameterizes the graph as a *factor* DAG: genes interact
+//! through a small number of latent factors, giving W a low-rank
+//! structure. Its published ancestor is NOTEARS-LR; we implement that:
+//!
+//!   W = U Vᵀ,  U, V ∈ ℝ^{d×k},   min  1/(2n)‖X − XW‖² + λ(‖U‖₁+‖V‖₁)
+//!                                s.t. h(UVᵀ) = 0
+//!
+//! optimized with the same augmented-Lagrangian scheme as [`super::notears`]
+//! but with gradients pushed through the factors (∂/∂U = G V, ∂/∂V = GᵀU).
+//! This preserves exactly what Table 1 needs from DCD-FG: a continuous-
+//! optimization factor-graph learner of interventional gene data.
+
+use crate::linalg::{expm, Mat};
+use crate::stats;
+use crate::util::{Error, Result};
+use crate::util::rng::Pcg64;
+
+/// Hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct NotearsLrOpts {
+    /// Number of latent factors k (DCD-FG uses ~10-20 for ~1000 genes).
+    pub rank: usize,
+    pub lambda: f64,
+    pub max_outer: usize,
+    pub max_inner: usize,
+    pub h_tol: f64,
+    pub rho_max: f64,
+    pub w_threshold: f64,
+    pub seed: u64,
+}
+
+impl Default for NotearsLrOpts {
+    fn default() -> Self {
+        NotearsLrOpts {
+            rank: 10,
+            lambda: 0.005,
+            max_outer: 15,
+            max_inner: 150,
+            h_tol: 1e-6,
+            rho_max: 1e14,
+            w_threshold: 0.1,
+            seed: 0,
+        }
+    }
+}
+
+/// Run NOTEARS-LR; returns the (thresholded, DAG-enforced) adjacency in
+/// this crate's convention.
+pub fn notears_lr(x: &Mat, opts: &NotearsLrOpts) -> Result<Mat> {
+    let (n, d) = (x.rows(), x.cols());
+    let k = opts.rank.min(d);
+    if n < 2 || d < 2 {
+        return Err(Error::InvalidArgument("need n ≥ 2, d ≥ 2".into()));
+    }
+    let xs = stats::standardize_cols(x);
+    let cov = xs.t().matmul(&xs).scale(1.0 / n as f64);
+
+    let mut rng = Pcg64::seed_from_u64(opts.seed);
+    let scale = 0.1 / (k as f64).sqrt();
+    let mut u = Mat::from_fn(d, k, |_, _| rng.normal() * scale);
+    let mut v = Mat::from_fn(d, k, |_, _| rng.normal() * scale);
+
+    let mut rho = 1.0;
+    let mut alpha = 0.0;
+    let mut h = f64::INFINITY;
+
+    for _outer in 0..opts.max_outer {
+        let h_new;
+        (u, v, h_new) = inner_opt(&cov, u, v, rho, alpha, opts)?;
+        if h_new > 0.25 * h && rho < opts.rho_max {
+            rho *= 10.0;
+        }
+        alpha += rho * h_new;
+        h = h_new;
+        if h < opts.h_tol || rho >= opts.rho_max {
+            break;
+        }
+    }
+
+    let w = u.matmul(&v.t());
+    let mut adj = Mat::zeros(d, d);
+    for i in 0..d {
+        for j in 0..d {
+            if i != j && w[(i, j)].abs() > opts.w_threshold {
+                adj[(j, i)] = w[(i, j)];
+            }
+        }
+    }
+    // enforce a DAG by dropping weakest cycle edges
+    while crate::graph::topological_order(&adj).is_none() {
+        let (mut bi, mut bj, mut bv) = (0, 0, f64::INFINITY);
+        for i in 0..d {
+            for j in 0..d {
+                let a = adj[(i, j)].abs();
+                if a > 0.0 && a < bv {
+                    (bi, bj, bv) = (i, j, a);
+                }
+            }
+        }
+        adj[(bi, bj)] = 0.0;
+    }
+    Ok(adj)
+}
+
+/// Proximal gradient on (U, V) at fixed (ρ, α).
+fn inner_opt(
+    cov: &Mat,
+    mut u: Mat,
+    mut v: Mat,
+    rho: f64,
+    alpha: f64,
+    opts: &NotearsLrOpts,
+) -> Result<(Mat, Mat, f64)> {
+    let mut step = 0.5;
+    let (mut f_cur, mut h_cur, mut gu, mut gv) = f_and_grad(cov, &u, &v, rho, alpha)?;
+    for _ in 0..opts.max_inner {
+        let mut improved = false;
+        for _ in 0..25 {
+            let u_try = prox(&u, &gu, step, opts.lambda);
+            let v_try = prox(&v, &gv, step, opts.lambda);
+            let (f_try, h_try, gu_try, gv_try) = f_and_grad(cov, &u_try, &v_try, rho, alpha)?;
+            let obj_cur = f_cur + opts.lambda * (l1(&u) + l1(&v));
+            let obj_try = f_try + opts.lambda * (l1(&u_try) + l1(&v_try));
+            if obj_try <= obj_cur - 1e-12 {
+                let delta = u_try.sub(&u).max_abs().max(v_try.sub(&v).max_abs());
+                u = u_try;
+                v = v_try;
+                f_cur = f_try;
+                h_cur = h_try;
+                gu = gu_try;
+                gv = gv_try;
+                improved = true;
+                step *= 1.25;
+                if delta < 1e-7 {
+                    return Ok((u, v, h_cur));
+                }
+                break;
+            }
+            step *= 0.5;
+            if step < 1e-12 {
+                return Ok((u, v, h_cur));
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    Ok((u, v, h_cur))
+}
+
+/// Objective, h, and factor gradients. W = UVᵀ with zeroed diagonal.
+fn f_and_grad(cov: &Mat, u: &Mat, v: &Mat, rho: f64, alpha: f64) -> Result<(f64, f64, Mat, Mat)> {
+    let d = cov.rows();
+    let mut w = u.matmul(&v.t());
+    for i in 0..d {
+        w[(i, i)] = 0.0;
+    }
+    let i_minus_w = Mat::eye(d).sub(&w);
+    let c_imw = cov.matmul(&i_minus_w);
+    let loss = 0.5 * i_minus_w.t().matmul(&c_imw).trace();
+    let g_loss = c_imw.scale(-1.0);
+
+    let e = expm(&w.hadamard(&w))?;
+    let h = e.trace() - d as f64;
+    let g_h = e.t().hadamard(&w.scale(2.0));
+
+    let f = loss + alpha * h + 0.5 * rho * h * h;
+    let mut g_w = g_loss.add(&g_h.scale(alpha + rho * h));
+    for i in 0..d {
+        g_w[(i, i)] = 0.0;
+    }
+    let gu = g_w.matmul(v);
+    let gv = g_w.t().matmul(u);
+    Ok((f, h, gu, gv))
+}
+
+fn prox(m: &Mat, g: &Mat, step: f64, lambda: f64) -> Mat {
+    let t = step * lambda;
+    m.zip(g, |a, b| {
+        let v = a - step * b;
+        if v > t {
+            v - t
+        } else if v < -t {
+            v + t
+        } else {
+            0.0
+        }
+    })
+}
+
+fn l1(m: &Mat) -> f64 {
+    m.as_slice().iter().map(|v| v.abs()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{simulate_perturb, Condition, PerturbSpec};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn returns_dag_on_gene_data() {
+        let spec = PerturbSpec {
+            n_genes: 20,
+            n_targets: 6,
+            cells_per_target: 40,
+            n_control_cells: 200,
+            ..PerturbSpec::small(Condition::CoCulture)
+        };
+        let mut rng = Pcg64::seed_from_u64(1);
+        let ds = simulate_perturb(&spec, &mut rng);
+        let adj = notears_lr(
+            &ds.train_data(),
+            &NotearsLrOpts { rank: 5, max_outer: 6, max_inner: 60, ..Default::default() },
+        )
+        .unwrap();
+        assert!(crate::graph::topological_order(&adj).is_some());
+        assert!(adj.is_finite());
+    }
+
+    #[test]
+    fn rank_bounds_structure() {
+        // with rank 1 the edge pattern is a (sparse) outer product —
+        // verify the result has rank ≤ 1 before thresholding by checking
+        // the learner still runs and returns a DAG
+        let mut rng = Pcg64::seed_from_u64(2);
+        let ds = crate::sim::simulate_sem(&crate::sim::SemSpec::erdos_renyi(8, 1.0), 800, &mut rng);
+        let adj = notears_lr(
+            &ds.data,
+            &NotearsLrOpts { rank: 1, max_outer: 5, max_inner: 50, ..Default::default() },
+        )
+        .unwrap();
+        assert!(crate::graph::topological_order(&adj).is_some());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let ds = crate::sim::simulate_sem(&crate::sim::SemSpec::erdos_renyi(6, 1.0), 500, &mut rng);
+        let o = NotearsLrOpts { rank: 3, max_outer: 4, max_inner: 40, ..Default::default() };
+        let a = notears_lr(&ds.data, &o).unwrap();
+        let b = notears_lr(&ds.data, &o).unwrap();
+        assert_eq!(a, b);
+    }
+}

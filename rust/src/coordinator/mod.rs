@@ -1,0 +1,105 @@
+//! The L3 coordinator: engine selection, multi-seed experiment sweeps and
+//! stage profiling — the driver machinery around the discovery algorithms.
+//!
+//! The paper's contribution lives in the kernel (L1) and its restructured
+//! computation (L2), so L3 is deliberately thin on the request path: a
+//! discovery *job* is data in → (order, adjacency, profile) out. What L3
+//! owns is everything around that: which engine serves a job, fanning 50
+//! simulation seeds across workers (Figure 3), collecting stage timings
+//! (Figure 2's 96% claim) and device statistics.
+
+pub mod bootstrap;
+pub mod profile;
+pub mod sweep;
+
+pub use bootstrap::{bootstrap_direct, BootstrapOpts, BootstrapResult};
+pub use profile::{profile_direct, profile_var, ProfileRow};
+pub use sweep::{parallel_map, SweepStats};
+
+use crate::lingam::{OrderingEngine, SequentialEngine, VectorizedEngine};
+use crate::runtime::XlaEngine;
+use crate::util::{Error, Result};
+use std::sync::Arc;
+
+/// Which ordering backend serves a job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineChoice {
+    /// Scalar per-pair reference (the paper's CPU baseline).
+    Sequential,
+    /// Restructured pure-Rust path (GPU-shaped computation on CPU).
+    Vectorized,
+    /// AOT Pallas/JAX artifacts over PJRT (the accelerated path).
+    Xla,
+}
+
+impl EngineChoice {
+    pub fn parse(s: &str) -> Result<EngineChoice> {
+        match s {
+            "sequential" | "seq" => Ok(EngineChoice::Sequential),
+            "vectorized" | "vec" => Ok(EngineChoice::Vectorized),
+            "xla" => Ok(EngineChoice::Xla),
+            other => Err(Error::InvalidArgument(format!(
+                "unknown engine {other:?} (sequential|vectorized|xla)"
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineChoice::Sequential => "sequential",
+            EngineChoice::Vectorized => "vectorized",
+            EngineChoice::Xla => "xla",
+        }
+    }
+}
+
+/// A shareable engine handle (XLA engines are expensive to build — one
+/// device thread + compile cache — so they are reference-counted).
+#[derive(Clone)]
+pub enum Engine {
+    Sequential(SequentialEngine),
+    Vectorized(VectorizedEngine),
+    Xla(Arc<XlaEngine>),
+}
+
+impl Engine {
+    /// Construct an engine for a choice; `Xla` loads the default
+    /// artifact directory and starts the device thread.
+    pub fn build(choice: EngineChoice) -> Result<Engine> {
+        Ok(match choice {
+            EngineChoice::Sequential => Engine::Sequential(SequentialEngine),
+            EngineChoice::Vectorized => Engine::Vectorized(VectorizedEngine),
+            EngineChoice::Xla => Engine::Xla(Arc::new(XlaEngine::from_default_artifacts()?)),
+        })
+    }
+
+    /// Borrow as the trait object the algorithms take.
+    pub fn as_ordering(&self) -> &dyn OrderingEngine {
+        match self {
+            Engine::Sequential(e) => e,
+            Engine::Vectorized(e) => e,
+            Engine::Xla(e) => e.as_ref(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choice_parsing() {
+        assert_eq!(EngineChoice::parse("seq").unwrap(), EngineChoice::Sequential);
+        assert_eq!(EngineChoice::parse("vectorized").unwrap(), EngineChoice::Vectorized);
+        assert_eq!(EngineChoice::parse("xla").unwrap(), EngineChoice::Xla);
+        assert!(EngineChoice::parse("cuda").is_err());
+    }
+
+    #[test]
+    fn cpu_engines_build() {
+        for c in [EngineChoice::Sequential, EngineChoice::Vectorized] {
+            let e = Engine::build(c).unwrap();
+            assert_eq!(e.as_ordering().name(), c.name());
+        }
+    }
+}

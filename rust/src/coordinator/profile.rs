@@ -1,0 +1,118 @@
+//! Stage profiling over workload grids — the measurement machinery behind
+//! Figure 2 (runtime scaling + the "ordering is ≤96% of wall-clock"
+//! claim) and Figure 3 bottom (the VarLiNGAM profile).
+
+use crate::lingam::{DirectLingam, OrderingEngine, VarLingam};
+use crate::linalg::Mat;
+use crate::util::Result;
+
+/// One grid point of a profiling run.
+#[derive(Debug, Clone)]
+pub struct ProfileRow {
+    pub n: usize,
+    pub d: usize,
+    pub engine: &'static str,
+    /// Total fit seconds.
+    pub total_secs: f64,
+    /// Seconds in the causal-ordering stage.
+    pub ordering_secs: f64,
+    /// Fraction of total spent ordering (the Figure-2 top-left number).
+    pub ordering_frac: f64,
+    /// Seconds in everything else (VAR fit and/or regression pruning).
+    pub other_secs: f64,
+}
+
+/// Fit DirectLiNGAM once and report the stage split.
+pub fn profile_direct(data: &Mat, engine: &dyn OrderingEngine) -> Result<ProfileRow> {
+    let fit = DirectLingam::new().fit(data, engine)?;
+    let total = fit.profile.total_secs();
+    let ordering = fit.profile.secs("ordering");
+    Ok(ProfileRow {
+        n: data.rows(),
+        d: data.cols(),
+        engine: engine.name(),
+        total_secs: total,
+        ordering_secs: ordering,
+        ordering_frac: fit.profile.fraction("ordering"),
+        other_secs: total - ordering,
+    })
+}
+
+/// Fit VarLiNGAM once and report the stage split (ordering fraction is
+/// relative to the full pipeline including the VAR fit).
+pub fn profile_var(series: &Mat, engine: &dyn OrderingEngine) -> Result<ProfileRow> {
+    let fit = VarLingam::new().fit(series, engine)?;
+    let total = fit.profile.total_secs();
+    let ordering = fit.profile.secs("ordering");
+    Ok(ProfileRow {
+        n: series.rows(),
+        d: series.cols(),
+        engine: engine.name(),
+        total_secs: total,
+        ordering_secs: ordering,
+        ordering_frac: if total > 0.0 { ordering / total } else { 0.0 },
+        other_secs: total - ordering,
+    })
+}
+
+/// Power-law extrapolation of sequential runtime to an (n, d) outside the
+/// measured grid (Figure 2 top-right extends to 1e6 × 100, which took the
+/// paper 7 CPU-hours; we measure a feasible grid and extrapolate with the
+/// algorithm's known O(n · d²) ordering cost).
+pub fn extrapolate_seconds(rows: &[ProfileRow], target_n: usize, target_d: usize) -> f64 {
+    // fit c in t = c · n · d²  by least squares over the measured grid
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for r in rows {
+        let w = (r.n as f64) * (r.d as f64).powi(2);
+        num += w * r.total_secs;
+        den += w * w;
+    }
+    let c = num / den.max(1e-300);
+    c * (target_n as f64) * (target_d as f64).powi(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lingam::{SequentialEngine, VectorizedEngine};
+    use crate::sim::{simulate_sem, simulate_var, SemSpec, VarSpec};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn direct_profile_sums() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let ds = simulate_sem(&SemSpec::layered(8, 2, 0.5), 2_000, &mut rng);
+        let row = profile_direct(&ds.data, &SequentialEngine).unwrap();
+        assert!(row.total_secs > 0.0);
+        assert!((row.ordering_secs + row.other_secs - row.total_secs).abs() < 1e-9);
+        assert!(row.ordering_frac > 0.5);
+    }
+
+    #[test]
+    fn var_profile_includes_var_fit() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let ds = simulate_var(&VarSpec { dim: 6, ..Default::default() }, 3_000, &mut rng);
+        let row = profile_var(&ds.data, &VectorizedEngine).unwrap();
+        assert!(row.other_secs > 0.0, "var_fit + regression time should be visible");
+        assert!(row.ordering_frac > 0.0 && row.ordering_frac <= 1.0);
+    }
+
+    #[test]
+    fn extrapolation_scales_cubically() {
+        let rows = vec![
+            ProfileRow {
+                n: 1000,
+                d: 10,
+                engine: "sequential",
+                total_secs: 1.0,
+                ordering_secs: 0.96,
+                ordering_frac: 0.96,
+                other_secs: 0.04,
+            },
+        ];
+        let t = extrapolate_seconds(&rows, 2000, 20);
+        // n doubles (×2), d doubles (×4) → ×8
+        assert!((t - 8.0).abs() < 1e-9, "t={t}");
+    }
+}

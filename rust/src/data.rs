@@ -1,0 +1,192 @@
+//! Dataset plumbing: CSV I/O, missing-value interpolation, differencing —
+//! the light preprocessing the paper applies to the stock panel
+//! ("filling missing values using time-based linear interpolation,
+//! removing indices with any remaining missing values, and transforming
+//! ... with first differencing").
+
+use crate::linalg::Mat;
+use crate::util::{Error, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+/// Write a matrix as CSV with a header row.
+pub fn write_csv(path: &Path, header: &[String], m: &Mat) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{}", header.join(","))?;
+    for r in 0..m.rows() {
+        let row: Vec<String> = m.row(r).iter().map(|v| {
+            if v.is_nan() { String::new() } else { format!("{v}") }
+        }).collect();
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Read a CSV with a header row into (header, matrix). Empty cells parse
+/// as NaN.
+pub fn read_csv(path: &Path) -> Result<(Vec<String>, Mat)> {
+    let f = BufReader::new(std::fs::File::open(path)?);
+    let mut lines = f.lines();
+    let header: Vec<String> = lines
+        .next()
+        .ok_or_else(|| Error::Parse("empty csv".into()))??
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let ncol = header.len();
+    let mut data = Vec::new();
+    let mut nrow = 0;
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let cells: Vec<&str> = line.split(',').collect();
+        if cells.len() != ncol {
+            return Err(Error::Parse(format!(
+                "line {}: {} cells, expected {ncol}",
+                lineno + 2,
+                cells.len()
+            )));
+        }
+        for c in cells {
+            let c = c.trim();
+            if c.is_empty() {
+                data.push(f64::NAN);
+            } else {
+                data.push(c.parse::<f64>().map_err(|e| {
+                    Error::Parse(format!("line {}: bad float {c:?}: {e}", lineno + 2))
+                })?);
+            }
+        }
+        nrow += 1;
+    }
+    Ok((header, Mat::from_vec(nrow, ncol, data)?))
+}
+
+/// Time-based linear interpolation of NaN runs in each column. Interior
+/// gaps are linearly interpolated; leading/trailing gaps are left NaN
+/// (the paper then drops such columns).
+pub fn interpolate_columns(m: &Mat) -> Mat {
+    let (n, d) = (m.rows(), m.cols());
+    let mut out = m.clone();
+    for c in 0..d {
+        let mut r = 0;
+        while r < n {
+            if out[(r, c)].is_nan() {
+                // find gap [r, e)
+                let mut e = r;
+                while e < n && out[(e, c)].is_nan() {
+                    e += 1;
+                }
+                if r > 0 && e < n {
+                    let lo = out[(r - 1, c)];
+                    let hi = out[(e, c)];
+                    let span = (e - r + 1) as f64;
+                    for (k, rr) in (r..e).enumerate() {
+                        out[(rr, c)] = lo + (hi - lo) * (k + 1) as f64 / span;
+                    }
+                }
+                r = e;
+            } else {
+                r += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Drop columns still containing NaN after interpolation (the paper's
+/// "removing indices with any remaining missing values"). Returns the
+/// retained column indices and the filtered matrix.
+pub fn drop_nan_columns(m: &Mat) -> (Vec<usize>, Mat) {
+    let keep: Vec<usize> = (0..m.cols())
+        .filter(|&c| (0..m.rows()).all(|r| !m[(r, c)].is_nan()))
+        .collect();
+    let filtered = m.select_cols(&keep);
+    (keep, filtered)
+}
+
+/// First differencing: out[t] = x[t+1] − x[t]; length shrinks by one.
+pub fn first_difference(m: &Mat) -> Mat {
+    let (n, d) = (m.rows(), m.cols());
+    assert!(n >= 2);
+    Mat::from_fn(n - 1, d, |t, c| m[(t + 1, c)] - m[(t, c)])
+}
+
+/// Log transform then first-difference (log-returns).
+pub fn log_returns(prices: &Mat) -> Mat {
+    first_difference(&prices.map(|p| p.ln()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let m = Mat::from_rows(&[&[1.0, 2.5], &[f64::NAN, -3.0]]);
+        let dir = std::env::temp_dir().join("alingam_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.csv");
+        write_csv(&p, &["a".into(), "b".into()], &m).unwrap();
+        let (h, back) = read_csv(&p).unwrap();
+        assert_eq!(h, vec!["a", "b"]);
+        assert_eq!(back[(0, 1)], 2.5);
+        assert!(back[(1, 0)].is_nan());
+        assert_eq!(back[(1, 1)], -3.0);
+    }
+
+    #[test]
+    fn interpolation_fills_interior_gaps() {
+        let m = Mat::from_vec(5, 1, vec![1.0, f64::NAN, f64::NAN, 4.0, 5.0]).unwrap();
+        let out = interpolate_columns(&m);
+        assert!((out[(1, 0)] - 2.0).abs() < 1e-12);
+        assert!((out[(2, 0)] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn interpolation_leaves_edge_gaps() {
+        let m = Mat::from_vec(4, 1, vec![f64::NAN, 2.0, 3.0, f64::NAN]).unwrap();
+        let out = interpolate_columns(&m);
+        assert!(out[(0, 0)].is_nan());
+        assert!(out[(3, 0)].is_nan());
+    }
+
+    #[test]
+    fn drop_nan_cols_filters() {
+        let m = Mat::from_rows(&[&[1.0, f64::NAN, 3.0], &[4.0, 5.0, 6.0]]);
+        let (keep, f) = drop_nan_columns(&m);
+        assert_eq!(keep, vec![0, 2]);
+        assert_eq!(f.cols(), 2);
+        assert_eq!(f[(0, 1)], 3.0);
+    }
+
+    #[test]
+    fn differencing_makes_random_walk_stationary() {
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::seed_from_u64(1);
+        let mut p = 0.0;
+        let walk: Vec<f64> = (0..2000)
+            .map(|_| {
+                p += rng.normal();
+                p
+            })
+            .collect();
+        let m = Mat::from_vec(2000, 1, walk).unwrap();
+        let d = first_difference(&m);
+        assert_eq!(d.rows(), 1999);
+        // differenced series ~ N(0,1): variance near 1
+        let col = d.col(0);
+        let v = crate::stats::var(&col);
+        assert!((v - 1.0).abs() < 0.15, "var={v}");
+    }
+
+    #[test]
+    fn log_returns_shape() {
+        let m = Mat::from_rows(&[&[100.0], &[110.0], &[99.0]]);
+        let r = log_returns(&m);
+        assert_eq!(r.rows(), 2);
+        assert!((r[(0, 0)] - (110.0f64 / 100.0).ln()).abs() < 1e-12);
+    }
+}

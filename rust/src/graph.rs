@@ -1,0 +1,247 @@
+//! Causal DAGs: a weighted-adjacency representation, acyclicity checks,
+//! topological orders, degree statistics, and the random-DAG generators
+//! the paper's simulations use.
+//!
+//! Convention (matches the `lingam` reference package): `B[(i, j)] ≠ 0`
+//! means **j → i**, i.e. row `i` holds the coefficients of `x_i`'s
+//! parents: `x_i = Σ_j B[i,j] x_j + ε_i`.
+
+use crate::linalg::Mat;
+use crate::util::rng::Pcg64;
+
+/// A directed acyclic graph with edge weights (the SEM coefficients θ).
+#[derive(Clone, Debug)]
+pub struct Dag {
+    /// Weighted adjacency, `adj[(i, j)] = θ_ij` meaning j → i.
+    pub adj: Mat,
+}
+
+impl Dag {
+    /// From a weighted adjacency matrix (validated for acyclicity).
+    pub fn new(adj: Mat) -> Option<Dag> {
+        let d = Dag { adj };
+        if d.topological_order().is_some() {
+            Some(d)
+        } else {
+            None
+        }
+    }
+
+    /// Number of variables.
+    pub fn dim(&self) -> usize {
+        self.adj.rows()
+    }
+
+    /// Number of (directed) edges.
+    pub fn num_edges(&self) -> usize {
+        self.adj.as_slice().iter().filter(|&&w| w != 0.0).count()
+    }
+
+    /// Parents of node `i`.
+    pub fn parents(&self, i: usize) -> Vec<usize> {
+        (0..self.dim()).filter(|&j| self.adj[(i, j)] != 0.0).collect()
+    }
+
+    /// Children of node `j`.
+    pub fn children(&self, j: usize) -> Vec<usize> {
+        (0..self.dim()).filter(|&i| self.adj[(i, j)] != 0.0).collect()
+    }
+
+    /// In-degree of each node (number of parents).
+    pub fn in_degrees(&self) -> Vec<usize> {
+        (0..self.dim()).map(|i| self.parents(i).len()).collect()
+    }
+
+    /// Out-degree of each node (number of children).
+    pub fn out_degrees(&self) -> Vec<usize> {
+        (0..self.dim()).map(|j| self.children(j).len()).collect()
+    }
+
+    /// Leaf nodes: no outgoing edges (influence nothing) — the paper calls
+    /// out USB/FITB as leaves of the stock graph in this sense.
+    pub fn leaves(&self) -> Vec<usize> {
+        self.out_degrees()
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d == 0)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Kahn topological order over causes-first; `None` if cyclic.
+    pub fn topological_order(&self) -> Option<Vec<usize>> {
+        topological_order(&self.adj)
+    }
+}
+
+/// Kahn's algorithm on a weighted adjacency (j → i iff `adj[(i,j)] != 0`).
+/// Returns a causes-first order, or `None` if the graph has a cycle.
+pub fn topological_order(adj: &Mat) -> Option<Vec<usize>> {
+    let d = adj.rows();
+    assert_eq!(d, adj.cols());
+    let mut indeg: Vec<usize> = (0..d)
+        .map(|i| (0..d).filter(|&j| adj[(i, j)] != 0.0).count())
+        .collect();
+    let mut queue: Vec<usize> = (0..d).filter(|&i| indeg[i] == 0).collect();
+    let mut order = Vec::with_capacity(d);
+    while let Some(j) = queue.pop() {
+        order.push(j);
+        for i in 0..d {
+            if adj[(i, j)] != 0.0 {
+                indeg[i] -= 1;
+                if indeg[i] == 0 {
+                    queue.push(i);
+                }
+            }
+        }
+    }
+    (order.len() == d).then_some(order)
+}
+
+/// Is the weighted adjacency acyclic?
+pub fn is_acyclic(adj: &Mat) -> bool {
+    topological_order(adj).is_some()
+}
+
+/// Check that `order` is consistent with `adj`: every edge j → i has j
+/// earlier in the order than i. (The correctness criterion for a causal
+/// ordering even when it is not unique.)
+pub fn order_consistent(adj: &Mat, order: &[usize]) -> bool {
+    let d = adj.rows();
+    if order.len() != d {
+        return false;
+    }
+    let mut pos = vec![usize::MAX; d];
+    for (p, &v) in order.iter().enumerate() {
+        if v >= d || pos[v] != usize::MAX {
+            return false;
+        }
+        pos[v] = p;
+    }
+    for i in 0..d {
+        for j in 0..d {
+            if adj[(i, j)] != 0.0 && pos[j] > pos[i] {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Layered random DAG per the paper's §3.1 simulation design: vertices
+/// are arranged in levels; a vertex at level `l` may only have parents at
+/// level `l − 1`. Edge weights θ ~ N(0, 1).
+///
+/// `dim` variables over `levels` levels, each potential (parent, child)
+/// pair across adjacent levels included with probability `p_edge`.
+pub fn layered_dag(dim: usize, levels: usize, p_edge: f64, rng: &mut Pcg64) -> Dag {
+    assert!(levels >= 1 && dim >= levels);
+    // assign variables to levels round-robin then shuffle for irregularity
+    let mut level_of: Vec<usize> = (0..dim).map(|i| i % levels).collect();
+    rng.shuffle(&mut level_of);
+    let mut adj = Mat::zeros(dim, dim);
+    for child in 0..dim {
+        let lc = level_of[child];
+        if lc == 0 {
+            continue;
+        }
+        for parent in 0..dim {
+            if level_of[parent] == lc - 1 && rng.bernoulli(p_edge) {
+                adj[(child, parent)] = rng.normal(); // θ ~ N(0,1)
+            }
+        }
+    }
+    Dag::new(adj).expect("layered construction is acyclic by construction")
+}
+
+/// Erdős–Rényi random DAG: sample a random permutation as the causal
+/// order, include each forward edge with probability chosen to hit an
+/// expected `edges_per_node` average degree; weights uniform in
+/// ±[w_lo, w_hi] (the NOTEARS-literature convention).
+pub fn erdos_renyi_dag(
+    dim: usize,
+    edges_per_node: f64,
+    w_lo: f64,
+    w_hi: f64,
+    rng: &mut Pcg64,
+) -> Dag {
+    let order = rng.permutation(dim);
+    let p = (edges_per_node * dim as f64 / (dim as f64 * (dim as f64 - 1.0) / 2.0)).min(1.0);
+    let mut adj = Mat::zeros(dim, dim);
+    for a in 0..dim {
+        for b in (a + 1)..dim {
+            if rng.bernoulli(p) {
+                let (parent, child) = (order[a], order[b]);
+                let mag = rng.uniform(w_lo, w_hi);
+                let sign = if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+                adj[(child, parent)] = sign * mag;
+            }
+        }
+    }
+    Dag::new(adj).expect("forward edges over a permutation are acyclic")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain3() -> Mat {
+        // 0 → 1 → 2
+        let mut adj = Mat::zeros(3, 3);
+        adj[(1, 0)] = 1.0;
+        adj[(2, 1)] = 1.0;
+        adj
+    }
+
+    #[test]
+    fn topo_on_chain() {
+        let order = topological_order(&chain3()).unwrap();
+        assert!(order_consistent(&chain3(), &order));
+        assert_eq!(order, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut adj = chain3();
+        adj[(0, 2)] = 1.0; // close the loop
+        assert!(!is_acyclic(&adj));
+        assert!(Dag::new(adj).is_none());
+    }
+
+    #[test]
+    fn order_consistency_rejects_bad_orders() {
+        assert!(!order_consistent(&chain3(), &[2, 1, 0]));
+        assert!(!order_consistent(&chain3(), &[0, 1])); // wrong length
+        assert!(!order_consistent(&chain3(), &[0, 0, 1])); // not a permutation
+    }
+
+    #[test]
+    fn degrees_and_leaves() {
+        let d = Dag::new(chain3()).unwrap();
+        assert_eq!(d.in_degrees(), vec![0, 1, 1]);
+        assert_eq!(d.out_degrees(), vec![1, 1, 0]);
+        assert_eq!(d.leaves(), vec![2]);
+        assert_eq!(d.parents(1), vec![0]);
+        assert_eq!(d.children(1), vec![2]);
+    }
+
+    #[test]
+    fn layered_dag_respects_levels() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        for _ in 0..10 {
+            let g = layered_dag(12, 3, 0.6, &mut rng);
+            assert!(g.topological_order().is_some());
+            assert!(g.num_edges() > 0);
+        }
+    }
+
+    #[test]
+    fn er_dag_acyclic_and_weighted() {
+        let mut rng = Pcg64::seed_from_u64(6);
+        let g = erdos_renyi_dag(20, 2.0, 0.5, 2.0, &mut rng);
+        assert!(g.topological_order().is_some());
+        for &w in g.adj.as_slice() {
+            assert!(w == 0.0 || (0.5..=2.0).contains(&w.abs()));
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! # AcceleratedLiNGAM
+//!
+//! Reproduction of *AcceleratedLiNGAM: Learning Causal DAGs at the speed of
+//! GPUs* (Akinwande & Kolter, 2024) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! - **L1** — the causal-ordering hot spot as a Pallas kernel
+//!   (`python/compile/kernels/`), AOT-lowered to HLO text.
+//! - **L2** — the JAX compute graph around it (`python/compile/model.py`).
+//! - **L3** — this crate: the coordinator that drives DirectLiNGAM /
+//!   VarLiNGAM, loads the AOT artifacts via PJRT, and hosts the
+//!   substrates (linear algebra, simulation, metrics, baselines) the
+//!   paper's evaluation needs.
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! `alingam` binary is self-contained.
+//!
+//! ## Quick example
+//!
+//! ```no_run
+//! use alingam::prelude::*;
+//!
+//! let mut rng = Pcg64::seed_from_u64(7);
+//! let spec = sim::SemSpec::layered(10, 2, 0.5);
+//! let ds = sim::simulate_sem(&spec, 10_000, &mut rng);
+//! let engine = lingam::VectorizedEngine::default();
+//! let fit = lingam::DirectLingam::new().fit(&ds.data, &engine).unwrap();
+//! let m = metrics::graph_metrics(&ds.adjacency, &fit.adjacency, 0.05);
+//! println!("order = {:?}  F1 = {:.3}", fit.order, m.f1);
+//! ```
+
+pub mod util;
+pub mod linalg;
+pub mod stats;
+pub mod graph;
+pub mod sim;
+pub mod metrics;
+pub mod data;
+pub mod lingam;
+pub mod runtime;
+pub mod coordinator;
+pub mod baselines;
+pub mod apps;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::graph::Dag;
+    pub use crate::linalg::Mat;
+    pub use crate::lingam::{self, DirectLingam, OrderingEngine, SequentialEngine, VectorizedEngine, VarLingam};
+    pub use crate::metrics;
+    pub use crate::sim;
+    pub use crate::util::rng::Pcg64;
+    pub use crate::coordinator;
+    pub use crate::runtime;
+}

@@ -1,0 +1,149 @@
+//! Hungarian algorithm (Kuhn–Munkres, O(n³)) for the linear assignment
+//! problem — ICA-LiNGAM permutes the unmixing matrix's rows to put the
+//! dominant entries on the diagonal, which is exactly a min-cost
+//! assignment on `1/|W_ij|` (the reference package uses munkres too).
+
+use super::Mat;
+
+/// Minimum-cost assignment: returns `perm` with `perm[row] = column`,
+/// minimizing `Σ cost[(row, perm[row])]`. Costs may be any finite f64.
+pub fn hungarian(cost: &Mat) -> Vec<usize> {
+    let n = cost.rows();
+    assert_eq!(n, cost.cols(), "assignment needs square cost");
+    if n == 0 {
+        return Vec::new();
+    }
+    // O(n³) shortest-augmenting-path formulation (1-indexed internals).
+    let inf = f64::INFINITY;
+    let mut u = vec![0.0; n + 1];
+    let mut v = vec![0.0; n + 1];
+    let mut p = vec![0usize; n + 1]; // p[col] = row matched to col
+    let mut way = vec![0usize; n + 1];
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![inf; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = inf;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if used[j] {
+                    continue;
+                }
+                let cur = cost[(i0 - 1, j - 1)] - u[i0] - v[j];
+                if cur < minv[j] {
+                    minv[j] = cur;
+                    way[j] = j0;
+                }
+                if minv[j] < delta {
+                    delta = minv[j];
+                    j1 = j;
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+    let mut perm = vec![0usize; n];
+    for j in 1..=n {
+        if p[j] > 0 {
+            perm[p[j] - 1] = j - 1;
+        }
+    }
+    perm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn total(cost: &Mat, perm: &[usize]) -> f64 {
+        perm.iter().enumerate().map(|(r, &c)| cost[(r, c)]).sum()
+    }
+
+    #[test]
+    fn identity_when_diagonal_cheapest() {
+        let cost = Mat::from_rows(&[&[0.0, 9.0, 9.0], &[9.0, 0.0, 9.0], &[9.0, 9.0, 0.0]]);
+        assert_eq!(hungarian(&cost), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn known_3x3() {
+        // classic example: optimal = 1+2+2 = 5 via (0→1, 1→0, 2→2)? check
+        let cost = Mat::from_rows(&[&[4.0, 1.0, 3.0], &[2.0, 0.0, 5.0], &[3.0, 2.0, 2.0]]);
+        let perm = hungarian(&cost);
+        assert_eq!(total(&cost, &perm), 5.0, "perm={perm:?}");
+    }
+
+    #[test]
+    fn beats_or_matches_every_permutation_bruteforce() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        for _case in 0..50 {
+            let n = 2 + rng.below(4); // 2..=5
+            let cost = Mat::from_fn(n, n, |_, _| rng.uniform(0.0, 10.0));
+            let perm = hungarian(&cost);
+            // validate it is a permutation
+            let mut seen = vec![false; n];
+            for &c in &perm {
+                assert!(!seen[c]);
+                seen[c] = true;
+            }
+            let best = brute_force_min(&cost);
+            let got = total(&cost, &perm);
+            assert!(got <= best + 1e-9, "hungarian {got} > brute {best}");
+        }
+    }
+
+    fn brute_force_min(cost: &Mat) -> f64 {
+        let n = cost.rows();
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut best = f64::INFINITY;
+        permute(&mut perm, 0, &mut |p| {
+            let t = p.iter().enumerate().map(|(r, &c)| cost[(r, c)]).sum::<f64>();
+            if t < best {
+                best = t;
+            }
+        });
+        best
+    }
+
+    fn permute(xs: &mut Vec<usize>, k: usize, f: &mut impl FnMut(&[usize])) {
+        if k == xs.len() {
+            f(xs);
+            return;
+        }
+        for i in k..xs.len() {
+            xs.swap(k, i);
+            permute(xs, k + 1, f);
+            xs.swap(k, i);
+        }
+    }
+
+    #[test]
+    fn negative_costs_ok() {
+        let cost = Mat::from_rows(&[&[-5.0, 0.0], &[0.0, -5.0]]);
+        assert_eq!(hungarian(&cost), vec![0, 1]);
+    }
+}

@@ -1,0 +1,221 @@
+//! Factorizations and solvers: LU with partial pivoting, Cholesky, least
+//! squares (normal equations with ridge fallback).
+
+use super::Mat;
+use crate::util::{Error, Result};
+
+/// LU decomposition with partial pivoting, stored in-place.
+struct Lu {
+    lu: Mat,
+    piv: Vec<usize>,
+}
+
+fn lu_factor(a: &Mat) -> Result<Lu> {
+    let n = a.rows();
+    if a.cols() != n {
+        return Err(Error::Shape(format!("LU needs square, got {}x{}", a.rows(), a.cols())));
+    }
+    let mut lu = a.clone();
+    let mut piv: Vec<usize> = (0..n).collect();
+    for k in 0..n {
+        // pivot search
+        let mut p = k;
+        let mut max = lu[(k, k)].abs();
+        for i in (k + 1)..n {
+            let v = lu[(i, k)].abs();
+            if v > max {
+                max = v;
+                p = i;
+            }
+        }
+        if max < 1e-300 {
+            return Err(Error::Numerical(format!("singular matrix at pivot {k}")));
+        }
+        if p != k {
+            piv.swap(p, k);
+            for j in 0..n {
+                let tmp = lu[(k, j)];
+                lu[(k, j)] = lu[(p, j)];
+                lu[(p, j)] = tmp;
+            }
+        }
+        let pivot = lu[(k, k)];
+        for i in (k + 1)..n {
+            let m = lu[(i, k)] / pivot;
+            lu[(i, k)] = m;
+            for j in (k + 1)..n {
+                let sub = m * lu[(k, j)];
+                lu[(i, j)] -= sub;
+            }
+        }
+    }
+    Ok(Lu { lu, piv })
+}
+
+fn lu_solve_one(f: &Lu, b: &[f64]) -> Vec<f64> {
+    let n = f.lu.rows();
+    // apply permutation
+    let mut y: Vec<f64> = f.piv.iter().map(|&p| b[p]).collect();
+    // forward substitution (unit lower)
+    for i in 1..n {
+        for j in 0..i {
+            y[i] -= f.lu[(i, j)] * y[j];
+        }
+    }
+    // back substitution
+    for i in (0..n).rev() {
+        for j in (i + 1)..n {
+            y[i] -= f.lu[(i, j)] * y[j];
+        }
+        y[i] /= f.lu[(i, i)];
+    }
+    y
+}
+
+/// Solve `A x = b` for one or more right-hand sides (columns of `b`).
+pub fn lu_solve(a: &Mat, b: &Mat) -> Result<Mat> {
+    if a.rows() != b.rows() {
+        return Err(Error::Shape(format!("solve: A is {}x{}, b has {} rows", a.rows(), a.cols(), b.rows())));
+    }
+    let f = lu_factor(a)?;
+    let mut out = Mat::zeros(b.rows(), b.cols());
+    for c in 0..b.cols() {
+        let x = lu_solve_one(&f, &b.col(c));
+        out.set_col(c, &x);
+    }
+    Ok(out)
+}
+
+/// Matrix inverse via LU.
+pub fn lu_inverse(a: &Mat) -> Result<Mat> {
+    lu_solve(a, &Mat::eye(a.rows()))
+}
+
+/// Cholesky factor L (lower) of a symmetric positive-definite matrix.
+pub fn cholesky(a: &Mat) -> Result<Mat> {
+    let n = a.rows();
+    if a.cols() != n {
+        return Err(Error::Shape("cholesky needs square".into()));
+    }
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return Err(Error::Numerical(format!("not positive definite at {i} (s={s})")));
+                }
+                l[(i, j)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Ordinary least squares: minimize ‖A x − b‖² via normal equations
+/// `AᵀA x = Aᵀ b`, with a tiny ridge jitter retry if AᵀA is singular.
+pub fn lstsq(a: &Mat, b: &Mat) -> Result<Mat> {
+    ridge_solve(a, b, 0.0)
+}
+
+/// Ridge regression: `(AᵀA + λI) x = Aᵀ b`.
+pub fn ridge_solve(a: &Mat, b: &Mat, lambda: f64) -> Result<Mat> {
+    let at = a.t();
+    let mut ata = at.matmul(a);
+    let atb = at.matmul(b);
+    if lambda > 0.0 {
+        for i in 0..ata.rows() {
+            ata[(i, i)] += lambda;
+        }
+    }
+    match lu_solve(&ata, &atb) {
+        Ok(x) => Ok(x),
+        Err(_) if lambda == 0.0 => {
+            // singular normal equations: retry with jitter proportional to scale
+            let jitter = 1e-10 * (1.0 + ata.trace().abs() / ata.rows() as f64);
+            for i in 0..ata.rows() {
+                ata[(i, i)] += jitter;
+            }
+            lu_solve(&ata, &atb)
+        }
+        Err(e) => Err(e),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f64) {
+        assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+        let d = a.sub(b).max_abs();
+        assert!(d < tol, "max abs diff {d}");
+    }
+
+    #[test]
+    fn solve_known_system() {
+        let a = Mat::from_rows(&[&[2.0, 1.0], &[1.0, 3.0]]);
+        let b = Mat::from_vec(2, 1, vec![5.0, 10.0]).unwrap();
+        let x = lu_solve(&a, &b).unwrap();
+        // 2x + y = 5; x + 3y = 10 → x = 1, y = 3
+        assert!((x[(0, 0)] - 1.0).abs() < 1e-12);
+        assert!((x[(1, 0)] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let a = Mat::from_rows(&[&[4.0, 2.0, 0.5], &[2.0, 5.0, 1.0], &[0.5, 1.0, 3.0]]);
+        let inv = lu_inverse(&a).unwrap();
+        assert_close(&a.matmul(&inv), &Mat::eye(3), 1e-10);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(lu_inverse(&a).is_err());
+    }
+
+    #[test]
+    fn pivoting_handles_zero_diagonal() {
+        let a = Mat::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        let x = lu_solve(&a, &Mat::from_vec(2, 1, vec![3.0, 7.0]).unwrap()).unwrap();
+        assert_eq!(x.col(0), vec![7.0, 3.0]);
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = Mat::from_rows(&[&[4.0, 2.0], &[2.0, 3.0]]);
+        let l = cholesky(&a).unwrap();
+        assert_close(&l.matmul(&l.t()), &a, 1e-12);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]);
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn lstsq_recovers_coefficients() {
+        // y = 2 x0 - 3 x1, overdetermined
+        let a = Mat::from_fn(50, 2, |r, c| ((r * (c + 1) * 37 + 11) % 17) as f64 / 17.0);
+        let truth = Mat::from_vec(2, 1, vec![2.0, -3.0]).unwrap();
+        let b = a.matmul(&truth);
+        let x = lstsq(&a, &b).unwrap();
+        assert_close(&x, &truth, 1e-8);
+    }
+
+    #[test]
+    fn ridge_shrinks() {
+        let a = Mat::from_fn(30, 2, |r, c| ((r + c * 13) % 7) as f64);
+        let b = Mat::from_fn(30, 1, |r, _| (r % 5) as f64);
+        let x0 = lstsq(&a, &b).unwrap();
+        let x1 = ridge_solve(&a, &b, 100.0).unwrap();
+        assert!(x1.fro_norm() < x0.fro_norm());
+    }
+}

@@ -1,0 +1,148 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method — the
+//! whitening step of FastICA (ICA-LiNGAM) needs the eigensystem of the
+//! covariance matrix.
+
+use super::Mat;
+use crate::util::{Error, Result};
+
+/// Eigendecomposition of a symmetric matrix: `a = V diag(λ) Vᵀ`.
+/// Returns (eigenvalues ascending, eigenvectors as columns of V).
+pub fn eigh(a: &Mat) -> Result<(Vec<f64>, Mat)> {
+    let n = a.rows();
+    if a.cols() != n {
+        return Err(Error::Shape("eigh needs square".into()));
+    }
+    let sym_err = (0..n)
+        .flat_map(|i| (0..n).map(move |j| (i, j)))
+        .map(|(i, j)| (a[(i, j)] - a[(j, i)]).abs())
+        .fold(0.0, f64::max);
+    if sym_err > 1e-8 * (1.0 + a.max_abs()) {
+        return Err(Error::InvalidArgument(format!("matrix not symmetric (err {sym_err})")));
+    }
+
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+    // cyclic Jacobi sweeps
+    for _sweep in 0..100 {
+        let mut off = 0.0;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += m[(p, q)] * m[(p, q)];
+            }
+        }
+        if off < 1e-22 * (1.0 + m.max_abs()).powi(2) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q of m
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                // accumulate eigenvectors
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    // sort ascending
+    let mut idx: Vec<usize> = (0..n).collect();
+    let evals: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    idx.sort_by(|&i, &j| evals[i].partial_cmp(&evals[j]).unwrap());
+    let sorted: Vec<f64> = idx.iter().map(|&i| evals[i]).collect();
+    let vs = Mat::from_fn(n, n, |r, c| v[(r, idx[c])]);
+    Ok((sorted, vs))
+}
+
+/// Whitening transform `K` such that `K Σ Kᵀ = I`, from the covariance
+/// eigensystem (drops directions with eigenvalue below `eps` — the
+/// FastICA pre-processing step).
+pub fn whitening_matrix(cov: &Mat, eps: f64) -> Result<Mat> {
+    let (evals, v) = eigh(cov)?;
+    let n = cov.rows();
+    let kept: Vec<usize> = (0..n).filter(|&i| evals[i] > eps).collect();
+    if kept.is_empty() {
+        return Err(Error::Numerical("covariance has no positive eigenvalues".into()));
+    }
+    // K = Λ^{-1/2} Vᵀ (rows = kept components)
+    Ok(Mat::from_fn(kept.len(), n, |r, c| {
+        v[(c, kept[r])] / evals[kept[r]].sqrt()
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagonal_matrix_eigenvalues() {
+        let mut a = Mat::zeros(3, 3);
+        a[(0, 0)] = 3.0;
+        a[(1, 1)] = 1.0;
+        a[(2, 2)] = 2.0;
+        let (e, _) = eigh(&a).unwrap();
+        assert!((e[0] - 1.0).abs() < 1e-12);
+        assert!((e[1] - 2.0).abs() < 1e-12);
+        assert!((e[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstructs_symmetric() {
+        let b = Mat::from_fn(4, 4, |r, c| ((r * 3 + c * 7) % 11) as f64 / 11.0);
+        let a = b.add(&b.t()); // symmetric
+        let (e, v) = eigh(&a).unwrap();
+        // A = V diag(e) Vᵀ
+        let lam = Mat::from_fn(4, 4, |r, c| if r == c { e[r] } else { 0.0 });
+        let rec = v.matmul(&lam).matmul(&v.t());
+        assert!(rec.sub(&a).max_abs() < 1e-9, "reconstruction error");
+        // V orthogonal
+        assert!(v.t().matmul(&v).sub(&Mat::eye(4)).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] → eigenvalues 1, 3
+        let a = Mat::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]);
+        let (e, _) = eigh(&a).unwrap();
+        assert!((e[0] - 1.0).abs() < 1e-12 && (e[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_asymmetric() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[0.0, 1.0]]);
+        assert!(eigh(&a).is_err());
+    }
+
+    #[test]
+    fn whitening_whitens() {
+        // random SPD covariance
+        let b = Mat::from_fn(3, 5, |r, c| ((r * 5 + c * 3 + 1) % 7) as f64 - 3.0);
+        let cov = b.matmul(&b.t()).scale(0.2).add(&Mat::eye(3).scale(0.1));
+        let k = whitening_matrix(&cov, 1e-12).unwrap();
+        let w = k.matmul(&cov).matmul(&k.t());
+        assert!(w.sub(&Mat::eye(3)).max_abs() < 1e-9, "K Σ Kᵀ != I");
+    }
+}

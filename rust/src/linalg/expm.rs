@@ -1,0 +1,106 @@
+//! Matrix exponential via scaling-and-squaring with a Padé(6,6)
+//! approximant. Needed by the NOTEARS baseline's acyclicity function
+//! `h(W) = tr(exp(W∘W)) − d` and its gradient `exp(W∘W)ᵀ ∘ 2W`.
+
+use super::{lu_solve, Mat};
+use crate::util::Result;
+
+/// `exp(A)` for square `A`.
+pub fn expm(a: &Mat) -> Result<Mat> {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "expm needs square");
+
+    // Scale A down so ‖A/2^s‖∞ ≤ 0.5, apply Padé, square back up.
+    let norm = inf_norm(a);
+    let s = if norm > 0.5 { (norm / 0.5).log2().ceil() as i32 } else { 0 };
+    let a_scaled = a.scale(0.5_f64.powi(s));
+
+    // Padé(6,6): N = Σ c_k A^k, D = Σ (−1)^k c_k A^k, exp ≈ D⁻¹N.
+    const C: [f64; 7] = [
+        1.0,
+        0.5,
+        5.0 / 44.0,
+        1.0 / 66.0,
+        1.0 / 792.0,
+        1.0 / 15840.0,
+        1.0 / 665280.0,
+    ];
+    let mut term = Mat::eye(n); // A^0
+    let mut num = Mat::eye(n); // c0 * I
+    let mut den = Mat::eye(n);
+    for (k, &c) in C.iter().enumerate().skip(1) {
+        term = term.matmul(&a_scaled);
+        num = num.add(&term.scale(c));
+        let sign = if k % 2 == 0 { 1.0 } else { -1.0 };
+        den = den.add(&term.scale(sign * c));
+    }
+    let mut e = lu_solve(&den, &num)?;
+    for _ in 0..s {
+        e = e.matmul(&e);
+    }
+    Ok(e)
+}
+
+fn inf_norm(a: &Mat) -> f64 {
+    (0..a.rows())
+        .map(|r| a.row(r).iter().map(|x| x.abs()).sum::<f64>())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_zero_is_identity() {
+        let e = expm(&Mat::zeros(4, 4)).unwrap();
+        assert!(e.sub(&Mat::eye(4)).max_abs() < 1e-14);
+    }
+
+    #[test]
+    fn exp_diagonal() {
+        let mut a = Mat::zeros(3, 3);
+        a[(0, 0)] = 1.0;
+        a[(1, 1)] = -2.0;
+        a[(2, 2)] = 0.5;
+        let e = expm(&a).unwrap();
+        assert!((e[(0, 0)] - 1.0_f64.exp()).abs() < 1e-10);
+        assert!((e[(1, 1)] - (-2.0_f64).exp()).abs() < 1e-10);
+        assert!((e[(2, 2)] - 0.5_f64.exp()).abs() < 1e-10);
+        assert!(e[(0, 1)].abs() < 1e-12);
+    }
+
+    #[test]
+    fn exp_nilpotent_exact() {
+        // strictly upper triangular (DAG-like): series terminates.
+        let mut a = Mat::zeros(3, 3);
+        a[(0, 1)] = 2.0;
+        a[(1, 2)] = 3.0;
+        let e = expm(&a).unwrap();
+        // exp = I + A + A²/2; A² has only (0,2)=6
+        assert!((e[(0, 1)] - 2.0).abs() < 1e-12);
+        assert!((e[(1, 2)] - 3.0).abs() < 1e-12);
+        assert!((e[(0, 2)] - 3.0).abs() < 1e-12);
+        assert!((e.trace() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exp_additivity_commuting() {
+        // exp(A)·exp(A) = exp(2A)
+        let a = Mat::from_rows(&[&[0.1, 0.3], &[-0.2, 0.05]]);
+        let e1 = expm(&a).unwrap();
+        let e2 = expm(&a.scale(2.0)).unwrap();
+        assert!(e1.matmul(&e1).sub(&e2).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn large_norm_scaled_correctly() {
+        let a = Mat::from_rows(&[&[5.0, 1.0], &[0.0, 5.0]]);
+        let e = expm(&a).unwrap();
+        // analytic: exp([[5,1],[0,5]]) = e^5 [[1,1],[0,1]]
+        let e5 = 5.0_f64.exp();
+        assert!((e[(0, 0)] - e5).abs() / e5 < 1e-9);
+        assert!((e[(0, 1)] - e5).abs() / e5 < 1e-9);
+        assert!(e[(1, 0)].abs() < 1e-9);
+    }
+}

@@ -1,0 +1,17 @@
+//! Dense linear-algebra substrate, built from scratch (no ndarray/BLAS in
+//! the offline crate set).
+//!
+//! Provides what the LiNGAM stack and its baselines need: matmul, LU
+//! solves, Cholesky, least squares, matrix exponential (NOTEARS'
+//! acyclicity function), and the usual element-wise operations.
+
+mod mat;
+mod decomp;
+mod expm;
+pub mod eigh;
+pub mod assignment;
+
+pub use decomp::{cholesky, lstsq, lu_inverse, lu_solve, ridge_solve};
+pub use eigh::{eigh, whitening_matrix};
+pub use expm::expm;
+pub use mat::Mat;

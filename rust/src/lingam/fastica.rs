@@ -1,0 +1,175 @@
+//! FastICA (Hyvärinen 1999) with the log-cosh contrast and symmetric
+//! decorrelation — the estimation core of ICA-LiNGAM (Shimizu et al.
+//! 2006), the original LiNGAM algorithm the paper's §2.2 describes.
+
+use crate::linalg::{eigh::whitening_matrix, Mat};
+use crate::stats;
+use crate::util::rng::Pcg64;
+use crate::util::{Error, Result};
+
+/// FastICA options.
+#[derive(Clone, Debug)]
+pub struct FastIcaOpts {
+    pub max_iter: usize,
+    pub tol: f64,
+    pub seed: u64,
+}
+
+impl Default for FastIcaOpts {
+    fn default() -> Self {
+        FastIcaOpts { max_iter: 400, tol: 1e-6, seed: 0 }
+    }
+}
+
+/// Result: the unmixing matrix in the *original* (unwhitened) space:
+/// `S = W X_centeredᵀ` recovers the sources.
+pub struct FastIcaFit {
+    /// Unmixing matrix `[d, d]`.
+    pub w: Mat,
+    pub iterations: usize,
+    pub converged: bool,
+}
+
+/// Run FastICA on a data panel `[n, d]` (full-rank, d components).
+pub fn fastica(x: &Mat, opts: &FastIcaOpts) -> Result<FastIcaFit> {
+    let (n, d) = (x.rows(), x.cols());
+    if n < d * 4 {
+        return Err(Error::InvalidArgument(format!("need n ≫ d, got {n} × {d}")));
+    }
+    // center
+    let mut xc = x.clone();
+    for c in 0..d {
+        let m = stats::mean(&x.col(c));
+        for r in 0..n {
+            xc[(r, c)] -= m;
+        }
+    }
+    // whiten: Z = Xc Kᵀ with K Σ Kᵀ = I
+    let cov = xc.t().matmul(&xc).scale(1.0 / n as f64);
+    let k = whitening_matrix(&cov, 1e-10)?;
+    if k.rows() != d {
+        return Err(Error::Numerical(format!(
+            "rank-deficient data: {} of {d} components",
+            k.rows()
+        )));
+    }
+    let z = xc.matmul(&k.t()); // [n, d]
+
+    // symmetric FastICA on whitened data
+    let mut rng = Pcg64::seed_from_u64(opts.seed);
+    let mut w = Mat::from_fn(d, d, |_, _| rng.normal());
+    w = sym_decorrelate(&w)?;
+    let mut converged = false;
+    let mut it = 0;
+    while it < opts.max_iter {
+        it += 1;
+        // g = tanh(w z), g' = 1 - tanh²
+        let wz = z.matmul(&w.t()); // [n, d] projections
+        let g = wz.map(|v| v.tanh());
+        let g_prime_mean: Vec<f64> = (0..d)
+            .map(|c| {
+                (0..n).map(|r| 1.0 - g[(r, c)] * g[(r, c)]).sum::<f64>() / n as f64
+            })
+            .collect();
+        // w_new_i = E[z g(w_i z)] − E[g'] w_i
+        let ezg = g.t().matmul(&z).scale(1.0 / n as f64); // [d, d]
+        let mut w_new = Mat::zeros(d, d);
+        for i in 0..d {
+            for j in 0..d {
+                w_new[(i, j)] = ezg[(i, j)] - g_prime_mean[i] * w[(i, j)];
+            }
+        }
+        let w_new = sym_decorrelate(&w_new)?;
+        // convergence: |diag(W_new Wᵀ)| → 1
+        let delta = (0..d)
+            .map(|i| {
+                let dot: f64 = (0..d).map(|j| w_new[(i, j)] * w[(i, j)]).sum();
+                (dot.abs() - 1.0).abs()
+            })
+            .fold(0.0, f64::max);
+        w = w_new;
+        if delta < opts.tol {
+            converged = true;
+            break;
+        }
+    }
+    // back to original space: W_full = W K
+    Ok(FastIcaFit { w: w.matmul(&k), iterations: it, converged })
+}
+
+/// Symmetric decorrelation: W ← (W Wᵀ)^{-1/2} W via the eigensystem.
+fn sym_decorrelate(w: &Mat) -> Result<Mat> {
+    let wwt = w.matmul(&w.t());
+    let (evals, v) = crate::linalg::eigh::eigh(&wwt)?;
+    let d = w.rows();
+    let inv_sqrt = Mat::from_fn(d, d, |r, c| {
+        if r == c {
+            1.0 / evals[r].max(1e-30).sqrt()
+        } else {
+            0.0
+        }
+    });
+    Ok(v.matmul(&inv_sqrt).matmul(&v.t()).matmul(w))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Mix independent non-Gaussian sources and check recovery up to
+    /// permutation/scale (the ICA identifiability class).
+    #[test]
+    fn separates_two_uniform_sources() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let n = 8_000;
+        let s = Mat::from_fn(n, 2, |_, _| rng.f64() - 0.5);
+        let mixing = Mat::from_rows(&[&[2.0, 1.0], &[1.0, 1.5]]);
+        let x = s.matmul(&mixing.t());
+        let fit = fastica(&x, &FastIcaOpts::default()).unwrap();
+        assert!(fit.converged, "no convergence in {} iters", fit.iterations);
+        // W · A should be a scaled permutation: each row has exactly one
+        // dominant entry
+        let wa = fit.w.matmul(&mixing);
+        for i in 0..2 {
+            let row: Vec<f64> = (0..2).map(|j| wa[(i, j)].abs()).collect();
+            let (mx, mn) = (row[0].max(row[1]), row[0].min(row[1]));
+            assert!(mx > 5.0 * mn, "row {i} not dominated: {row:?}");
+        }
+    }
+
+    #[test]
+    fn recovered_sources_are_uncorrelated() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let n = 6_000;
+        let s = Mat::from_fn(n, 3, |_, c| match c {
+            0 => rng.f64() - 0.5,
+            1 => rng.laplace(1.0),
+            _ => rng.exponential(1.0) - 1.0,
+        });
+        let mixing = Mat::from_fn(3, 3, |r, c| if r == c { 1.0 } else { 0.4 + 0.1 * r as f64 });
+        let x = s.matmul(&mixing.t());
+        let fit = fastica(&x, &FastIcaOpts::default()).unwrap();
+        // recovered sources: S_hat = Xc Wᵀ
+        let mut xc = x.clone();
+        for c in 0..3 {
+            let m = stats::mean(&x.col(c));
+            for r in 0..n {
+                xc[(r, c)] -= m;
+            }
+        }
+        let s_hat = xc.matmul(&fit.w.t());
+        for a in 0..3 {
+            for b in (a + 1)..3 {
+                let rho = stats::cov(&s_hat.col(a), &s_hat.col(b))
+                    / (stats::std(&s_hat.col(a)) * stats::std(&s_hat.col(b)));
+                assert!(rho.abs() < 0.05, "components {a},{b} correlated: {rho}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_underdetermined() {
+        let x = Mat::zeros(10, 5);
+        assert!(fastica(&x, &FastIcaOpts::default()).is_err());
+    }
+}

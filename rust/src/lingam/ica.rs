@@ -1,0 +1,225 @@
+//! ICA-LiNGAM (Shimizu et al. 2006) — the original LiNGAM estimator the
+//! paper's §2.2 presents, implemented as a baseline/extension:
+//!
+//! 1. FastICA unmixing `W` of the data,
+//! 2. row permutation of `W` minimizing Σ 1/|W_ii| (Hungarian) so the
+//!    diagonal is nonzero,
+//! 3. scale rows to unit diagonal; `B̂ = I − W'`,
+//! 4. find the causal order as the permutation making B̂ closest to
+//!    strictly lower-triangular, then prune with the same adjacency
+//!    estimation DirectLiNGAM uses.
+//!
+//! DirectLiNGAM supersedes this method (no local optima, convergence
+//! guarantee) — having both lets the test suite cross-validate two
+//! independent estimators of the same model class.
+
+use super::fastica::{fastica, FastIcaOpts};
+use super::prune::{estimate_adjacency, PruneMethod};
+use crate::linalg::{assignment::hungarian, Mat};
+use crate::util::{Error, Result};
+
+/// ICA-LiNGAM configuration.
+#[derive(Clone, Debug, Default)]
+pub struct IcaLingam {
+    pub ica: FastIcaOpts,
+    pub prune: PruneMethod,
+}
+
+/// Fitted ICA-LiNGAM model.
+#[derive(Clone, Debug)]
+pub struct IcaLingamFit {
+    /// Estimated causal order (causes first).
+    pub order: Vec<usize>,
+    /// Pruned weighted adjacency (same convention as DirectLiNGAM).
+    pub adjacency: Mat,
+    /// Raw (unpruned) B̂ = I − W' from the ICA step.
+    pub b_raw: Mat,
+}
+
+impl IcaLingam {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fit on a data panel `[n, d]`.
+    pub fn fit(&self, data: &Mat) -> Result<IcaLingamFit> {
+        let d = data.cols();
+        if d < 2 {
+            return Err(Error::InvalidArgument("need ≥ 2 variables".into()));
+        }
+        let ica = fastica(data, &self.ica)?;
+        let w = ica.w;
+
+        // 2) permute rows so the diagonal carries the dominant entries:
+        // minimize Σ 1/|W_{perm(i), i}|
+        let big = 1e12;
+        let cost = Mat::from_fn(d, d, |r, c| {
+            let v = w[(r, c)].abs();
+            if v < 1e-12 {
+                big
+            } else {
+                1.0 / v
+            }
+        });
+        let perm = hungarian(&cost); // perm[row] = col the row should own
+        // build W' with row r placed at position perm[r]
+        let mut w_p = Mat::zeros(d, d);
+        for r in 0..d {
+            for c in 0..d {
+                w_p[(perm[r], c)] = w[(r, c)];
+            }
+        }
+
+        // 3) unit diagonal, B = I − W'
+        for i in 0..d {
+            let diag = w_p[(i, i)];
+            if diag.abs() < 1e-12 {
+                return Err(Error::Numerical("zero diagonal after permutation".into()));
+            }
+            for j in 0..d {
+                w_p[(i, j)] /= diag;
+            }
+        }
+        let b_raw = Mat::eye(d).sub(&w_p);
+
+        // 4) causal order: permutation P minimizing the mass above the
+        // diagonal of P B Pᵀ (exhaustive for small d, greedy otherwise —
+        // the reference package does the same style of search)
+        let order = best_causal_order(&b_raw);
+
+        let adjacency = estimate_adjacency(data, &order, self.prune)?;
+        Ok(IcaLingamFit { order, adjacency, b_raw })
+    }
+}
+
+/// Find the order minimizing the squared mass above the diagonal.
+fn best_causal_order(b: &Mat) -> Vec<usize> {
+    let d = b.rows();
+    if d <= 8 {
+        // exhaustive
+        let mut best: (f64, Vec<usize>) = (f64::INFINITY, (0..d).collect());
+        let mut perm: Vec<usize> = (0..d).collect();
+        permute_visit(&mut perm, 0, &mut |p| {
+            let m = upper_mass(b, p);
+            if m < best.0 {
+                best = (m, p.to_vec());
+            }
+        });
+        best.1
+    } else {
+        // greedy: repeatedly pick the variable with least dependence on
+        // the remaining ones (smallest row mass over remaining columns)
+        let mut remaining: Vec<usize> = (0..d).collect();
+        let mut order = Vec::with_capacity(d);
+        while !remaining.is_empty() {
+            let (pos, _) = remaining
+                .iter()
+                .enumerate()
+                .map(|(pos, &i)| {
+                    let mass: f64 = remaining
+                        .iter()
+                        .filter(|&&j| j != i)
+                        .map(|&j| b[(i, j)] * b[(i, j)])
+                        .sum();
+                    (pos, mass)
+                })
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            order.push(remaining.remove(pos));
+        }
+        order
+    }
+}
+
+/// Squared mass of entries inconsistent with the order (effects before
+/// causes).
+fn upper_mass(b: &Mat, order: &[usize]) -> f64 {
+    let mut pos = vec![0usize; order.len()];
+    for (p, &v) in order.iter().enumerate() {
+        pos[v] = p;
+    }
+    let mut m = 0.0;
+    for i in 0..b.rows() {
+        for j in 0..b.cols() {
+            if i != j && pos[j] > pos[i] {
+                m += b[(i, j)] * b[(i, j)];
+            }
+        }
+    }
+    m
+}
+
+fn permute_visit(xs: &mut Vec<usize>, k: usize, f: &mut impl FnMut(&[usize])) {
+    if k == xs.len() {
+        f(xs);
+        return;
+    }
+    for i in k..xs.len() {
+        xs.swap(k, i);
+        permute_visit(xs, k + 1, f);
+        xs.swap(k, i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph;
+    use crate::sim::{simulate_sem, SemSpec};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn recovers_chain_order() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let mut adj = Mat::zeros(3, 3);
+        adj[(1, 0)] = 1.4;
+        adj[(2, 1)] = -1.1;
+        let dag = graph::Dag::new(adj.clone()).unwrap();
+        let x = crate::sim::sample_from_dag(&dag, crate::sim::Noise::Uniform01, 12_000, &mut rng);
+        let fit = IcaLingam::new().fit(&x).unwrap();
+        assert!(graph::order_consistent(&adj, &fit.order), "order {:?}", fit.order);
+        let m = crate::metrics::graph_metrics(&adj, &fit.adjacency, 0.1);
+        assert!(m.f1 > 0.9, "f1 {}", m.f1);
+    }
+
+    #[test]
+    fn agrees_with_direct_lingam_on_easy_data() {
+        // two independent estimators of the same identifiable model
+        // should find the same structure on well-separated data
+        let mut rng = Pcg64::seed_from_u64(2);
+        let ds = simulate_sem(&SemSpec::layered(5, 2, 0.7), 12_000, &mut rng);
+        let ica_fit = IcaLingam::new().fit(&ds.data).unwrap();
+        let direct = super::super::DirectLingam::new()
+            .fit(&ds.data, &super::super::VectorizedEngine)
+            .unwrap();
+        let m_ica = crate::metrics::graph_metrics(&ds.adjacency, &ica_fit.adjacency, 0.1);
+        let m_dir = crate::metrics::graph_metrics(&ds.adjacency, &direct.adjacency, 0.1);
+        assert!(
+            (m_ica.f1 - m_dir.f1).abs() < 0.3,
+            "ica f1 {} vs direct f1 {}",
+            m_ica.f1,
+            m_dir.f1
+        );
+        assert!(m_ica.f1 > 0.6);
+    }
+
+    #[test]
+    fn upper_mass_zero_for_true_order() {
+        let mut b = Mat::zeros(3, 3);
+        b[(1, 0)] = 0.5;
+        b[(2, 0)] = 0.3;
+        assert_eq!(upper_mass(&b, &[0, 1, 2]), 0.0);
+        assert!(upper_mass(&b, &[2, 1, 0]) > 0.0);
+    }
+
+    #[test]
+    fn greedy_path_used_for_large_d() {
+        // d = 9 exercises the greedy branch; just verify a permutation
+        let b = Mat::from_fn(9, 9, |r, c| if r > c { 0.2 } else { 0.0 });
+        let order = best_causal_order(&b);
+        let mut o = order.clone();
+        o.sort_unstable();
+        assert_eq!(o, (0..9).collect::<Vec<_>>());
+        assert_eq!(upper_mass(&b, &order), 0.0);
+    }
+}

@@ -1,0 +1,30 @@
+//! The LiNGAM family — the paper's core algorithms.
+//!
+//! - [`entropy`] — the maximum-entropy differential-entropy approximation
+//!   and the mutual-information difference measure (Algorithm 1's
+//!   `_diff_mutual_info`).
+//! - [`engine`] — the `OrderingEngine` abstraction over the causal-order
+//!   scoring hot spot, with the sequential (paper's CPU baseline) and
+//!   vectorized (restructured, GPU-shaped) implementations. The
+//!   XLA-backed engine lives in [`crate::runtime`].
+//! - [`direct`] — DirectLiNGAM (Shimizu et al. 2011): iterative exogenous
+//!   search + residualization, then adjacency estimation over the order.
+//! - [`prune`] — adjacency estimation: OLS over predecessors + adaptive
+//!   lasso pruning.
+//! - [`var`] — VarLiNGAM (Hyvärinen et al. 2010): VAR(k) fit, DirectLiNGAM
+//!   on innovations, lag-matrix transformation, total-effect rankings.
+//! - [`fastica`] / [`ica`] — ICA-LiNGAM (Shimizu et al. 2006), the
+//!   original estimator (§2.2), as an independent cross-check.
+
+pub mod entropy;
+pub mod engine;
+pub mod direct;
+pub mod fastica;
+pub mod ica;
+pub mod prune;
+pub mod var;
+
+pub use direct::{DirectLingam, LingamFit};
+pub use engine::{OrderingEngine, SequentialEngine, VectorizedEngine};
+pub use ica::{IcaLingam, IcaLingamFit};
+pub use var::{VarLingam, VarLingamFit};

@@ -1,0 +1,179 @@
+//! Structure-recovery metrics: F1 / precision / recall and the structural
+//! Hamming distance (SHD) — the quantities Figure 3 and §3.1 report —
+//! plus order-agreement utilities for the parallel-vs-sequential
+//! equivalence claim.
+
+use crate::linalg::Mat;
+
+/// Precision/recall/F1/SHD of an estimated weighted adjacency against the
+/// ground truth (both thresholded at `|w| > tol` to binary edges).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GraphMetrics {
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+    /// Structural Hamming distance: missing + extra + reversed edges.
+    pub shd: usize,
+    pub true_edges: usize,
+    pub est_edges: usize,
+}
+
+/// Compute metrics for directed-edge recovery.
+///
+/// SHD counts a reversed edge once (the standard convention): an edge
+/// present in both graphs but with flipped orientation contributes 1, a
+/// missing or spurious edge contributes 1.
+pub fn graph_metrics(truth: &Mat, est: &Mat, tol: f64) -> GraphMetrics {
+    let d = truth.rows();
+    assert_eq!(d, truth.cols());
+    assert_eq!((d, d), (est.rows(), est.cols()));
+    let t = |m: &Mat, i: usize, j: usize| m[(i, j)].abs() > tol;
+
+    let mut tp = 0usize;
+    let mut fp = 0usize;
+    let mut fnx = 0usize;
+    let mut shd = 0usize;
+
+    // Directed TP/FP/FN over all ordered pairs.
+    for i in 0..d {
+        for j in 0..d {
+            if i == j {
+                continue;
+            }
+            match (t(truth, i, j), t(est, i, j)) {
+                (true, true) => tp += 1,
+                (false, true) => fp += 1,
+                (true, false) => fnx += 1,
+                (false, false) => {}
+            }
+        }
+    }
+
+    // SHD over unordered pairs with reversal counted once.
+    for i in 0..d {
+        for j in (i + 1)..d {
+            let t_ij = t(truth, i, j);
+            let t_ji = t(truth, j, i);
+            let e_ij = t(est, i, j);
+            let e_ji = t(est, j, i);
+            let truth_has = t_ij || t_ji;
+            let est_has = e_ij || e_ji;
+            if truth_has != est_has {
+                shd += 1; // missing or extra
+            } else if truth_has && est_has && (t_ij != e_ij || t_ji != e_ji) {
+                shd += 1; // present both sides but orientation differs
+            }
+        }
+    }
+
+    let precision = if tp + fp == 0 { 0.0 } else { tp as f64 / (tp + fp) as f64 };
+    let recall = if tp + fnx == 0 { 0.0 } else { tp as f64 / (tp + fnx) as f64 };
+    let f1 = if precision + recall == 0.0 {
+        0.0
+    } else {
+        2.0 * precision * recall / (precision + recall)
+    };
+    GraphMetrics {
+        precision,
+        recall,
+        f1,
+        shd,
+        true_edges: tp + fnx,
+        est_edges: tp + fp,
+    }
+}
+
+/// Exact equality of two causal orders (the Figure-3 agreement check).
+pub fn orders_identical(a: &[usize], b: &[usize]) -> bool {
+    a == b
+}
+
+/// Exact equality of two weighted adjacencies to a tolerance (sequential
+/// and accelerated paths should agree to float precision).
+pub fn adjacency_max_diff(a: &Mat, b: &Mat) -> f64 {
+    a.sub(b).max_abs()
+}
+
+/// Mean ± std summary over a set of runs (Figure 3 / §3.1 report style).
+#[derive(Debug, Clone, Copy)]
+pub struct MeanStd {
+    pub mean: f64,
+    pub std: f64,
+}
+
+/// Aggregate a metric across runs.
+pub fn mean_std(xs: &[f64]) -> MeanStd {
+    let n = xs.len().max(1) as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    MeanStd { mean, std: var.sqrt() }
+}
+
+impl std::fmt::Display for MeanStd {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:.2} ± {:.2}", self.mean, self.std)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn truth_chain() -> Mat {
+        // 0 → 1 → 2
+        let mut m = Mat::zeros(3, 3);
+        m[(1, 0)] = 0.8;
+        m[(2, 1)] = -1.1;
+        m
+    }
+
+    #[test]
+    fn perfect_recovery() {
+        let m = graph_metrics(&truth_chain(), &truth_chain(), 0.01);
+        assert_eq!(m.f1, 1.0);
+        assert_eq!(m.shd, 0);
+        assert_eq!(m.true_edges, 2);
+    }
+
+    #[test]
+    fn empty_estimate() {
+        let m = graph_metrics(&truth_chain(), &Mat::zeros(3, 3), 0.01);
+        assert_eq!(m.recall, 0.0);
+        assert_eq!(m.f1, 0.0);
+        assert_eq!(m.shd, 2); // both edges missing
+    }
+
+    #[test]
+    fn reversed_edge_counts_once_in_shd() {
+        let mut est = Mat::zeros(3, 3);
+        est[(0, 1)] = 0.8; // 1 → 0, reversed
+        est[(2, 1)] = -1.1; // correct
+        let m = graph_metrics(&truth_chain(), &est, 0.01);
+        assert_eq!(m.shd, 1);
+        assert_eq!(m.recall, 0.5); // one of two directed edges found
+    }
+
+    #[test]
+    fn extra_edge_penalizes_precision() {
+        let mut est = truth_chain();
+        est[(2, 0)] = 0.5; // spurious 0 → 2
+        let m = graph_metrics(&truth_chain(), &est, 0.01);
+        assert!(m.precision < 1.0 && m.recall == 1.0);
+        assert_eq!(m.shd, 1);
+    }
+
+    #[test]
+    fn threshold_filters_small_weights() {
+        let mut est = truth_chain();
+        est[(2, 0)] = 1e-6;
+        let m = graph_metrics(&truth_chain(), &est, 1e-3);
+        assert_eq!(m.f1, 1.0);
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let s = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!((s.std - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+}

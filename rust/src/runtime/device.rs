@@ -1,0 +1,58 @@
+//! PJRT device wrapper: one CPU client + a compile-once executable cache.
+//!
+//! Only the [`super::executor`] thread constructs this type; everything
+//! else goes through the executor's channel API.
+
+use crate::util::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A PJRT client plus compiled-executable cache keyed by artifact path.
+pub struct Device {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+    /// Cumulative compile seconds (reported in bench output).
+    pub compile_secs: f64,
+}
+
+impl Device {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Device> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Device { client, cache: HashMap::new(), compile_secs: 0.0 })
+    }
+
+    /// Human-readable platform string.
+    pub fn platform(&self) -> String {
+        format!("{} ({} devices)", self.client.platform_name(), self.client.device_count())
+    }
+
+    /// Compile (or fetch from cache) the HLO-text artifact at `path`.
+    pub fn executable(&mut self, path: &Path) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(path) {
+            let t0 = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+                Error::Runtime(format!("loading {}: {e}", path.display()))
+            })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.compile_secs += t0.elapsed().as_secs_f64();
+            self.cache.insert(path.to_path_buf(), exe);
+        }
+        Ok(&self.cache[path])
+    }
+
+    /// Execute an artifact on f32 input literals; returns the decomposed
+    /// output tuple (jax artifacts are lowered with `return_tuple=True`).
+    pub fn run(&mut self, path: &Path, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(path)?;
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Number of cached executables.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}

@@ -1,0 +1,183 @@
+//! `XlaEngine` — the accelerated `OrderingEngine` backed by the AOT
+//! Pallas/JAX artifacts, executed on PJRT through the device thread.
+//!
+//! Per DirectLiNGAM iteration the engine makes **one** artifact call (the
+//! fused `order_step`: scores → argmax → residualize), uploading the
+//! zero-padded panel + masks and downloading the residualized panel, the
+//! chosen index and the k_list. Padded buffers are preallocated once per
+//! fit and reused across iterations (see EXPERIMENTS.md §Perf).
+
+use super::executor::{DeviceExecutor, HostArray};
+use super::registry::{ArtifactKind, ArtifactRegistry, Bucket};
+use crate::lingam::engine::{OrderStep, OrderingEngine, INACTIVE_SCORE};
+use crate::linalg::Mat;
+use crate::util::{Error, Result};
+use std::sync::{Arc, Mutex};
+
+/// Scratch buffers reused across `order_step` calls of one fit.
+#[derive(Default)]
+struct Scratch {
+    /// Which bucket the scratch is sized for.
+    shape: (usize, usize),
+    /// Valid (n, d) extent the padding regions are currently clean for.
+    extent: (usize, usize),
+    x_pad: Vec<f32>,
+    row_mask: Vec<f32>,
+}
+
+/// OrderingEngine backed by AOT XLA artifacts.
+pub struct XlaEngine {
+    executor: Arc<DeviceExecutor>,
+    registry: ArtifactRegistry,
+    scratch: Mutex<Scratch>,
+    /// Use the fused `order_step` artifact (one device call per
+    /// iteration). `false` falls back to the two-phase path — `scores`
+    /// artifact + host-side argmax/residualize — kept for the fusion
+    /// ablation (`cargo bench --bench ablation_fusion`).
+    fused: bool,
+}
+
+impl XlaEngine {
+    /// Build from an artifact directory (see [`super::artifact_dir`]).
+    pub fn new(executor: Arc<DeviceExecutor>, artifact_dir: &std::path::Path) -> Result<XlaEngine> {
+        let registry = ArtifactRegistry::load(artifact_dir)?;
+        if registry.of_kind(ArtifactKind::OrderStep).is_empty() {
+            return Err(Error::Runtime("no order_step artifacts in manifest".into()));
+        }
+        Ok(XlaEngine { executor, registry, scratch: Mutex::new(Scratch::default()), fused: true })
+    }
+
+    /// Toggle the fused order_step artifact (see field docs).
+    pub fn with_fused(mut self, fused: bool) -> XlaEngine {
+        self.fused = fused;
+        self
+    }
+
+    /// Convenience constructor: default artifact dir + fresh executor.
+    pub fn from_default_artifacts() -> Result<XlaEngine> {
+        let exec = DeviceExecutor::start()?;
+        Self::new(exec, &super::artifact_dir())
+    }
+
+    /// The executor handle (for stats snapshots in benches).
+    pub fn executor(&self) -> &Arc<DeviceExecutor> {
+        &self.executor
+    }
+
+    /// The registry (for capacity introspection).
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    /// Largest (n, d) the order_step artifacts can serve.
+    pub fn capacity(&self) -> (usize, usize) {
+        let mut cap = (0, 0);
+        for b in self.registry.of_kind(ArtifactKind::OrderStep) {
+            cap.0 = cap.0.max(b.n);
+            cap.1 = cap.1.max(b.d);
+        }
+        cap
+    }
+
+    /// Zero-pad `x` and the masks into the bucket shape; returns inputs
+    /// for the artifact call.
+    fn pack(&self, bucket: &Bucket, x: &Mat, active: &[bool]) -> Vec<HostArray> {
+        let (n, d) = (x.rows(), x.cols());
+        let (nb, db) = (bucket.n, bucket.d);
+        let mut scratch = self.scratch.lock().expect("scratch mutex");
+        if scratch.shape != (nb, db) {
+            scratch.shape = (nb, db);
+            scratch.extent = (0, 0);
+            scratch.x_pad = vec![0.0; nb * db];
+            scratch.row_mask = vec![0.0; nb];
+        }
+        if scratch.extent != (n, d) {
+            // a different dataset extent was packed before: re-zero the
+            // buffer once and refresh the row mask. Within one fit the
+            // extent is constant, so the d−1 iterations skip this.
+            scratch.x_pad.iter_mut().for_each(|v| *v = 0.0);
+            for (r, v) in scratch.row_mask.iter_mut().enumerate() {
+                *v = if r < n { 1.0 } else { 0.0 };
+            }
+            scratch.extent = (n, d);
+        }
+        // Row-major copy with zero column padding; inactive columns are
+        // also zeroed (the kernel's masked-standardize handles the rest).
+        // Padding regions (rows n.., cols d..) stay zero from allocation /
+        // the extent refresh above, so no per-iteration full re-zeroing is
+        // needed (§Perf: saves nb·db f32 stores per iteration).
+        for r in 0..n {
+            let src = x.row(r);
+            let dst = &mut scratch.x_pad[r * db..r * db + d];
+            for (c, out) in dst.iter_mut().enumerate() {
+                *out = if active[c] { src[c] as f32 } else { 0.0 };
+            }
+        }
+        let mut col_mask = vec![0.0f32; db];
+        for (c, &a) in active.iter().enumerate() {
+            col_mask[c] = if a { 1.0 } else { 0.0 };
+        }
+        vec![
+            HostArray::new(vec![nb as i64, db as i64], scratch.x_pad.clone()),
+            HostArray::vector(scratch.row_mask.clone()),
+            HostArray::vector(col_mask),
+        ]
+    }
+
+    /// Unpack a padded k_list into full-width f64 scores.
+    fn unpack_scores(padded: &[f32], active: &[bool]) -> Vec<f64> {
+        active
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| if a { padded[i] as f64 } else { INACTIVE_SCORE })
+            .collect()
+    }
+}
+
+impl OrderingEngine for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn scores(&self, x: &Mat, active: &[bool]) -> Result<Vec<f64>> {
+        let (n, d) = (x.rows(), x.cols());
+        let bucket = self.registry.best(ArtifactKind::OrderScores, n, d)?.clone();
+        let inputs = self.pack(&bucket, x, active);
+        let outs = self.executor.run(bucket.path.clone(), inputs)?;
+        Ok(Self::unpack_scores(outs[0].f32s()?, active))
+    }
+
+    fn order_step(&self, x: &mut Mat, active: &mut [bool]) -> Result<OrderStep> {
+        if !self.fused {
+            // ablation path: scores artifact + host argmax/residualize
+            let scores = self.scores(x, active)?;
+            let chosen = crate::lingam::engine::argmax_active(&scores, active);
+            crate::lingam::engine::residualize_in_place(x, active, chosen);
+            active[chosen] = false;
+            return Ok(OrderStep { chosen, scores });
+        }
+        let (n, d) = (x.rows(), x.cols());
+        let bucket = self.registry.best(ArtifactKind::OrderStep, n, d)?.clone();
+        let inputs = self.pack(&bucket, x, active);
+        let outs = self.executor.run(bucket.path.clone(), inputs)?;
+        // outputs: (x' [nb, db], m scalar i32, k_list [db])
+        let chosen = outs[1].i32_scalar()? as usize;
+        if chosen >= d || !active[chosen] {
+            return Err(Error::Runtime(format!(
+                "artifact chose invalid variable {chosen} (d={d})"
+            )));
+        }
+        let scores = Self::unpack_scores(outs[2].f32s()?, active);
+        let x_new = outs[0].f32s()?;
+        let db = bucket.d;
+        for r in 0..n {
+            for c in 0..d {
+                if active[c] && c != chosen {
+                    x[(r, c)] = x_new[r * db + c] as f64;
+                }
+            }
+        }
+        active[chosen] = false;
+        Ok(OrderStep { chosen, scores })
+    }
+}

@@ -1,0 +1,239 @@
+//! The device executor: a dedicated thread that owns all XLA handles and
+//! serializes artifact executions — the L3 analogue of a CUDA stream.
+//!
+//! XLA wrapper types hold raw pointers and are not `Send`; confining them
+//! to one thread makes the rest of the system (coordinator workers,
+//! engines, benches) free to share a cheap cloneable handle. Jobs are
+//! plain host arrays in, plain host arrays out.
+
+use super::device::Device;
+use crate::util::{Error, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+/// A host-side f32 tensor (inputs are always f32; jax artifacts are
+/// compiled at f32, the TPU-native width).
+#[derive(Clone, Debug)]
+pub struct HostArray {
+    pub dims: Vec<i64>,
+    pub data: Vec<f32>,
+}
+
+impl HostArray {
+    pub fn new(dims: Vec<i64>, data: Vec<f32>) -> HostArray {
+        debug_assert_eq!(dims.iter().product::<i64>() as usize, data.len());
+        HostArray { dims, data }
+    }
+
+    pub fn vector(data: Vec<f32>) -> HostArray {
+        let n = data.len() as i64;
+        HostArray { dims: vec![n], data }
+    }
+}
+
+/// One output of an artifact execution.
+#[derive(Clone, Debug)]
+pub enum OutValue {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+}
+
+impl OutValue {
+    /// The f32 payload (errors if the output is integer).
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match self {
+            OutValue::F32 { data, .. } => Ok(data),
+            OutValue::I32 { .. } => Err(Error::Runtime("expected f32 output".into())),
+        }
+    }
+
+    /// A scalar i32 output (e.g. the chosen index of `order_step`).
+    pub fn i32_scalar(&self) -> Result<i32> {
+        match self {
+            OutValue::I32 { data, .. } if data.len() == 1 => Ok(data[0]),
+            other => Err(Error::Runtime(format!("expected i32 scalar, got {other:?}"))),
+        }
+    }
+}
+
+struct Job {
+    path: PathBuf,
+    inputs: Vec<HostArray>,
+    reply: mpsc::Sender<Result<Vec<OutValue>>>,
+}
+
+enum Msg {
+    Run(Job),
+    Platform(mpsc::Sender<String>),
+    Shutdown,
+}
+
+/// Cumulative executor statistics (for the perf pass and bench reports).
+#[derive(Default, Debug)]
+pub struct DeviceStats {
+    /// Artifact executions.
+    pub calls: AtomicU64,
+    /// Bytes uploaded to the device.
+    pub bytes_up: AtomicU64,
+    /// Bytes downloaded.
+    pub bytes_down: AtomicU64,
+    /// Nanoseconds spent inside execute (incl. transfers).
+    pub exec_nanos: AtomicU64,
+}
+
+impl DeviceStats {
+    pub fn snapshot(&self) -> (u64, u64, u64, f64) {
+        (
+            self.calls.load(Ordering::Relaxed),
+            self.bytes_up.load(Ordering::Relaxed),
+            self.bytes_down.load(Ordering::Relaxed),
+            self.exec_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+        )
+    }
+}
+
+/// Handle to the device thread. Clone freely; drop of the last handle
+/// shuts the thread down.
+pub struct DeviceExecutor {
+    tx: Mutex<mpsc::Sender<Msg>>,
+    pub stats: Arc<DeviceStats>,
+    _thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl DeviceExecutor {
+    /// Spawn the device thread (creates the PJRT CPU client on it).
+    pub fn start() -> Result<Arc<DeviceExecutor>> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let stats = Arc::new(DeviceStats::default());
+        let stats_thread = stats.clone();
+        let thread = std::thread::Builder::new()
+            .name("alingam-device".into())
+            .spawn(move || device_loop(rx, ready_tx, stats_thread))
+            .map_err(|e| Error::Runtime(format!("spawning device thread: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Runtime("device thread died during init".into()))??;
+        Ok(Arc::new(DeviceExecutor { tx: Mutex::new(tx), stats, _thread: Some(thread) }))
+    }
+
+    /// Execute an artifact; blocks until the result is back on the host.
+    pub fn run(&self, path: PathBuf, inputs: Vec<HostArray>) -> Result<Vec<OutValue>> {
+        let (reply, rx) = mpsc::channel();
+        {
+            let tx = self.tx.lock().expect("executor mutex");
+            tx.send(Msg::Run(Job { path, inputs, reply }))
+                .map_err(|_| Error::Runtime("device thread gone".into()))?;
+        }
+        rx.recv().map_err(|_| Error::Runtime("device thread dropped reply".into()))?
+    }
+
+    /// Platform description string.
+    pub fn platform(&self) -> Result<String> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .expect("executor mutex")
+            .send(Msg::Platform(reply))
+            .map_err(|_| Error::Runtime("device thread gone".into()))?;
+        rx.recv().map_err(|_| Error::Runtime("device thread dropped reply".into()))
+    }
+}
+
+impl Drop for DeviceExecutor {
+    fn drop(&mut self) {
+        if let Ok(tx) = self.tx.lock() {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        if let Some(t) = self._thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn device_loop(
+    rx: mpsc::Receiver<Msg>,
+    ready: mpsc::Sender<Result<()>>,
+    stats: Arc<DeviceStats>,
+) {
+    let mut device = match Device::cpu() {
+        Ok(d) => {
+            let _ = ready.send(Ok(()));
+            d
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Shutdown => break,
+            Msg::Platform(reply) => {
+                let _ = reply.send(device.platform());
+            }
+            Msg::Run(job) => {
+                let t0 = std::time::Instant::now();
+                let result = run_job(&mut device, &job, &stats);
+                stats.exec_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                stats.calls.fetch_add(1, Ordering::Relaxed);
+                let _ = job.reply.send(result);
+            }
+        }
+    }
+}
+
+fn run_job(device: &mut Device, job: &Job, stats: &DeviceStats) -> Result<Vec<OutValue>> {
+    let mut literals = Vec::with_capacity(job.inputs.len());
+    let mut up = 0usize;
+    for a in &job.inputs {
+        up += a.data.len() * 4;
+        let lit = xla::Literal::vec1(&a.data);
+        let lit = if a.dims.len() == 1 { lit } else { lit.reshape(&a.dims)? };
+        literals.push(lit);
+    }
+    stats.bytes_up.fetch_add(up as u64, Ordering::Relaxed);
+
+    let outs = device.run(&job.path, &literals)?;
+    let mut values = Vec::with_capacity(outs.len());
+    let mut down = 0usize;
+    for lit in outs {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        down += lit.size_bytes();
+        let v = match shape.ty() {
+            xla::ElementType::F32 => OutValue::F32 { dims, data: lit.to_vec::<f32>()? },
+            xla::ElementType::S32 => OutValue::I32 { dims, data: lit.to_vec::<i32>()? },
+            other => {
+                return Err(Error::Runtime(format!("unsupported output type {other:?}")));
+            }
+        };
+        values.push(v);
+    }
+    stats.bytes_down.fetch_add(down as u64, Ordering::Relaxed);
+    Ok(values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_array_shape_check() {
+        let a = HostArray::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(a.dims, vec![2, 3]);
+        let v = HostArray::vector(vec![1.0, 2.0]);
+        assert_eq!(v.dims, vec![2]);
+    }
+
+    #[test]
+    fn outvalue_accessors() {
+        let f = OutValue::F32 { dims: vec![2], data: vec![1.0, 2.0] };
+        assert_eq!(f.f32s().unwrap(), &[1.0, 2.0]);
+        assert!(f.i32_scalar().is_err());
+        let i = OutValue::I32 { dims: vec![], data: vec![7] };
+        assert_eq!(i.i32_scalar().unwrap(), 7);
+        assert!(i.f32s().is_err());
+    }
+}

@@ -1,0 +1,40 @@
+//! The PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO text) and executes them from the L3 hot
+//! path. Python never runs here.
+//!
+//! - [`registry`] — the artifact manifest and shape-bucket selection.
+//! - [`device`] — a PJRT CPU client + executable cache (compile once per
+//!   bucket, execute many).
+//! - [`executor`] — a dedicated device thread with a job queue, the
+//!   coordinator's stand-in for a CUDA stream. XLA handles are raw
+//!   pointers (!Send), so all device interaction is confined to this
+//!   thread; the rest of the system talks to it through channels, which
+//!   also makes the engine shareable across coordinator workers.
+//! - [`engine`] — `XlaEngine`: the `OrderingEngine` backed by the fused
+//!   `order_step` artifact (the repo's accelerated path).
+
+pub mod device;
+pub mod engine;
+pub mod executor;
+pub mod registry;
+
+pub use engine::XlaEngine;
+pub use executor::{DeviceExecutor, DeviceStats, HostArray, OutValue};
+pub use registry::{ArtifactKind, ArtifactRegistry, Bucket};
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: `$ALINGAM_ARTIFACTS`, else `artifacts/`
+/// relative to the current dir or the crate root (so tests work from
+/// anywhere inside the repo).
+pub fn artifact_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("ALINGAM_ARTIFACTS") {
+        return p.into();
+    }
+    let cwd = std::path::PathBuf::from(DEFAULT_ARTIFACT_DIR);
+    if cwd.join("manifest.txt").exists() {
+        return cwd;
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(DEFAULT_ARTIFACT_DIR)
+}

@@ -1,0 +1,186 @@
+//! Artifact manifest parsing and shape-bucket selection.
+//!
+//! AOT artifacts are compiled for fixed shapes; a request for `(n, d)` is
+//! served by the cheapest bucket with `n_b ≥ n` and `d_b ≥ d`, with the
+//! data zero-padded and row/column masks carrying the true extents (the
+//! masked semantics of `python/compile/kernels/ref.py`).
+
+use crate::util::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// The computations the AOT pipeline exports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// `order_scores(x, row_mask, col_mask) -> k_list`
+    OrderScores,
+    /// `order_step(x, row_mask, col_mask) -> (x', m, k_list)`
+    OrderStep,
+    /// `var_fit(series, row_mask) -> (m1, resid)`
+    VarFit,
+}
+
+impl ArtifactKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ArtifactKind::OrderScores => "order_scores",
+            ArtifactKind::OrderStep => "order_step",
+            ArtifactKind::VarFit => "var_fit",
+        }
+    }
+
+    fn parse(s: &str) -> Option<ArtifactKind> {
+        match s {
+            "order_scores" => Some(ArtifactKind::OrderScores),
+            "order_step" => Some(ArtifactKind::OrderStep),
+            "var_fit" => Some(ArtifactKind::VarFit),
+            _ => None,
+        }
+    }
+}
+
+/// One compiled shape bucket.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bucket {
+    pub kind: ArtifactKind,
+    /// Sample-count capacity (T for var_fit).
+    pub n: usize,
+    /// Variable-count capacity.
+    pub d: usize,
+    /// HLO text file.
+    pub path: PathBuf,
+}
+
+/// The set of available artifacts.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactRegistry {
+    buckets: Vec<Bucket>,
+}
+
+impl ArtifactRegistry {
+    /// Load `manifest.txt` from an artifact directory. Lines:
+    /// `kind n d filename`.
+    pub fn load(dir: &Path) -> Result<ArtifactRegistry> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (separated out for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<ArtifactRegistry> {
+        let mut buckets = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 4 {
+                return Err(Error::Parse(format!("manifest line {}: {line:?}", lineno + 1)));
+            }
+            let kind = ArtifactKind::parse(parts[0])
+                .ok_or_else(|| Error::Parse(format!("unknown artifact kind {:?}", parts[0])))?;
+            let n: usize = parts[1].parse().map_err(|_| Error::Parse(line.into()))?;
+            let d: usize = parts[2].parse().map_err(|_| Error::Parse(line.into()))?;
+            buckets.push(Bucket { kind, n, d, path: dir.join(parts[3]) });
+        }
+        Ok(ArtifactRegistry { buckets })
+    }
+
+    /// All buckets of one kind.
+    pub fn of_kind(&self, kind: ArtifactKind) -> Vec<&Bucket> {
+        self.buckets.iter().filter(|b| b.kind == kind).collect()
+    }
+
+    /// Cheapest bucket covering `(n, d)`: minimal padded area `n_b · d_b`,
+    /// ties broken toward smaller `n_b`.
+    pub fn best(&self, kind: ArtifactKind, n: usize, d: usize) -> Result<&Bucket> {
+        self.buckets
+            .iter()
+            .filter(|b| b.kind == kind && b.n >= n && b.d >= d)
+            .min_by_key(|b| (b.n * b.d, b.n))
+            .ok_or_else(|| Error::NoArtifact {
+                n,
+                d,
+                available: self
+                    .of_kind(kind)
+                    .iter()
+                    .map(|b| format!("{}x{}", b.n, b.d))
+                    .collect::<Vec<_>>()
+                    .join(","),
+            })
+    }
+
+    pub fn len(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg() -> ArtifactRegistry {
+        let text = "\
+order_step 256 8 order_step_n256_d8.hlo.txt
+order_step 1024 16 order_step_n1024_d16.hlo.txt
+order_step 4096 16 order_step_n4096_d16.hlo.txt
+order_step 4096 64 order_step_n4096_d64.hlo.txt
+var_fit 512 16 var_fit_t512_d16.hlo.txt
+";
+        ArtifactRegistry::parse(text, Path::new("/a")).unwrap()
+    }
+
+    #[test]
+    fn picks_tightest_bucket() {
+        let r = reg();
+        let b = r.best(ArtifactKind::OrderStep, 200, 8).unwrap();
+        assert_eq!((b.n, b.d), (256, 8));
+        let b = r.best(ArtifactKind::OrderStep, 1000, 10).unwrap();
+        assert_eq!((b.n, b.d), (1024, 16));
+        // n=2000 forces the 4096 row bucket even though d fits 16
+        let b = r.best(ArtifactKind::OrderStep, 2000, 12).unwrap();
+        assert_eq!((b.n, b.d), (4096, 16));
+    }
+
+    #[test]
+    fn no_bucket_errors_with_inventory() {
+        let r = reg();
+        let e = r.best(ArtifactKind::OrderStep, 100_000, 8).unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("100000"), "{msg}");
+        assert!(msg.contains("4096x64"), "{msg}");
+    }
+
+    #[test]
+    fn kinds_are_separate() {
+        let r = reg();
+        assert_eq!(r.of_kind(ArtifactKind::VarFit).len(), 1);
+        assert!(r.best(ArtifactKind::VarFit, 400, 10).is_ok());
+        assert!(r.best(ArtifactKind::OrderScores, 10, 2).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(ArtifactRegistry::parse("order_step 1 2", Path::new("/")).is_err());
+        assert!(ArtifactRegistry::parse("nope 1 2 f", Path::new("/")).is_err());
+        // comments and blanks ok
+        let ok = ArtifactRegistry::parse("# comment\n\norder_step 1 2 f\n", Path::new("/")).unwrap();
+        assert_eq!(ok.len(), 1);
+    }
+
+    #[test]
+    fn path_joined_with_dir() {
+        let r = reg();
+        let b = r.best(ArtifactKind::VarFit, 1, 1).unwrap();
+        assert_eq!(b.path, PathBuf::from("/a/var_fit_t512_d16.hlo.txt"));
+    }
+}

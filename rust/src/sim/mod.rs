@@ -1,0 +1,21 @@
+//! Workload generators for every experiment in the paper:
+//!
+//! - [`sem`] — linear non-Gaussian SEM data over random DAGs (Figures 1-3,
+//!   §3.1 NOTEARS comparison).
+//! - [`var`] — structural VAR(1) time series (Figure 2 bottom-right,
+//!   VarLiNGAM validation).
+//! - [`genes`] — synthetic Perturb-CITE-seq-style interventional gene
+//!   expression (Table 1). Substitutes the proprietary Frangieh et al.
+//!   dataset; see DESIGN.md §Substitutions.
+//! - [`stocks`] — synthetic S&P-500-style hourly market with VAR(1)
+//!   dynamics (Figure 4, Table 2). Substitutes the Yahoo Finance pull.
+
+pub mod sem;
+pub mod var;
+pub mod genes;
+pub mod stocks;
+
+pub use genes::{simulate_perturb, Condition, PerturbDataset, PerturbSpec};
+pub use sem::{sample_from_dag, simulate_sem, Noise, SemDataset, SemSpec};
+pub use stocks::{simulate_market, MarketDataset, MarketSpec};
+pub use var::{simulate_var, VarDataset, VarSpec};

@@ -1,0 +1,305 @@
+//! Synthetic S&P-500-style hourly market generator (Figure 4 / Table 2
+//! substitute for the paper's Yahoo Finance pull — see DESIGN.md).
+//!
+//! Log-returns follow a structural VAR(1):
+//!   r(t) = B₀ r(t) + B₁ r(t−1) + ε(t),   ε heavy-tailed (Student-t),
+//! with a sector-block instantaneous DAG. A handful of tickers are made
+//! structural "exporters" of influence and a handful pure receivers /
+//! leaves, mirroring the qualitative structure the paper reports (NVR,
+//! AZO, ... exert; NWSA, CNP, ... receive; USB, FITB are leaves). Prices
+//! are exp-cumulated returns with ~1% missing values injected to exercise
+//! the interpolation pipeline.
+
+use crate::linalg::{lu_inverse, Mat};
+use crate::util::rng::Pcg64;
+
+/// Real S&P constituents (subset), including every ticker named in the
+/// paper's Table 2 / §4.2 discussion. The generator pads with synthetic
+/// symbols up to `dim`.
+pub const REAL_TICKERS: &[&str] = &[
+    // named in the paper
+    "NVR", "AZO", "CMG", "BKNG", "MTD", "NWSA", "CNP", "FOXA", "AMCR", "USB", "FITB",
+    // large caps and a spread of sectors
+    "AAPL", "MSFT", "AMZN", "GOOGL", "META", "NVDA", "TSLA", "BRK-B", "JPM", "V", "MA",
+    "UNH", "HD", "PG", "XOM", "CVX", "LLY", "ABBV", "MRK", "PEP", "KO", "COST", "WMT",
+    "BAC", "WFC", "C", "GS", "MS", "AXP", "BLK", "SCHW", "PNC", "TFC", "COF",
+    "JNJ", "PFE", "TMO", "ABT", "DHR", "BMY", "AMGN", "GILD", "CVS", "CI", "HUM",
+    "ORCL", "CRM", "ADBE", "INTC", "AMD", "QCOM", "TXN", "AVGO", "MU", "AMAT", "LRCX",
+    "CSCO", "IBM", "ACN", "INTU", "NOW", "SNPS", "CDNS", "KLAC", "ADI", "NXPI",
+    "T", "VZ", "TMUS", "CMCSA", "DIS", "NFLX", "PARA", "WBD", "FOX", "NWS",
+    "BA", "CAT", "DE", "GE", "HON", "LMT", "RTX", "NOC", "GD", "MMM", "EMR", "ETN",
+    "UPS", "FDX", "UNP", "CSX", "NSC", "DAL", "UAL", "AAL", "LUV",
+    "NEE", "DUK", "SO", "D", "AEP", "EXC", "SRE", "XEL", "ED", "WEC", "ES", "PEG",
+    "LIN", "APD", "SHW", "ECL", "NEM", "FCX", "DOW", "DD", "PPG", "ALB",
+    "PLD", "AMT", "CCI", "EQIX", "SPG", "O", "PSA", "WELL", "AVB", "EQR",
+    "MCD", "SBUX", "YUM", "DRI", "MAR", "HLT", "RCL", "CCL", "NCLH", "LVS", "MGM",
+    "NKE", "TJX", "ROST", "LOW", "TGT", "DG", "DLTR", "ORLY", "AAP", "BBY", "EBAY",
+    "F", "GM", "APTV", "LEA", "BWA", "PHM", "DHI", "LEN", "TOL", "MAS",
+    "MDT", "SYK", "BSX", "EW", "ZBH", "BAX", "BDX", "ISRG", "RMD", "IDXX",
+    "MO", "PM", "STZ", "TAP", "KHC", "GIS", "K", "HSY", "SJM", "CAG", "CPB",
+    "CL", "KMB", "CHD", "CLX", "EL", "KDP", "MNST", "MDLZ", "HRL", "TSN",
+];
+
+/// Sector count used for the block structure (~GICS's 11).
+const N_SECTORS: usize = 11;
+
+/// Market generator configuration.
+#[derive(Clone, Debug)]
+pub struct MarketSpec {
+    /// Number of tickers (paper: 487 after filtering).
+    pub dim: usize,
+    /// Hourly observations (paper: Jan 2022 – Dec 2023 ≈ 3500 trading hours).
+    pub t_len: usize,
+    /// Probability of an intra-sector instantaneous edge.
+    pub p_intra: f64,
+    /// Probability of a cross-sector instantaneous edge.
+    pub p_cross: f64,
+    /// Fraction of missing values to inject.
+    pub missing_frac: f64,
+    /// Student-t degrees of freedom for innovations.
+    pub t_dof: f64,
+}
+
+impl Default for MarketSpec {
+    fn default() -> Self {
+        MarketSpec {
+            dim: 487,
+            t_len: 3_500,
+            p_intra: 0.08,
+            p_cross: 0.004,
+            missing_frac: 0.01,
+            t_dof: 4.0,
+        }
+    }
+}
+
+impl MarketSpec {
+    /// A fast configuration for tests/examples.
+    pub fn small() -> MarketSpec {
+        MarketSpec { dim: 40, t_len: 1_200, p_intra: 0.25, p_cross: 0.02, ..Default::default() }
+    }
+}
+
+/// A simulated market panel.
+#[derive(Clone, Debug)]
+pub struct MarketDataset {
+    /// Prices `[T, dim]`, with injected NaN gaps.
+    pub prices: Mat,
+    /// Ticker symbols, length `dim`.
+    pub tickers: Vec<String>,
+    /// Ground-truth instantaneous adjacency over returns.
+    pub b0: Mat,
+    /// Ground-truth lag-1 matrix.
+    pub b1: Mat,
+    /// Designated exerting tickers (structural hubs).
+    pub true_exerters: Vec<usize>,
+    /// Designated receiving tickers.
+    pub true_receivers: Vec<usize>,
+}
+
+/// Ticker list: real symbols first, synthetic padding after.
+pub fn ticker_universe(dim: usize) -> Vec<String> {
+    let mut out: Vec<String> = REAL_TICKERS.iter().take(dim).map(|s| s.to_string()).collect();
+    let mut i = 0;
+    while out.len() < dim {
+        out.push(format!("SYN{:03}", i));
+        i += 1;
+    }
+    out
+}
+
+/// Simulate the market.
+pub fn simulate_market(spec: &MarketSpec, rng: &mut Pcg64) -> MarketDataset {
+    let d = spec.dim;
+    let tickers = ticker_universe(d);
+    let idx_of = |sym: &str| tickers.iter().position(|t| t == sym);
+
+    // causal order over tickers; exerters forced early, receivers late,
+    // USB/FITB forced to be leaves (no outgoing edges at all).
+    let mut order = rng.permutation(d);
+    let exert_syms = ["NVR", "AZO", "CMG", "BKNG", "MTD"];
+    let recv_syms = ["NWSA", "CNP", "FOXA", "AMCR"];
+    let leaf_syms = ["USB", "FITB"];
+    let mut pin_front: Vec<usize> = exert_syms.iter().filter_map(|s| idx_of(s)).collect();
+    let mut pin_back: Vec<usize> = recv_syms
+        .iter()
+        .chain(leaf_syms.iter())
+        .filter_map(|s| idx_of(s))
+        .collect();
+    order.retain(|i| !pin_front.contains(i) && !pin_back.contains(i));
+    let mut full_order = Vec::with_capacity(d);
+    full_order.append(&mut pin_front);
+    full_order.extend(order);
+    full_order.append(&mut pin_back);
+    let order = full_order;
+    let mut pos = vec![0usize; d];
+    for (p, &v) in order.iter().enumerate() {
+        pos[v] = p;
+    }
+
+    let sector: Vec<usize> = (0..d).map(|i| i % N_SECTORS).collect();
+    let exerters: Vec<usize> = exert_syms.iter().filter_map(|s| idx_of(s)).collect();
+    let receivers: Vec<usize> = recv_syms.iter().filter_map(|s| idx_of(s)).collect();
+    let leaves: Vec<usize> = leaf_syms.iter().filter_map(|s| idx_of(s)).collect();
+
+    // instantaneous DAG: edges only from earlier to later in `order`
+    let mut b0 = Mat::zeros(d, d);
+    for a in 0..d {
+        for b in 0..d {
+            if pos[a] >= pos[b] {
+                continue; // a must precede b for edge a → b
+            }
+            if leaves.contains(&a) {
+                continue; // leaves exert nothing
+            }
+            let mut p = if sector[a] == sector[b] { spec.p_intra } else { spec.p_cross };
+            if exerters.contains(&a) {
+                p = (p * 12.0).min(0.6); // structural hubs: many children
+            }
+            if receivers.contains(&b) {
+                p = (p * 12.0).min(0.6); // structural sinks: many parents
+            }
+            if rng.bernoulli(p) {
+                let sign = if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+                b0[(b, a)] = sign * rng.uniform(0.05, 0.3);
+            }
+        }
+    }
+
+    // lag-1 effects: momentum/mean-reversion diagonal + sparse cross terms;
+    // exerters also influence at lag 1 (paper's Table 2 ranks τ−1 terms).
+    let mut b1 = Mat::zeros(d, d);
+    for i in 0..d {
+        b1[(i, i)] = rng.uniform(-0.15, 0.1);
+    }
+    for &e in &exerters {
+        for i in 0..d {
+            if i != e && rng.bernoulli(0.3) {
+                b1[(i, e)] = rng.uniform(0.05, 0.2);
+            }
+        }
+    }
+    for _ in 0..(d * 2) {
+        let i = rng.below(d);
+        let j = rng.below(d);
+        if i != j && !leaves.contains(&j) {
+            b1[(i, j)] = rng.uniform(-0.1, 0.1);
+        }
+    }
+
+    // reduced-form simulation of returns
+    let inv = lu_inverse(&Mat::eye(d).sub(&b0)).expect("I - B0 invertible");
+    let vol = 0.004; // hourly return scale
+    let mut r_prev = vec![0.0; d];
+    let burn = 100;
+    let mut prices = Mat::zeros(spec.t_len, d);
+    let mut log_p: Vec<f64> = (0..d).map(|_| rng.uniform(3.0, 6.0)).collect(); // ~$20-$400
+    for t in 0..(burn + spec.t_len) {
+        let mut rhs = b1.matvec(&r_prev);
+        for v in rhs.iter_mut() {
+            *v += vol * rng.student_t(spec.t_dof);
+        }
+        let r_t = inv.matvec(&rhs);
+        if t >= burn {
+            for i in 0..d {
+                log_p[i] += r_t[i];
+                prices[(t - burn, i)] = log_p[i].exp();
+            }
+        }
+        r_prev = r_t;
+    }
+
+    // inject missing values (exchange halts / bad ticks)
+    let n_missing = ((spec.t_len * d) as f64 * spec.missing_frac) as usize;
+    for _ in 0..n_missing {
+        let t = rng.below(spec.t_len);
+        let i = rng.below(d);
+        prices[(t, i)] = f64::NAN;
+    }
+
+    MarketDataset {
+        prices,
+        tickers,
+        b0,
+        b1,
+        true_exerters: exerters,
+        true_receivers: receivers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph;
+
+    #[test]
+    fn universe_contains_paper_tickers() {
+        let u = ticker_universe(487);
+        assert_eq!(u.len(), 487);
+        for s in ["NVR", "AZO", "CMG", "BKNG", "MTD", "NWSA", "CNP", "FOXA", "AMCR", "USB", "FITB"] {
+            assert!(u.iter().any(|t| t == s), "missing {s}");
+        }
+        // no duplicates
+        let mut v = u.clone();
+        v.sort();
+        v.dedup();
+        assert_eq!(v.len(), u.len());
+    }
+
+    #[test]
+    fn b0_acyclic_and_leaves_hold() {
+        let mut rng = Pcg64::seed_from_u64(21);
+        let ds = simulate_market(&MarketSpec::small(), &mut rng);
+        assert!(graph::is_acyclic(&ds.b0));
+        // USB and FITB have no outgoing instantaneous edges
+        for sym in ["USB", "FITB"] {
+            let j = ds.tickers.iter().position(|t| t == sym).unwrap();
+            let outdeg = (0..ds.b0.rows()).filter(|&i| ds.b0[(i, j)] != 0.0).count();
+            assert_eq!(outdeg, 0, "{sym} should be a leaf");
+        }
+    }
+
+    #[test]
+    fn prices_positive_and_gappy() {
+        let mut rng = Pcg64::seed_from_u64(22);
+        let spec = MarketSpec::small();
+        let ds = simulate_market(&spec, &mut rng);
+        let n_nan = ds.prices.as_slice().iter().filter(|v| v.is_nan()).count();
+        assert!(n_nan > 0, "missing values should be injected");
+        for &v in ds.prices.as_slice() {
+            assert!(v.is_nan() || v > 0.0);
+        }
+    }
+
+    #[test]
+    fn exerters_have_high_out_degree() {
+        let mut rng = Pcg64::seed_from_u64(23);
+        let ds = simulate_market(&MarketSpec::small(), &mut rng);
+        let d = ds.b0.rows();
+        let out_deg =
+            |j: usize| (0..d).filter(|&i| ds.b0[(i, j)] != 0.0).count();
+        let mean_deg: f64 =
+            (0..d).map(out_deg).sum::<usize>() as f64 / d as f64;
+        for &e in &ds.true_exerters {
+            assert!(
+                out_deg(e) as f64 > mean_deg,
+                "exerter {} deg {} <= mean {mean_deg}",
+                ds.tickers[e],
+                out_deg(e)
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = MarketSpec::small();
+        let a = simulate_market(&spec, &mut Pcg64::seed_from_u64(5));
+        let b = simulate_market(&spec, &mut Pcg64::seed_from_u64(5));
+        assert_eq!(a.tickers, b.tickers);
+        assert_eq!(a.b0, b.b0);
+        // prices contain NaN: compare bit patterns
+        let pa: Vec<u64> = a.prices.as_slice().iter().map(|v| v.to_bits()).collect();
+        let pb: Vec<u64> = b.prices.as_slice().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(pa, pb);
+    }
+}

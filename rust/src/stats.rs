@@ -1,0 +1,207 @@
+//! Descriptive statistics on data panels: means, variances, covariance,
+//! standardization, correlation matrices — including the *masked* variants
+//! the XLA engine's zero-padded buffers rely on.
+
+use crate::linalg::Mat;
+
+/// Mean of a slice.
+pub fn mean(x: &[f64]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter().sum::<f64>() / x.len() as f64
+}
+
+/// Population variance (ddof = 0 — matches numpy's default, which the
+/// reference LiNGAM implementation uses).
+pub fn var(x: &[f64]) -> f64 {
+    let m = mean(x);
+    x.iter().map(|&v| (v - m) * (v - m)).sum::<f64>() / x.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std(x: &[f64]) -> f64 {
+    var(x).sqrt()
+}
+
+/// Population covariance of two equal-length slices.
+pub fn cov(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let (mx, my) = (mean(x), mean(y));
+    x.iter().zip(y).map(|(&a, &b)| (a - mx) * (b - my)).sum::<f64>() / x.len() as f64
+}
+
+/// Standardize in place to zero mean, unit (population) std.
+pub fn standardize(x: &mut [f64]) {
+    let m = mean(x);
+    let s = std(x).max(1e-12);
+    for v in x.iter_mut() {
+        *v = (*v - m) / s;
+    }
+}
+
+/// Standardize every column of a data panel `[n, d]`.
+pub fn standardize_cols(x: &Mat) -> Mat {
+    let (n, d) = (x.rows(), x.cols());
+    let mut out = x.clone();
+    for c in 0..d {
+        let mut col = x.col(c);
+        standardize(&mut col);
+        for r in 0..n {
+            out[(r, c)] = col[r];
+        }
+    }
+    out
+}
+
+/// Correlation matrix of the columns of `x` ([n, d] → [d, d]).
+pub fn correlation(x: &Mat) -> Mat {
+    let xs = standardize_cols(x);
+    xs.t().matmul(&xs).scale(1.0 / x.rows() as f64)
+}
+
+/// Quantile (linear interpolation, q in [0,1]) of a slice.
+pub fn quantile(x: &[f64], q: f64) -> f64 {
+    assert!(!x.is_empty());
+    let mut v = x.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Median absolute pairwise distance — SVGD's bandwidth ("median
+/// heuristic") helper. `x` is a set of points given as rows.
+pub fn median_sq_dist(points: &Mat) -> f64 {
+    let n = points.rows();
+    let mut d2 = Vec::with_capacity(n * (n - 1) / 2);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let dist: f64 = points
+                .row(i)
+                .iter()
+                .zip(points.row(j))
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            d2.push(dist);
+        }
+    }
+    if d2.is_empty() {
+        1.0
+    } else {
+        quantile(&d2, 0.5)
+    }
+}
+
+/// Excess kurtosis (non-Gaussianity check for simulators: LiNGAM needs
+/// non-Gaussian noise, and our generators should produce it).
+pub fn excess_kurtosis(x: &[f64]) -> f64 {
+    let m = mean(x);
+    let s2 = var(x).max(1e-300);
+    let m4 = x.iter().map(|&v| (v - m).powi(4)).sum::<f64>() / x.len() as f64;
+    m4 / (s2 * s2) - 3.0
+}
+
+// ---------------------------------------------------------------------
+// Masked variants: these define the exact semantics the padded XLA
+// buffers use (zero-padded rows with a row mask; divide by n_valid).
+// The Pallas kernel and ref.py implement the same formulas.
+// ---------------------------------------------------------------------
+
+/// Masked mean: Σ mask·x / Σ mask.
+pub fn masked_mean(x: &[f64], mask: &[f64]) -> f64 {
+    let n: f64 = mask.iter().sum();
+    x.iter().zip(mask).map(|(&v, &m)| v * m).sum::<f64>() / n.max(1.0)
+}
+
+/// Masked population std.
+pub fn masked_std(x: &[f64], mask: &[f64]) -> f64 {
+    let n: f64 = mask.iter().sum::<f64>().max(1.0);
+    let m = masked_mean(x, mask);
+    let s2 = x
+        .iter()
+        .zip(mask)
+        .map(|(&v, &w)| w * (v - m) * (v - m))
+        .sum::<f64>()
+        / n;
+    s2.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&x), 2.5);
+        assert!((var(&x) - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn standardize_unit() {
+        let mut x = vec![10.0, 20.0, 30.0, 40.0, 55.0];
+        standardize(&mut x);
+        assert!(mean(&x).abs() < 1e-12);
+        assert!((std(&x) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn correlation_diag_ones() {
+        let x = Mat::from_fn(100, 3, |r, c| ((r * (c + 3) * 31 + c) % 23) as f64);
+        let r = correlation(&x);
+        for i in 0..3 {
+            assert!((r[(i, i)] - 1.0).abs() < 1e-10);
+        }
+        // symmetry
+        assert!((r[(0, 1)] - r[(1, 0)]).abs() < 1e-12);
+        assert!(r.as_slice().iter().all(|v| v.abs() <= 1.0 + 1e-9));
+    }
+
+    #[test]
+    fn cov_of_identical_is_var() {
+        let x = [3.0, 1.0, 4.0, 1.0, 5.0];
+        assert!((cov(&x, &x) - var(&x)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_endpoints() {
+        let x = [5.0, 1.0, 3.0];
+        assert_eq!(quantile(&x, 0.0), 1.0);
+        assert_eq!(quantile(&x, 1.0), 5.0);
+        assert_eq!(quantile(&x, 0.5), 3.0);
+    }
+
+    #[test]
+    fn masked_matches_unmasked_when_full() {
+        let x = [2.0, 4.0, 6.0];
+        let mask = [1.0, 1.0, 1.0];
+        assert!((masked_mean(&x, &mask) - mean(&x)).abs() < 1e-12);
+        assert!((masked_std(&x, &mask) - std(&x)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn masked_ignores_padding() {
+        // padded with zeros + zero mask — the XLA buffer layout
+        let x = [2.0, 4.0, 6.0, 0.0, 0.0];
+        let mask = [1.0, 1.0, 1.0, 0.0, 0.0];
+        assert!((masked_mean(&x, &mask) - 4.0).abs() < 1e-12);
+        assert!((masked_std(&x, &mask) - std(&[2.0, 4.0, 6.0])).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kurtosis_signs() {
+        let mut rng = crate::util::rng::Pcg64::seed_from_u64(1);
+        let gauss: Vec<f64> = (0..40_000).map(|_| rng.normal()).collect();
+        let unif: Vec<f64> = (0..40_000).map(|_| rng.f64()).collect();
+        let lap: Vec<f64> = (0..40_000).map(|_| rng.laplace(1.0)).collect();
+        assert!(excess_kurtosis(&gauss).abs() < 0.15);
+        assert!(excess_kurtosis(&unif) < -1.0); // uniform: −1.2
+        assert!(excess_kurtosis(&lap) > 1.5); // laplace: +3
+    }
+}

@@ -1,0 +1,170 @@
+//! Minimal argv parser for the `alingam` binary, examples, and bench
+//! harnesses (clap is not in the offline crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! auto-generated `--help` from registered option descriptions.
+
+use std::collections::BTreeMap;
+
+/// Declarative description of one option (for --help).
+#[derive(Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+}
+
+/// Parsed command line.
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    specs: Vec<OptSpec>,
+    prog: String,
+    about: &'static str,
+}
+
+impl Args {
+    /// Parse `std::env::args()` minus the program name.
+    pub fn parse(about: &'static str, specs: &[OptSpec]) -> Args {
+        let mut it = std::env::args();
+        let prog = it.next().unwrap_or_else(|| "alingam".into());
+        Self::parse_from(prog, it.collect(), about, specs)
+    }
+
+    /// Parse an explicit vector (testable).
+    pub fn parse_from(prog: String, argv: Vec<String>, about: &'static str, specs: &[OptSpec]) -> Args {
+        let mut opts = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let takes_value = |name: &str| specs.iter().any(|s| s.name == name);
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    opts.insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                } else if takes_value(stripped)
+                    && i + 1 < argv.len()
+                    && !argv[i + 1].starts_with("--")
+                {
+                    // only options declared in the spec consume a value;
+                    // unknown --names are flags (so `--verbose run` keeps
+                    // `run` positional)
+                    opts.insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.push(stripped.to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        let args = Args { opts, flags, positional, specs: specs.to_vec(), prog, about };
+        if args.flag("help") {
+            args.print_help();
+            std::process::exit(0);
+        }
+        args
+    }
+
+    /// Render --help text.
+    pub fn print_help(&self) {
+        println!("{} — {}\n", self.prog, self.about);
+        println!("options:");
+        for s in &self.specs {
+            let def = s.default.as_deref().map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            println!("  --{:<18} {}{}", s.name, s.help, def);
+        }
+        println!("  --{:<18} {}", "help", "show this message");
+    }
+
+    /// Boolean flag presence.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// String option (explicit or spec default).
+    pub fn get(&self, name: &str) -> Option<String> {
+        self.opts.get(name).cloned().or_else(|| {
+            self.specs.iter().find(|s| s.name == name).and_then(|s| s.default.clone())
+        })
+    }
+
+    /// Required string option.
+    pub fn req(&self, name: &str) -> String {
+        self.get(name).unwrap_or_else(|| {
+            self.print_help();
+            panic!("missing required option --{name}");
+        })
+    }
+
+    /// Typed option with default handling via the spec.
+    pub fn get_as<T: std::str::FromStr>(&self, name: &str) -> Option<T>
+    where
+        T::Err: std::fmt::Debug,
+    {
+        self.get(name).map(|v| {
+            v.parse()
+                .unwrap_or_else(|e| panic!("--{name}={v} is not a valid value: {e:?}"))
+        })
+    }
+
+    /// usize option, panicking if absent and no default.
+    pub fn usize(&self, name: &str) -> usize {
+        self.get_as(name).unwrap_or_else(|| panic!("missing --{name}"))
+    }
+
+    /// f64 option, panicking if absent and no default.
+    pub fn f64(&self, name: &str) -> f64 {
+        self.get_as(name).unwrap_or_else(|| panic!("missing --{name}"))
+    }
+
+    /// First positional argument (subcommand).
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+}
+
+/// Shorthand spec constructor.
+pub fn opt(name: &'static str, help: &'static str, default: Option<&str>) -> OptSpec {
+    OptSpec { name, help, default: default.map(|s| s.to_string()) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(argv: &[&str]) -> Args {
+        Args::parse_from(
+            "test".into(),
+            argv.iter().map(|s| s.to_string()).collect(),
+            "test tool",
+            &[opt("dims", "number of variables", Some("10")), opt("out", "output path", None)],
+        )
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["--dims", "32", "--out=/tmp/x", "--verbose", "run"]);
+        assert_eq!(a.usize("dims"), 32);
+        assert_eq!(a.req("out"), "/tmp/x");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(0), Some("run"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.usize("dims"), 10);
+        assert_eq!(a.get("out"), None);
+    }
+
+    #[test]
+    fn flags_do_not_eat_following_option() {
+        let a = parse(&["--verbose", "--dims", "7"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize("dims"), 7);
+    }
+}

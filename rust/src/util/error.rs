@@ -1,0 +1,48 @@
+//! Library-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the AcceleratedLiNGAM library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Shape or dimension mismatch in a linear-algebra or dataset op.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    /// Numerical failure (singular matrix, non-finite value, ...).
+    #[error("numerical error: {0}")]
+    Numerical(String),
+
+    /// A caller violated an API precondition.
+    #[error("invalid argument: {0}")]
+    InvalidArgument(String),
+
+    /// Problems loading/compiling/executing AOT artifacts via PJRT.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Artifact registry could not satisfy a shape request.
+    #[error("no artifact bucket for shape n={n}, d={d} (available: {available})")]
+    NoArtifact { n: usize, d: usize, available: String },
+
+    /// Underlying XLA/PJRT failure.
+    #[error("xla: {0}")]
+    Xla(String),
+
+    /// I/O failure.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Data parsing failure (CSV etc.).
+    #[error("parse error: {0}")]
+    Parse(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,15 @@
+//! Shared infrastructure: errors, PRNG, property-testing mini-framework,
+//! CLI parsing, console tables, timing.
+//!
+//! Everything here is hand-rolled because the build is fully offline and
+//! the vendored crate set does not include the usual suspects
+//! (rand/clap/criterion/proptest) — see DESIGN.md §Toolchain constraints.
+
+pub mod error;
+pub mod rng;
+pub mod prop;
+pub mod cli;
+pub mod table;
+pub mod timer;
+
+pub use error::{Error, Result};

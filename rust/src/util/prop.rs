@@ -1,0 +1,130 @@
+//! Minimal property-testing framework (proptest is not in the offline
+//! crate set). Supports seeded generators, configurable case counts, and
+//! failure reporting with the offending seed so a case can be replayed.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't carry the xla_extension rpath)
+//! use alingam::util::prop::{props, Gen};
+//! props("addition commutes", 64, |g| {
+//!     let a = g.f64_in(-1e3, 1e3);
+//!     let b = g.f64_in(-1e3, 1e3);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Pcg64;
+
+/// Source of random test inputs for one property case.
+pub struct Gen {
+    rng: Pcg64,
+    /// Seed of this particular case (printed on failure).
+    pub case_seed: u64,
+}
+
+impl Gen {
+    /// Integer in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// f64 uniform in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    /// Standard normal draw.
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    /// Bernoulli(p).
+    pub fn bool_p(&mut self, p: f64) -> bool {
+        self.rng.bernoulli(p)
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.rng.normal()).collect()
+    }
+
+    /// Vector of uniforms in [lo, hi).
+    pub fn uniform_vec(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.rng.uniform(lo, hi)).collect()
+    }
+
+    /// Random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        self.rng.permutation(n)
+    }
+
+    /// Borrow the underlying generator for richer draws.
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` instances of a property. Panics (with the case seed) on the
+/// first failing case. `ALINGAM_PROP_SEED` replays a specific case.
+pub fn props<F: FnMut(&mut Gen)>(name: &str, cases: u32, mut f: F) {
+    if let Ok(s) = std::env::var("ALINGAM_PROP_SEED") {
+        let seed: u64 = s.parse().expect("ALINGAM_PROP_SEED must be a u64");
+        let mut g = Gen { rng: Pcg64::seed_from_u64(seed), case_seed: seed };
+        f(&mut g);
+        return;
+    }
+    let mut meta = Pcg64::seed_from_u64(0x5eed ^ fnv1a(name));
+    for case in 0..cases {
+        let case_seed = meta.next_u64();
+        let mut g = Gen { rng: Pcg64::seed_from_u64(case_seed), case_seed };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut g)));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay with ALINGAM_PROP_SEED={case_seed})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// FNV-1a hash, used to derive a per-property meta-seed from its name so
+/// different properties explore different input streams.
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        props("trivially true", 32, |_| count += 1);
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        props("always false", 8, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert!(x < -1.0);
+        });
+    }
+
+    #[test]
+    fn gen_ranges_hold() {
+        props("gen ranges", 64, |g| {
+            let u = g.usize_in(3, 9);
+            assert!((3..=9).contains(&u));
+            let f = g.f64_in(-2.0, 5.0);
+            assert!((-2.0..5.0).contains(&f));
+        });
+    }
+}

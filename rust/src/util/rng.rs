@@ -1,0 +1,308 @@
+//! PCG64 pseudo-random generator plus the sampling distributions the
+//! paper's simulations need (Normal, Uniform, Laplace, Exponential,
+//! Student-t) and permutation utilities.
+//!
+//! PCG-XSL-RR-128/64 (O'Neill 2014): 128-bit LCG state, 64-bit output via
+//! xor-shift-low + random rotation. Deterministic across platforms, which
+//! the Figure-3 agreement experiments rely on (same seed ⇒ same dataset on
+//! every engine).
+
+/// PCG-XSL-RR-128/64 generator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Seed from a single u64 (stream constant fixed).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        Self::new(seed as u128, 0xa02b_dbf7_bb3c_0a7a_c28f_a16a_64ab_f96d)
+    }
+
+    /// Full (state, stream) construction.
+    pub fn new(init_state: u128, init_seq: u128) -> Self {
+        let mut rng = Pcg64 { state: 0, inc: (init_seq << 1) | 1 };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(init_state);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Derive an independent child generator (for per-job seeding in the
+    /// coordinator's multi-seed sweeps).
+    pub fn split(&mut self) -> Pcg64 {
+        let s = self.next_u64() as u128 | ((self.next_u64() as u128) << 64);
+        let q = self.next_u64() as u128 | ((self.next_u64() as u128) << 64);
+        Pcg64::new(s, q)
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in (0, 1] — safe as a log() argument.
+    #[inline]
+    pub fn f64_open(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64 + 1.0) * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n) via Lemire's method.
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Standard normal via Box-Muller (no cached spare: keeps the
+    /// generator state a pure function of draw count).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64_open();
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal with given mean/std.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Laplace(0, b) — a non-Gaussian noise distribution used by the
+    /// gene/stock simulators (LiNGAM requires non-Gaussian errors).
+    pub fn laplace(&mut self, b: f64) -> f64 {
+        let u = self.f64() - 0.5;
+        -b * u.signum() * (1.0 - 2.0 * u.abs()).ln()
+    }
+
+    /// Exponential(rate).
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        -self.f64_open().ln() / rate
+    }
+
+    /// Student-t with `dof` degrees of freedom (heavy-tailed innovations
+    /// for the stock simulator). Uses the ratio-of-normals/chi2 form.
+    pub fn student_t(&mut self, dof: f64) -> f64 {
+        let z = self.normal();
+        // chi2(dof) as sum of gamma draws via Marsaglia-Tsang.
+        let chi2 = 2.0 * self.gamma(dof / 2.0, 1.0);
+        z / (chi2 / dof).sqrt()
+    }
+
+    /// Gamma(shape k, scale θ) via Marsaglia-Tsang (k ≥ 0 handled with the
+    /// boost trick for k < 1).
+    pub fn gamma(&mut self, k: f64, theta: f64) -> f64 {
+        if k < 1.0 {
+            let u = self.f64_open();
+            return self.gamma(k + 1.0, theta) * u.powf(1.0 / k);
+        }
+        let d = k - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64_open();
+            if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+                return d * v * theta;
+            }
+        }
+    }
+
+    /// Uniform noise term per the paper's §3.1 simulation: ε ~ U(0, 1).
+    #[inline]
+    pub fn paper_noise(&mut self) -> f64 {
+        self.f64()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut p);
+        p
+    }
+
+    /// Sample k distinct indices from 0..n (k ≤ n) — partial Fisher-Yates.
+    pub fn choose(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut p: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            p.swap(i, j);
+        }
+        p.truncate(k);
+        p
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_clones() {
+        let mut a = Pcg64::seed_from_u64(42);
+        let mut b = Pcg64::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::seed_from_u64(1);
+        let mut b = Pcg64::seed_from_u64(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut r = Pcg64::seed_from_u64(3);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::seed_from_u64(4);
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn laplace_variance() {
+        let mut r = Pcg64::seed_from_u64(5);
+        let b = 0.7;
+        let n = 50_000;
+        let mut s2 = 0.0;
+        for _ in 0..n {
+            let x = r.laplace(b);
+            s2 += x * x;
+        }
+        let var = s2 / n as f64;
+        assert!((var - 2.0 * b * b).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Pcg64::seed_from_u64(6);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = r.below(7);
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn permutation_is_bijection() {
+        let mut r = Pcg64::seed_from_u64(7);
+        let p = r.permutation(50);
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn choose_distinct() {
+        let mut r = Pcg64::seed_from_u64(8);
+        let c = r.choose(100, 20);
+        assert_eq!(c.len(), 20);
+        let mut s = c.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 20);
+    }
+
+    #[test]
+    fn student_t_heavy_tail() {
+        let mut r = Pcg64::seed_from_u64(9);
+        // t(5) kurtosis > normal: count |x|>3 exceedances vs normal draws.
+        let n = 50_000;
+        let t_exc = (0..n).filter(|_| r.student_t(5.0).abs() > 3.0).count();
+        let z_exc = (0..n).filter(|_| r.normal().abs() > 3.0).count();
+        assert!(t_exc > z_exc, "t_exc={t_exc} z_exc={z_exc}");
+    }
+
+    #[test]
+    fn gamma_mean() {
+        let mut r = Pcg64::seed_from_u64(10);
+        let n = 30_000;
+        let mean = (0..n).map(|_| r.gamma(2.5, 2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 5.0).abs() < 0.1, "mean={mean}");
+    }
+
+    #[test]
+    fn split_independent() {
+        let mut root = Pcg64::seed_from_u64(11);
+        let mut a = root.split();
+        let mut b = root.split();
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+}

@@ -1,0 +1,153 @@
+//! Aligned console tables for the bench harnesses — every bench prints the
+//! same rows/series the paper's corresponding table or figure reports.
+
+/// A simple column-aligned table.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    /// New table with a title (e.g. "Figure 2 (bottom-left): speed-up").
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (stringified cells).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let sep: String = width.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("+");
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!(" {:<w$} ", c, w = width[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render and print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float with fixed decimals (bench output convention).
+pub fn f(x: f64, decimals: usize) -> String {
+    format!("{:.*}", decimals, x)
+}
+
+/// Format seconds human-readably (µs/ms/s).
+pub fn secs(t: f64) -> String {
+    if t < 1e-3 {
+        format!("{:.1}µs", t * 1e6)
+    } else if t < 1.0 {
+        format!("{:.2}ms", t * 1e3)
+    } else if t < 120.0 {
+        format!("{:.2}s", t)
+    } else {
+        format!("{:.1}min", t / 60.0)
+    }
+}
+
+/// Render a terminal histogram (for Figure 4's degree distributions).
+pub fn histogram(title: &str, values: &[usize], bins: usize) -> String {
+    let mut out = format!("\n== {title} ==\n");
+    if values.is_empty() {
+        out.push_str("(empty)\n");
+        return out;
+    }
+    let max = *values.iter().max().unwrap();
+    let lo = *values.iter().min().unwrap();
+    let width = ((max - lo + 1) as f64 / bins as f64).ceil().max(1.0) as usize;
+    let mut counts = vec![0usize; bins];
+    for &v in values {
+        let b = ((v - lo) / width).min(bins - 1);
+        counts[b] += 1;
+    }
+    let peak = counts.iter().copied().max().unwrap().max(1);
+    for (b, &c) in counts.iter().enumerate() {
+        let bar = "#".repeat((c * 50 + peak - 1) / peak);
+        let a = lo + b * width;
+        let z = lo + (b + 1) * width - 1;
+        out.push_str(&format!("{:>4}-{:<4} |{:<50}| {}\n", a, z, bar, c));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer".into(), "22".into()]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("longer"));
+        // all data lines equal width
+        let lines: Vec<&str> = s.lines().filter(|l| l.contains('|')).collect();
+        assert!(lines.windows(2).all(|w| w[0].len() == w[1].len()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn histogram_covers_all() {
+        let h = histogram("deg", &[0, 1, 1, 2, 5, 9], 3);
+        assert!(h.contains("deg"));
+        // total count preserved
+        let total: usize = h
+            .lines()
+            .filter_map(|l| l.rsplit('|').next().and_then(|c| c.trim().parse::<usize>().ok()))
+            .sum();
+        assert_eq!(total, 6);
+    }
+
+    #[test]
+    fn secs_units() {
+        assert!(secs(2e-5).ends_with("µs"));
+        assert!(secs(0.02).ends_with("ms"));
+        assert!(secs(2.0).ends_with('s'));
+        assert!(secs(300.0).ends_with("min"));
+    }
+}

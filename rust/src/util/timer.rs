@@ -1,0 +1,149 @@
+//! Timing utilities: a scoped stage profiler (used to reproduce the
+//! paper's Figure-2 "96% of runtime is causal ordering" measurement) and a
+//! small bench runner (criterion is not in the offline crate set).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Accumulates wall-clock time per named stage.
+#[derive(Default, Debug, Clone)]
+pub struct StageProfile {
+    totals: BTreeMap<String, Duration>,
+    counts: BTreeMap<String, u64>,
+}
+
+impl StageProfile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a stage name.
+    pub fn time<T>(&mut self, stage: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(stage, t0.elapsed());
+        out
+    }
+
+    /// Record an externally-measured duration.
+    pub fn add(&mut self, stage: &str, d: Duration) {
+        *self.totals.entry(stage.to_string()).or_default() += d;
+        *self.counts.entry(stage.to_string()).or_default() += 1;
+    }
+
+    /// Merge another profile into this one.
+    pub fn merge(&mut self, other: &StageProfile) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(k.clone()).or_default() += *v;
+        }
+        for (k, c) in &other.counts {
+            *self.counts.entry(k.clone()).or_default() += *c;
+        }
+    }
+
+    /// Total seconds across all stages.
+    pub fn total_secs(&self) -> f64 {
+        self.totals.values().map(|d| d.as_secs_f64()).sum()
+    }
+
+    /// Seconds spent in one stage.
+    pub fn secs(&self, stage: &str) -> f64 {
+        self.totals.get(stage).map(|d| d.as_secs_f64()).unwrap_or(0.0)
+    }
+
+    /// Fraction of total time spent in one stage (the Figure-2 number).
+    pub fn fraction(&self, stage: &str) -> f64 {
+        let t = self.total_secs();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.secs(stage) / t
+        }
+    }
+
+    /// Invocation count of one stage.
+    pub fn count(&self, stage: &str) -> u64 {
+        self.counts.get(stage).copied().unwrap_or(0)
+    }
+
+    /// (stage, seconds, fraction) rows sorted by time desc.
+    pub fn rows(&self) -> Vec<(String, f64, f64)> {
+        let total = self.total_secs().max(1e-12);
+        let mut rows: Vec<_> = self
+            .totals
+            .iter()
+            .map(|(k, d)| (k.clone(), d.as_secs_f64(), d.as_secs_f64() / total))
+            .collect();
+        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        rows
+    }
+}
+
+/// Result of a [`bench`] run.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub iters: u32,
+    pub mean_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+}
+
+/// Measure a closure: warm up once, then run up to `max_iters` iterations
+/// or `budget` seconds, whichever first; report mean/min/max.
+pub fn bench<T>(max_iters: u32, budget_secs: f64, mut f: impl FnMut() -> T) -> BenchStats {
+    // warmup
+    std::hint::black_box(f());
+    let mut times = Vec::new();
+    let start = Instant::now();
+    for _ in 0..max_iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+        if start.elapsed().as_secs_f64() > budget_secs {
+            break;
+        }
+    }
+    let n = times.len() as f64;
+    BenchStats {
+        iters: times.len() as u32,
+        mean_secs: times.iter().sum::<f64>() / n,
+        min_secs: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_secs: times.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_accumulates() {
+        let mut p = StageProfile::new();
+        p.time("a", || std::thread::sleep(Duration::from_millis(2)));
+        p.time("a", || std::thread::sleep(Duration::from_millis(2)));
+        p.time("b", || ());
+        assert_eq!(p.count("a"), 2);
+        assert!(p.secs("a") >= 0.004);
+        assert!(p.fraction("a") > 0.9);
+        let rows = p.rows();
+        assert_eq!(rows[0].0, "a");
+    }
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let s = bench(16, 0.2, || (0..1000).sum::<u64>());
+        assert!(s.iters >= 1);
+        assert!(s.min_secs <= s.mean_secs && s.mean_secs <= s.max_secs);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = StageProfile::new();
+        a.add("x", Duration::from_millis(5));
+        let mut b = StageProfile::new();
+        b.add("x", Duration::from_millis(7));
+        a.merge(&b);
+        assert!(a.secs("x") >= 0.012);
+        assert_eq!(a.count("x"), 2);
+    }
+}

@@ -1,0 +1,161 @@
+//! End-to-end pipeline tests: the full experiment flows the examples and
+//! benches drive, at test-friendly sizes.
+
+use alingam::apps::{genes, simbench, stocks};
+use alingam::baselines::SvgdOpts;
+use alingam::coordinator::{profile_direct, Engine, EngineChoice};
+use alingam::lingam::{SequentialEngine, VarLingam, VectorizedEngine};
+use alingam::sim::{simulate_sem, simulate_var, Condition, MarketSpec, SemSpec, VarSpec};
+use alingam::util::rng::Pcg64;
+
+#[test]
+fn gene_pipeline_table1_row_shape() {
+    let cfg = genes::GenesConfig {
+        scale: genes::GeneScale::Small,
+        seed: 7,
+        svgd: SvgdOpts { particles: 8, iters: 50, step: 0.1, seed: 0 },
+        max_train_rows: 150,
+        max_test_cells: 40,
+        with_baseline: true,
+    };
+    let rows = genes::run_condition(&cfg, Condition::CoCulture, &VectorizedEngine).unwrap();
+    assert_eq!(rows.len(), 2, "DirectLiNGAM + comparator");
+    assert_eq!(rows[0].method, "DirectLiNGAM+VI");
+    assert!(rows[1].method.contains("DCD-FG"));
+    for r in &rows {
+        assert!(r.metrics.nll.is_finite());
+        assert!(r.metrics.mae > 0.0 && r.metrics.mae < 10.0);
+    }
+}
+
+#[test]
+fn stock_pipeline_full_flow_with_gaps() {
+    // end-to-end through interpolation → differencing → VarLiNGAM
+    let spec = MarketSpec { dim: 30, t_len: 900, ..MarketSpec::small() };
+    let r = stocks::run_stocks(&spec, 11, &VectorizedEngine, 5).unwrap();
+    assert_eq!(r.top_exerting.len(), 5);
+    assert_eq!(r.top_receiving.len(), 5);
+    // paper's qualitative finding: in/out degree distributions roughly
+    // balanced (total mass equal by construction; compare maxima loosely)
+    let max_in = *r.in_degrees.iter().max().unwrap();
+    let max_out = *r.out_degrees.iter().max().unwrap();
+    assert!(max_in > 0 && max_out > 0);
+}
+
+#[test]
+fn xla_engine_through_full_gene_condition() {
+    let engine = Engine::build(EngineChoice::Xla).expect("run `make artifacts`");
+    let cfg = genes::GenesConfig {
+        scale: genes::GeneScale::Small,
+        seed: 3,
+        svgd: SvgdOpts { particles: 6, iters: 30, step: 0.1, seed: 0 },
+        max_train_rows: 100,
+        max_test_cells: 25,
+        with_baseline: false,
+    };
+    // Small scale is d=60: covered by the d=64 artifact bucket
+    let rows = genes::run_condition(&cfg, Condition::Ifn, engine.as_ordering()).unwrap();
+    assert!(rows[0].metrics.nll.is_finite());
+}
+
+#[test]
+fn varlingam_sequential_equals_vectorized_end_to_end() {
+    let spec = VarSpec { dim: 6, ..Default::default() };
+    let mut rng = Pcg64::seed_from_u64(5);
+    let ds = simulate_var(&spec, 3_000, &mut rng);
+    let a = VarLingam::new().fit(&ds.data, &SequentialEngine).unwrap();
+    let b = VarLingam::new().fit(&ds.data, &VectorizedEngine).unwrap();
+    assert_eq!(a.order, b.order);
+    assert!(a.b0.sub(&b.b0).max_abs() < 1e-8);
+    assert!(a.b1().sub(b.b1()).max_abs() < 1e-8);
+}
+
+#[test]
+fn profile_fraction_grows_with_dims() {
+    // Figure-2 shape: the ordering share rises with d (the quadratic term)
+    let mut rng = Pcg64::seed_from_u64(6);
+    let small = simulate_sem(&SemSpec::layered(5, 2, 0.5), 2_000, &mut rng);
+    let big = simulate_sem(&SemSpec::layered(14, 2, 0.5), 2_000, &mut rng);
+    let f_small = profile_direct(&small.data, &SequentialEngine).unwrap().ordering_frac;
+    let f_big = profile_direct(&big.data, &SequentialEngine).unwrap().ordering_frac;
+    assert!(
+        f_big > f_small,
+        "ordering fraction should grow with d: {f_small} vs {f_big}"
+    );
+    assert!(f_big > 0.8, "at d=14 ordering should dominate: {f_big}");
+}
+
+#[test]
+fn notears_comparison_runs_end_to_end() {
+    let seeds: Vec<u64> = (0..2).collect();
+    let ms = simbench::notears_sweep(&simbench::fig3_spec(), 800, &seeds, &[0.01], false, 2);
+    // §3.1's point is qualitative: NOTEARS exists, runs, and is imperfect
+    for m in &ms {
+        assert!(m.f1 <= 1.0 && m.f1 > 0.0);
+    }
+}
+
+#[test]
+fn asymmetry_demo_directions() {
+    use alingam::sim::Noise;
+    let (fwd_u, bwd_u) = simbench::asymmetry_demo(Noise::Uniform01, 30_000, 1.5, 3).unwrap();
+    let (fwd_g, bwd_g) = simbench::asymmetry_demo(Noise::Gaussian(1.0), 30_000, 1.5, 3).unwrap();
+    assert!(bwd_u > 3.0 * fwd_u.max(1e-3), "uniform: {fwd_u} vs {bwd_u}");
+    assert!(bwd_g < 0.02 && fwd_g < 0.02, "gaussian: {fwd_g} vs {bwd_g}");
+}
+
+#[test]
+fn bootstrap_pipeline_stable_on_strong_graph() {
+    use alingam::coordinator::{bootstrap_direct, BootstrapOpts};
+    let mut rng = Pcg64::seed_from_u64(8);
+    let ds = simulate_sem(&SemSpec::layered(6, 2, 0.7), 1_200, &mut rng);
+    let opts = BootstrapOpts { resamples: 15, workers: 2, ..Default::default() };
+    let boot = bootstrap_direct(&ds.data, &VectorizedEngine, &opts).unwrap();
+    assert_eq!(boot.resamples, 15);
+    // every very strong true edge should be stable
+    for i in 0..6 {
+        for j in 0..6 {
+            if ds.adjacency[(i, j)].abs() > 1.2 {
+                assert!(
+                    boot.edge_probs[(i, j)] >= 0.8,
+                    "edge {j}->{i} prob {}",
+                    boot.edge_probs[(i, j)]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn ica_and_direct_agree_on_well_separated_data() {
+    use alingam::lingam::{DirectLingam, IcaLingam};
+    let mut rng = Pcg64::seed_from_u64(9);
+    let ds = simulate_sem(&SemSpec::layered(6, 2, 0.7), 10_000, &mut rng);
+    let direct = DirectLingam::new().fit(&ds.data, &VectorizedEngine).unwrap();
+    let ica = IcaLingam::new().fit(&ds.data).unwrap();
+    // both orders must be consistent with the truth (orders may differ
+    // among equivalent permutations)
+    assert!(alingam::graph::order_consistent(&ds.adjacency, &direct.order));
+    assert!(alingam::graph::order_consistent(&ds.adjacency, &ica.order));
+    let m_d = alingam::metrics::graph_metrics(&ds.adjacency, &direct.adjacency, 0.1);
+    let m_i = alingam::metrics::graph_metrics(&ds.adjacency, &ica.adjacency, 0.1);
+    assert!(m_d.f1 >= 0.75 && m_i.f1 >= 0.75, "direct {} ica {}", m_d.f1, m_i.f1);
+}
+
+#[test]
+fn varlingam_lag2_pipeline() {
+    use alingam::lingam::var::total_effects;
+    let spec = VarSpec { dim: 5, ..Default::default() };
+    let mut rng = Pcg64::seed_from_u64(10);
+    let ds = simulate_var(&spec, 4_000, &mut rng);
+    let fit = VarLingam::new().with_lags(2).fit(&ds.data, &VectorizedEngine).unwrap();
+    assert_eq!(fit.m_tau.len(), 2);
+    assert_eq!(fit.b_tau.len(), 2);
+    let te = total_effects(&fit);
+    assert_eq!(te.exerted.len(), 3); // tau = 0, 1, 2
+    // data is VAR(1): the lag-2 coefficients should be comparatively small
+    assert!(
+        fit.m_tau[1].fro_norm() < fit.m_tau[0].fro_norm() + 1.0,
+        "lag-2 mass should not dominate a VAR(1) process"
+    );
+}

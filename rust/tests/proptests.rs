@@ -1,0 +1,306 @@
+//! Property-based tests over the library's invariants, using the
+//! hand-rolled `util::prop` mini-framework (proptest is not in the
+//! offline crate set). Each property runs dozens of randomized cases;
+//! failures print a replay seed (`ALINGAM_PROP_SEED=...`).
+
+use alingam::graph::{self, Dag};
+use alingam::linalg::{cholesky, expm, lstsq, lu_inverse, lu_solve, Mat};
+use alingam::lingam::engine::{argmax_active, residualize_in_place, OrderingEngine};
+use alingam::lingam::{DirectLingam, VectorizedEngine};
+use alingam::metrics::graph_metrics;
+use alingam::sim::{simulate_sem, Noise, SemSpec};
+use alingam::stats;
+use alingam::util::prop::{props, Gen};
+use alingam::util::rng::Pcg64;
+
+// ------------------------------------------------------------- linalg
+
+#[test]
+fn prop_matmul_associative() {
+    props("matmul associative", 40, |g: &mut Gen| {
+        let (m, k, n, p) = (
+            g.usize_in(1, 6),
+            g.usize_in(1, 6),
+            g.usize_in(1, 6),
+            g.usize_in(1, 6),
+        );
+        let a = Mat::from_fn(m, k, |_, _| g.normal());
+        let b = Mat::from_fn(k, n, |_, _| g.normal());
+        let c = Mat::from_fn(n, p, |_, _| g.normal());
+        let left = a.matmul(&b).matmul(&c);
+        let right = a.matmul(&b.matmul(&c));
+        assert!(left.sub(&right).max_abs() < 1e-9);
+    });
+}
+
+#[test]
+fn prop_lu_solve_solves() {
+    props("lu solve residual", 40, |g: &mut Gen| {
+        let n = g.usize_in(2, 8);
+        // diagonally-dominant → nonsingular
+        let mut a = Mat::from_fn(n, n, |_, _| g.normal());
+        for i in 0..n {
+            a[(i, i)] += n as f64 + 1.0;
+        }
+        let b = Mat::from_fn(n, 2, |_, _| g.normal());
+        let x = lu_solve(&a, &b).unwrap();
+        let resid = a.matmul(&x).sub(&b).max_abs();
+        assert!(resid < 1e-8, "residual {resid}");
+    });
+}
+
+#[test]
+fn prop_inverse_roundtrip() {
+    props("inverse roundtrip", 30, |g: &mut Gen| {
+        let n = g.usize_in(2, 7);
+        let mut a = Mat::from_fn(n, n, |_, _| g.normal());
+        for i in 0..n {
+            a[(i, i)] += n as f64 + 1.0;
+        }
+        let inv = lu_inverse(&a).unwrap();
+        assert!(a.matmul(&inv).sub(&Mat::eye(n)).max_abs() < 1e-8);
+    });
+}
+
+#[test]
+fn prop_cholesky_reconstructs_spd() {
+    props("cholesky spd", 30, |g: &mut Gen| {
+        let n = g.usize_in(2, 6);
+        let b = Mat::from_fn(n, n, |_, _| g.normal());
+        let spd = b.t().matmul(&b).add(&Mat::eye(n).scale(0.5));
+        let l = cholesky(&spd).unwrap();
+        assert!(l.matmul(&l.t()).sub(&spd).max_abs() < 1e-9);
+    });
+}
+
+#[test]
+fn prop_lstsq_exact_for_consistent_systems() {
+    props("lstsq consistent", 30, |g: &mut Gen| {
+        let n = g.usize_in(8, 20);
+        let p = g.usize_in(1, 4);
+        let a = Mat::from_fn(n, p, |_, _| g.normal());
+        let truth = Mat::from_fn(p, 1, |_, _| g.normal());
+        let b = a.matmul(&truth);
+        let x = lstsq(&a, &b).unwrap();
+        assert!(x.sub(&truth).max_abs() < 1e-7);
+    });
+}
+
+#[test]
+fn prop_expm_of_strictly_triangular_has_unit_diagonal() {
+    props("expm nilpotent diag", 30, |g: &mut Gen| {
+        let n = g.usize_in(2, 6);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if g.bool_p(0.6) {
+                    a[(i, j)] = g.f64_in(-2.0, 2.0);
+                }
+            }
+        }
+        let e = expm(&a).unwrap();
+        for i in 0..n {
+            assert!((e[(i, i)] - 1.0).abs() < 1e-10);
+        }
+        // trace == n ⟺ acyclic in the NOTEARS h-function sense
+        assert!((e.trace() - n as f64).abs() < 1e-9);
+    });
+}
+
+// ------------------------------------------------------------- graph/sim
+
+#[test]
+fn prop_generated_dags_are_acyclic_and_orderable() {
+    props("dag generators acyclic", 40, |g: &mut Gen| {
+        let d = g.usize_in(3, 20);
+        let levels = g.usize_in(1, d.min(4));
+        let p = g.f64_in(0.1, 0.9);
+        let dag = graph::layered_dag(d, levels, p, g.rng());
+        let order = dag.topological_order().expect("layered DAG acyclic");
+        assert!(graph::order_consistent(&dag.adj, &order));
+
+        let er = graph::erdos_renyi_dag(d, g.f64_in(0.5, 3.0), 0.3, 1.5, g.rng());
+        assert!(er.topological_order().is_some());
+    });
+}
+
+#[test]
+fn prop_sem_data_respects_root_distribution() {
+    props("sem roots uniform", 15, |g: &mut Gen| {
+        let seed = g.rng().next_u64();
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let ds = simulate_sem(&SemSpec::layered(6, 2, 0.5), 4_000, &mut rng);
+        // all columns finite; roots have uniform kurtosis (< 0 excess)
+        assert!(ds.data.is_finite());
+        for i in 0..6 {
+            if (0..6).all(|j| ds.adjacency[(i, j)] == 0.0) {
+                let col = ds.data.col(i);
+                assert!(
+                    stats::excess_kurtosis(&col) < 0.0,
+                    "root {i} kurtosis not uniform-like"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_metrics_identity_and_bounds() {
+    props("metrics identity", 40, |g: &mut Gen| {
+        let d = g.usize_in(3, 10);
+        let dag = graph::erdos_renyi_dag(d, g.f64_in(0.5, 2.0), 0.5, 1.5, g.rng());
+        let m = graph_metrics(&dag.adj, &dag.adj, 0.01);
+        assert_eq!(m.shd, 0);
+        if m.true_edges > 0 {
+            assert_eq!(m.f1, 1.0);
+        }
+        // against the empty graph: SHD = edge count
+        let empty = Mat::zeros(d, d);
+        let me = graph_metrics(&dag.adj, &empty, 0.01);
+        assert_eq!(me.shd, m.true_edges);
+        assert!(me.f1 >= 0.0 && me.f1 <= 1.0);
+    });
+}
+
+// ------------------------------------------------------------- engines
+
+#[test]
+fn prop_residualize_kills_covariance() {
+    props("residualize orthogonality", 30, |g: &mut Gen| {
+        let n = g.usize_in(50, 300);
+        let d = g.usize_in(3, 8);
+        let mut x = Mat::from_fn(n, d, |_, _| g.normal());
+        // inject correlation with column 0
+        for r in 0..n {
+            let base = x[(r, 0)];
+            for c in 1..d {
+                let v = x[(r, c)] + 0.7 * base;
+                x[(r, c)] = v;
+            }
+        }
+        let active = vec![true; d];
+        residualize_in_place(&mut x, &active, 0);
+        let x0 = x.col(0);
+        for c in 1..d {
+            let cv = stats::cov(&x.col(c), &x0);
+            assert!(cv.abs() < 1e-8, "col {c} cov {cv}");
+        }
+    });
+}
+
+#[test]
+fn prop_order_is_always_valid_permutation() {
+    props("fit order permutation", 10, |g: &mut Gen| {
+        let d = g.usize_in(3, 8);
+        let seed = g.rng().next_u64();
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let noise = if g.bool_p(0.5) { Noise::Uniform01 } else { Noise::Laplace(1.0) };
+        let ds = simulate_sem(&SemSpec::layered(d, 2, 0.5).with_noise(noise), 400, &mut rng);
+        let fit = DirectLingam::new().fit(&ds.data, &VectorizedEngine).unwrap();
+        let mut o = fit.order.clone();
+        o.sort_unstable();
+        assert_eq!(o, (0..d).collect::<Vec<_>>());
+        // estimated adjacency must be a DAG consistent with the order
+        assert!(Dag::new(fit.adjacency.clone()).is_some());
+    });
+}
+
+#[test]
+fn prop_scores_invariant_to_affine_scaling() {
+    // Algorithm 1 standardizes internally: scaling any column by a
+    // positive constant and shifting must not change the k_list
+    props("scores affine invariant", 15, |g: &mut Gen| {
+        let seed = g.rng().next_u64();
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let ds = simulate_sem(&SemSpec::layered(5, 2, 0.6), 600, &mut rng);
+        let active = vec![true; 5];
+        let k1 = VectorizedEngine.scores(&ds.data, &active).unwrap();
+        let mut scaled = ds.data.clone();
+        for c in 0..5 {
+            let a = g.f64_in(0.1, 10.0);
+            let b = g.f64_in(-5.0, 5.0);
+            for r in 0..scaled.rows() {
+                scaled[(r, c)] = a * scaled[(r, c)] + b;
+            }
+        }
+        let k2 = VectorizedEngine.scores(&scaled, &active).unwrap();
+        for i in 0..5 {
+            assert!(
+                (k1[i] - k2[i]).abs() < 1e-6 * (1.0 + k1[i].abs()),
+                "i={i}: {} vs {}",
+                k1[i],
+                k2[i]
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_argmax_matches_manual_max() {
+    props("argmax consistent", 60, |g: &mut Gen| {
+        let d = g.usize_in(1, 12);
+        let scores: Vec<f64> = (0..d).map(|_| g.normal()).collect();
+        let mut active = vec![false; d];
+        let on = g.usize_in(1, d);
+        for k in 0..on {
+            active[k] = true;
+        }
+        let best = argmax_active(&scores, &active);
+        assert!(active[best]);
+        for i in 0..d {
+            if active[i] {
+                assert!(scores[i] <= scores[best]);
+            }
+        }
+    });
+}
+
+// ------------------------------------------------------------- data ops
+
+#[test]
+fn prop_interpolation_preserves_observed_values() {
+    props("interp preserves observed", 30, |g: &mut Gen| {
+        let n = g.usize_in(5, 40);
+        let mut m = Mat::from_fn(n, 2, |_, _| g.normal());
+        let observed = m.clone();
+        // punch interior holes
+        for r in 1..(n - 1) {
+            if g.bool_p(0.3) {
+                m[(r, 0)] = f64::NAN;
+            }
+        }
+        let filled = alingam::data::interpolate_columns(&m);
+        for r in 0..n {
+            if !m[(r, 0)].is_nan() {
+                assert_eq!(filled[(r, 0)], observed[(r, 0)]);
+            } else {
+                assert!(!filled[(r, 0)].is_nan(), "interior gap unfilled");
+            }
+            assert_eq!(filled[(r, 1)], observed[(r, 1)]);
+        }
+    });
+}
+
+#[test]
+fn prop_interpolated_values_within_endpoints() {
+    props("interp bounded", 30, |g: &mut Gen| {
+        let n = g.usize_in(6, 30);
+        let lo = g.f64_in(-10.0, 0.0);
+        let hi = g.f64_in(1.0, 10.0);
+        let mut m = Mat::zeros(n, 1);
+        m[(0, 0)] = lo;
+        m[(n - 1, 0)] = hi;
+        for r in 1..(n - 1) {
+            m[(r, 0)] = f64::NAN;
+        }
+        let filled = alingam::data::interpolate_columns(&m);
+        for r in 0..n {
+            let v = filled[(r, 0)];
+            assert!(v >= lo.min(hi) - 1e-12 && v <= lo.max(hi) + 1e-12);
+        }
+        // monotone between endpoints
+        for r in 1..n {
+            assert!(filled[(r, 0)] >= filled[(r - 1, 0)] - 1e-12);
+        }
+    });
+}

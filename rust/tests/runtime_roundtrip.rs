@@ -1,0 +1,178 @@
+//! Runtime integration: the AOT HLO artifacts load, compile and execute
+//! via PJRT, and their numerics match the Rust reference implementations.
+//!
+//! Requires `make artifacts`.
+
+use alingam::lingam::var::var1_fit;
+use alingam::runtime::{artifact_dir, ArtifactKind, ArtifactRegistry, DeviceExecutor, HostArray};
+use alingam::sim::{simulate_var, VarSpec};
+use alingam::util::rng::Pcg64;
+
+#[test]
+fn manifest_loads_and_covers_default_shapes() {
+    let reg = ArtifactRegistry::load(&artifact_dir()).expect("run `make artifacts`");
+    assert!(!reg.is_empty());
+    // the shapes the examples/benches rely on must be servable
+    for (n, d) in [(200, 8), (1_000, 10), (4_000, 16), (4_000, 32)] {
+        assert!(
+            reg.best(ArtifactKind::OrderStep, n, d).is_ok(),
+            "no order_step bucket for {n}x{d}"
+        );
+        assert!(reg.best(ArtifactKind::OrderScores, n, d).is_ok());
+    }
+    assert!(reg.best(ArtifactKind::VarFit, 500, 16).is_ok());
+}
+
+#[test]
+fn executor_reports_platform() {
+    let exec = DeviceExecutor::start().unwrap();
+    let p = exec.platform().unwrap();
+    assert!(p.to_lowercase().contains("cpu") || p.contains("Host"), "platform = {p}");
+}
+
+#[test]
+fn var_fit_artifact_matches_rust_var_fit() {
+    let reg = ArtifactRegistry::load(&artifact_dir()).expect("run `make artifacts`");
+    let exec = DeviceExecutor::start().unwrap();
+
+    let spec = VarSpec { dim: 12, ..Default::default() };
+    let mut rng = Pcg64::seed_from_u64(5);
+    let ds = simulate_var(&spec, 400, &mut rng);
+    let (t, d) = (ds.data.rows(), ds.data.cols());
+
+    // rust reference
+    let (m1_ref, _) = var1_fit(&ds.data).unwrap();
+
+    // artifact path: pad into the bucket
+    let bucket = reg.best(ArtifactKind::VarFit, t, d).unwrap();
+    let (tb, db) = (bucket.n, bucket.d);
+    let mut series = vec![0.0f32; tb * db];
+    for r in 0..t {
+        for c in 0..d {
+            series[r * db + c] = ds.data[(r, c)] as f32;
+        }
+    }
+    let mut row_mask = vec![0.0f32; tb];
+    for v in row_mask.iter_mut().take(t) {
+        *v = 1.0;
+    }
+    let outs = exec
+        .run(
+            bucket.path.clone(),
+            vec![
+                HostArray::new(vec![tb as i64, db as i64], series),
+                HostArray::vector(row_mask),
+            ],
+        )
+        .unwrap();
+    let m1_pad = outs[0].f32s().unwrap();
+    for i in 0..d {
+        for j in 0..d {
+            let a = m1_ref[(i, j)];
+            let b = m1_pad[i * db + j] as f64;
+            assert!(
+                (a - b).abs() < 1e-3 * (1.0 + a.abs()),
+                "M1[{i},{j}]: rust {a} vs artifact {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let reg = ArtifactRegistry::load(&artifact_dir()).expect("run `make artifacts`");
+    let exec = DeviceExecutor::start().unwrap();
+    let bucket = reg.best(ArtifactKind::OrderScores, 100, 8).unwrap();
+
+    let run = |exec: &DeviceExecutor| {
+        let x = vec![0.5f32; bucket.n * bucket.d];
+        let mut rm = vec![0.0f32; bucket.n];
+        rm[..50].iter_mut().for_each(|v| *v = 1.0);
+        let cm = vec![1.0f32; bucket.d];
+        exec.run(
+            bucket.path.clone(),
+            vec![
+                HostArray::new(vec![bucket.n as i64, bucket.d as i64], x),
+                HostArray::vector(rm),
+                HostArray::vector(cm),
+            ],
+        )
+        .unwrap()
+    };
+    let t0 = std::time::Instant::now();
+    let _ = run(&exec);
+    let first = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let _ = run(&exec);
+    let second = t1.elapsed();
+    // second call skips XLA compilation: must be much faster
+    assert!(
+        second < first / 2,
+        "no caching effect: first {first:?}, second {second:?}"
+    );
+}
+
+#[test]
+fn constant_columns_do_not_crash_scores() {
+    // degenerate input: zero-variance column (std clamped by STD_EPS)
+    let reg = ArtifactRegistry::load(&artifact_dir()).expect("run `make artifacts`");
+    let exec = DeviceExecutor::start().unwrap();
+    let bucket = reg.best(ArtifactKind::OrderScores, 64, 4).unwrap();
+    let mut x = vec![0.0f32; bucket.n * bucket.d];
+    for r in 0..64 {
+        x[r * bucket.d] = 1.0; // constant column 0
+        x[r * bucket.d + 1] = r as f32; // ramp
+        x[r * bucket.d + 2] = (r * r % 17) as f32;
+        x[r * bucket.d + 3] = (r % 5) as f32;
+    }
+    let mut rm = vec![0.0f32; bucket.n];
+    rm[..64].iter_mut().for_each(|v| *v = 1.0);
+    let mut cm = vec![0.0f32; bucket.d];
+    cm[..4].iter_mut().for_each(|v| *v = 1.0);
+    let outs = exec
+        .run(
+            bucket.path.clone(),
+            vec![
+                HostArray::new(vec![bucket.n as i64, bucket.d as i64], x),
+                HostArray::vector(rm),
+                HostArray::vector(cm),
+            ],
+        )
+        .unwrap();
+    let k = outs[0].f32s().unwrap();
+    for i in 0..4 {
+        assert!(k[i].is_finite(), "k[{i}] = {}", k[i]);
+    }
+}
+
+#[test]
+fn executor_shared_across_threads() {
+    use std::sync::Arc;
+    let reg = Arc::new(ArtifactRegistry::load(&artifact_dir()).expect("run `make artifacts`"));
+    let exec = DeviceExecutor::start().unwrap();
+    let bucket = reg.best(ArtifactKind::OrderScores, 100, 8).unwrap().clone();
+    std::thread::scope(|s| {
+        for t in 0..3 {
+            let exec = exec.clone();
+            let path = bucket.path.clone();
+            let (nb, db) = (bucket.n, bucket.d);
+            s.spawn(move || {
+                let x = vec![(t as f32) * 0.1 + 0.3; nb * db];
+                let mut rm = vec![0.0f32; nb];
+                rm[..64].iter_mut().for_each(|v| *v = 1.0);
+                let cm = vec![1.0f32; db];
+                let outs = exec
+                    .run(
+                        path,
+                        vec![
+                            HostArray::new(vec![nb as i64, db as i64], x),
+                            HostArray::vector(rm),
+                            HostArray::vector(cm),
+                        ],
+                    )
+                    .unwrap();
+                assert_eq!(outs[0].f32s().unwrap().len(), db);
+            });
+        }
+    });
+}
