@@ -41,13 +41,14 @@ fn main() {
 
     let seq = Engine::build(EngineChoice::Sequential).unwrap();
     let vec_e = Engine::build(EngineChoice::Vectorized).unwrap();
+    let par = Engine::build(EngineChoice::Parallel { workers: 0 }).unwrap();
     let xla = Engine::build(EngineChoice::Xla)
         .map_err(|e| println!("(xla engine unavailable: {e})"))
         .ok();
 
     let mut t = Table::new(
         "wall-clock per engine + speed-up over sequential",
-        &["samples", "dims", "sequential", "vectorized", "xla", "vec ×", "xla ×"],
+        &["samples", "dims", "sequential", "vectorized", "parallel", "xla", "vec ×", "par ×", "xla ×"],
     );
     // model constant for estimating skipped sequential cells
     let mut model_c: Option<f64> = None;
@@ -65,6 +66,16 @@ fn main() {
         };
         let (fit_v, t_vec) =
             common::time(|| DirectLingam::new().fit(&ds.data, vec_e.as_ordering()).unwrap());
+        let (fit_p, t_par) =
+            common::time(|| DirectLingam::new().fit(&ds.data, par.as_ordering()).unwrap());
+        if fit_p.order != fit_v.order {
+            // scores agree only to summation-association precision, so a
+            // near-tie can legitimately flip the argmax — report, don't die
+            println!(
+                "(note: parallel/vectorized orders differ at n={n} d={d}: {:?} vs {:?})",
+                fit_p.order, fit_v.order
+            );
+        }
         let (t_xla, xla_order_ok) = match &xla {
             Some(x) => {
                 // warm-up: XLA compiles each shape bucket once; steady-state
@@ -84,8 +95,10 @@ fn main() {
             d.to_string(),
             if run_seq { secs(t_seq) } else { format!("~{} (est)", secs(t_seq)) },
             secs(t_vec),
+            secs(t_par),
             t_xla.map(secs).unwrap_or_else(|| "—".into()),
             f(t_seq / t_vec, 1),
+            f(t_seq / t_par, 1),
             t_xla.map(|x| f(t_seq / x, 1)).unwrap_or_else(|| "—".into()),
         ]);
     }

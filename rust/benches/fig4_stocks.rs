@@ -11,8 +11,7 @@
 
 mod common;
 
-use alingam::apps::stocks::run_stocks;
-use alingam::coordinator::{Engine, EngineChoice};
+use alingam::apps::stocks::run_stocks_default;
 use alingam::sim::MarketSpec;
 use alingam::util::table::{f, histogram, secs, Table};
 
@@ -26,8 +25,8 @@ fn main() {
     } else {
         MarketSpec { dim: 80, t_len: 2_000, ..MarketSpec::small() }
     };
-    let engine = Engine::build(EngineChoice::Vectorized).unwrap();
-    let r = run_stocks(&spec, 2024, engine.as_ordering(), 5).expect("stocks pipeline");
+    // the apps' default CPU engine: the auto-sized ParallelEngine
+    let r = run_stocks_default(&spec, 2024, 5).expect("stocks pipeline");
 
     let mut t = Table::new("Table 2 analogue: total causal influence", &["rank", "entity", "score", "role"]);
     for (k, (name, lag, score)) in r.top_exerting.iter().enumerate() {

@@ -12,9 +12,8 @@
 
 mod common;
 
-use alingam::apps::genes::{run_table1, GeneScale, GenesConfig};
+use alingam::apps::genes::{run_table1_default, GeneScale, GenesConfig};
 use alingam::baselines::SvgdOpts;
-use alingam::coordinator::{Engine, EngineChoice};
 use alingam::util::table::{f, secs, Table};
 
 fn main() {
@@ -23,7 +22,6 @@ fn main() {
         "DirectLiNGAM+VI competitive with DCD-FG; lower is better",
     );
     let full = common::full_scale();
-    let engine = Engine::build(EngineChoice::Vectorized).unwrap();
     let cfg = GenesConfig {
         scale: if full { GeneScale::Medium } else { GeneScale::Small },
         seed: 2024,
@@ -37,7 +35,8 @@ fn main() {
         with_baseline: true,
     };
 
-    let (rows, dt) = common::time(|| run_table1(&cfg, engine.as_ordering()).expect("table1"));
+    // the apps' default CPU engine: the auto-sized ParallelEngine
+    let (rows, dt) = common::time(|| run_table1_default(&cfg).expect("table1"));
     let mut t = Table::new(
         "Table 1 analogue (synthetic Perturb-seq)",
         &["condition", "method", "I-NLL", "I-MAE", "leaves", "fit"],

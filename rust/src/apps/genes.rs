@@ -10,7 +10,7 @@
 //!      (NOTEARS-LR ≙ DCD-FG) and score it the same way.
 
 use crate::baselines::{evaluate_interventions, evaluate_point, notears_lr, IntervMetrics, NotearsLrOpts, SvgdOpts};
-use crate::lingam::{DirectLingam, OrderingEngine};
+use crate::lingam::{DirectLingam, OrderingEngine, ParallelEngine};
 use crate::sim::{simulate_perturb, Condition, PerturbSpec};
 use crate::util::rng::Pcg64;
 use crate::util::Result;
@@ -164,6 +164,13 @@ pub fn run_table1(cfg: &GenesConfig, engine: &dyn OrderingEngine) -> Result<Vec<
     Ok(rows)
 }
 
+/// Run the full Table 1 with the default CPU engine: the multi-threaded
+/// [`ParallelEngine`] with one worker per core (gene panels are wide, so
+/// the O(d²) pair loop is where the wall-clock goes).
+pub fn run_table1_default(cfg: &GenesConfig) -> Result<Vec<GeneRow>> {
+    run_table1(cfg, &ParallelEngine::default())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -187,6 +194,19 @@ mod tests {
         assert!(rows[0].metrics.nll.is_finite());
         assert!(rows[0].metrics.mae > 0.0);
         assert!(rows[0].fit_secs > 0.0);
+    }
+
+    #[test]
+    fn default_engine_matches_vectorized() {
+        // the default CPU engine (parallel) must reproduce the
+        // vectorized engine's discovery on the same condition
+        let cfg = fast_cfg();
+        let vec_rows = run_condition(&cfg, Condition::Ifn, &VectorizedEngine).unwrap();
+        let par_rows =
+            run_condition(&cfg, Condition::Ifn, &ParallelEngine::new(2).force_parallel())
+                .unwrap();
+        assert_eq!(vec_rows[0].leaves, par_rows[0].leaves);
+        assert!((vec_rows[0].metrics.nll - par_rows[0].metrics.nll).abs() < 1e-6);
     }
 
     #[test]

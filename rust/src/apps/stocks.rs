@@ -8,7 +8,7 @@
 
 use crate::data;
 use crate::lingam::var::{top_influence, total_effects, VarLingam};
-use crate::lingam::OrderingEngine;
+use crate::lingam::{OrderingEngine, ParallelEngine};
 use crate::linalg::Mat;
 use crate::sim::{simulate_market, MarketDataset, MarketSpec};
 use crate::util::rng::Pcg64;
@@ -50,6 +50,14 @@ pub fn run_stocks(
     let mut rng = Pcg64::seed_from_u64(seed);
     let market = simulate_market(spec, &mut rng);
     run_on_market(&market, engine, top_k)
+}
+
+/// Run the full pipeline with the default CPU engine: the multi-threaded
+/// [`ParallelEngine`] (one worker per core). The paper-scale panel is
+/// d ≈ 487 tickers — exactly the O(d²)-pair regime the thread pool is
+/// for.
+pub fn run_stocks_default(spec: &MarketSpec, seed: u64, top_k: usize) -> Result<StocksReport> {
+    run_stocks(spec, seed, &ParallelEngine::default(), top_k)
 }
 
 /// Run on an existing market panel (separated for tests).
@@ -124,10 +132,9 @@ pub fn run_on_market(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::lingam::VectorizedEngine;
-
     fn small_report(seed: u64) -> StocksReport {
-        run_stocks(&MarketSpec::small(), seed, &VectorizedEngine, 5).unwrap()
+        // exercise the default CPU engine (parallel) on the app path
+        run_stocks(&MarketSpec::small(), seed, &ParallelEngine::new(2), 5).unwrap()
     }
 
     #[test]

@@ -16,7 +16,7 @@ pub use bootstrap::{bootstrap_direct, BootstrapOpts, BootstrapResult};
 pub use profile::{profile_direct, profile_var, ProfileRow};
 pub use sweep::{parallel_map, SweepStats};
 
-use crate::lingam::{OrderingEngine, SequentialEngine, VectorizedEngine};
+use crate::lingam::{OrderingEngine, ParallelEngine, SequentialEngine, VectorizedEngine};
 use crate::runtime::XlaEngine;
 use crate::util::{Error, Result};
 use std::sync::Arc;
@@ -28,18 +28,31 @@ pub enum EngineChoice {
     Sequential,
     /// Restructured pure-Rust path (GPU-shaped computation on CPU).
     Vectorized,
+    /// Multi-threaded restructured path (`workers == 0` ⇒ one per core).
+    Parallel { workers: usize },
     /// AOT Pallas/JAX artifacts over PJRT (the accelerated path).
     Xla,
 }
 
 impl EngineChoice {
+    /// Parse an engine spec. `parallel`/`par` take an optional worker
+    /// count suffix: `parallel:4` (0 or absent ⇒ one worker per core).
     pub fn parse(s: &str) -> Result<EngineChoice> {
+        if let Some(rest) = s.strip_prefix("parallel:").or_else(|| s.strip_prefix("par:")) {
+            let workers: usize = rest.parse().map_err(|_| {
+                Error::InvalidArgument(format!(
+                    "bad worker count {rest:?} in engine spec {s:?} (want parallel:N)"
+                ))
+            })?;
+            return Ok(EngineChoice::Parallel { workers });
+        }
         match s {
             "sequential" | "seq" => Ok(EngineChoice::Sequential),
             "vectorized" | "vec" => Ok(EngineChoice::Vectorized),
+            "parallel" | "par" => Ok(EngineChoice::Parallel { workers: 0 }),
             "xla" => Ok(EngineChoice::Xla),
             other => Err(Error::InvalidArgument(format!(
-                "unknown engine {other:?} (sequential|vectorized|xla)"
+                "unknown engine {other:?} (sequential|vectorized|parallel[:N]|xla)"
             ))),
         }
     }
@@ -48,6 +61,7 @@ impl EngineChoice {
         match self {
             EngineChoice::Sequential => "sequential",
             EngineChoice::Vectorized => "vectorized",
+            EngineChoice::Parallel { .. } => "parallel",
             EngineChoice::Xla => "xla",
         }
     }
@@ -59,6 +73,7 @@ impl EngineChoice {
 pub enum Engine {
     Sequential(SequentialEngine),
     Vectorized(VectorizedEngine),
+    Parallel(ParallelEngine),
     Xla(Arc<XlaEngine>),
 }
 
@@ -69,6 +84,7 @@ impl Engine {
         Ok(match choice {
             EngineChoice::Sequential => Engine::Sequential(SequentialEngine),
             EngineChoice::Vectorized => Engine::Vectorized(VectorizedEngine),
+            EngineChoice::Parallel { workers } => Engine::Parallel(ParallelEngine::new(workers)),
             EngineChoice::Xla => Engine::Xla(Arc::new(XlaEngine::from_default_artifacts()?)),
         })
     }
@@ -78,6 +94,7 @@ impl Engine {
         match self {
             Engine::Sequential(e) => e,
             Engine::Vectorized(e) => e,
+            Engine::Parallel(e) => e,
             Engine::Xla(e) => e.as_ref(),
         }
     }
@@ -96,8 +113,28 @@ mod tests {
     }
 
     #[test]
+    fn parallel_choice_parsing() {
+        assert_eq!(
+            EngineChoice::parse("parallel").unwrap(),
+            EngineChoice::Parallel { workers: 0 }
+        );
+        assert_eq!(EngineChoice::parse("par").unwrap(), EngineChoice::Parallel { workers: 0 });
+        assert_eq!(
+            EngineChoice::parse("parallel:4").unwrap(),
+            EngineChoice::Parallel { workers: 4 }
+        );
+        assert_eq!(EngineChoice::parse("par:2").unwrap(), EngineChoice::Parallel { workers: 2 });
+        assert!(EngineChoice::parse("parallel:x").is_err());
+        assert!(EngineChoice::parse("par:").is_err());
+    }
+
+    #[test]
     fn cpu_engines_build() {
-        for c in [EngineChoice::Sequential, EngineChoice::Vectorized] {
+        for c in [
+            EngineChoice::Sequential,
+            EngineChoice::Vectorized,
+            EngineChoice::Parallel { workers: 2 },
+        ] {
             let e = Engine::build(c).unwrap();
             assert_eq!(e.as_ordering().name(), c.name());
         }

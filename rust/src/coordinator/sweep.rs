@@ -5,35 +5,18 @@
 //! scoped threads — tokio is not in the offline crate set and the jobs
 //! are pure compute anyway) and preserves seed order in the output.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::pool::parallel_indexed;
 
 /// Run `f(seed)` for every seed, `workers` at a time; results come back
 /// in input order. `f` must be `Sync` (it is shared across workers).
+/// Thin seed-indexed wrapper over [`parallel_indexed`], the crate's one
+/// worker-pool implementation.
 pub fn parallel_map<T, F>(seeds: &[u64], workers: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(u64) -> T + Sync,
 {
-    assert!(workers >= 1);
-    let n = seeds.len();
-    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    let next = AtomicUsize::new(0);
-    let out_cells: Vec<std::sync::Mutex<&mut Option<T>>> =
-        out.iter_mut().map(std::sync::Mutex::new).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..workers.min(n) {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let value = f(seeds[i]);
-                **out_cells[i].lock().expect("cell mutex") = Some(value);
-            });
-        }
-    });
-    drop(out_cells);
-    out.into_iter().map(|v| v.expect("worker completed")).collect()
+    parallel_indexed(seeds.len(), workers, |i| f(seeds[i]))
 }
 
 /// Aggregate statistics of a metric across sweep runs.

@@ -15,6 +15,13 @@
 //! Python never runs on the request path: after `make artifacts` the
 //! `alingam` binary is self-contained.
 //!
+//! On machines without an accelerator the default CPU path is the
+//! multi-threaded [`lingam::ParallelEngine`], which tiles the same
+//! restructured pair kernel as the vectorized engine across a
+//! work-stealing worker pool (ParaLiNGAM-style). Degenerate panels —
+//! constant or collinear columns — surface as
+//! [`util::Error::InvalidArgument`] rather than NaN panics.
+//!
 //! ## Quick example
 //!
 //! ```no_run
@@ -23,7 +30,9 @@
 //! let mut rng = Pcg64::seed_from_u64(7);
 //! let spec = sim::SemSpec::layered(10, 2, 0.5);
 //! let ds = sim::simulate_sem(&spec, 10_000, &mut rng);
-//! let engine = lingam::VectorizedEngine::default();
+//! // the default CPU engine: one worker per core; ParallelEngine::new(1)
+//! // or VectorizedEngine give the single-threaded restructured path
+//! let engine = lingam::ParallelEngine::default();
 //! let fit = lingam::DirectLingam::new().fit(&ds.data, &engine).unwrap();
 //! let m = metrics::graph_metrics(&ds.adjacency, &fit.adjacency, 0.05);
 //! println!("order = {:?}  F1 = {:.3}", fit.order, m.f1);
@@ -46,7 +55,7 @@ pub mod apps;
 pub mod prelude {
     pub use crate::graph::Dag;
     pub use crate::linalg::Mat;
-    pub use crate::lingam::{self, DirectLingam, OrderingEngine, SequentialEngine, VectorizedEngine, VarLingam};
+    pub use crate::lingam::{self, DirectLingam, OrderingEngine, ParallelEngine, SequentialEngine, VectorizedEngine, VarLingam};
     pub use crate::metrics;
     pub use crate::sim;
     pub use crate::util::rng::Pcg64;

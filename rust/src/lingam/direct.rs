@@ -57,6 +57,21 @@ impl DirectLingam {
         if !data.is_finite() {
             return Err(Error::InvalidArgument("data contains NaN/inf".into()));
         }
+        // a (near-)constant column has no causal direction to estimate
+        // (its correlation with everything is 0/0); reject it up front
+        // instead of letting degenerate scores reach the engines. The
+        // threshold is relative to the column's scale: an exact-zero test
+        // would miss constants like 0.1 whose float sums leave ~1e-17 of
+        // rounding variance, and std below the standardize() floor means
+        // the column is constant to working precision anyway
+        for c in 0..d {
+            let col = data.col(c);
+            if crate::stats::std(&col) <= 1e-12 * (1.0 + crate::stats::mean(&col).abs()) {
+                return Err(Error::InvalidArgument(format!(
+                    "column {c} is constant (zero variance): causal order undefined"
+                )));
+            }
+        }
 
         let mut profile = StageProfile::new();
         let mut x = data.clone();
@@ -89,7 +104,7 @@ impl DirectLingam {
 mod tests {
     use super::*;
     use crate::graph;
-    use crate::lingam::{SequentialEngine, VectorizedEngine};
+    use crate::lingam::{ParallelEngine, SequentialEngine, VectorizedEngine};
     use crate::metrics::graph_metrics;
     use crate::sim::{simulate_sem, SemSpec};
     use crate::util::rng::Pcg64;
@@ -129,8 +144,36 @@ mod tests {
         let ds = simulate_sem(&SemSpec::layered(8, 2, 0.5), 3_000, &mut rng);
         let seq = DirectLingam::new().fit(&ds.data, &SequentialEngine).unwrap();
         let vec = DirectLingam::new().fit(&ds.data, &VectorizedEngine).unwrap();
+        let par = DirectLingam::new()
+            .fit(&ds.data, &ParallelEngine::new(4).force_parallel())
+            .unwrap();
         assert_eq!(seq.order, vec.order);
+        assert_eq!(vec.order, par.order, "parallel engine diverged from vectorized");
         assert!(crate::metrics::adjacency_max_diff(&seq.adjacency, &vec.adjacency) < 1e-8);
+        assert!(crate::metrics::adjacency_max_diff(&vec.adjacency, &par.adjacency) < 1e-8);
+    }
+
+    #[test]
+    fn constant_column_rejected_not_panicking() {
+        let mut rng = Pcg64::seed_from_u64(6);
+        let ds = simulate_sem(&SemSpec::layered(5, 2, 0.5), 500, &mut rng);
+        let mut x = ds.data.clone();
+        // non-dyadic constant: repeated float sums leave ~1e-17 of
+        // rounding variance, which an exact-zero variance test missed
+        let constant = vec![0.1; x.rows()];
+        x.set_col(2, &constant);
+        for eng in [
+            &SequentialEngine as &dyn crate::lingam::OrderingEngine,
+            &VectorizedEngine,
+            &ParallelEngine::new(2),
+        ] {
+            let res = DirectLingam::new().fit(&x, eng);
+            assert!(
+                matches!(res, Err(Error::InvalidArgument(_))),
+                "{}: constant column must be InvalidArgument",
+                eng.name()
+            );
+        }
     }
 
     #[test]

@@ -5,21 +5,29 @@
 //! `k_list` where `k_list[i] = −Σ_{j≠i} min(0, diff_mi(i,j))²`; the next
 //! exogenous variable is the argmax.
 //!
-//! Three implementations:
+//! Four implementations:
 //! - [`SequentialEngine`] — faithful port of the numpy reference: per-pair
 //!   re-standardization, scalar loops. This is the paper's CPU baseline
 //!   whose profile (Figure 2, ~96% in ordering) and runtime the speedup is
 //!   measured against.
 //! - [`VectorizedEngine`] — the restructured computation the GPU kernel
 //!   performs (standardize once per iteration, correlation precompute,
-//!   per-`i` residual panel reduction), in pure Rust.
+//!   per-`i` residual panel reduction), in pure Rust, single-threaded.
+//! - [`super::parallel::ParallelEngine`] — the same restructured pair
+//!   kernel tiled across a bounded CPU worker pool (ParaLiNGAM-style).
 //! - `runtime::XlaEngine` — the same restructuring AOT-compiled from
 //!   JAX/Pallas and executed via PJRT (the repo's "GPU" path).
+//!
+//! The restructured math itself — standardize-once column cache, ρ
+//! precompute, fused log-cosh/gauss-score pair reduction — lives in the
+//! free functions [`standardized_active_columns`], [`column_entropies`]
+//! and [`pair_diff`], which the vectorized and parallel engines share so
+//! their scores agree to float precision.
 
 use super::entropy::{diff_mi, entropy_from_moments, gauss_score, log_cosh, order_penalty};
 use crate::linalg::Mat;
 use crate::stats;
-use crate::util::Result;
+use crate::util::{Error, Result};
 
 /// Score assigned to inactive variables so argmax never selects them.
 pub const INACTIVE_SCORE: f64 = f64::NEG_INFINITY;
@@ -50,7 +58,7 @@ pub trait OrderingEngine: Send + Sync {
     /// Engines with a fused path (the XLA artifact) override this.
     fn order_step(&self, x: &mut Mat, active: &mut [bool]) -> Result<OrderStep> {
         let scores = self.scores(x, active)?;
-        let chosen = argmax_active(&scores, active);
+        let chosen = argmax_active(&scores, active)?;
         residualize_in_place(x, active, chosen);
         active[chosen] = false;
         Ok(OrderStep { chosen, scores })
@@ -58,18 +66,26 @@ pub trait OrderingEngine: Send + Sync {
 }
 
 /// Argmax of scores over active entries (ties → lowest index, matching
-/// `np.argmax`).
-pub fn argmax_active(scores: &[f64], active: &[bool]) -> usize {
-    let mut best = usize::MAX;
+/// `np.argmax`). NaN scores are skipped rather than compared; if every
+/// active score is NaN or −∞ (a degenerate panel — constant or collinear
+/// columns) no variable is selectable and an `InvalidArgument` error is
+/// returned instead of panicking.
+pub fn argmax_active(scores: &[f64], active: &[bool]) -> Result<usize> {
+    let mut best: Option<usize> = None;
     let mut best_v = f64::NEG_INFINITY;
     for (i, (&s, &a)) in scores.iter().zip(active).enumerate() {
-        if a && s > best_v {
+        if a && !s.is_nan() && s > best_v {
             best_v = s;
-            best = i;
+            best = Some(i);
         }
     }
-    assert!(best != usize::MAX, "no active variable");
-    best
+    best.ok_or_else(|| {
+        Error::InvalidArgument(
+            "no active variable has a usable ordering score (all NaN or −∞): \
+             degenerate panel"
+                .into(),
+        )
+    })
 }
 
 /// Least-squares removal of variable `m`'s effect from every other active
@@ -173,63 +189,99 @@ impl OrderingEngine for VectorizedEngine {
     }
 
     fn scores(&self, x: &Mat, active: &[bool]) -> Result<Vec<f64>> {
-        let d = x.cols();
-        let n = x.rows();
-        let idx: Vec<usize> = (0..d).filter(|&i| active[i]).collect();
-        let m = idx.len();
-        // 1) standardize active columns once (column-major cache)
-        let mut cols: Vec<Vec<f64>> = Vec::with_capacity(m);
-        for &c in &idx {
-            let mut v = x.col(c);
-            stats::standardize(&mut v);
-            cols.push(v);
-        }
-        // 2) correlation matrix (upper triangle) — the MXU matmul on TPU
-        let mut rho = vec![0.0; m * m];
-        for a in 0..m {
-            for b in (a + 1)..m {
-                let r = dot(&cols[a], &cols[b]) / n as f64;
-                rho[a * m + b] = r;
-                rho[b * m + a] = r;
-            }
-        }
-        // 3) per-column entropies (hoisted out of the pair loop)
-        let h: Vec<f64> = cols.iter().map(|c| entropy_fused(c)).collect();
-        // 4) per-pair residual entropies; each unordered pair computed
-        //    once and contributed to both i=a and i=b (the GPU kernel
-        //    computes ordered pairs redundantly; same numbers either way)
-        let mut k = vec![0.0; m];
-        for a in 0..m {
-            for b in (a + 1)..m {
-                let r = rho[a * m + b];
-                let denom = (1.0 - r * r).sqrt().max(1e-150);
-                // standardized residuals of both directions in one pass
-                let (mut lc_ab, mut gs_ab, mut lc_ba, mut gs_ba) = (0.0, 0.0, 0.0, 0.0);
-                let (ca, cb) = (&cols[a], &cols[b]);
-                for t in 0..n {
-                    let u = (ca[t] - r * cb[t]) / denom; // resid a|b, standardized
-                    let v = (cb[t] - r * ca[t]) / denom; // resid b|a
-                    lc_ab += log_cosh(u);
-                    gs_ab += gauss_score(u);
-                    lc_ba += log_cosh(v);
-                    gs_ba += gauss_score(v);
-                }
-                let inv_n = 1.0 / n as f64;
-                let h_rab = entropy_from_moments(lc_ab * inv_n, gs_ab * inv_n);
-                let h_rba = entropy_from_moments(lc_ba * inv_n, gs_ba * inv_n);
-                // candidate i=a against j=b
-                let diff_a = diff_mi(h[a], h[b], h_rab, h_rba);
-                k[a] += order_penalty(diff_a);
-                // candidate i=b against j=a (antisymmetric)
-                k[b] += order_penalty(-diff_a);
-            }
-        }
-        let mut k_list = vec![INACTIVE_SCORE; d];
-        for (pos, &i) in idx.iter().enumerate() {
-            k_list[i] = -k[pos];
-        }
-        Ok(k_list)
+        let (idx, cols) = standardized_active_columns(x, active);
+        let h = column_entropies(&cols);
+        let k = accumulate_pairs(&cols, &h);
+        Ok(scatter_scores(x.cols(), &idx, &k))
     }
+}
+
+// ---------------------------------------------------------------------
+// Shared restructured-computation kernel (vectorized + parallel engines).
+// ---------------------------------------------------------------------
+
+/// Standardize every active column **once** (column-major cache); returns
+/// the active indices alongside the cache. This is step 1 of the
+/// restructured computation both CPU engines and the Pallas kernel hoist
+/// out of the pair loop.
+pub fn standardized_active_columns(x: &Mat, active: &[bool]) -> (Vec<usize>, Vec<Vec<f64>>) {
+    let idx: Vec<usize> = (0..x.cols()).filter(|&i| active[i]).collect();
+    let mut cols: Vec<Vec<f64>> = Vec::with_capacity(idx.len());
+    for &c in &idx {
+        let mut v = x.col(c);
+        stats::standardize(&mut v);
+        cols.push(v);
+    }
+    (idx, cols)
+}
+
+/// Per-column entropies of the standardized cache (hoisted out of the
+/// pair loop; the reference recomputes them per pair).
+pub fn column_entropies(cols: &[Vec<f64>]) -> Vec<f64> {
+    cols.iter().map(|c| entropy_fused(c)).collect()
+}
+
+/// The fused pair kernel: correlation ρ of two standardized columns, both
+/// standardized regression residuals, their entropies via a single fused
+/// log-cosh / gauss-score pass, and the MI difference for candidate a
+/// against b (negate for the b-against-a direction).
+///
+/// ρ² is clamped to ≤ 1 before the sqrt: collinear or duplicated columns
+/// push the float ρ² past 1, and the old `sqrt(1−ρ²).max(1e-150)` then
+/// floored the resulting NaN to 1e-150 (`f64::max` ignores NaN) — which
+/// blew the standardized residuals up to ~1e150, overflowed the entropy
+/// penalty to +∞ and drove every affected score to −∞, tripping the old
+/// argmax panic. The clamp plus the saner 1e-12 floor keeps degenerate
+/// pairs finite: a huge-but-finite penalty deprioritizes them instead of
+/// wiping out the k_list.
+pub fn pair_diff(ca: &[f64], cb: &[f64], h_a: f64, h_b: f64) -> f64 {
+    let n = ca.len();
+    let r = dot(ca, cb) / n as f64;
+    let denom = (1.0 - (r * r).min(1.0)).sqrt().max(1e-12);
+    let (mut lc_ab, mut gs_ab, mut lc_ba, mut gs_ba) = (0.0, 0.0, 0.0, 0.0);
+    for t in 0..n {
+        let u = (ca[t] - r * cb[t]) / denom; // resid a|b, standardized
+        let v = (cb[t] - r * ca[t]) / denom; // resid b|a
+        lc_ab += log_cosh(u);
+        gs_ab += gauss_score(u);
+        lc_ba += log_cosh(v);
+        gs_ba += gauss_score(v);
+    }
+    let inv_n = 1.0 / n as f64;
+    let h_rab = entropy_from_moments(lc_ab * inv_n, gs_ab * inv_n);
+    let h_rba = entropy_from_moments(lc_ba * inv_n, gs_ba * inv_n);
+    diff_mi(h_a, h_b, h_rab, h_rba)
+}
+
+/// Serial upper-triangle pair accumulation over the standardized cache:
+/// each unordered pair is computed once and contributes to both i=a and
+/// i=b (the GPU kernel computes ordered pairs redundantly; same numbers
+/// either way). This is the loop `VectorizedEngine` runs — and
+/// `ParallelEngine`'s small-problem fallback, where spawning threads
+/// would cost more than the pair work itself.
+pub fn accumulate_pairs(cols: &[Vec<f64>], h: &[f64]) -> Vec<f64> {
+    let m = cols.len();
+    let mut k = vec![0.0; m];
+    for a in 0..m {
+        for b in (a + 1)..m {
+            // candidate i=a against j=b; i=b against j=a is the
+            // antisymmetric direction of the same pair
+            let diff_a = pair_diff(&cols[a], &cols[b], h[a], h[b]);
+            k[a] += order_penalty(diff_a);
+            k[b] += order_penalty(-diff_a);
+        }
+    }
+    k
+}
+
+/// Scatter packed per-active accumulators into a full-width k_list
+/// (`k_list[i] = −k[pos]`, inactive entries = [`INACTIVE_SCORE`]).
+pub fn scatter_scores(d: usize, idx: &[usize], k: &[f64]) -> Vec<f64> {
+    let mut k_list = vec![INACTIVE_SCORE; d];
+    for (pos, &i) in idx.iter().enumerate() {
+        k_list[i] = -k[pos];
+    }
+    k_list
 }
 
 /// Fused entropy over an already-standardized column.
@@ -311,7 +363,7 @@ mod tests {
         let active = vec![true; 3];
         for eng in [&SequentialEngine as &dyn OrderingEngine, &VectorizedEngine] {
             let s = eng.scores(&x, &active).unwrap();
-            let best = argmax_active(&s, &active);
+            let best = argmax_active(&s, &active).unwrap();
             assert_eq!(best, 0, "{}: scores={s:?}", eng.name());
         }
     }
@@ -337,8 +389,37 @@ mod tests {
     fn argmax_matches_numpy_tie_breaking() {
         let scores = vec![1.0, 5.0, 5.0, 2.0];
         let active = vec![true; 4];
-        assert_eq!(argmax_active(&scores, &active), 1); // first max
+        assert_eq!(argmax_active(&scores, &active).unwrap(), 1); // first max
         let active2 = vec![false, false, true, true];
-        assert_eq!(argmax_active(&scores, &active2), 2);
+        assert_eq!(argmax_active(&scores, &active2).unwrap(), 2);
+    }
+
+    #[test]
+    fn argmax_skips_nan_scores() {
+        let scores = vec![f64::NAN, 1.0, f64::NAN, 0.5];
+        let active = vec![true; 4];
+        assert_eq!(argmax_active(&scores, &active).unwrap(), 1);
+    }
+
+    #[test]
+    fn argmax_errors_on_degenerate_scores() {
+        // every active score NaN or −∞ → Err, not panic
+        let scores = vec![f64::NAN, f64::NEG_INFINITY, f64::NAN];
+        let active = vec![true; 3];
+        assert!(argmax_active(&scores, &active).is_err());
+        // no active variable at all → Err
+        assert!(argmax_active(&[1.0, 2.0], &[false, false]).is_err());
+    }
+
+    #[test]
+    fn pair_diff_finite_on_duplicated_columns() {
+        // an exactly-duplicated standardized column drives ρ² to (or past)
+        // 1; the clamped kernel must stay finite instead of going NaN
+        let mut rng = Pcg64::seed_from_u64(11);
+        let mut c: Vec<f64> = (0..500).map(|_| rng.normal()).collect();
+        stats::standardize(&mut c);
+        let h = entropy_fused(&c);
+        let d = pair_diff(&c, &c, h, h);
+        assert!(!d.is_nan(), "duplicated pair produced NaN diff");
     }
 }

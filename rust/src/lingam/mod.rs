@@ -5,8 +5,12 @@
 //!   `_diff_mutual_info`).
 //! - [`engine`] — the `OrderingEngine` abstraction over the causal-order
 //!   scoring hot spot, with the sequential (paper's CPU baseline) and
-//!   vectorized (restructured, GPU-shaped) implementations. The
-//!   XLA-backed engine lives in [`crate::runtime`].
+//!   vectorized (restructured, GPU-shaped) implementations plus the
+//!   shared pair kernel they are built from. The XLA-backed engine lives
+//!   in [`crate::runtime`].
+//! - [`parallel`] — the multi-threaded CPU engine: the restructured pair
+//!   kernel tiled across a work-stealing worker pool (ParaLiNGAM-style);
+//!   the default CPU engine for the apps.
 //! - [`direct`] — DirectLiNGAM (Shimizu et al. 2011): iterative exogenous
 //!   search + residualization, then adjacency estimation over the order.
 //! - [`prune`] — adjacency estimation: OLS over predecessors + adaptive
@@ -21,10 +25,12 @@ pub mod engine;
 pub mod direct;
 pub mod fastica;
 pub mod ica;
+pub mod parallel;
 pub mod prune;
 pub mod var;
 
 pub use direct::{DirectLingam, LingamFit};
 pub use engine::{OrderingEngine, SequentialEngine, VectorizedEngine};
+pub use parallel::ParallelEngine;
 pub use ica::{IcaLingam, IcaLingamFit};
 pub use var::{VarLingam, VarLingamFit};

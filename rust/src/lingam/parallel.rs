@@ -1,0 +1,298 @@
+//! `ParallelEngine` — the restructured ordering computation tiled across
+//! a bounded CPU worker pool.
+//!
+//! ParaLiNGAM (Shahbazinia et al. 2023) observes that DirectLiNGAM's
+//! O(d²)-pair scoring loop scales near-linearly across CPU threads; this
+//! engine applies the same idea to the repo's restructured pair kernel.
+//! The upper triangle of the pair matrix is tiled by *row* over
+//! [`crate::util::pool::parallel_indexed`] — the same
+//! work-stealing-by-atomic-counter pool behind
+//! [`crate::coordinator::sweep::parallel_map`] — with each task computing
+//! every pair `(a, b)` with `b > a`, reusing the cached standardized
+//! column `a` across the whole row. Row contributions come back in row
+//! order and are merged on the calling thread, so the result is
+//! **deterministic** regardless of which worker processed which row, and
+//! agrees with [`VectorizedEngine`](super::VectorizedEngine) to well
+//! under 1e-9 (the two differ only in summation association). Small
+//! panels (below a pair-work cutoff, ~1 ms of compute) fall back to the
+//! identical serial kernel, so the default engine never pays thread
+//! spawn/join overhead on problems that finish faster than a spawn.
+//!
+//! `order_step` additionally residualizes the remaining active columns in
+//! parallel: each column's least-squares update is independent, so the
+//! columns are split across the same pool and written back serially (the
+//! row-major panel interleaves columns, so in-place parallel writes would
+//! need aliasing unsafety for no measurable gain).
+
+use super::engine::{
+    accumulate_pairs, argmax_active, column_entropies, pair_diff, residualize_in_place,
+    scatter_scores, standardized_active_columns, OrderStep, OrderingEngine,
+};
+use super::entropy::order_penalty;
+use crate::linalg::Mat;
+use crate::stats;
+use crate::util::pool::parallel_indexed;
+use crate::util::Result;
+
+/// Worker count to use when the caller passes 0: one per available core.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Below this many fused pair-element operations (pairs × n) the scoped
+/// thread spawn/join overhead outweighs the pair work; fall back to the
+/// serial kernel. ~1 ms of work at a few ns per element.
+const MIN_PARALLEL_PAIR_WORK: usize = 1 << 18;
+
+/// Column-elements threshold below which residualization stays serial.
+const MIN_PARALLEL_RESID_WORK: usize = 1 << 16;
+
+/// Multi-threaded CPU ordering engine (see module docs).
+#[derive(Clone, Debug)]
+pub struct ParallelEngine {
+    workers: usize,
+    /// Skip the small-problem serial fallback (tests/benches that need
+    /// the threaded path exercised regardless of problem size).
+    force_parallel: bool,
+}
+
+impl ParallelEngine {
+    /// `workers == 0` means auto (one worker per available core).
+    pub fn new(workers: usize) -> ParallelEngine {
+        let workers = if workers == 0 { default_workers() } else { workers };
+        ParallelEngine { workers, force_parallel: false }
+    }
+
+    /// The resolved worker count.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Disable the small-problem serial fallback, so even tiny panels go
+    /// through the thread pool (for tests and scaling benches; the
+    /// fallback is the right default for real workloads).
+    pub fn force_parallel(mut self) -> ParallelEngine {
+        self.force_parallel = true;
+        self
+    }
+}
+
+impl Default for ParallelEngine {
+    /// Auto-sized pool — the default CPU engine for the apps.
+    fn default() -> ParallelEngine {
+        ParallelEngine::new(0)
+    }
+}
+
+impl OrderingEngine for ParallelEngine {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn scores(&self, x: &Mat, active: &[bool]) -> Result<Vec<f64>> {
+        let (idx, cols) = standardized_active_columns(x, active);
+        let m = idx.len();
+        let h = column_entropies(&cols);
+        let pair_work = m * m.saturating_sub(1) / 2 * x.rows();
+        let k = if m < 2
+            || self.workers == 1
+            || (!self.force_parallel && pair_work < MIN_PARALLEL_PAIR_WORK)
+        {
+            accumulate_pairs(&cols, &h)
+        } else {
+            pair_sweep(&cols, &h, self.workers)
+        };
+        Ok(scatter_scores(x.cols(), &idx, &k))
+    }
+
+    fn order_step(&self, x: &mut Mat, active: &mut [bool]) -> Result<OrderStep> {
+        let scores = self.scores(x, active)?;
+        let chosen = argmax_active(&scores, active)?;
+        let resid_work = active.iter().filter(|&&a| a).count().saturating_sub(1) * x.rows();
+        if self.workers == 1 || (!self.force_parallel && resid_work < MIN_PARALLEL_RESID_WORK) {
+            residualize_in_place(x, active, chosen);
+        } else {
+            residualize_in_place_parallel(x, active, chosen, self.workers);
+        }
+        active[chosen] = false;
+        Ok(OrderStep { chosen, scores })
+    }
+}
+
+/// One row of the pair triangle: the candidate's own accumulated penalty
+/// plus its antisymmetric contributions to every later candidate.
+struct RowContrib {
+    /// Σ_{b>a} penalty(diff(a, b)) — row a's own k-accumulator.
+    own: f64,
+    /// penalty(−diff(a, b)) for b = a+1..m (contribution to k[b]).
+    cross: Vec<f64>,
+}
+
+/// Tile the upper-triangle pair loop across the worker pool. Each pool
+/// task is one whole *row* (candidate `a` against every `b > a`, reusing
+/// the cached standardized column `a`); [`parallel_indexed`] returns the
+/// rows in index order, so the merge below — and therefore the final sum
+/// — is deterministic regardless of which worker processed which row.
+fn pair_sweep(cols: &[Vec<f64>], h: &[f64], workers: usize) -> Vec<f64> {
+    let m = cols.len();
+    // the last row has no b > a pairs, so m−1 workers suffice (the
+    // caller guarantees m ≥ 2)
+    let rows = parallel_indexed(m, workers.clamp(1, m - 1), |a| {
+        let ca = &cols[a];
+        let mut own = 0.0;
+        let mut cross = vec![0.0; m - a - 1];
+        for b in (a + 1)..m {
+            let diff_a = pair_diff(ca, &cols[b], h[a], h[b]);
+            own += order_penalty(diff_a);
+            cross[b - a - 1] = order_penalty(-diff_a);
+        }
+        RowContrib { own, cross }
+    });
+    let mut k = vec![0.0; m];
+    for (a, row) in rows.into_iter().enumerate() {
+        k[a] += row.own;
+        for (off, v) in row.cross.into_iter().enumerate() {
+            k[a + 1 + off] += v;
+        }
+    }
+    k
+}
+
+/// Parallel counterpart of
+/// [`residualize_in_place`](super::engine::residualize_in_place): the
+/// per-column updates are independent, so columns are split across the
+/// pool (same atomic-counter stealing) and the results written back on
+/// the calling thread. Bitwise-identical to the serial version.
+pub fn residualize_in_place_parallel(x: &mut Mat, active: &[bool], m: usize, workers: usize) {
+    let xm = x.col(m);
+    let var_m = stats::var(&xm).max(1e-300);
+    let mean_m = stats::mean(&xm);
+    let n = x.rows();
+    let targets: Vec<usize> = (0..x.cols()).filter(|&j| j != m && active[j]).collect();
+    if targets.is_empty() {
+        return;
+    }
+    let panel: &Mat = x;
+    let new_cols = parallel_indexed(targets.len(), workers, |t| {
+        let xj = panel.col(targets[t]);
+        let beta = stats::cov(&xj, &xm) / var_m;
+        let mean_j = stats::mean(&xj);
+        (0..n).map(|r| (xj[r] - mean_j) - beta * (xm[r] - mean_m)).collect::<Vec<f64>>()
+    });
+    for (t, col) in new_cols.into_iter().enumerate() {
+        x.set_col(targets[t], &col);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lingam::engine::{residualize_in_place, VectorizedEngine, INACTIVE_SCORE};
+    use crate::sim::{simulate_sem, SemSpec};
+    use crate::util::rng::Pcg64;
+
+    fn toy_panel(n: usize, d: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        simulate_sem(&SemSpec::layered(d, 2, 0.6), n, &mut rng).data
+    }
+
+    #[test]
+    fn matches_vectorized_scores() {
+        let x = toy_panel(1_500, 8, 1);
+        let active = vec![true; 8];
+        let kv = VectorizedEngine.scores(&x, &active).unwrap();
+        for workers in [1, 2, 3, 8] {
+            // force_parallel: the toy panel is below the serial-fallback
+            // cutoff, and the threaded path is what's under test
+            let kp =
+                ParallelEngine::new(workers).force_parallel().scores(&x, &active).unwrap();
+            for i in 0..8 {
+                assert!(
+                    (kv[i] - kp[i]).abs() < 1e-9 * (1.0 + kv[i].abs()),
+                    "workers={workers} i={i}: vec={} par={}",
+                    kv[i],
+                    kp[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn small_problem_fallback_is_exact() {
+        // below the cutoff the engine runs the identical serial kernel,
+        // so scores must match the vectorized engine bitwise
+        let x = toy_panel(300, 6, 9);
+        let active = vec![true; 6];
+        let kv = VectorizedEngine.scores(&x, &active).unwrap();
+        let kp = ParallelEngine::new(4).scores(&x, &active).unwrap();
+        assert_eq!(kv, kp);
+    }
+
+    #[test]
+    fn respects_active_mask() {
+        let x = toy_panel(400, 6, 2);
+        let mut active = vec![true; 6];
+        active[1] = false;
+        active[5] = false;
+        let k = ParallelEngine::new(3).scores(&x, &active).unwrap();
+        assert_eq!(k[1], INACTIVE_SCORE);
+        assert_eq!(k[5], INACTIVE_SCORE);
+        assert!(k[0].is_finite());
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        // row-ordered merging makes the sum independent of scheduling
+        let x = toy_panel(800, 7, 3);
+        let active = vec![true; 7];
+        let engine = ParallelEngine::new(4).force_parallel();
+        let k1 = engine.scores(&x, &active).unwrap();
+        for _ in 0..5 {
+            let k2 = engine.scores(&x, &active).unwrap();
+            assert_eq!(k1, k2, "parallel scores varied across runs");
+        }
+    }
+
+    #[test]
+    fn parallel_residualize_matches_serial() {
+        let mut a = toy_panel(600, 6, 4);
+        let mut b = a.clone();
+        let active = vec![true; 6];
+        residualize_in_place(&mut a, &active, 2);
+        residualize_in_place_parallel(&mut b, &active, 2, 3);
+        assert_eq!(a, b, "parallel residualize diverged from serial");
+    }
+
+    #[test]
+    fn order_step_deactivates_chosen() {
+        let mut x = toy_panel(500, 5, 5);
+        let mut active = vec![true; 5];
+        let step = ParallelEngine::new(2)
+            .force_parallel()
+            .order_step(&mut x, &mut active)
+            .unwrap();
+        assert!(!active[step.chosen]);
+        assert_eq!(active.iter().filter(|&&a| a).count(), 4);
+    }
+
+    #[test]
+    fn tiny_active_sets() {
+        let x = toy_panel(100, 4, 6);
+        // one active variable: nothing to compare, score must be -0.0
+        let mut active = vec![false; 4];
+        active[2] = true;
+        let k = ParallelEngine::new(4).scores(&x, &active).unwrap();
+        assert_eq!(k[2], 0.0);
+        assert_eq!(k[0], INACTIVE_SCORE);
+        // zero active variables: all inactive
+        let k0 = ParallelEngine::new(4).scores(&x, &[false; 4]).unwrap();
+        assert!(k0.iter().all(|&v| v == INACTIVE_SCORE));
+    }
+
+    #[test]
+    fn worker_auto_sizing() {
+        assert!(ParallelEngine::new(0).workers() >= 1);
+        assert_eq!(ParallelEngine::new(3).workers(), 3);
+        assert!(ParallelEngine::default().workers() >= 1);
+    }
+}

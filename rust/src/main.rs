@@ -17,12 +17,12 @@ use alingam::metrics::graph_metrics;
 use alingam::prelude::*;
 use alingam::runtime::{ArtifactKind, ArtifactRegistry};
 use alingam::sim::{MarketSpec, VarSpec};
-use alingam::util::cli::{opt, Args, OptSpec};
+use alingam::util::cli::{engine_opt, opt, Args, OptSpec};
 use alingam::util::table::{f, secs, Table};
 
 fn specs() -> Vec<OptSpec> {
     vec![
-        opt("engine", "ordering engine: sequential|vectorized|xla", Some("vectorized")),
+        engine_opt(),
         opt("dims", "number of variables", Some("10")),
         opt("samples", "number of samples / time steps", Some("4000")),
         opt("seed", "random seed", Some("2024")),
@@ -70,6 +70,21 @@ fn dispatch(cmd: &str, args: &Args) -> alingam::util::Result<()> {
 
 fn build_engine(args: &Args) -> alingam::util::Result<Engine> {
     Engine::build(EngineChoice::parse(&args.req("engine"))?)
+}
+
+/// Engine for commands that fan jobs across `sweep_workers` threads of
+/// their own (`agree`, `bootstrap`): an auto-sized parallel engine inside
+/// such a sweep would oversubscribe every core `sweep_workers`-fold, so
+/// divide the core budget instead. An explicit `parallel:N` is honored
+/// as given.
+fn build_engine_for_sweep(args: &Args, sweep_workers: usize) -> alingam::util::Result<Engine> {
+    let mut choice = EngineChoice::parse(&args.req("engine"))?;
+    if choice == (EngineChoice::Parallel { workers: 0 }) {
+        let per_job =
+            (alingam::lingam::parallel::default_workers() / sweep_workers.max(1)).max(1);
+        choice = EngineChoice::Parallel { workers: per_job };
+    }
+    Engine::build(choice)
 }
 
 fn discover(args: &Args) -> alingam::util::Result<()> {
@@ -204,7 +219,7 @@ fn print_stocks_report(r: &stocks::StocksReport) {
 fn agree(args: &Args) -> alingam::util::Result<()> {
     let n_seeds = args.usize("seeds");
     let seeds: Vec<u64> = (0..n_seeds as u64).collect();
-    let engine_b = build_engine(args)?;
+    let engine_b = build_engine_for_sweep(args, args.usize("workers"))?;
     let runs = simbench::agreement_sweep(
         &simbench::fig3_spec(),
         args.usize("samples"),
@@ -227,7 +242,7 @@ fn bootstrap_cmd(args: &Args) -> alingam::util::Result<()> {
     use alingam::coordinator::{bootstrap_direct, BootstrapOpts};
     let d = args.usize("dims");
     let n = args.usize("samples");
-    let engine = build_engine(args)?;
+    let engine = build_engine_for_sweep(args, args.usize("workers"))?;
     let mut rng = Pcg64::seed_from_u64(args.usize("seed") as u64);
     let ds = sim::simulate_sem(&sim::SemSpec::layered(d, 2, 0.5), n, &mut rng);
     let opts = BootstrapOpts {

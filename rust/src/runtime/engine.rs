@@ -151,7 +151,7 @@ impl OrderingEngine for XlaEngine {
         if !self.fused {
             // ablation path: scores artifact + host argmax/residualize
             let scores = self.scores(x, active)?;
-            let chosen = crate::lingam::engine::argmax_active(&scores, active);
+            let chosen = crate::lingam::engine::argmax_active(&scores, active)?;
             crate::lingam::engine::residualize_in_place(x, active, chosen);
             active[chosen] = false;
             return Ok(OrderStep { chosen, scores });

@@ -61,10 +61,15 @@ pub fn correlation(x: &Mat) -> Mat {
 }
 
 /// Quantile (linear interpolation, q in [0,1]) of a slice.
+///
+/// NaN-tolerant: `total_cmp` sorts NaNs to the top end instead of the
+/// `partial_cmp().unwrap()` panic (this sits under [`median_sq_dist`], on
+/// the SVGD baseline path, where a degenerate particle set can inject
+/// NaN distances).
 pub fn quantile(x: &[f64], q: f64) -> f64 {
     assert!(!x.is_empty());
     let mut v = x.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -77,6 +82,12 @@ pub fn quantile(x: &[f64], q: f64) -> f64 {
 
 /// Median absolute pairwise distance — SVGD's bandwidth ("median
 /// heuristic") helper. `x` is a set of points given as rows.
+///
+/// Non-finite distances (degenerate particles with NaN/inf coordinates)
+/// are excluded before taking the median: leaving them in would either
+/// bias the quantile (NaN sorts above every number under `total_cmp`) or
+/// return a NaN that callers like SVGD's `.max(1e-12)` bandwidth floor
+/// would silently swallow.
 pub fn median_sq_dist(points: &Mat) -> f64 {
     let n = points.rows();
     let mut d2 = Vec::with_capacity(n * (n - 1) / 2);
@@ -88,7 +99,9 @@ pub fn median_sq_dist(points: &Mat) -> f64 {
                 .zip(points.row(j))
                 .map(|(a, b)| (a - b) * (a - b))
                 .sum();
-            d2.push(dist);
+            if dist.is_finite() {
+                d2.push(dist);
+            }
         }
     }
     if d2.is_empty() {
@@ -175,6 +188,32 @@ mod tests {
         assert_eq!(quantile(&x, 0.0), 1.0);
         assert_eq!(quantile(&x, 1.0), 5.0);
         assert_eq!(quantile(&x, 0.5), 3.0);
+    }
+
+    #[test]
+    fn quantile_tolerates_nan() {
+        // regression: partial_cmp().unwrap() used to panic here
+        let x = [1.0, f64::NAN, 3.0];
+        assert_eq!(quantile(&x, 0.0), 1.0);
+        assert_eq!(quantile(&x, 0.5), 3.0); // NaN sorts above every number
+        assert!(quantile(&x, 1.0).is_nan());
+        let all_nan = [f64::NAN, f64::NAN];
+        assert!(quantile(&all_nan, 0.5).is_nan());
+    }
+
+    #[test]
+    fn median_sq_dist_excludes_degenerate_particles() {
+        // one NaN particle must not bias (or poison) the bandwidth
+        let mut pts = Mat::from_fn(4, 2, |r, c| (r * 2 + c) as f64);
+        let clean = median_sq_dist(&pts);
+        pts[(3, 0)] = f64::NAN;
+        let with_nan = median_sq_dist(&pts);
+        assert!(with_nan.is_finite());
+        // remaining finite pairs are a subset of the clean ones
+        assert!(with_nan <= clean);
+        // all particles degenerate → fallback bandwidth, not NaN
+        let all_bad = Mat::from_fn(3, 2, |_, _| f64::NAN);
+        assert_eq!(median_sq_dist(&all_bad), 1.0);
     }
 
     #[test]

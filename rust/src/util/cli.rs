@@ -132,6 +132,18 @@ pub fn opt(name: &'static str, help: &'static str, default: Option<&str>) -> Opt
     OptSpec { name, help, default: default.map(|s| s.to_string()) }
 }
 
+/// The shared `--engine` option: one spec so the binary, examples and
+/// benches advertise the same engine grammar. The multi-threaded
+/// `parallel` engine is the default CPU path (`parallel:N` pins the
+/// worker count; bare `parallel` sizes the pool to the machine).
+pub fn engine_opt() -> OptSpec {
+    opt(
+        "engine",
+        "ordering engine: sequential|vectorized|parallel[:N]|xla",
+        Some("parallel"),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -166,5 +178,14 @@ mod tests {
         let a = parse(&["--verbose", "--dims", "7"]);
         assert!(a.flag("verbose"));
         assert_eq!(a.usize("dims"), 7);
+    }
+
+    #[test]
+    fn engine_opt_defaults_to_parallel() {
+        let spec = engine_opt();
+        assert_eq!(spec.name, "engine");
+        assert_eq!(spec.default.as_deref(), Some("parallel"));
+        let a = Args::parse_from("test".into(), vec![], "t", &[engine_opt()]);
+        assert_eq!(a.req("engine"), "parallel");
     }
 }

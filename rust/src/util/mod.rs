@@ -7,6 +7,7 @@
 
 pub mod error;
 pub mod rng;
+pub mod pool;
 pub mod prop;
 pub mod cli;
 pub mod table;

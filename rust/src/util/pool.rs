@@ -1,0 +1,72 @@
+//! The crate's one scoped worker pool: work-stealing by atomic counter
+//! over an index range, results returned in index order.
+//!
+//! Used by `coordinator::sweep::parallel_map` (multi-seed experiment
+//! fan-out) and by `lingam::parallel::ParallelEngine` (pair-loop tiling
+//! and parallel residualization), so there is a single pool
+//! implementation to audit. Workers batch their `(index, value)` results
+//! locally and hand them back through their join handles; the caller
+//! places them by index, which makes the output — and any fold the
+//! caller runs over it — deterministic regardless of which worker
+//! claimed which index.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Run `f(i)` for every `i in 0..n` across `workers` scoped threads;
+/// results come back in index order. `f` must be `Sync` (it is shared
+/// across workers). A worker panic propagates to the caller.
+pub fn parallel_indexed<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    assert!(workers >= 1);
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers.min(n))
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut done: Vec<(usize, T)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        done.push((i, f(i)));
+                    }
+                    done
+                })
+            })
+            .collect();
+        for handle in handles {
+            for (i, value) in handle.join().expect("pool worker panicked") {
+                out[i] = Some(value);
+            }
+        }
+    });
+    out.into_iter().map(|v| v.expect("every index claimed by a worker")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_index_order() {
+        let out = parallel_indexed(37, 4, |i| i * 2);
+        assert_eq!(out, (0..37).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_items_and_single_worker() {
+        let empty: Vec<usize> = parallel_indexed(0, 3, |i| i);
+        assert!(empty.is_empty());
+        assert_eq!(parallel_indexed(3, 1, |i| i + 1), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        assert_eq!(parallel_indexed(2, 16, |i| i), vec![0, 1]);
+    }
+}

@@ -1,0 +1,147 @@
+//! Degenerate-panel hardening suite: production-shaped inputs — constant
+//! columns (zero-variance probes in gene-expression panels), duplicated
+//! columns, and near-collinear pairs — must surface as `Err` or finite
+//! scores from every engine, never as a NaN panic.
+//!
+//! Regression coverage for the three historical crash paths:
+//! - `argmax_active` asserting "no active variable" when every active
+//!   score was NaN/−∞,
+//! - the pair-kernel denominator collapsing on collinear columns
+//!   (`sqrt(1−ρ²)` going NaN, floored to 1e-150 by `f64::max`, which
+//!   overflowed the affected scores to −∞ and fed the panic above),
+//! - `stats::quantile` panicking via `partial_cmp().unwrap()` on NaN
+//!   (exercised in `stats`' own tests; it sits under `median_sq_dist`).
+
+use alingam::lingam::{
+    DirectLingam, OrderingEngine, ParallelEngine, SequentialEngine, VectorizedEngine,
+};
+use alingam::linalg::Mat;
+use alingam::util::rng::Pcg64;
+use alingam::util::Error;
+
+fn engines() -> Vec<Box<dyn OrderingEngine>> {
+    vec![
+        Box::new(SequentialEngine),
+        Box::new(VectorizedEngine),
+        // force_parallel: these panels are tiny, and the threaded path —
+        // the only code unique to ParallelEngine — is what needs coverage
+        Box::new(ParallelEngine::new(2).force_parallel()),
+    ]
+}
+
+/// Random non-degenerate base panel.
+fn base_panel(n: usize, d: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    Mat::from_fn(n, d, |_, _| rng.normal())
+}
+
+/// Scores must be Ok-and-never-NaN or a clean Err — in particular no
+/// panic anywhere on the path.
+fn assert_scores_err_or_finite(x: &Mat, label: &str) {
+    let active = vec![true; x.cols()];
+    for eng in engines() {
+        // a clean Err is an accepted outcome for degenerate input; what
+        // must never happen is a panic or a NaN-poisoned k_list
+        if let Ok(k) = eng.scores(x, &active) {
+            for (i, &v) in k.iter().enumerate() {
+                assert!(
+                    !v.is_nan(),
+                    "{}: engine {} produced NaN score at {i}: {k:?}",
+                    label,
+                    eng.name()
+                );
+            }
+        }
+    }
+}
+
+/// `fit` must either succeed or return a clean Err — never panic.
+fn assert_fit_err_or_ok(x: &Mat, label: &str) {
+    for eng in engines() {
+        if let Ok(fit) = DirectLingam::new().fit(x, eng.as_ref()) {
+            let mut order = fit.order.clone();
+            order.sort_unstable();
+            assert_eq!(
+                order,
+                (0..x.cols()).collect::<Vec<_>>(),
+                "{}: engine {} returned a non-permutation order",
+                label,
+                eng.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn constant_column_panel() {
+    let mut x = base_panel(300, 5, 1);
+    // non-dyadic value: its float sums carry rounding variance ~1e-17,
+    // so this also pins the scale-relative (not exact-zero) guard
+    let constant = vec![0.1; 300];
+    x.set_col(2, &constant);
+    assert_scores_err_or_finite(&x, "constant column");
+    // at the fit level a constant column is detected up front
+    for eng in engines() {
+        let res = DirectLingam::new().fit(&x, eng.as_ref());
+        assert!(
+            matches!(res, Err(Error::InvalidArgument(_))),
+            "constant column: engine {} did not surface InvalidArgument",
+            eng.name()
+        );
+    }
+}
+
+#[test]
+fn duplicated_column_panel() {
+    let mut x = base_panel(300, 5, 2);
+    let dup = x.col(1);
+    x.set_col(3, &dup);
+    assert_scores_err_or_finite(&x, "duplicated column");
+    assert_fit_err_or_ok(&x, "duplicated column");
+}
+
+#[test]
+fn near_collinear_pair_panel() {
+    let mut rng = Pcg64::seed_from_u64(3);
+    let mut x = base_panel(300, 5, 3);
+    // column 4 = column 0 plus vanishing noise: ρ² rounds to (or past) 1
+    let near: Vec<f64> = x.col(0).iter().map(|&v| v + 1e-9 * rng.normal()).collect();
+    x.set_col(4, &near);
+    assert_scores_err_or_finite(&x, "near-collinear pair");
+    assert_fit_err_or_ok(&x, "near-collinear pair");
+}
+
+#[test]
+fn negatively_scaled_duplicate_panel() {
+    // ρ → −1 exercises the other edge of the clamp
+    let mut x = base_panel(300, 4, 4);
+    let neg: Vec<f64> = x.col(0).iter().map(|&v| -2.5 * v).collect();
+    x.set_col(3, &neg);
+    assert_scores_err_or_finite(&x, "negative duplicate");
+    assert_fit_err_or_ok(&x, "negative duplicate");
+}
+
+#[test]
+fn all_constant_panel_never_panics() {
+    // every column constant: nothing is estimable; engines must not panic
+    // and fit must reject it cleanly
+    let x = Mat::from_fn(64, 3, |_, c| c as f64);
+    assert_scores_err_or_finite(&x, "all-constant panel");
+    for eng in engines() {
+        let res = DirectLingam::new().fit(&x, eng.as_ref());
+        assert!(
+            res.is_err(),
+            "all-constant panel: engine {} should not produce a fit",
+            eng.name()
+        );
+    }
+}
+
+#[test]
+fn unusable_scores_surface_err_not_panic() {
+    // the selection step order_step delegates to: every active score
+    // NaN/−∞ must yield Err, not the old "no active variable" panic
+    let scores = vec![f64::NAN, f64::NEG_INFINITY, f64::NAN];
+    let active = vec![true; 3];
+    assert!(alingam::lingam::engine::argmax_active(&scores, &active).is_err());
+}

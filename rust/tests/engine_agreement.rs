@@ -6,9 +6,12 @@
 //! Requires `make artifacts` (the XLA engine loads AOT artifacts).
 
 use alingam::apps::simbench::{agreement_sweep, fig3_spec};
-use alingam::lingam::{DirectLingam, OrderingEngine, SequentialEngine, VectorizedEngine};
+use alingam::lingam::{
+    DirectLingam, OrderingEngine, ParallelEngine, SequentialEngine, VectorizedEngine,
+};
 use alingam::runtime::XlaEngine;
 use alingam::sim::{simulate_sem, SemSpec};
+use alingam::util::prop::props;
 use alingam::util::rng::Pcg64;
 
 fn xla_engine() -> XlaEngine {
@@ -26,6 +29,85 @@ fn sequential_vs_vectorized_ten_seeds() {
         assert!(r.adj_max_diff < 1e-8, "seed {}: adjacency diff {}", r.seed, r.adj_max_diff);
         assert_eq!(r.metrics_a.f1, r.metrics_b.f1);
     }
+}
+
+#[test]
+fn sequential_vs_parallel_ten_seeds() {
+    // the paper's central validation, extended to the thread-pool engine:
+    // identical orders and adjacencies vs the sequential reference
+    let seeds: Vec<u64> = (0..10).collect();
+    // force_parallel: the Fig-3 panel sits below the serial-fallback
+    // cutoff, and the threaded path is what must agree here
+    let runs = agreement_sweep(
+        &fig3_spec(),
+        2_000,
+        &seeds,
+        &SequentialEngine,
+        &ParallelEngine::new(4).force_parallel(),
+        2,
+    );
+    for r in &runs {
+        assert!(r.orders_identical, "seed {}: orders diverged", r.seed);
+        assert!(r.adj_max_diff < 1e-8, "seed {}: adjacency diff {}", r.seed, r.adj_max_diff);
+        assert_eq!(r.metrics_a.f1, r.metrics_b.f1);
+    }
+}
+
+#[test]
+fn parallel_scores_match_vectorized_property() {
+    // property: on random panels, random active masks and random worker
+    // counts, the parallel engine's k_list agrees with the vectorized
+    // engine to 1e-9 (they share the pair kernel; only the summation
+    // association differs)
+    props("parallel vs vectorized scores", 20, |g| {
+        let d = g.usize_in(3, 12);
+        let n = g.usize_in(64, 512);
+        let seed = g.rng().next_u64();
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let ds = simulate_sem(&SemSpec::layered(d, 2, 0.6), n, &mut rng);
+        let mut active = vec![true; d];
+        for slot in active.iter_mut() {
+            if g.bool_p(0.2) {
+                *slot = false;
+            }
+        }
+        if active.iter().filter(|&&a| a).count() < 2 {
+            active[0] = true;
+            active[1] = true;
+        }
+        let workers = g.usize_in(1, 8);
+        let kv = VectorizedEngine.scores(&ds.data, &active).unwrap();
+        let kp = ParallelEngine::new(workers)
+            .force_parallel()
+            .scores(&ds.data, &active)
+            .unwrap();
+        for i in 0..d {
+            if !active[i] {
+                assert_eq!(kp[i], f64::NEG_INFINITY);
+                continue;
+            }
+            assert!(
+                (kv[i] - kp[i]).abs() < 1e-9 * (1.0 + kv[i].abs()),
+                "d={d} n={n} workers={workers} i={i}: vec={} par={}",
+                kv[i],
+                kp[i]
+            );
+        }
+    });
+}
+
+#[test]
+fn three_cpu_engines_identical_orders_on_one_fit() {
+    let mut rng = Pcg64::seed_from_u64(17);
+    let ds = simulate_sem(&SemSpec::layered(9, 2, 0.5), 3_000, &mut rng);
+    let seq = DirectLingam::new().fit(&ds.data, &SequentialEngine).unwrap();
+    let vec = DirectLingam::new().fit(&ds.data, &VectorizedEngine).unwrap();
+    let par = DirectLingam::new()
+        .fit(&ds.data, &ParallelEngine::new(3).force_parallel())
+        .unwrap();
+    assert_eq!(seq.order, vec.order);
+    assert_eq!(vec.order, par.order);
+    assert!(alingam::metrics::adjacency_max_diff(&vec.adjacency, &par.adjacency) < 1e-8);
 }
 
 #[test]

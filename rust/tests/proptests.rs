@@ -245,7 +245,7 @@ fn prop_argmax_matches_manual_max() {
         for k in 0..on {
             active[k] = true;
         }
-        let best = argmax_active(&scores, &active);
+        let best = argmax_active(&scores, &active).unwrap();
         assert!(active[best]);
         for i in 0..d {
             if active[i] {
