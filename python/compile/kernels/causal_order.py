@@ -44,7 +44,9 @@ def _kernel(xi_ref, xs_ref, rho_ref, nv_ref, out_ref):
     xs = xs_ref[...]  # [N, BJ]
     rho = rho_ref[...]  # [1, BJ]
     nv = nv_ref[0, 0]
-    denom = jnp.sqrt(jnp.maximum(1.0 - rho * rho, ref.DENOM_EPS))  # [1, BJ]
+    # rho^2-clamped denominator (degenerate-panel hardening), shared with
+    # the jnp oracle so kernel and reference can never desynchronize
+    denom = ref.residual_denom(rho)  # [1, BJ]
     r = (xi - rho * xs) / denom  # [N, BJ]; padded rows stay exactly 0
     e_lc = jnp.sum(ref.log_cosh(r), axis=0, keepdims=True) / nv  # [1, BJ]
     e_gs = jnp.sum(ref.gauss_score(r), axis=0, keepdims=True) / nv

@@ -30,6 +30,27 @@ STD_EPS = 1e-7
 INACTIVE = -1e30
 
 
+def residual_denom(rho):
+    """sqrt(1 - rho^2) with rho^2 clamped to <= 1 *before* the subtraction,
+    mirroring the Rust pair kernel's hardening: duplicated or collinear
+    columns push the float rho^2 past 1, and while the DENOM_EPS floor
+    already keeps the sqrt real, clamping first pins the same closed form
+    on both sides of the engine-agreement tests (and keeps the guard
+    robust if the floor is ever tuned)."""
+    rho2 = jnp.minimum(rho * rho, 1.0)
+    return jnp.sqrt(jnp.maximum(1.0 - rho2, DENOM_EPS))
+
+
+def safe_argmax(k_list):
+    """NaN-safe argmax over a k_list.
+
+    jnp.argmax propagates NaN (a single NaN score wins the max), so a
+    degenerate panel could elect a NaN-scored variable on device. Rewrite
+    NaN to the INACTIVE sentinel first — the same policy as the Rust
+    `argmax_active`, which skips NaN scores entirely."""
+    return jnp.argmax(jnp.where(jnp.isnan(k_list), INACTIVE, k_list))
+
+
 def log_cosh(u):
     """Numerically-stable log cosh."""
     a = jnp.abs(u)
@@ -75,7 +96,7 @@ def residual_entropy_matrix_ref(xs, rho, n_valid):
     Reference implementation materializes the full [N, D, D] residual
     tensor (memory-hungry; fine for test sizes).
     """
-    denom = jnp.sqrt(jnp.maximum(1.0 - rho * rho, DENOM_EPS))  # [D, D]
+    denom = residual_denom(rho)  # [D, D]
     # R[t, i, j] = (xs[t,i] - rho[i,j] xs[t,j]) / denom[i,j]
     r = (xs[:, :, None] - rho[None, :, :] * xs[:, None, :]) / denom[None, :, :]
     e_lc = jnp.sum(log_cosh(r), axis=0) / n_valid
@@ -117,7 +138,7 @@ def residualize_ref(x, row_mask, col_mask, m_onehot):
 def order_step_ref(x, row_mask, col_mask):
     """Fused step: scores -> argmax -> residualize. Returns (x', m, k_list)."""
     k_list = order_scores_ref(x, row_mask, col_mask)
-    m = jnp.argmax(k_list)
+    m = safe_argmax(k_list)
     m_onehot = jnp.zeros_like(col_mask).at[m].set(1.0)
     x_next = residualize_ref(x, row_mask, col_mask, m_onehot)
     return x_next, m, k_list

@@ -40,9 +40,14 @@ def order_scores(x, row_mask, col_mask):
 
 
 def order_step(x, row_mask, col_mask):
-    """Fused DirectLiNGAM iteration. Returns (x_next, m, k_list)."""
+    """Fused DirectLiNGAM iteration. Returns (x_next, m, k_list).
+
+    The on-device argmax is NaN-safe (ref.safe_argmax): without the guard
+    a degenerate panel whose scores go NaN would elect a NaN-scored
+    variable inside the artifact, where the Rust host-side checks cannot
+    see it until the invalid index comes back."""
     k_list = order_scores(x, row_mask, col_mask)
-    m = jnp.argmax(k_list)
+    m = ref.safe_argmax(k_list)
     m_onehot = jnp.zeros_like(col_mask).at[m].set(1.0)
 
     rm = row_mask[:, None]

@@ -7,6 +7,14 @@ pub fn full_scale() -> bool {
     std::env::var("ALINGAM_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
 }
 
+/// `ALINGAM_BENCH_SMOKE=1` shrinks a bench to one CI-sized cell (the
+/// workflow runs `fig2_speedup` this way so session-path perf
+/// regressions show up in the log without paying for the full grid).
+#[allow(dead_code)] // not every bench has a smoke cell
+pub fn smoke() -> bool {
+    std::env::var("ALINGAM_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
 /// Standard bench header.
 pub fn header(id: &str, claim: &str) {
     println!("\n################################################################");

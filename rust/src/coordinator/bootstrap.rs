@@ -2,12 +2,20 @@
 //! `lingam` package's companion feature: resample the rows with
 //! replacement, refit, and report per-edge selection probabilities and
 //! order stability. The coordinator fans the resamples across workers.
+//!
+//! Every resample has the same `[n, d]` shape, so the refits share a
+//! pool of ordering sessions: a worker pops a parked workspace,
+//! [`reset`](OrderingSession::reset)s it with its resample (reusing the
+//! standardized-cache and correlation-matrix buffers) and parks it again
+//! when the fit is done, instead of reallocating the workspace
+//! `resamples` times.
 
 use super::sweep::parallel_map;
-use crate::lingam::{DirectLingam, OrderingEngine};
+use crate::lingam::{DirectLingam, LingamFit, OrderingEngine, OrderingSession};
 use crate::linalg::Mat;
 use crate::util::rng::Pcg64;
 use crate::util::{Error, Result};
+use std::sync::Mutex;
 
 /// Bootstrap configuration.
 #[derive(Clone, Debug)]
@@ -60,9 +68,9 @@ impl BootstrapResult {
 }
 
 /// Run the bootstrap.
-pub fn bootstrap_direct(
+pub fn bootstrap_direct<'e>(
     data: &Mat,
-    engine: &dyn OrderingEngine,
+    engine: &'e dyn OrderingEngine,
     opts: &BootstrapOpts,
 ) -> Result<BootstrapResult> {
     let (n, d) = (data.rows(), data.cols());
@@ -70,11 +78,26 @@ pub fn bootstrap_direct(
         return Err(Error::InvalidArgument("resamples must be ≥ 1".into()));
     }
     let seeds: Vec<u64> = (0..opts.resamples as u64).map(|k| opts.seed ^ (k + 1)).collect();
-    let fits = parallel_map(&seeds, opts.workers, |seed| {
+    // parked session workspaces, reused across resamples (shapes always
+    // match: every resample is [n, d])
+    let session_pool: Mutex<Vec<Box<dyn OrderingSession + 'e>>> = Mutex::new(Vec::new());
+    let fits = parallel_map(&seeds, opts.workers, |seed| -> Result<LingamFit> {
         let mut rng = Pcg64::seed_from_u64(seed);
         let rows: Vec<usize> = (0..n).map(|_| rng.below(n)).collect();
         let sample = data.select_rows(&rows);
-        DirectLingam::new().fit(&sample, engine)
+        let pooled = session_pool.lock().expect("session pool").pop();
+        let mut session = match pooled {
+            Some(mut s) => {
+                s.reset(&sample)?;
+                s
+            }
+            None => engine.session(&sample)?,
+        };
+        let fit = DirectLingam::new().fit_session(&sample, session.as_mut());
+        // park the workspace even after a failed refit: reset restores
+        // its invariants before the next use
+        session_pool.lock().expect("session pool").push(session);
+        fit
     });
 
     let mut edge_probs = Mat::zeros(d, d);
@@ -159,6 +182,22 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn session_pool_reuse_is_deterministic() {
+        // worker count changes which resamples share a pooled workspace;
+        // reset must make that invisible in the aggregate
+        let mut rng = Pcg64::seed_from_u64(9);
+        let ds = simulate_sem(&SemSpec::layered(5, 2, 0.7), 1_000, &mut rng);
+        let run = |workers: usize| {
+            let opts = BootstrapOpts { resamples: 12, workers, ..Default::default() };
+            bootstrap_direct(&ds.data, &VectorizedEngine, &opts).unwrap()
+        };
+        let (a, b) = (run(1), run(3));
+        assert_eq!(a.edge_probs, b.edge_probs);
+        assert_eq!(a.precedence, b.precedence);
+        assert_eq!(a.resamples, b.resamples);
     }
 
     #[test]

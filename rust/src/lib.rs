@@ -15,12 +15,36 @@
 //! Python never runs on the request path: after `make artifacts` the
 //! `alingam` binary is self-contained.
 //!
+//! ## The ordering pipeline: engines and sessions
+//!
+//! The hot path is organized around two abstractions in [`lingam`]:
+//!
+//! - an [`lingam::OrderingEngine`] names a *backend* (sequential
+//!   baseline, vectorized, parallel, XLA) and doubles as a **session
+//!   factory**;
+//! - an [`lingam::OrderingSession`] is the per-fit *workspace* whose
+//!   lifecycle `DirectLingam::fit` drives:
+//!   **create → score → choose → residualize+update → … → finish**.
+//!
+//! The session is created once per fit and owns the standardized column
+//! cache, a persistent correlation matrix and the per-column entropy
+//! cache. Between steps it residualizes the cache in
+//! place with the closed form `(c_j − ρ_jm·c_m)/√(1−ρ_jm²)` and updates
+//! the correlation matrix analytically in O(d²) — so only the entropy
+//! and pair-score sweeps still touch sample data, instead of the
+//! re-standardize + O(d²·n) correlation dots the stateless path pays on
+//! every step (ParaLiNGAM-style cross-iteration reuse). Engines without
+//! an incremental workspace (the sequential baseline, the fused XLA
+//! artifact) run under a stateless shim with their exact legacy per-step
+//! behavior, and `DirectLingam::fit_stateless` keeps the legacy loop as
+//! the measured baseline.
+//!
 //! On machines without an accelerator the default CPU path is the
 //! multi-threaded [`lingam::ParallelEngine`], which tiles the same
-//! restructured pair kernel as the vectorized engine across a
-//! work-stealing worker pool (ParaLiNGAM-style). Degenerate panels —
-//! constant or collinear columns — surface as
-//! [`util::Error::InvalidArgument`] rather than NaN panics.
+//! restructured pair kernel as the vectorized engine — and its session's
+//! workspace sweeps — across a work-stealing worker pool
+//! (ParaLiNGAM-style). Degenerate panels — constant or collinear columns
+//! — surface as [`util::Error::InvalidArgument`] rather than NaN panics.
 //!
 //! ## Quick example
 //!
@@ -55,7 +79,10 @@ pub mod apps;
 pub mod prelude {
     pub use crate::graph::Dag;
     pub use crate::linalg::Mat;
-    pub use crate::lingam::{self, DirectLingam, OrderingEngine, ParallelEngine, SequentialEngine, VectorizedEngine, VarLingam};
+    pub use crate::lingam::{
+        self, DirectLingam, OrderingEngine, OrderingSession, ParallelEngine, SequentialEngine,
+        VarLingam, VectorizedEngine,
+    };
     pub use crate::metrics;
     pub use crate::sim;
     pub use crate::util::rng::Pcg64;

@@ -6,11 +6,22 @@
 //! After the full order is known, the weighted adjacency is estimated by
 //! regressing each variable on its predecessors ([`prune`]).
 //!
+//! [`DirectLingam::fit`] opens **one ordering session per fit**
+//! ([`OrderingEngine::session`]) and drives it through all d−1 search
+//! steps, so the workspace — standardized cache, correlation matrix,
+//! scratch — is built once and updated incrementally in place (see
+//! [`super::session`]). [`DirectLingam::fit_stateless`] keeps the legacy
+//! clone-and-`order_step` loop as the comparison baseline, and
+//! [`DirectLingam::fit_session`] drives a caller-provided (pooled,
+//! reset) session so the bootstrap can reuse workspaces across
+//! resamples.
+//!
 //! The per-stage timing profile this driver collects is what the
 //! Figure-2 reproduction reports (ordering is ~96% of total runtime).
 
 use super::engine::{OrderingEngine, OrderStep};
 use super::prune::{estimate_adjacency, PruneMethod};
+use super::session::{OrderingSession, StatelessSession};
 use crate::linalg::Mat;
 use crate::util::timer::StageProfile;
 use crate::util::{Error, Result};
@@ -46,7 +57,101 @@ impl DirectLingam {
     }
 
     /// Fit on a data panel `[n, d]` using the given ordering engine.
+    ///
+    /// Opens one [`OrderingSession`] for the whole d−1-step loop; session
+    /// creation (the one-time standardize + correlation build) is timed
+    /// under the "ordering" stage, since it is ordering work the
+    /// stateless path pays again on every step.
     pub fn fit(&self, data: &Mat, engine: &dyn OrderingEngine) -> Result<LingamFit> {
+        self.validate(data)?;
+        let mut profile = StageProfile::new();
+        let mut session = profile.time("ordering", || engine.session(data))?;
+        self.drive(data, session.as_mut(), profile)
+    }
+
+    /// Fit by driving a caller-provided session that has already been
+    /// seeded with `data` (via [`OrderingEngine::session`] or
+    /// [`OrderingSession::reset`]) — the buffer-reuse entry point the
+    /// bootstrap's session pool goes through.
+    ///
+    /// Shape and freshness are checked; that the session was seeded with
+    /// *this* panel (not a different one of the same shape) cannot be
+    /// verified here and is the caller's contract — a mismatch would mix
+    /// one panel's causal order with the other's adjacency regression.
+    pub fn fit_session(
+        &self,
+        data: &Mat,
+        session: &mut dyn OrderingSession,
+    ) -> Result<LingamFit> {
+        self.validate(data)?;
+        if session.active().len() != data.cols()
+            || session.rows() != data.rows()
+            || session.remaining() != data.cols()
+        {
+            return Err(Error::InvalidArgument(
+                "session does not match the panel (wrong shape, or already stepped — \
+                 reset it first)"
+                    .into(),
+            ));
+        }
+        self.drive(data, session, StageProfile::new())
+    }
+
+    /// The legacy stateless path: clone the panel and call
+    /// [`OrderingEngine::order_step`] once per iteration, re-deriving
+    /// every statistic from the residual panel each time. Kept as the
+    /// baseline the session path is measured against (`fig2_speedup`)
+    /// and as the reference the per-step agreement tests recompute from.
+    /// Implemented as the same internal drive loop over the stateless
+    /// shim, so there is exactly one copy of the d−1-step logic.
+    pub fn fit_stateless(&self, data: &Mat, engine: &dyn OrderingEngine) -> Result<LingamFit> {
+        self.validate(data)?;
+        // panel clone (inside the shim) deliberately untimed, matching
+        // the legacy loop's untimed `data.clone()`
+        let mut shim = StatelessSession::new(engine, data);
+        self.drive(data, &mut shim, StageProfile::new())
+    }
+
+    /// Drive a session through the d−1 search steps and estimate the
+    /// adjacency over the original (un-residualized) data.
+    fn drive(
+        &self,
+        data: &Mat,
+        session: &mut dyn OrderingSession,
+        mut profile: StageProfile,
+    ) -> Result<LingamFit> {
+        let d = data.cols();
+        let mut order = Vec::with_capacity(d);
+        let mut step_scores = Vec::with_capacity(d);
+        // causal ordering: d−1 search steps; the last variable is forced
+        for _ in 0..(d - 1) {
+            let step: OrderStep = profile.time("ordering", || session.step())?;
+            order.push(step.chosen);
+            step_scores.push(step.scores);
+        }
+        let last = session
+            .active()
+            .iter()
+            .position(|&a| a)
+            .expect("exactly one variable remains");
+        order.push(last);
+        self.finish(data, order, step_scores, profile)
+    }
+
+    fn finish(
+        &self,
+        data: &Mat,
+        order: Vec<usize>,
+        step_scores: Vec<Vec<f64>>,
+        mut profile: StageProfile,
+    ) -> Result<LingamFit> {
+        // adjacency over the original (un-residualized) data
+        let adjacency =
+            profile.time("regression", || estimate_adjacency(data, &order, self.prune))?;
+        Ok(LingamFit { order, adjacency, step_scores, profile })
+    }
+
+    fn validate(&self, data: &Mat) -> Result<()> {
         let (n, d) = (data.rows(), data.cols());
         if d < 2 {
             return Err(Error::InvalidArgument(format!("need ≥ 2 variables, got {d}")));
@@ -72,31 +177,7 @@ impl DirectLingam {
                 )));
             }
         }
-
-        let mut profile = StageProfile::new();
-        let mut x = data.clone();
-        let mut active = vec![true; d];
-        let mut order = Vec::with_capacity(d);
-        let mut step_scores = Vec::with_capacity(d);
-
-        // causal ordering: d−1 search steps; the last variable is forced
-        for _ in 0..(d - 1) {
-            let step: OrderStep =
-                profile.time("ordering", || engine.order_step(&mut x, &mut active))?;
-            order.push(step.chosen);
-            step_scores.push(step.scores);
-        }
-        let last = active
-            .iter()
-            .position(|&a| a)
-            .expect("exactly one variable remains");
-        order.push(last);
-
-        // adjacency over the original (un-residualized) data
-        let adjacency =
-            profile.time("regression", || estimate_adjacency(data, &order, self.prune))?;
-
-        Ok(LingamFit { order, adjacency, step_scores, profile })
+        Ok(())
     }
 }
 
@@ -151,6 +232,37 @@ mod tests {
         assert_eq!(vec.order, par.order, "parallel engine diverged from vectorized");
         assert!(crate::metrics::adjacency_max_diff(&seq.adjacency, &vec.adjacency) < 1e-8);
         assert!(crate::metrics::adjacency_max_diff(&vec.adjacency, &par.adjacency) < 1e-8);
+    }
+
+    #[test]
+    fn session_and_stateless_fits_agree() {
+        let mut rng = Pcg64::seed_from_u64(11);
+        let ds = simulate_sem(&SemSpec::layered(8, 2, 0.5), 3_000, &mut rng);
+        for eng in [&VectorizedEngine as &dyn crate::lingam::OrderingEngine, &SequentialEngine] {
+            let s = DirectLingam::new().fit(&ds.data, eng).unwrap();
+            let l = DirectLingam::new().fit_stateless(&ds.data, eng).unwrap();
+            assert_eq!(s.order, l.order, "{}: session order diverged", eng.name());
+            assert!(
+                crate::metrics::adjacency_max_diff(&s.adjacency, &l.adjacency) < 1e-10,
+                "{}: adjacency diverged",
+                eng.name()
+            );
+        }
+    }
+
+    #[test]
+    fn fit_session_requires_fresh_session() {
+        let mut rng = Pcg64::seed_from_u64(12);
+        let ds = simulate_sem(&SemSpec::layered(5, 2, 0.5), 800, &mut rng);
+        let engine = VectorizedEngine;
+        let mut session = engine.session(&ds.data).unwrap();
+        let fit = DirectLingam::new().fit_session(&ds.data, session.as_mut()).unwrap();
+        assert_eq!(fit.order.len(), 5);
+        // exhausted session must be rejected until reset
+        assert!(DirectLingam::new().fit_session(&ds.data, session.as_mut()).is_err());
+        session.reset(&ds.data).unwrap();
+        let again = DirectLingam::new().fit_session(&ds.data, session.as_mut()).unwrap();
+        assert_eq!(fit.order, again.order);
     }
 
     #[test]

@@ -1,30 +1,51 @@
 //! The causal-ordering hot spot behind an engine abstraction.
 //!
-//! `OrderingEngine::scores` is Algorithm 1 (`search_causal_order`): given
-//! the residual panel and the set of still-active variables, produce
-//! `k_list` where `k_list[i] = −Σ_{j≠i} min(0, diff_mi(i,j))²`; the next
-//! exogenous variable is the argmax.
+//! An [`OrderingEngine`] is two things:
+//!
+//! 1. **A stateless scorer** — `scores` is Algorithm 1
+//!    (`search_causal_order`): given the residual panel and the set of
+//!    still-active variables, produce `k_list` where
+//!    `k_list[i] = −Σ_{j≠i} min(0, diff_mi(i,j))²`; the next exogenous
+//!    variable is the argmax. This path re-derives every statistic per
+//!    call and is kept as the compatibility shim the agreement tests and
+//!    the `fig2_speedup` stateless baseline run through.
+//! 2. **A session factory** — [`OrderingEngine::session`] opens a
+//!    stateful [`OrderingSession`](super::session::OrderingSession) over
+//!    a panel. The session owns the per-fit workspace (standardized
+//!    column cache, persistent correlation matrix, entropy cache) and
+//!    `DirectLingam::fit` drives its lifecycle:
+//!    **create → score → choose → residualize+update → … → finish**,
+//!    with the residualize+update half done incrementally in place (see
+//!    [`super::session`]). Engines without an incremental path hand out
+//!    the [`StatelessSession`](super::session::StatelessSession) shim,
+//!    which preserves their exact per-step behavior.
 //!
 //! Four implementations:
 //! - [`SequentialEngine`] — faithful port of the numpy reference: per-pair
 //!   re-standardization, scalar loops. This is the paper's CPU baseline
 //!   whose profile (Figure 2, ~96% in ordering) and runtime the speedup is
-//!   measured against.
+//!   measured against. Sessions: the stateless shim (the baseline must
+//!   stay deliberately unoptimized).
 //! - [`VectorizedEngine`] — the restructured computation the GPU kernel
 //!   performs (standardize once per iteration, correlation precompute,
 //!   per-`i` residual panel reduction), in pure Rust, single-threaded.
+//!   Sessions: the incremental workspace with serial sweeps.
 //! - [`super::parallel::ParallelEngine`] — the same restructured pair
 //!   kernel tiled across a bounded CPU worker pool (ParaLiNGAM-style).
+//!   Sessions: the incremental workspace with pooled sweeps.
 //! - `runtime::XlaEngine` — the same restructuring AOT-compiled from
-//!   JAX/Pallas and executed via PJRT (the repo's "GPU" path).
+//!   JAX/Pallas and executed via PJRT (the repo's "GPU" path). Sessions:
+//!   the stateless shim around its fused on-device `order_step`.
 //!
 //! The restructured math itself — standardize-once column cache, ρ
 //! precompute, fused log-cosh/gauss-score pair reduction — lives in the
-//! free functions [`standardized_active_columns`], [`column_entropies`]
-//! and [`pair_diff`], which the vectorized and parallel engines share so
-//! their scores agree to float precision.
+//! free functions [`standardized_active_columns`], [`column_entropies`],
+//! [`pair_diff`] and [`pair_diff_with_rho`], which the stateless CPU
+//! engines and the incremental session share so their scores agree to
+//! float precision.
 
 use super::entropy::{diff_mi, entropy_from_moments, gauss_score, log_cosh, order_penalty};
+use super::session::{IncrementalSession, OrderingSession, StatelessSession};
 use crate::linalg::Mat;
 use crate::stats;
 use crate::util::{Error, Result};
@@ -63,6 +84,14 @@ pub trait OrderingEngine: Send + Sync {
         active[chosen] = false;
         Ok(OrderStep { chosen, scores })
     }
+
+    /// Open a stateful ordering session over a panel — the workspace
+    /// `DirectLingam::fit` drives for the whole d−1-step loop (see
+    /// [`super::session`] for the lifecycle). Engines without an
+    /// incremental workspace return the
+    /// [`StatelessSession`](super::session::StatelessSession) shim, which
+    /// keeps their exact per-step semantics.
+    fn session<'a>(&'a self, data: &Mat) -> Result<Box<dyn OrderingSession + 'a>>;
 }
 
 /// Argmax of scores over active entries (ties → lowest index, matching
@@ -127,6 +156,13 @@ pub struct SequentialEngine;
 impl OrderingEngine for SequentialEngine {
     fn name(&self) -> &'static str {
         "sequential"
+    }
+
+    /// The baseline stays deliberately unoptimized: its session is the
+    /// stateless shim, re-deriving everything per step like the
+    /// reference implementation does.
+    fn session<'a>(&'a self, data: &Mat) -> Result<Box<dyn OrderingSession + 'a>> {
+        Ok(Box::new(StatelessSession::new(self, data)))
     }
 
     fn scores(&self, x: &Mat, active: &[bool]) -> Result<Vec<f64>> {
@@ -194,6 +230,12 @@ impl OrderingEngine for VectorizedEngine {
         let k = accumulate_pairs(&cols, &h);
         Ok(scatter_scores(x.cols(), &idx, &k))
     }
+
+    /// Incremental workspace with serial sweeps: the single-threaded
+    /// restructured path plus cross-step reuse.
+    fn session<'a>(&'a self, data: &Mat) -> Result<Box<dyn OrderingSession + 'a>> {
+        Ok(Box::new(IncrementalSession::new(data, 1, false)?))
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -237,6 +279,16 @@ pub fn column_entropies(cols: &[Vec<f64>]) -> Vec<f64> {
 pub fn pair_diff(ca: &[f64], cb: &[f64], h_a: f64, h_b: f64) -> f64 {
     let n = ca.len();
     let r = dot(ca, cb) / n as f64;
+    pair_diff_with_rho(ca, cb, r, h_a, h_b)
+}
+
+/// [`pair_diff`] with the correlation supplied by the caller instead of
+/// recomputed with an O(n) dot — the form the incremental
+/// [`OrderingSession`](super::session::OrderingSession) runs against its
+/// persistent correlation matrix. `pair_diff` delegates here, so the two
+/// paths share every numeric detail (including the ρ²-clamp).
+pub fn pair_diff_with_rho(ca: &[f64], cb: &[f64], r: f64, h_a: f64, h_b: f64) -> f64 {
+    let n = ca.len();
     let denom = (1.0 - (r * r).min(1.0)).sqrt().max(1e-12);
     let (mut lc_ab, mut gs_ab, mut lc_ba, mut gs_ba) = (0.0, 0.0, 0.0, 0.0);
     for t in 0..n {
@@ -253,25 +305,33 @@ pub fn pair_diff(ca: &[f64], cb: &[f64], h_a: f64, h_b: f64) -> f64 {
     diff_mi(h_a, h_b, h_rab, h_rba)
 }
 
-/// Serial upper-triangle pair accumulation over the standardized cache:
-/// each unordered pair is computed once and contributes to both i=a and
-/// i=b (the GPU kernel computes ordered pairs redundantly; same numbers
-/// either way). This is the loop `VectorizedEngine` runs — and
-/// `ParallelEngine`'s small-problem fallback, where spawning threads
-/// would cost more than the pair work itself.
-pub fn accumulate_pairs(cols: &[Vec<f64>], h: &[f64]) -> Vec<f64> {
-    let m = cols.len();
+/// Serial upper-triangle accumulation of an antisymmetric pair statistic
+/// `diff(a, b)` over positions `0..m`: each unordered pair is computed
+/// once and contributes to both i=a and i=b (the GPU kernel computes
+/// ordered pairs redundantly; same numbers either way). The one serial
+/// copy of the `order_penalty` bookkeeping — shared by
+/// [`accumulate_pairs`] and the incremental session's cached-ρ sweep
+/// (the parallel row-tiled variant lives in `tiled_pair_sweep`).
+pub fn accumulate_pair_diffs<F: Fn(usize, usize) -> f64>(m: usize, diff: F) -> Vec<f64> {
     let mut k = vec![0.0; m];
     for a in 0..m {
         for b in (a + 1)..m {
             // candidate i=a against j=b; i=b against j=a is the
             // antisymmetric direction of the same pair
-            let diff_a = pair_diff(&cols[a], &cols[b], h[a], h[b]);
+            let diff_a = diff(a, b);
             k[a] += order_penalty(diff_a);
             k[b] += order_penalty(-diff_a);
         }
     }
     k
+}
+
+/// [`accumulate_pair_diffs`] over freshly standardized columns. This is
+/// the loop `VectorizedEngine` runs — and `ParallelEngine`'s
+/// small-problem fallback, where spawning threads would cost more than
+/// the pair work itself.
+pub fn accumulate_pairs(cols: &[Vec<f64>], h: &[f64]) -> Vec<f64> {
+    accumulate_pair_diffs(cols.len(), |a, b| pair_diff(&cols[a], &cols[b], h[a], h[b]))
 }
 
 /// Scatter packed per-active accumulators into a full-width k_list
@@ -284,8 +344,10 @@ pub fn scatter_scores(d: usize, idx: &[usize], k: &[f64]) -> Vec<f64> {
     k_list
 }
 
-/// Fused entropy over an already-standardized column.
-fn entropy_fused(u: &[f64]) -> f64 {
+/// Fused entropy over an already-standardized column (one log-cosh /
+/// gauss-score pass). Shared with the incremental session's per-step
+/// entropy-cache refresh.
+pub fn entropy_fused(u: &[f64]) -> f64 {
     let n = u.len() as f64;
     let (mut lc, mut gs) = (0.0, 0.0);
     for &v in u {
@@ -295,8 +357,10 @@ fn entropy_fused(u: &[f64]) -> f64 {
     entropy_from_moments(lc / n, gs / n)
 }
 
+/// Plain dot product (shared with the session's one-time correlation
+/// build so its ρ values are bitwise-identical to the stateless path's).
 #[inline]
-fn dot(a: &[f64], b: &[f64]) -> f64 {
+pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(&x, &y)| x * y).sum()
 }
 

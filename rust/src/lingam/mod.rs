@@ -7,10 +7,16 @@
 //!   scoring hot spot, with the sequential (paper's CPU baseline) and
 //!   vectorized (restructured, GPU-shaped) implementations plus the
 //!   shared pair kernel they are built from. The XLA-backed engine lives
-//!   in [`crate::runtime`].
+//!   in [`crate::runtime`]. Engines also act as *session factories*.
+//! - [`session`] — stateful ordering sessions: the per-fit workspace
+//!   (standardized column cache, persistent correlation matrix, entropy
+//!   cache) with in-place incremental residualization and closed-form
+//!   O(d²) correlation updates between steps (ParaLiNGAM-style reuse),
+//!   plus the stateless compatibility shim.
 //! - [`parallel`] — the multi-threaded CPU engine: the restructured pair
 //!   kernel tiled across a work-stealing worker pool (ParaLiNGAM-style);
-//!   the default CPU engine for the apps.
+//!   the default CPU engine for the apps. Its sessions tile the shared
+//!   workspace sweeps across the same pool.
 //! - [`direct`] — DirectLiNGAM (Shimizu et al. 2011): iterative exogenous
 //!   search + residualization, then adjacency estimation over the order.
 //! - [`prune`] — adjacency estimation: OLS over predecessors + adaptive
@@ -22,6 +28,7 @@
 
 pub mod entropy;
 pub mod engine;
+pub mod session;
 pub mod direct;
 pub mod fastica;
 pub mod ica;
@@ -32,5 +39,6 @@ pub mod var;
 pub use direct::{DirectLingam, LingamFit};
 pub use engine::{OrderingEngine, SequentialEngine, VectorizedEngine};
 pub use parallel::ParallelEngine;
+pub use session::{IncrementalSession, OrderingSession, StatelessSession};
 pub use ica::{IcaLingam, IcaLingamFit};
 pub use var::{VarLingam, VarLingamFit};

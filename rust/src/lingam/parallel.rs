@@ -23,11 +23,22 @@
 //! columns are split across the same pool and written back serially (the
 //! row-major panel interleaves columns, so in-place parallel writes would
 //! need aliasing unsafety for no measurable gain).
+//!
+//! The engine's session
+//! ([`OrderingEngine::session`](super::engine::OrderingEngine::session))
+//! is the incremental workspace of [`super::session`] with the same
+//! worker pool driving its sweeps: the row-tiled pair loop
+//! ([`tiled_pair_sweep`], shared between the stateless path here and the
+//! session's cached-ρ sweep), the per-column entropy refresh, and the
+//! in-place cache residualization (workers own disjoint column buffers
+//! taken out of the shared session cache, so no aliasing unsafety is
+//! needed there either).
 
 use super::engine::{
     accumulate_pairs, argmax_active, column_entropies, pair_diff, residualize_in_place,
     scatter_scores, standardized_active_columns, OrderStep, OrderingEngine,
 };
+use super::session::{IncrementalSession, OrderingSession};
 use super::entropy::order_penalty;
 use crate::linalg::Mat;
 use crate::stats;
@@ -117,6 +128,13 @@ impl OrderingEngine for ParallelEngine {
         active[chosen] = false;
         Ok(OrderStep { chosen, scores })
     }
+
+    /// Incremental workspace session with this engine's worker pool
+    /// tiling the sweeps (and the same small-problem serial fallback /
+    /// `force_parallel` override as the stateless path).
+    fn session<'a>(&'a self, data: &Mat) -> Result<Box<dyn OrderingSession + 'a>> {
+        Ok(Box::new(IncrementalSession::new(data, self.workers, self.force_parallel)?))
+    }
 }
 
 /// One row of the pair triangle: the candidate's own accumulated penalty
@@ -128,21 +146,26 @@ struct RowContrib {
     cross: Vec<f64>,
 }
 
-/// Tile the upper-triangle pair loop across the worker pool. Each pool
-/// task is one whole *row* (candidate `a` against every `b > a`, reusing
-/// the cached standardized column `a`); [`parallel_indexed`] returns the
-/// rows in index order, so the merge below — and therefore the final sum
-/// — is deterministic regardless of which worker processed which row.
-fn pair_sweep(cols: &[Vec<f64>], h: &[f64], workers: usize) -> Vec<f64> {
-    let m = cols.len();
-    // the last row has no b > a pairs, so m−1 workers suffice (the
-    // caller guarantees m ≥ 2)
-    let rows = parallel_indexed(m, workers.clamp(1, m - 1), |a| {
-        let ca = &cols[a];
+/// Tile the upper-triangle pair loop across the worker pool: `diff(a, b)`
+/// is the antisymmetric pair statistic over positions `0..m`. Each pool
+/// task is one whole *row* (candidate `a` against every `b > a`);
+/// [`parallel_indexed`] returns the rows in index order, so the merge
+/// below — and therefore the final sum — is deterministic regardless of
+/// which worker processed which row. Shared between the stateless engine
+/// path ([`pair_sweep`]) and the incremental session's sweep over the
+/// shared workspace cache (where `diff` reads the persistent correlation
+/// matrix instead of re-doing the dot).
+pub(crate) fn tiled_pair_sweep<F>(m: usize, workers: usize, diff: F) -> Vec<f64>
+where
+    F: Fn(usize, usize) -> f64 + Sync,
+{
+    // the last row has no b > a pairs, so m−1 workers suffice (and an
+    // empty or single-element sweep degrades to one no-op worker)
+    let rows = parallel_indexed(m, workers.clamp(1, m.saturating_sub(1).max(1)), |a| {
         let mut own = 0.0;
         let mut cross = vec![0.0; m - a - 1];
         for b in (a + 1)..m {
-            let diff_a = pair_diff(ca, &cols[b], h[a], h[b]);
+            let diff_a = diff(a, b);
             own += order_penalty(diff_a);
             cross[b - a - 1] = order_penalty(-diff_a);
         }
@@ -156,6 +179,12 @@ fn pair_sweep(cols: &[Vec<f64>], h: &[f64], workers: usize) -> Vec<f64> {
         }
     }
     k
+}
+
+/// The stateless pair sweep: row-tiled [`pair_diff`] over freshly
+/// standardized columns (each row task reuses its cached column `a`).
+fn pair_sweep(cols: &[Vec<f64>], h: &[f64], workers: usize) -> Vec<f64> {
+    tiled_pair_sweep(cols.len(), workers, |a, b| pair_diff(&cols[a], &cols[b], h[a], h[b]))
 }
 
 /// Parallel counterpart of

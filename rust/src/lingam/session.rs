@@ -1,0 +1,530 @@
+//! Stateful ordering sessions: the reusable workspace behind
+//! [`DirectLingam::fit`](super::direct::DirectLingam::fit).
+//!
+//! The stateless `OrderingEngine::scores` path re-derives everything on
+//! every search step: it re-standardizes all active columns, reallocates
+//! the column cache, and recomputes all pairwise correlations with
+//! O(d²·n) dots — even though the residualized panel's statistics are a
+//! closed-form function of the previous step's. ParaLiNGAM (Shahbazinia
+//! et al. 2023) identifies exactly this reuse as the next speedup after
+//! parallelizing the pair loop, and this module is that reuse:
+//!
+//! - [`OrderingSession`] — the lifecycle trait `DirectLingam::fit`
+//!   drives: create (once per fit) → [`step`](OrderingSession::step)
+//!   (score → choose → residualize+update) × (d−1) → finish. Sessions can
+//!   be [`reset`](OrderingSession::reset) with a fresh same-shape panel
+//!   so bootstrap resamples reuse one workspace allocation.
+//! - [`IncrementalSession`] — the workspace the CPU engines hand out: it
+//!   owns the standardized column cache, a persistent correlation
+//!   matrix, the per-column entropy cache and the packed active-index
+//!   scratch, all reused across steps (and across whole fits via
+//!   `reset`).
+//!   After each step it residualizes the *standardized cache in place*
+//!   (closed form `(c_j − ρ_jm·c_m)/√(1−ρ_jm²)`, with the shared
+//!   ρ²-clamp) and updates the correlation matrix analytically,
+//!   `ρ'_jk = (ρ_jk − ρ_jm·ρ_km)/√((1−ρ_jm²)(1−ρ_km²))`, in O(d²)
+//!   instead of O(d²·n) dots. Only the entropy and pair-score sweeps
+//!   still touch sample data.
+//! - [`StatelessSession`] — the compatibility shim: owns a panel clone
+//!   and delegates every step to `OrderingEngine::order_step`, so
+//!   engines with a fused per-step path (the XLA artifact) or a
+//!   deliberately unoptimized one (the sequential baseline) keep their
+//!   exact per-step semantics under the session API.
+//!
+//! Why the closed forms are exact: the cached columns are standardized,
+//! so the residual `c_j − ρ_jm·c_m` has mean 0 and variance `1 − ρ_jm²`;
+//! dividing by `√(1−ρ_jm²)` re-standardizes it without another pass over
+//! the data, and the correlation of two such residuals expands to the
+//! analytic update above (using `ρ_mm = 1`). The incremental path
+//! therefore agrees with a from-scratch recompute to float precision —
+//! pinned per step by `tests/session_state.rs`.
+
+use super::engine::{
+    accumulate_pair_diffs, argmax_active, dot, entropy_fused, pair_diff_with_rho,
+    scatter_scores, OrderStep, OrderingEngine, INACTIVE_SCORE,
+};
+use super::parallel::tiled_pair_sweep;
+use crate::linalg::Mat;
+use crate::stats;
+use crate::util::pool::{parallel_chunks_mut, parallel_indexed};
+use crate::util::{Error, Result};
+
+/// Same small-problem cutoffs as `ParallelEngine`: below ~1 ms of fused
+/// pair work (pairs × n elements) the scoped spawn/join overhead
+/// outweighs the work itself.
+const MIN_PARALLEL_PAIR_WORK: usize = 1 << 18;
+/// Column-elements threshold below which per-column sweeps stay serial.
+const MIN_PARALLEL_COL_WORK: usize = 1 << 16;
+
+/// One causal-ordering run over one panel: the stateful counterpart of
+/// the `OrderingEngine` trait (engines act as session factories via
+/// [`OrderingEngine::session`]).
+///
+/// `Send` so a bootstrap worker can park a finished session in a shared
+/// pool for another worker to [`reset`](OrderingSession::reset) and
+/// reuse.
+pub trait OrderingSession: Send {
+    /// Number of still-active variables.
+    fn remaining(&self) -> usize;
+
+    /// Sample count of the panel the workspace was seeded with.
+    fn rows(&self) -> usize;
+
+    /// Active mask over the original variable indices.
+    fn active(&self) -> &[bool];
+
+    /// One full search step: score the active set, pick the argmax,
+    /// residualize the workspace against the choice and deactivate it.
+    fn step(&mut self) -> Result<OrderStep>;
+
+    /// Re-seed the workspace with a fresh panel of the same `[n, d]`
+    /// shape, reusing every buffer (the bootstrap's session pool calls
+    /// this once per resample). Errors on a shape mismatch.
+    fn reset(&mut self, data: &Mat) -> Result<()>;
+}
+
+// ---------------------------------------------------------------------
+// Stateless compatibility shim.
+// ---------------------------------------------------------------------
+
+/// Adapter that runs any [`OrderingEngine`] under the session API by
+/// owning a panel clone and delegating each step to
+/// `OrderingEngine::order_step` — the exact legacy per-step semantics
+/// (the sequential baseline's per-pair recomputation, the XLA engine's
+/// fused on-device step).
+pub struct StatelessSession<'e> {
+    engine: &'e dyn OrderingEngine,
+    x: Mat,
+    active: Vec<bool>,
+}
+
+impl<'e> StatelessSession<'e> {
+    /// Clone the panel into the shim's private working copy.
+    pub fn new(engine: &'e dyn OrderingEngine, data: &Mat) -> StatelessSession<'e> {
+        StatelessSession { engine, x: data.clone(), active: vec![true; data.cols()] }
+    }
+}
+
+impl OrderingSession for StatelessSession<'_> {
+    fn remaining(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    fn rows(&self) -> usize {
+        self.x.rows()
+    }
+
+    fn active(&self) -> &[bool] {
+        &self.active
+    }
+
+    fn step(&mut self) -> Result<OrderStep> {
+        self.engine.order_step(&mut self.x, &mut self.active)
+    }
+
+    fn reset(&mut self, data: &Mat) -> Result<()> {
+        if (data.rows(), data.cols()) != (self.x.rows(), self.x.cols()) {
+            return Err(Error::Shape(format!(
+                "session reset: panel is {}x{}, workspace is {}x{}",
+                data.rows(),
+                data.cols(),
+                self.x.rows(),
+                self.x.cols()
+            )));
+        }
+        self.x.as_mut_slice().copy_from_slice(data.as_slice());
+        self.active.fill(true);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Incremental workspace session.
+// ---------------------------------------------------------------------
+
+/// The reusable ordering workspace (see module docs): standardized
+/// column cache + persistent correlation matrix + entropy cache +
+/// packed-index scratch, updated in place after every step.
+///
+/// `workers == 1` gives the single-threaded restructured path
+/// (`VectorizedEngine`'s session); `workers > 1` tiles the entropy and
+/// pair sweeps, the cache residualization and the initial correlation
+/// build across the crate's worker pool (`ParallelEngine`'s session).
+pub struct IncrementalSession {
+    n: usize,
+    d: usize,
+    active: Vec<bool>,
+    /// Standardized column cache (entries of removed columns are stale).
+    cols: Vec<Vec<f64>>,
+    /// Persistent correlation matrix; rows/columns of removed variables
+    /// are stale, the active block is maintained by the closed-form
+    /// update.
+    corr: Mat,
+    /// Per-column entropy cache, refreshed once per step (the stateless
+    /// path recomputes entropies per engine call; the sequential
+    /// reference recomputes them per *pair*).
+    h: Vec<f64>,
+    /// Packed active indices, rebuilt per step into the same buffer.
+    idx: Vec<usize>,
+    workers: usize,
+    force_parallel: bool,
+}
+
+impl IncrementalSession {
+    /// Build the workspace: standardize every column once and compute
+    /// the full correlation matrix once. `workers == 1` keeps every
+    /// sweep serial; `force_parallel` disables the small-problem serial
+    /// fallback (tests and scaling benches).
+    pub fn new(data: &Mat, workers: usize, force_parallel: bool) -> Result<IncrementalSession> {
+        let (n, d) = (data.rows(), data.cols());
+        if d < 1 || n < 2 {
+            return Err(Error::InvalidArgument(format!(
+                "ordering session needs n ≥ 2 and d ≥ 1, got {n}x{d}"
+            )));
+        }
+        let mut s = IncrementalSession {
+            n,
+            d,
+            active: vec![true; d],
+            cols: vec![Vec::new(); d],
+            corr: Mat::zeros(d, d),
+            h: vec![0.0; d],
+            idx: Vec::with_capacity(d),
+            workers: workers.max(1),
+            force_parallel,
+        };
+        s.rebuild(data);
+        Ok(s)
+    }
+
+    /// Resolved worker count of the session's sweeps.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The cached correlation matrix (active block is live; rows and
+    /// columns of removed variables are stale). Exposed for the
+    /// session-state test suite.
+    pub fn corr(&self) -> &Mat {
+        &self.corr
+    }
+
+    /// The cached standardized column `i` (stale once `i` is removed).
+    /// Exposed for the session-state test suite.
+    pub fn cached_column(&self, i: usize) -> &[f64] {
+        &self.cols[i]
+    }
+
+    /// Score the active set from the workspace: refresh the entropy
+    /// cache (one fused pass per active column), then run the pair sweep
+    /// with the *cached* correlations — no per-pair dot.
+    pub fn scores(&mut self) -> Result<Vec<f64>> {
+        self.idx.clear();
+        self.idx.extend((0..self.d).filter(|&i| self.active[i]));
+        let m = self.idx.len();
+        if m == 0 {
+            return Ok(vec![INACTIVE_SCORE; self.d]);
+        }
+        if self.use_pool(m * self.n, MIN_PARALLEL_COL_WORK) {
+            let (cols, idx) = (&self.cols, &self.idx);
+            let hs = parallel_indexed(m, self.workers.min(m), |t| entropy_fused(&cols[idx[t]]));
+            for (t, hv) in hs.into_iter().enumerate() {
+                self.h[self.idx[t]] = hv;
+            }
+        } else {
+            for t in 0..m {
+                let i = self.idx[t];
+                self.h[i] = entropy_fused(&self.cols[i]);
+            }
+        }
+        let (cols, corr, h, idx) = (&self.cols, &self.corr, &self.h, &self.idx);
+        let diff = |a: usize, b: usize| {
+            let (ia, ib) = (idx[a], idx[b]);
+            pair_diff_with_rho(&cols[ia], &cols[ib], corr[(ia, ib)], h[ia], h[ib])
+        };
+        let pair_work = m * m.saturating_sub(1) / 2 * self.n;
+        let k = if m >= 2 && self.use_pool(pair_work, MIN_PARALLEL_PAIR_WORK) {
+            tiled_pair_sweep(m, self.workers, &diff)
+        } else {
+            accumulate_pair_diffs(m, &diff)
+        };
+        Ok(scatter_scores(self.d, &self.idx, &k))
+    }
+
+    /// Commit a choice: residualize the cache against `chosen`, update
+    /// the correlation matrix, deactivate it. The one public entry point
+    /// for callers that pick the root themselves (tests, external
+    /// selection policies) — it enforces the "root must still be active"
+    /// precondition the raw update relies on.
+    pub fn advance_with(&mut self, chosen: usize) -> Result<()> {
+        if chosen >= self.d || !self.active[chosen] {
+            return Err(Error::InvalidArgument(format!(
+                "cannot advance the session on inactive variable {chosen}"
+            )));
+        }
+        self.residualize_and_update(chosen);
+        self.active[chosen] = false;
+        Ok(())
+    }
+
+    /// Residualize the standardized cache in place against root `m` —
+    /// closed form `(c_j − ρ_jm·c_m)/√(1−ρ_jm²)` with the shared
+    /// ρ²-clamp — and update the cached correlation matrix analytically:
+    /// `ρ'_jk = (ρ_jk − ρ_jm·ρ_km)/√((1−ρ_jm²)(1−ρ_km²))`. One fused
+    /// O(n) pass per column plus an O(d²) matrix update, versus the
+    /// stateless path's per-step O(d·n) re-standardization and O(d²·n)
+    /// correlation dots.
+    ///
+    /// Private: calling it twice for the same root would rewrite the
+    /// workspace from its own stale row; [`advance_with`] is the checked
+    /// public entry point.
+    ///
+    /// [`advance_with`]: IncrementalSession::advance_with
+    fn residualize_and_update(&mut self, m: usize) {
+        debug_assert!(self.active[m], "residualizing against an inactive root");
+        let targets: Vec<usize> =
+            (0..self.d).filter(|&j| j != m && self.active[j]).collect();
+        if targets.is_empty() {
+            return;
+        }
+        // inverse denominators from the cached correlation row of m; the
+        // clamp matches `pair_diff` so collinear columns stay finite
+        let dinv: Vec<f64> = targets
+            .iter()
+            .map(|&j| {
+                let r = self.corr[(j, m)];
+                1.0 / (1.0 - (r * r).min(1.0)).sqrt().max(1e-12)
+            })
+            .collect();
+
+        // 1) cache update: one fused pass per column (standardized by
+        // construction — no mean/std sweeps)
+        let cm = std::mem::take(&mut self.cols[m]);
+        if self.use_pool(targets.len() * self.n, MIN_PARALLEL_COL_WORK) {
+            // take the target columns out so workers own disjoint buffers
+            let mut taken: Vec<(usize, Vec<f64>)> = targets
+                .iter()
+                .map(|&j| (j, std::mem::take(&mut self.cols[j])))
+                .collect();
+            let corr = &self.corr;
+            parallel_chunks_mut(&mut taken, self.workers, |start, chunk| {
+                for (off, (j, col)) in chunk.iter_mut().enumerate() {
+                    let r = corr[(*j, m)];
+                    let s = dinv[start + off];
+                    for (v, &cmv) in col.iter_mut().zip(&cm) {
+                        *v = (*v - r * cmv) * s;
+                    }
+                }
+            });
+            for (j, col) in taken {
+                self.cols[j] = col;
+            }
+        } else {
+            for (t, &j) in targets.iter().enumerate() {
+                let r = self.corr[(j, m)];
+                let s = dinv[t];
+                let col = &mut self.cols[j];
+                for (v, &cmv) in col.iter_mut().zip(&cm) {
+                    *v = (*v - r * cmv) * s;
+                }
+            }
+        }
+        self.cols[m] = cm;
+
+        // 2) closed-form correlation update over the remaining active
+        // block (row/column m is left stale on purpose). The clamp keeps
+        // later denominators well-defined when a pair collapses to
+        // collinearity.
+        for (ta, &ja) in targets.iter().enumerate() {
+            let ra = self.corr[(ja, m)];
+            for (tb, &jb) in targets.iter().enumerate().skip(ta + 1) {
+                let rb = self.corr[(jb, m)];
+                let v = ((self.corr[(ja, jb)] - ra * rb) * dinv[ta] * dinv[tb]).clamp(-1.0, 1.0);
+                self.corr[(ja, jb)] = v;
+                self.corr[(jb, ja)] = v;
+            }
+        }
+    }
+
+    /// Standardize every column into the cache and recompute the full
+    /// correlation matrix (once per fit; shared by `new` and `reset`).
+    fn rebuild(&mut self, data: &Mat) {
+        for c in 0..self.d {
+            let col = &mut self.cols[c];
+            col.clear();
+            col.extend((0..self.n).map(|r| data[(r, c)]));
+            stats::standardize(col);
+        }
+        let pair_work = self.d * self.d.saturating_sub(1) / 2 * self.n;
+        if self.d >= 2 && self.use_pool(pair_work, MIN_PARALLEL_PAIR_WORK) {
+            let n = self.n;
+            let rows = {
+                let cols = &self.cols;
+                parallel_indexed(self.d, self.workers.min(self.d), |a| {
+                    ((a + 1)..self.d)
+                        .map(|b| dot(&cols[a], &cols[b]) / n as f64)
+                        .collect::<Vec<f64>>()
+                })
+            };
+            for (a, row) in rows.into_iter().enumerate() {
+                for (off, v) in row.into_iter().enumerate() {
+                    let b = a + 1 + off;
+                    self.corr[(a, b)] = v;
+                    self.corr[(b, a)] = v;
+                }
+            }
+        } else {
+            for a in 0..self.d {
+                for b in (a + 1)..self.d {
+                    let v = dot(&self.cols[a], &self.cols[b]) / self.n as f64;
+                    self.corr[(a, b)] = v;
+                    self.corr[(b, a)] = v;
+                }
+            }
+        }
+        for i in 0..self.d {
+            self.corr[(i, i)] = 1.0;
+        }
+        self.active.fill(true);
+    }
+
+    fn use_pool(&self, work: usize, cutoff: usize) -> bool {
+        self.workers > 1 && (self.force_parallel || work >= cutoff)
+    }
+}
+
+impl OrderingSession for IncrementalSession {
+    fn remaining(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    fn rows(&self) -> usize {
+        self.n
+    }
+
+    fn active(&self) -> &[bool] {
+        &self.active
+    }
+
+    fn step(&mut self) -> Result<OrderStep> {
+        let scores = self.scores()?;
+        let chosen = argmax_active(&scores, &self.active)?;
+        self.advance_with(chosen)?;
+        Ok(OrderStep { chosen, scores })
+    }
+
+    fn reset(&mut self, data: &Mat) -> Result<()> {
+        if (data.rows(), data.cols()) != (self.n, self.d) {
+            return Err(Error::Shape(format!(
+                "session reset: panel is {}x{}, workspace is {}x{}",
+                data.rows(),
+                data.cols(),
+                self.n,
+                self.d
+            )));
+        }
+        self.rebuild(data);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lingam::engine::VectorizedEngine;
+    use crate::sim::{simulate_sem, SemSpec};
+    use crate::util::rng::Pcg64;
+
+    fn toy_panel(n: usize, d: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        simulate_sem(&SemSpec::layered(d, 2, 0.6), n, &mut rng).data
+    }
+
+    #[test]
+    fn first_step_scores_match_stateless_exactly() {
+        // before any residualization the session runs the same dots and
+        // sweeps as the stateless engine, in the same order: bitwise equal
+        let x = toy_panel(800, 7, 1);
+        let active = vec![true; 7];
+        let stateless = VectorizedEngine.scores(&x, &active).unwrap();
+        let mut session = IncrementalSession::new(&x, 1, false).unwrap();
+        let first = session.scores().unwrap();
+        assert_eq!(stateless, first);
+    }
+
+    #[test]
+    fn step_deactivates_and_reports_choice() {
+        let x = toy_panel(400, 5, 2);
+        let mut s = IncrementalSession::new(&x, 1, false).unwrap();
+        assert_eq!(s.remaining(), 5);
+        let step = s.step().unwrap();
+        assert!(!s.active()[step.chosen]);
+        assert_eq!(s.remaining(), 4);
+        assert_eq!(step.scores.len(), 5);
+    }
+
+    #[test]
+    fn advance_with_rejects_inactive() {
+        let x = toy_panel(100, 4, 3);
+        let mut s = IncrementalSession::new(&x, 1, false).unwrap();
+        s.advance_with(2).unwrap();
+        assert!(s.advance_with(2).is_err());
+        assert!(s.advance_with(9).is_err());
+    }
+
+    #[test]
+    fn reset_restores_a_fresh_workspace() {
+        let x = toy_panel(300, 5, 4);
+        let y = toy_panel(300, 5, 5);
+        let mut fresh = IncrementalSession::new(&y, 1, false).unwrap();
+        let mut reused = IncrementalSession::new(&x, 1, false).unwrap();
+        let _ = reused.step().unwrap();
+        let _ = reused.step().unwrap();
+        reused.reset(&y).unwrap();
+        assert_eq!(reused.remaining(), 5);
+        assert_eq!(fresh.scores().unwrap(), reused.scores().unwrap());
+    }
+
+    #[test]
+    fn reset_rejects_shape_mismatch() {
+        let x = toy_panel(300, 5, 6);
+        let mut s = IncrementalSession::new(&x, 1, false).unwrap();
+        assert!(s.reset(&toy_panel(300, 4, 6)).is_err());
+        assert!(s.reset(&toy_panel(200, 5, 6)).is_err());
+    }
+
+    #[test]
+    fn parallel_session_matches_serial_session() {
+        let x = toy_panel(600, 8, 7);
+        let mut serial = IncrementalSession::new(&x, 1, false).unwrap();
+        let mut par = IncrementalSession::new(&x, 4, true).unwrap();
+        for _ in 0..7 {
+            let a = serial.step().unwrap();
+            let b = par.step().unwrap();
+            assert_eq!(a.chosen, b.chosen);
+            for i in 0..8 {
+                let (sa, sb) = (a.scores[i], b.scores[i]);
+                if sa == INACTIVE_SCORE {
+                    assert_eq!(sb, INACTIVE_SCORE);
+                } else {
+                    assert!(
+                        (sa - sb).abs() < 1e-9 * (1.0 + sa.abs()),
+                        "i={i}: serial={sa} parallel={sb}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exhausted_session_scores_are_inactive() {
+        let x = toy_panel(100, 3, 8);
+        let mut s = IncrementalSession::new(&x, 1, false).unwrap();
+        for _ in 0..3 {
+            let _ = s.step().unwrap();
+        }
+        assert_eq!(s.remaining(), 0);
+        assert!(s.scores().unwrap().iter().all(|&v| v == INACTIVE_SCORE));
+        assert!(s.step().is_err());
+    }
+}

@@ -10,6 +10,7 @@
 use super::executor::{DeviceExecutor, HostArray};
 use super::registry::{ArtifactKind, ArtifactRegistry, Bucket};
 use crate::lingam::engine::{OrderStep, OrderingEngine, INACTIVE_SCORE};
+use crate::lingam::session::{OrderingSession, StatelessSession};
 use crate::linalg::Mat;
 use crate::util::{Error, Result};
 use std::sync::{Arc, Mutex};
@@ -168,6 +169,15 @@ impl OrderingEngine for XlaEngine {
             )));
         }
         let scores = Self::unpack_scores(outs[2].f32s()?, active);
+        // the artifact's argmax is NaN-safe (NaN rewrites to the INACTIVE
+        // sentinel), but an all-NaN k_list ties every entry and elects
+        // index 0; mirror the CPU engines' contract — degenerate panels
+        // surface as Err, never as an arbitrary silent choice
+        if scores[chosen].is_nan() {
+            return Err(Error::Runtime(format!(
+                "artifact chose variable {chosen} with a NaN score: degenerate panel"
+            )));
+        }
         let x_new = outs[0].f32s()?;
         let db = bucket.d;
         for r in 0..n {
@@ -179,5 +189,15 @@ impl OrderingEngine for XlaEngine {
         }
         active[chosen] = false;
         Ok(OrderStep { chosen, scores })
+    }
+
+    /// The XLA path adapts to the session API through the stateless
+    /// shim: its per-step state already lives on the device side (padded
+    /// upload buffers reused across iterations, see `Scratch`), and
+    /// each shim step is exactly one fused `order_step` artifact call —
+    /// so the fused hot path is preserved unchanged under
+    /// `DirectLingam::fit`'s session loop.
+    fn session<'a>(&'a self, data: &Mat) -> Result<Box<dyn OrderingSession + 'a>> {
+        Ok(Box::new(StatelessSession::new(self, data)))
     }
 }

@@ -6,6 +6,7 @@
 //! engines, benches) free to share a cheap cloneable handle. Jobs are
 //! plain host arrays in, plain host arrays out.
 
+#[cfg(feature = "xla")]
 use super::device::Device;
 use crate::util::{Error, Result};
 use std::path::PathBuf;
@@ -57,6 +58,9 @@ impl OutValue {
     }
 }
 
+// without the xla feature the consuming side (device_loop) is compiled
+// out, so the fields are written but never read
+#[cfg_attr(not(feature = "xla"), allow(dead_code))]
 struct Job {
     path: PathBuf,
     inputs: Vec<HostArray>,
@@ -103,6 +107,11 @@ pub struct DeviceExecutor {
 
 impl DeviceExecutor {
     /// Spawn the device thread (creates the PJRT CPU client on it).
+    ///
+    /// Without the `xla` crate feature there is no PJRT client to start;
+    /// the error surfaces through the same graceful-degradation paths
+    /// callers already use when artifacts or devices are missing.
+    #[cfg(feature = "xla")]
     pub fn start() -> Result<Arc<DeviceExecutor>> {
         let (tx, rx) = mpsc::channel::<Msg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
@@ -116,6 +125,17 @@ impl DeviceExecutor {
             .recv()
             .map_err(|_| Error::Runtime("device thread died during init".into()))??;
         Ok(Arc::new(DeviceExecutor { tx: Mutex::new(tx), stats, _thread: Some(thread) }))
+    }
+
+    /// See the `xla`-feature variant above.
+    #[cfg(not(feature = "xla"))]
+    pub fn start() -> Result<Arc<DeviceExecutor>> {
+        Err(Error::Runtime(
+            "alingam was built without the `xla` feature: the PJRT runtime is \
+             unavailable (rebuild with `cargo build --features xla` to execute \
+             AOT artifacts)"
+                .into(),
+        ))
     }
 
     /// Execute an artifact; blocks until the result is back on the host.
@@ -152,6 +172,7 @@ impl Drop for DeviceExecutor {
     }
 }
 
+#[cfg(feature = "xla")]
 fn device_loop(
     rx: mpsc::Receiver<Msg>,
     ready: mpsc::Sender<Result<()>>,
@@ -184,6 +205,7 @@ fn device_loop(
     }
 }
 
+#[cfg(feature = "xla")]
 fn run_job(device: &mut Device, job: &Job, stats: &DeviceStats) -> Result<Vec<OutValue>> {
     let mut literals = Vec::with_capacity(job.inputs.len());
     let mut up = 0usize;

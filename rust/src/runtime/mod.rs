@@ -13,6 +13,11 @@
 //! - [`engine`] — `XlaEngine`: the `OrderingEngine` backed by the fused
 //!   `order_step` artifact (the repo's accelerated path).
 
+// The PJRT client wrapper is the only module that touches the `xla`
+// crate; without the `xla` feature it is compiled out and
+// `DeviceExecutor::start` reports the runtime as unavailable (every
+// caller already degrades gracefully when artifacts/devices are absent).
+#[cfg(feature = "xla")]
 pub mod device;
 pub mod engine;
 pub mod executor;

@@ -38,6 +38,7 @@ pub enum Error {
     Parse(String),
 }
 
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

@@ -2,9 +2,11 @@
 //! over an index range, results returned in index order.
 //!
 //! Used by `coordinator::sweep::parallel_map` (multi-seed experiment
-//! fan-out) and by `lingam::parallel::ParallelEngine` (pair-loop tiling
-//! and parallel residualization), so there is a single pool
-//! implementation to audit. Workers batch their `(index, value)` results
+//! fan-out), by `lingam::parallel::ParallelEngine` (pair-loop tiling
+//! and parallel residualization) and by the `lingam::session` workspace
+//! sweeps (entropy refresh, correlation build, and — via
+//! [`parallel_chunks_mut`] — the in-place cache residualization), so
+//! there is a single pool implementation to audit. Workers batch their `(index, value)` results
 //! locally and hand them back through their join handles; the caller
 //! places them by index, which makes the output — and any fold the
 //! caller runs over it — deterministic regardless of which worker
@@ -48,6 +50,32 @@ where
     out.into_iter().map(|v| v.expect("every index claimed by a worker")).collect()
 }
 
+/// Run `f(start_index, chunk)` over contiguous chunks of `items`, one
+/// chunk per worker — the in-place mutation counterpart of
+/// [`parallel_indexed`]. The partition is static (per-item cost should
+/// be roughly uniform, as it is for the ordering session's equal-length
+/// column updates), chunks are disjoint `&mut` slices so no locking is
+/// needed, and the result is deterministic because each item is written
+/// by exactly one worker. A worker panic propagates to the caller.
+pub fn parallel_chunks_mut<T, F>(items: &mut [T], workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return;
+    }
+    let workers = workers.clamp(1, n);
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        let f = &f;
+        for (w, slice) in items.chunks_mut(chunk).enumerate() {
+            scope.spawn(move || f(w * chunk, slice));
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -68,5 +96,25 @@ mod tests {
     #[test]
     fn more_workers_than_items() {
         assert_eq!(parallel_indexed(2, 16, |i| i), vec![0, 1]);
+    }
+
+    #[test]
+    fn chunks_mut_covers_every_item_once() {
+        for workers in [1, 2, 3, 8, 64] {
+            let mut items: Vec<usize> = (0..37).collect();
+            parallel_chunks_mut(&mut items, workers, |start, chunk| {
+                for (off, v) in chunk.iter_mut().enumerate() {
+                    assert_eq!(*v, start + off, "start index mismatch");
+                    *v += 100;
+                }
+            });
+            assert_eq!(items, (100..137).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn chunks_mut_empty_input() {
+        let mut items: Vec<u8> = Vec::new();
+        parallel_chunks_mut(&mut items, 4, |_, _| panic!("no chunks expected"));
     }
 }

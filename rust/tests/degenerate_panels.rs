@@ -11,9 +11,21 @@
 //!   overflowed the affected scores to −∞ and fed the panic above),
 //! - `stats::quantile` panicking via `partial_cmp().unwrap()` on NaN
 //!   (exercised in `stats`' own tests; it sits under `median_sq_dist`).
+//!
+//! The same hardening is mirrored on the Python/XLA side
+//! (`python/compile/kernels/`): the Pallas HR kernel and the jnp oracle
+//! clamp ρ² to ≤ 1 *before* forming `1 − ρ²` (the analogue of the Rust
+//! pair-kernel clamp), and the AOT `order_step` graph routes its on-device
+//! argmax through a NaN-safe rewrite (`ref.safe_argmax`) so a NaN-poisoned
+//! k_list can never elect a variable — regenerate artifacts with
+//! `make artifacts` to pick the guards up; `python/tests/test_kernel.py`
+//! covers both. The incremental ordering session inherits the guards
+//! through the shared closed forms (its ρ²-clamp matches `pair_diff`);
+//! `sessions_stay_finite_on_degenerate_panels` below pins that.
 
 use alingam::lingam::{
-    DirectLingam, OrderingEngine, ParallelEngine, SequentialEngine, VectorizedEngine,
+    DirectLingam, OrderingEngine, OrderingSession, ParallelEngine, SequentialEngine,
+    VectorizedEngine,
 };
 use alingam::linalg::Mat;
 use alingam::util::rng::Pcg64;
@@ -134,6 +146,37 @@ fn all_constant_panel_never_panics() {
             "all-constant panel: engine {} should not produce a fit",
             eng.name()
         );
+    }
+}
+
+#[test]
+fn sessions_stay_finite_on_degenerate_panels() {
+    // the stateful workspace path must uphold the same contract as the
+    // stateless engines: every step either a clean Err or NaN-free scores
+    let mut dup = base_panel(300, 5, 7);
+    let col = dup.col(1);
+    dup.set_col(3, &col);
+    let mut neg = base_panel(300, 4, 8);
+    let flipped: Vec<f64> = neg.col(0).iter().map(|&v| -2.5 * v).collect();
+    neg.set_col(3, &flipped);
+    for (label, x) in [("duplicated column", dup), ("negative duplicate", neg)] {
+        for eng in engines() {
+            let mut session = eng.session(&x).unwrap();
+            while session.remaining() > 1 {
+                match session.step() {
+                    Ok(step) => {
+                        for (i, &v) in step.scores.iter().enumerate() {
+                            assert!(
+                                !v.is_nan(),
+                                "{label}: engine {} session produced NaN at {i}",
+                                eng.name()
+                            );
+                        }
+                    }
+                    Err(_) => break, // a clean Err is an accepted outcome
+                }
+            }
+        }
     }
 }
 

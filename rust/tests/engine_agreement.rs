@@ -97,6 +97,52 @@ fn parallel_scores_match_vectorized_property() {
 }
 
 #[test]
+fn session_scores_match_stateless_scores_at_every_step_all_cpu_engines() {
+    // the session refactor's central contract: the incremental workspace
+    // path (standardized-cache residualization + closed-form correlation
+    // updates) reproduces the legacy from-scratch k_list at every
+    // ordering step, ≤ 1e-9 relative, for every CPU engine
+    let mut rng = Pcg64::seed_from_u64(99);
+    let ds = simulate_sem(&SemSpec::layered(10, 2, 0.5), 2_500, &mut rng);
+    let engines: Vec<Box<dyn OrderingEngine>> = vec![
+        Box::new(SequentialEngine),
+        Box::new(VectorizedEngine),
+        Box::new(ParallelEngine::new(4).force_parallel()),
+    ];
+    for engine in &engines {
+        let session_fit = DirectLingam::new().fit(&ds.data, engine.as_ref()).unwrap();
+        let legacy_fit = DirectLingam::new().fit_stateless(&ds.data, engine.as_ref()).unwrap();
+        assert_eq!(
+            session_fit.order,
+            legacy_fit.order,
+            "{}: session order diverged from stateless",
+            engine.name()
+        );
+        assert_eq!(session_fit.step_scores.len(), legacy_fit.step_scores.len());
+        for (step, (s, l)) in session_fit
+            .step_scores
+            .iter()
+            .zip(&legacy_fit.step_scores)
+            .enumerate()
+        {
+            for i in 0..s.len() {
+                if l[i] == f64::NEG_INFINITY {
+                    assert_eq!(s[i], f64::NEG_INFINITY, "{}: step {step} var {i}", engine.name());
+                    continue;
+                }
+                assert!(
+                    (s[i] - l[i]).abs() <= 1e-9 * (1.0 + l[i].abs()),
+                    "{}: step {step} var {i}: session={} stateless={}",
+                    engine.name(),
+                    s[i],
+                    l[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn three_cpu_engines_identical_orders_on_one_fit() {
     let mut rng = Pcg64::seed_from_u64(17);
     let ds = simulate_sem(&SemSpec::layered(9, 2, 0.5), 3_000, &mut rng);

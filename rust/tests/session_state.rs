@@ -1,0 +1,209 @@
+//! Session-state correctness: the incremental ordering workspace
+//! (`lingam::session::IncrementalSession`) must agree with a from-scratch
+//! recompute at every step of the fit.
+//!
+//! Two families of checks:
+//! - **per-step score agreement** — drive a session step by step while
+//!   mirroring the legacy stateless path (engine `scores` on a panel that
+//!   is residualized with `residualize_in_place`); every step's k_list
+//!   must match to ≤ 1e-9 relative, for the sequential, vectorized and
+//!   parallel engines;
+//! - **workspace invariants** — a property test interleaves
+//!   `advance_with` (residualize+update) steps with direct recomputation
+//!   and checks that the cached correlation matrix stays within 1e-8 of the
+//!   correlations computed from the cached columns by plain dots, and
+//!   that the cached columns stay standardized.
+
+use alingam::lingam::engine::{residualize_in_place, INACTIVE_SCORE};
+use alingam::lingam::{
+    DirectLingam, IncrementalSession, OrderingEngine, OrderingSession, ParallelEngine,
+    SequentialEngine, VectorizedEngine,
+};
+use alingam::linalg::Mat;
+use alingam::sim::{simulate_sem, SemSpec};
+use alingam::util::prop::props;
+use alingam::util::rng::Pcg64;
+
+fn toy_panel(n: usize, d: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    simulate_sem(&SemSpec::layered(d, 2, 0.6), n, &mut rng).data
+}
+
+/// Drive `engine.session(x)` to completion, asserting at every step that
+/// the session's k_list matches what the engine's stateless `scores`
+/// computes from scratch on the mirrored residual panel.
+fn assert_per_step_agreement(engine: &dyn OrderingEngine, x: &Mat, tol: f64) {
+    let d = x.cols();
+    let mut session = engine.session(x).unwrap();
+    let mut legacy_x = x.clone();
+    let mut legacy_active = vec![true; d];
+    for step_no in 0..(d - 1) {
+        let from_scratch = engine.scores(&legacy_x, &legacy_active).unwrap();
+        let step = session.step().unwrap();
+        for i in 0..d {
+            if !legacy_active[i] {
+                assert_eq!(
+                    step.scores[i],
+                    INACTIVE_SCORE,
+                    "{}: step {step_no} var {i}: inactive score leaked",
+                    engine.name()
+                );
+                continue;
+            }
+            let (s, f) = (step.scores[i], from_scratch[i]);
+            assert!(
+                (s - f).abs() <= tol * (1.0 + f.abs()),
+                "{}: step {step_no} var {i}: session={s} from-scratch={f}",
+                engine.name()
+            );
+        }
+        // both paths must choose the same root; mirror the legacy
+        // residualization for the next round
+        let legacy_best = alingam::lingam::engine::argmax_active(&from_scratch, &legacy_active)
+            .unwrap();
+        assert_eq!(
+            step.chosen,
+            legacy_best,
+            "{}: step {step_no}: session chose a different root",
+            engine.name()
+        );
+        residualize_in_place(&mut legacy_x, &legacy_active, step.chosen);
+        legacy_active[step.chosen] = false;
+    }
+    assert_eq!(session.remaining(), 1);
+}
+
+#[test]
+fn sequential_session_matches_from_scratch_per_step() {
+    // the shim path: exact same code per step, so agreement is trivial —
+    // this pins the shim's bookkeeping (active mask, panel mirroring)
+    assert_per_step_agreement(&SequentialEngine, &toy_panel(1_200, 7, 1), 1e-12);
+}
+
+#[test]
+fn vectorized_session_matches_from_scratch_per_step() {
+    assert_per_step_agreement(&VectorizedEngine, &toy_panel(2_000, 9, 2), 1e-9);
+}
+
+#[test]
+fn parallel_session_matches_from_scratch_per_step() {
+    // force_parallel: the toy panel sits below the serial-fallback
+    // cutoff and the pooled sweeps are what needs coverage
+    let engine = ParallelEngine::new(4).force_parallel();
+    assert_per_step_agreement(&engine, &toy_panel(1_500, 8, 3), 1e-9);
+}
+
+#[test]
+fn per_step_agreement_over_seeds() {
+    for seed in 10..15 {
+        assert_per_step_agreement(&VectorizedEngine, &toy_panel(800, 6, seed), 1e-9);
+    }
+}
+
+#[test]
+fn prop_cached_corr_tracks_direct_recompute() {
+    // interleaved residualize/update steps keep the cached correlation
+    // matrix within 1e-8 of correlations recomputed from the cached
+    // columns by plain dots, and the cache itself stays standardized
+    props("session corr cache vs direct", 15, |g| {
+        let d = g.usize_in(4, 10);
+        let n = g.usize_in(128, 512);
+        let seed = g.rng().next_u64();
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let ds = simulate_sem(&SemSpec::layered(d, 2, 0.6), n, &mut rng);
+        let workers = g.usize_in(1, 4);
+        let mut s = IncrementalSession::new(&ds.data, workers, workers > 1).unwrap();
+        let mut active: Vec<usize> = (0..d).collect();
+        while active.len() > 1 {
+            // remove a random active variable (not necessarily the
+            // argmax: the invariants must hold for any removal order)
+            let pick = g.usize_in(0, active.len() - 1);
+            let m = active.swap_remove(pick);
+            // residualize+update+deactivate in one committed step
+            s.advance_with(m).unwrap();
+            let corr = s.corr();
+            for (ai, &ja) in active.iter().enumerate() {
+                let ca = s.cached_column(ja);
+                // unit variance / zero mean up to closed-form rounding
+                let mean: f64 = ca.iter().sum::<f64>() / n as f64;
+                let var: f64 = ca.iter().map(|v| v * v).sum::<f64>() / n as f64;
+                assert!(mean.abs() < 1e-8, "col {ja}: cache mean drifted to {mean}");
+                assert!((var - 1.0).abs() < 1e-6, "col {ja}: cache var drifted to {var}");
+                for &jb in active.iter().skip(ai + 1) {
+                    let cb = s.cached_column(jb);
+                    let direct: f64 =
+                        ca.iter().zip(cb).map(|(&x, &y)| x * y).sum::<f64>() / n as f64;
+                    let cached = corr[(ja, jb)];
+                    assert!(
+                        (cached - direct).abs() < 1e-8,
+                        "pair ({ja},{jb}): cached ρ {cached} vs direct {direct}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_session_scores_match_stateless_on_random_masks() {
+    // a fresh session over a pre-residualized panel must agree with the
+    // stateless engine on that panel: the incremental path's state after
+    // k steps is equivalent to a stateless call on the k-times
+    // residualized panel
+    props("session vs stateless after random steps", 10, |g| {
+        let d = g.usize_in(4, 9);
+        let n = g.usize_in(256, 768);
+        let seed = g.rng().next_u64();
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let ds = simulate_sem(&SemSpec::layered(d, 2, 0.5), n, &mut rng);
+        let steps = g.usize_in(1, d - 2);
+        let mut session = IncrementalSession::new(&ds.data, 1, false).unwrap();
+        let mut x = ds.data.clone();
+        let mut active = vec![true; d];
+        for _ in 0..steps {
+            let scores = session.scores().unwrap();
+            let chosen =
+                alingam::lingam::engine::argmax_active(&scores, session.active()).unwrap();
+            session.advance_with(chosen).unwrap();
+            residualize_in_place(&mut x, &active, chosen);
+            active[chosen] = false;
+        }
+        let incremental = session.scores().unwrap();
+        let stateless = VectorizedEngine.scores(&x, &active).unwrap();
+        for i in 0..d {
+            if !active[i] {
+                assert_eq!(incremental[i], INACTIVE_SCORE);
+                continue;
+            }
+            assert!(
+                (incremental[i] - stateless[i]).abs() <= 1e-9 * (1.0 + stateless[i].abs()),
+                "var {i} after {steps} steps: incremental={} stateless={}",
+                incremental[i],
+                stateless[i]
+            );
+        }
+    });
+}
+
+#[test]
+fn session_reuse_across_resamples_matches_fresh_fits() {
+    // the bootstrap's pool pattern: reset + fit_session must equal a
+    // fresh fit on every resample
+    let base = toy_panel(600, 6, 21);
+    let mut rng = Pcg64::seed_from_u64(22);
+    let engine = VectorizedEngine;
+    let mut session = engine.session(&base).unwrap();
+    for _ in 0..4 {
+        let rows: Vec<usize> = (0..base.rows()).map(|_| rng.below(base.rows())).collect();
+        let sample = base.select_rows(&rows);
+        session.reset(&sample).unwrap();
+        let reused = DirectLingam::new().fit_session(&sample, session.as_mut()).unwrap();
+        let fresh = DirectLingam::new().fit(&sample, &VectorizedEngine).unwrap();
+        assert_eq!(reused.order, fresh.order);
+        assert_eq!(reused.step_scores, fresh.step_scores);
+    }
+}
+
+// (Degenerate-panel session coverage — duplicated/collinear columns
+// staying NaN-free through every engine's session — lives in
+// tests/degenerate_panels.rs::sessions_stay_finite_on_degenerate_panels.)
