@@ -1,0 +1,24 @@
+# Repo-level entry points. `make artifacts` is the one every Rust test,
+# bench and doc references: it AOT-lowers the JAX/Pallas computations to
+# the HLO-text artifacts the PJRT runtime executes (python/compile/aot.py).
+
+PYTHON ?= python3
+
+.PHONY: artifacts artifacts-full test test-python
+
+# Default shape buckets (CI + tests). Regenerates artifacts/manifest.txt;
+# the CI artifact-staleness job fails if the result differs from the
+# checked-in lowering.
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
+
+# Paper-scale buckets on top of the defaults (fig2 full-scale benches).
+artifacts-full:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts --full
+
+# Tier-1 verify (ROADMAP).
+test:
+	cd rust && cargo build --release && cargo test -q
+
+test-python:
+	cd python && $(PYTHON) -m pytest tests -q

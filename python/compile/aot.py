@@ -9,11 +9,21 @@ Emits one artifact per (computation, shape-bucket):
 
     artifacts/order_scores_n{N}_d{D}.hlo.txt
     artifacts/order_step_n{N}_d{D}.hlo.txt
+    artifacts/session_init_n{N}_d{D}.hlo.txt
+    artifacts/session_scores_n{N}_d{D}.hlo.txt
+    artifacts/session_update_n{N}_d{D}.hlo.txt
     artifacts/var_fit_t{T}_d{D}.hlo.txt
 
 plus ``artifacts/manifest.txt`` (one line per artifact:
 ``kind n d path``) that the Rust ArtifactRegistry reads to pick the
 smallest bucket covering a request.
+
+The stateless kinds are lowered with ``return_tuple=True`` (the loader
+downloads and decomposes the tuple on the host). The ``session_*``
+kinds return a **single array** and are lowered with
+``return_tuple=False``: a non-tuple root is what lets the Rust runtime
+keep the output resident on the device as one PJRT buffer and feed it
+straight back into the next step (kernels/session.py #state-layout).
 
 Usage: python -m compile.aot --out-dir ../artifacts [--full]
 """
@@ -26,6 +36,7 @@ import jax.numpy as jnp
 from jax._src.lib import xla_client as xc
 
 from compile import model
+from compile.kernels import session as session_kernels
 
 # Default shape buckets. Scores/step buckets: (n_samples, dims);
 # var_fit buckets: (t_len, dims). --full adds the larger sizes used by
@@ -50,12 +61,17 @@ VAR_BUCKETS_FULL = VAR_BUCKETS + [(4096, 128)]
 DTYPE = jnp.float32
 
 
-def to_hlo_text(fn, *specs):
-    """Lower a jax function at the given ShapeDtypeStructs to HLO text."""
+def to_hlo_text(fn, *specs, return_tuple=True):
+    """Lower a jax function at the given ShapeDtypeStructs to HLO text.
+
+    ``return_tuple=False`` is for the single-output session artifacts:
+    it leaves the root as the bare array so the PJRT output buffer can
+    stay device-resident instead of being decomposed on the host.
+    """
     lowered = jax.jit(fn).lower(*specs)
     mlir_mod = lowered.compiler_ir("stablehlo")
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
-        str(mlir_mod), use_tuple_args=False, return_tuple=True
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
     )
     return comp.as_hlo_text()
 
@@ -73,7 +89,9 @@ def main():
     ap.add_argument("--out-dir", default="../artifacts")
     ap.add_argument("--full", action="store_true", help="emit paper-scale buckets too")
     ap.add_argument(
-        "--only", default=None, help="emit a single kind (order_scores|order_step|var_fit)"
+        "--only",
+        default=None,
+        help="emit a single kind (order_scores|order_step|session|var_fit)",
     )
     args = ap.parse_args()
     os.makedirs(args.out_dir, exist_ok=True)
@@ -106,6 +124,24 @@ def main():
                 n,
                 d,
             )
+        if args.only in (None, "session"):
+            # device-resident session kinds: single-array outputs, lowered
+            # with a non-tuple root (see module docstring)
+            state = jax.ShapeDtypeStruct(session_kernels.state_shape(n, d), DTYPE)
+            for kind, fn, specs in [
+                ("session_init", model.session_init, (x, rm, cm)),
+                ("session_scores", model.session_scores, (state,)),
+                ("session_update", model.session_update, (state, cm)),
+            ]:
+                emit(
+                    args.out_dir,
+                    f"{kind}_n{n}_d{d}.hlo.txt",
+                    to_hlo_text(fn, *specs, return_tuple=False),
+                    manifest,
+                    kind,
+                    n,
+                    d,
+                )
 
     for t, d in var_buckets:
         if args.only in (None, "var_fit"):

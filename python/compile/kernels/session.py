@@ -1,0 +1,200 @@
+"""L1/L2 session kernels: the device-resident ordering workspace.
+
+The stateless artifacts (``order_scores`` / ``order_step``) re-upload the
+panel and re-derive its statistics on every DirectLiNGAM step. This
+module is the accelerated analogue of the Rust ``IncrementalSession``
+(rust/src/lingam/session.rs): the panel is standardized **once**
+(``session_init``) and the per-step work then runs against a packed
+device-resident state — the standardized column cache is residualized in
+place with the shared rho^2-clamped closed form and the correlation
+matrix is updated analytically in O(D^2), so only the score row and the
+chosen variable ever round-trip to the host.
+
+Packed state layout (a single f32 array, so the artifact outputs have a
+**non-tuple root** and the Rust runtime can keep them resident as one
+PJRT buffer — tuple outputs can only come back to the host):
+
+    state: [N + D + 2, D]
+      rows 0..N      standardized column cache xs (padded rows and
+                     inactive columns exactly 0)
+      rows N..N+D    correlation matrix rho (inactive rows/cols 0)
+      row  N+D       col_mask (still-active variables)
+      row  N+D+1     aux: element 0 = n_valid, rest 0
+
+Three computations, each AOT-lowered per shape bucket by ``aot.py``:
+
+- ``session_init(x, row_mask, col_mask) -> state``
+    The one panel upload of a fit: masked standardize + correlation
+    matmul, packed into the resident state.
+- ``session_scores(state) -> k_list``
+    Algorithm 1 over the cached workspace: entropies + the Pallas
+    residual-entropy sweep against the **cached** correlations (no
+    re-standardize, no correlation matmul). The [D] score row is the
+    only per-step download.
+- ``session_update(state, m_onehot) -> state``
+    Commit the host's choice: residualize the cache in place via
+    ``(c_j - rho_jm c_m) / sqrt(1 - rho_jm^2)`` (rho^2-clamped, the
+    Pallas update kernel) and update rho analytically,
+    ``rho'_jk = (rho_jk - rho_jm rho_km) / (denom_j denom_k)``. The [D]
+    one-hot is the only per-step upload.
+
+The argmax between ``session_scores`` and ``session_update`` happens on
+the *host* (Rust ``argmax_active``): it is O(D) on data that must be
+downloaded anyway, and it keeps the NaN-skip + lowest-index tie-break
+semantics bit-identical to the CPU engines.
+
+Why the closed forms are exact: the cached columns are standardized, so
+the residual ``c_j - rho_jm c_m`` has mean 0 and variance
+``1 - rho_jm^2``; dividing by the rho^2-clamped root re-standardizes it
+without touching sample data, and the correlation of two such residuals
+expands to the analytic update above. ``python/tests/test_session.py``
+pins the per-step agreement against the from-scratch ``order_step_ref``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import causal_order, ref
+
+# Rows appended after the cache and correlation blocks: col_mask + aux.
+META_ROWS = 2
+
+
+def state_shape(n, d):
+    """Packed state shape for an (n, d) bucket."""
+    return (n + d + META_ROWS, d)
+
+
+def pack_state(xs, rho, col_mask, n_valid):
+    """Assemble the packed state from its components."""
+    d = xs.shape[1]
+    aux = jnp.zeros((d,), xs.dtype).at[0].set(n_valid)
+    return jnp.concatenate(
+        [xs, rho.astype(xs.dtype), col_mask[None, :], aux[None, :]], axis=0
+    )
+
+
+def unpack_state(state):
+    """Split the packed state; shapes are static at lowering time."""
+    d = state.shape[1]
+    n = state.shape[0] - d - META_ROWS
+    xs = state[:n]
+    rho = state[n : n + d]
+    col_mask = state[n + d]
+    n_valid = state[n + d + 1, 0]
+    return xs, rho, col_mask, n_valid
+
+
+def session_init(x, row_mask, col_mask):
+    """Seed the workspace: standardize once, correlate once, pack.
+
+    x: [N, D] zero-padded panel; row_mask: [N]; col_mask: [D].
+    Returns state [N + D + 2, D].
+    """
+    xs, n_valid = ref.masked_standardize(x, row_mask, col_mask)
+    rho = (xs.T @ xs / n_valid) * (col_mask[:, None] * col_mask[None, :])
+    return pack_state(xs, rho, col_mask, n_valid)
+
+
+def session_scores(state):
+    """k_list over the cached workspace; inactive entries = ref.INACTIVE.
+
+    Identical composition to ``model.order_scores`` except that xs and
+    rho come from the resident state instead of being re-derived — the
+    entropy pass and the Pallas residual-entropy sweep are the only work
+    that still touches sample data (mirroring IncrementalSession).
+    """
+    xs, rho, col_mask, n_valid = unpack_state(state)
+    h = ref.column_entropies(xs, n_valid)
+    hr = causal_order.residual_entropy_matrix(xs, rho, n_valid)
+    diff = (h[None, :] + hr) - (h[:, None] + hr.T)
+    pen = jnp.minimum(0.0, diff) ** 2
+    k = -jnp.sum(pen * col_mask[None, :], axis=1)
+    return jnp.where(col_mask > 0, k, ref.INACTIVE)
+
+
+def _update_kernel(xs_ref, cm_ref, rho_m_ref, dinv_ref, keep_ref, out_ref):
+    """One j-tile of the closed-form cache residualization.
+
+    xs_ref:    [N, BJ] — standardized cache tile
+    cm_ref:    [N, 1]  — cached column of the chosen variable
+    rho_m_ref: [1, BJ] — rho[:, m] for the tile
+    dinv_ref:  [1, BJ] — 1 / residual_denom(rho[:, m])
+    keep_ref:  [1, BJ] — col_mask * (1 - onehot_m)
+    out_ref:   [N, BJ] — re-standardized residual tile
+    """
+    xs = xs_ref[...]
+    cm = cm_ref[...]
+    rho_m = rho_m_ref[...]
+    dinv = dinv_ref[...]
+    keep = keep_ref[...]
+    # padded rows stay exactly 0: xs and cm are both 0 there
+    out_ref[...] = (xs - cm * rho_m) * dinv * keep
+
+
+@functools.partial(jax.jit, static_argnames=("block_j",))
+def residualize_cache(xs, cm, rho_m, dinv, keep, *, block_j=None):
+    """Pallas sweep of the standardized-cache closed form. Shapes:
+    [N, D], [N], [D], [D], [D] -> [N, D]."""
+    n, d = xs.shape
+    bj = min(d, block_j or causal_order.DEFAULT_BLOCK_J)
+    assert d % bj == 0, f"D={d} must be a multiple of the j-tile {bj}"
+    return pl.pallas_call(
+        _update_kernel,
+        grid=(d // bj,),
+        in_specs=[
+            pl.BlockSpec((n, bj), lambda j: (0, j)),
+            pl.BlockSpec((n, 1), lambda j: (0, 0)),
+            pl.BlockSpec((1, bj), lambda j: (0, j)),
+            pl.BlockSpec((1, bj), lambda j: (0, j)),
+            pl.BlockSpec((1, bj), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((n, bj), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, d), xs.dtype),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(xs, cm.reshape(n, 1), rho_m.reshape(1, d), dinv.reshape(1, d), keep.reshape(1, d))
+
+
+def session_update(state, m_onehot):
+    """Commit a choice: residualize the cache, update rho, deactivate m.
+
+    state: [N + D + 2, D]; m_onehot: [D] with a single 1 at the chosen
+    (still-active) variable. Returns the next state.
+    """
+    xs, rho, col_mask, n_valid = unpack_state(state)
+    d = state.shape[1]
+    keep = col_mask * (1.0 - m_onehot)
+    rho_m = rho @ m_onehot  # column m of the cached correlations
+    # shared rho^2-clamped denominator (same guard as the HR kernel)
+    dinv = 1.0 / ref.residual_denom(rho_m)
+    cm = xs @ m_onehot
+
+    # 1) cache update: one fused elementwise pass (Pallas j-tiles)
+    xs2 = residualize_cache(xs, cm, rho_m, dinv, keep)
+
+    # 2) closed-form correlation update over the remaining active block;
+    # the clamp keeps later denominators well-defined when a pair
+    # collapses to collinearity. Removed/inactive rows and columns are
+    # zeroed (the CPU session leaves them stale; zeroing is equivalent —
+    # they are never consumed — and keeps the state deterministic).
+    rho2 = (rho - rho_m[:, None] * rho_m[None, :]) * dinv[:, None] * dinv[None, :]
+    rho2 = jnp.clip(rho2, -1.0, 1.0) * (keep[:, None] * keep[None, :])
+    # pin the active diagonal back to exactly 1 (float noise from the
+    # clamped denominators would otherwise drift it)
+    eye = jnp.eye(d, dtype=state.dtype)
+    rho2 = rho2 * (1.0 - eye) + eye * keep[None, :]
+
+    return pack_state(xs2, rho2, keep, n_valid)
+
+
+def session_step_host(state):
+    """Host-mirror of one full device-session step (tests + the Rust
+    host-mirror fallback's reference): scores -> NaN-safe argmax ->
+    update. Returns (state', m, k_list)."""
+    k_list = session_scores(state)
+    m = ref.safe_argmax(k_list)
+    m_onehot = jnp.zeros((state.shape[1],), state.dtype).at[m].set(1.0)
+    return session_update(state, m_onehot), m.astype(jnp.int32), k_list

@@ -1,6 +1,6 @@
 """L2: the JAX compute graph around the Pallas kernels.
 
-Three exported computations, each AOT-lowered to HLO text by ``aot.py``
+Six exported computations, each AOT-lowered to HLO text by ``aot.py``
 for a set of shape buckets and executed from the Rust coordinator via
 PJRT (python never runs on the request path):
 
@@ -11,9 +11,26 @@ PJRT (python never runs on the request path):
     Pallas kernel.
 
 - ``order_step(x, row_mask, col_mask) -> (x', m, k_list)``
-    The fused hot-path step: scores -> argmax -> residualize. One
-    artifact call per DirectLiNGAM iteration instead of two, halving
-    host<->device round trips (see EXPERIMENTS.md #Perf).
+    The fused *stateless* hot-path step: scores -> argmax ->
+    residualize. One artifact call per DirectLiNGAM iteration instead
+    of two, halving host<->device round trips (see EXPERIMENTS.md
+    #Perf). Kept as the legacy per-step path and the fusion-ablation
+    baseline.
+
+- ``session_init(x, row_mask, col_mask) -> state``
+  ``session_scores(state) -> k_list``
+  ``session_update(state, m_onehot) -> state``
+    The *device-resident* session (kernels/session.py): the panel is
+    uploaded and standardized once, then every step runs against the
+    packed resident state (standardized cache + correlation matrix,
+    residualized in place via the rho^2-clamped closed form with an
+    analytic O(D^2) correlation update). Per step only the [D] score
+    row comes down and the [D] one-hot choice goes up; the argmax runs
+    on the host between the two calls, matching the CPU engines'
+    NaN-skip / lowest-index semantics. Artifact names:
+    ``session_{init,scores,update}_n{N}_d{D}.hlo.txt`` — lowered with a
+    **non-tuple root** (single packed array out) so the Rust runtime
+    can hold the output as one resident PJRT buffer.
 
 - ``var_fit(series, row_mask) -> (m1, resid)``
     Masked VAR(1) least squares for VarLiNGAM (normal equations; the
@@ -25,6 +42,11 @@ import jax
 import jax.numpy as jnp
 
 from compile.kernels import causal_order, residualize, ref
+from compile.kernels.session import (  # noqa: F401  (AOT entry points)
+    session_init,
+    session_scores,
+    session_update,
+)
 
 
 def order_scores(x, row_mask, col_mask):

@@ -28,28 +28,57 @@ def artifacts():
     return lines
 
 
+TUPLE_KINDS = {"order_scores", "order_step", "var_fit"}
+SESSION_KINDS = {"session_init", "session_scores", "session_update"}
+
+
 def test_manifest_entries_exist_and_unique(artifacts):
     assert len(artifacts) >= 10
     names = [row[3] for row in artifacts]
     assert len(set(names)) == len(names), "duplicate artifact names"
     for kind, n, d, name in artifacts:
-        assert kind in {"order_scores", "order_step", "var_fit"}
+        assert kind in TUPLE_KINDS | SESSION_KINDS
         assert int(n) > 0 and int(d) > 0
         path = os.path.join(ART, name)
         assert os.path.exists(path), f"missing {name}"
         assert os.path.getsize(path) > 1_000, f"{name} suspiciously small"
 
 
+def test_session_kinds_cover_every_order_bucket(artifacts):
+    """The device-resident session needs all three kinds at one shape;
+    the Rust XlaSession refuses a bucket where any of them is missing."""
+    order = {(n, d) for kind, n, d, _ in artifacts if kind == "order_step"}
+    for kind in SESSION_KINDS:
+        have = {(n, d) for k, n, d, _ in artifacts if k == kind}
+        assert have == order, f"{kind} buckets {have} != order buckets {order}"
+
+
 def test_hlo_text_is_parsable_shape(artifacts):
-    for kind, n, d, name in artifacts[:6]:
+    for kind, n, d, name in artifacts:
         text = open(os.path.join(ART, name)).read()
         assert "ENTRY" in text, f"{name}: no ENTRY computation"
-        # root must be a tuple (return_tuple=True contract with the loader)
-        assert re.search(r"ROOT\s+\S+\s*=\s*\(", text), f"{name}: non-tuple root"
+        # the entry output signature lives in entry_computation_layout on
+        # the first line: `->(...)` is a tuple root, `->f32[...]` a bare
+        # array (sub-computations like fori_loop bodies have tuple ROOTs
+        # of their own, so grepping ROOT lines would misclassify)
+        sig = text.splitlines()[0].replace(" ", "")
+        if kind in TUPLE_KINDS:
+            # tuple root (return_tuple=True contract: the loader
+            # downloads and decomposes it on the host)
+            assert "->(" in sig, f"{name}: non-tuple entry output: {sig}"
+        else:
+            # session kinds must have a bare-array root: that is what
+            # lets the runtime keep the output buffer device-resident
+            assert "->f32[" in sig and "->(" not in sig, (
+                f"{name}: tuple entry output: {sig}"
+            )
         # declared parameter shape matches the bucket
-        if kind in ("order_scores", "order_step"):
+        if kind in ("order_scores", "order_step", "session_init"):
             assert f"f32[{n},{d}]" in text, f"{name}: missing panel param shape"
             assert f"f32[{n}]" in text and f"f32[{d}]" in text, f"{name}: missing masks"
+        if kind in SESSION_KINDS:
+            nd = int(n) + int(d) + 2  # packed state rows (session.META_ROWS)
+            assert f"f32[{nd},{d}]" in text, f"{name}: missing packed state shape"
 
 
 def test_no_custom_calls(artifacts):
@@ -67,3 +96,16 @@ def test_filename_matches_manifest_row(artifacts):
             assert name == f"var_fit_t{n}_d{d}.hlo.txt"
         else:
             assert name == f"{kind}_n{n}_d{d}.hlo.txt"
+
+
+def test_session_init_output_is_packed_state_shape(artifacts):
+    """entry_computation_layout pins the init output to [N+D+2, D] —
+    the packed layout the Rust XlaSession threads between steps."""
+    for kind, n, d, name in artifacts:
+        if kind != "session_init":
+            continue
+        first = open(os.path.join(ART, name)).readline()
+        nd = int(n) + int(d) + 2
+        assert f"->f32[{nd},{d}]" in first.replace(" ", ""), (
+            f"{name}: init output is not the packed state: {first.strip()}"
+        )

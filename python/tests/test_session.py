@@ -1,0 +1,137 @@
+"""Host-mirror tests of the device-resident session kernels
+(compile/kernels/session.py): per-step agreement with the from-scratch
+stateless reference, state-invariant preservation, and the degenerate
+panels the rho^2-clamp hardening covers.
+
+Deliberately hypothesis-free (same policy as test_degenerate.py): these
+guards must run everywhere the jax stack exists.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import ref, session
+
+
+def make_panel(n, d, n_valid, seed, coupling=0.7):
+    """Zero-padded panel with chain-dependent columns + masks."""
+    rng = np.random.default_rng(seed)
+    base = rng.uniform(0.0, 1.0, size=(n_valid, d))
+    for j in range(1, d):
+        base[:, j] += coupling * base[:, j - 1]
+    x = np.zeros((n, d), dtype=np.float32)
+    x[:n_valid, :] = base.astype(np.float32)
+    row_mask = np.zeros(n, dtype=np.float32)
+    row_mask[:n_valid] = 1.0
+    col_mask = np.ones(d, dtype=np.float32)
+    return jnp.asarray(x), jnp.asarray(row_mask), jnp.asarray(col_mask)
+
+
+def test_state_layout_roundtrip():
+    x, rm, cm = make_panel(64, 4, 50, 1)
+    state = session.session_init(x, rm, cm)
+    assert state.shape == session.state_shape(64, 4)
+    xs, rho, col_mask, n_valid = session.unpack_state(state)
+    assert xs.shape == (64, 4) and rho.shape == (4, 4)
+    assert float(n_valid) == 50.0
+    np.testing.assert_array_equal(np.asarray(col_mask), np.ones(4, np.float32))
+    # cache rows beyond n_valid are exactly 0 (masked-standardize invariant)
+    assert np.all(np.asarray(xs)[50:] == 0.0)
+    # correlation diagonal ~ 1 on active block
+    np.testing.assert_allclose(np.diag(np.asarray(rho)), 1.0, atol=1e-5)
+
+
+def test_first_scores_match_stateless_exactly():
+    # before any update the session runs the same masked standardize +
+    # correlation matmul as order_scores_ref: near-bitwise agreement
+    x, rm, cm = make_panel(128, 8, 100, 2)
+    state = session.session_init(x, rm, cm)
+    k_sess = np.asarray(session.session_scores(state))
+    k_ref = np.asarray(ref.order_scores_ref(x, rm, cm))
+    np.testing.assert_allclose(k_sess, k_ref, rtol=1e-6, atol=1e-6)
+
+
+def test_session_agrees_with_stateless_reference_per_step():
+    # the tentpole contract: the resident workspace (closed-form cache
+    # residualization + analytic correlation update) reproduces the
+    # from-scratch order_step_ref choice at every step, and its score
+    # rows agree to f32 precision
+    n, d = 256, 8
+    x, rm, cm = make_panel(n, d, 200, 3)
+    state = session.session_init(x, rm, cm)
+    xr, cmr = x, cm
+    for step in range(d - 1):
+        k_sess = np.asarray(session.session_scores(state))
+        k_ref = np.asarray(ref.order_scores_ref(xr, rm, cmr))
+        active = np.asarray(cmr) > 0
+        rel = np.max(
+            np.abs(k_sess - k_ref)[active] / (1.0 + np.abs(k_ref[active]))
+        )
+        assert rel < 1e-5, f"step {step}: score drift {rel}"
+        state, m_sess, _ = session.session_step_host(state)
+        xr, m_ref, _ = ref.order_step_ref(xr, rm, cmr)
+        assert int(m_sess) == int(m_ref), f"step {step}: choice diverged"
+        cmr = cmr.at[int(m_ref)].set(0.0)
+
+
+def test_update_preserves_state_invariants():
+    # after an update: chosen column zeroed everywhere, padded rows still
+    # zero, active diagonal exactly 1, correlations clamped to [-1, 1]
+    x, rm, cm = make_panel(96, 6, 80, 4)
+    state = session.session_init(x, rm, cm)
+    state, m, _ = session.session_step_host(state)
+    m = int(m)
+    xs, rho, col_mask, n_valid = session.unpack_state(state)
+    xs, rho, col_mask = map(np.asarray, (xs, rho, col_mask))
+    assert col_mask[m] == 0.0 and col_mask.sum() == 5.0
+    assert np.all(xs[:, m] == 0.0) and np.all(rho[m, :] == 0.0)
+    assert np.all(xs[80:, :] == 0.0), "padded rows drifted from 0"
+    assert np.all(np.abs(rho) <= 1.0)
+    for j in range(6):
+        if j != m:
+            assert rho[j, j] == 1.0, f"active diagonal drifted: rho[{j},{j}]"
+    # remaining active cache columns are re-standardized: mean 0, var 1
+    act = [j for j in range(6) if j != m]
+    means = xs[:, act].sum(axis=0) / 80.0
+    var = (xs[:, act] ** 2).sum(axis=0) / 80.0
+    np.testing.assert_allclose(means, 0.0, atol=1e-4)
+    np.testing.assert_allclose(var, 1.0, atol=1e-3)
+
+
+def test_exhaustion_runs_to_last_variable():
+    # driving d-1 steps leaves exactly one active variable and every
+    # score row along the way finite on the active set
+    x, rm, cm = make_panel(64, 5, 60, 5)
+    state = session.session_init(x, rm, cm)
+    for _ in range(4):
+        k = np.asarray(session.session_scores(state))
+        active = np.asarray(session.unpack_state(state)[2]) > 0
+        assert np.all(np.isfinite(k[active]))
+        state, _, _ = session.session_step_host(state)
+    assert float(np.asarray(session.unpack_state(state)[2]).sum()) == 1.0
+
+
+def test_degenerate_duplicated_column_stays_finite():
+    # column 3 duplicates column 1 (rho -> 1): the shared rho^2-clamp
+    # must keep both the scores and the updated state finite, and the
+    # elected variable must be active — mirroring test_degenerate.py on
+    # the session path
+    x, rm, cm = make_panel(128, 8, 100, 17)
+    x = x.at[:, 3].set(x[:, 1])
+    state = session.session_init(x, rm, cm)
+    for step in range(7):
+        col_mask = np.asarray(session.unpack_state(state)[2])
+        state, m, k = session.session_step_host(state)
+        m = int(m)
+        assert col_mask[m] == 1.0, f"step {step}: inactive choice {m}"
+        assert not np.any(np.isnan(np.asarray(k))), f"step {step}: NaN k_list"
+        assert np.all(np.isfinite(np.asarray(state))), f"step {step}: state inf"
+
+
+def test_inactive_columns_score_inactive():
+    x, rm, cm = make_panel(64, 6, 50, 6)
+    cm = cm.at[2].set(0.0)
+    state = session.session_init(x, rm, cm)
+    k = np.asarray(session.session_scores(state))
+    assert k[2] == np.float32(ref.INACTIVE)
+    assert np.all(np.isfinite(k[[0, 1, 3, 4, 5]]))

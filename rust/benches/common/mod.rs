@@ -31,3 +31,22 @@ pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
     let out = f();
     (out, t0.elapsed().as_secs_f64())
 }
+
+/// If `ALINGAM_BENCH_JSON` names a directory, also write the bench's
+/// tables there as `BENCH_<name>.json` (machine-readable mirror of the
+/// printed rows; the CI smoke steps upload these as workflow artifacts
+/// and ROADMAP records the numbers from them).
+#[allow(dead_code)] // not every bench emits tables
+pub fn emit_json(name: &str, tables: &[&alingam::util::table::Table]) {
+    let dir = match std::env::var("ALINGAM_BENCH_JSON") {
+        Ok(d) if !d.is_empty() => d,
+        _ => return,
+    };
+    let body: Vec<String> = tables.iter().map(|t| t.to_json()).collect();
+    let json = format!("{{\"bench\":\"{name}\",\"tables\":[{}]}}\n", body.join(","));
+    let path = std::path::Path::new(&dir).join(format!("BENCH_{name}.json"));
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("(bench tables written to {})", path.display()),
+        Err(e) => eprintln!("(bench json not written to {}: {e})", path.display()),
+    }
+}

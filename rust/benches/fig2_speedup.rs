@@ -22,19 +22,42 @@ use alingam::util::table::{f, secs, Table};
 /// Session (stateful workspace) vs stateless ordering, per engine: the
 /// incremental path must be no slower at d=32 and measurably faster
 /// (target ≥ 1.3×) at d ≥ 128, where the avoided O(d²·n) correlation
-/// dots dominate the per-step cost.
-fn session_vs_stateless(grid: &[(usize, usize)]) {
+/// dots dominate the per-step cost. The `xla` columns compare the
+/// device-resident session (one `session_init` upload, O(d) per step)
+/// against the legacy fused `order_step` loop (panel re-uploaded every
+/// step) — "—" when the engine or its artifacts are unavailable.
+fn session_vs_stateless(grid: &[(usize, usize)], xla: Option<&Engine>) -> Table {
     let vec_e = VectorizedEngine;
     let par_e = ParallelEngine::new(0);
+    let cell = |t: f64| if t.is_nan() { "—".to_string() } else { secs(t) };
+    let ratio = |a: f64, b: f64| {
+        if a.is_nan() || b.is_nan() {
+            "—".to_string()
+        } else {
+            f(a / b, 2)
+        }
+    };
     let mut t = Table::new(
         "stateful session vs legacy stateless ordering (full fit wall-clock)",
-        &["samples", "dims", "vec stateless", "vec session", "vec ×", "par stateless", "par session", "par ×"],
+        &[
+            "samples",
+            "dims",
+            "vec stateless",
+            "vec session",
+            "vec ×",
+            "par stateless",
+            "par session",
+            "par ×",
+            "xla stateless",
+            "xla session",
+            "xla ×",
+        ],
     );
     for &(n, d) in grid {
         let mut rng = Pcg64::seed_from_u64(29);
         let ds = simulate_sem(&SemSpec::layered(d, 2, 0.5), n, &mut rng);
         let time_fit = |run: &dyn Fn(&Mat) -> alingam::lingam::LingamFit| -> f64 {
-            let _ = run(&ds.data); // warm-up
+            let _ = run(&ds.data); // warm-up (XLA: compiles the bucket once)
             let (_, dt) = common::time(|| run(&ds.data));
             dt
         };
@@ -42,6 +65,15 @@ fn session_vs_stateless(grid: &[(usize, usize)]) {
         let t_vec_ss = time_fit(&|x| DirectLingam::new().fit(x, &vec_e).unwrap());
         let t_par_sl = time_fit(&|x| DirectLingam::new().fit_stateless(x, &par_e).unwrap());
         let t_par_ss = time_fit(&|x| DirectLingam::new().fit(x, &par_e).unwrap());
+        // device rows: stateless = fused order_step with a panel upload
+        // per step; session = device-resident XlaSession
+        let (t_xla_sl, t_xla_ss) = match xla {
+            Some(x) => (
+                time_fit(&|p| DirectLingam::new().fit_stateless(p, x.as_ordering()).unwrap()),
+                time_fit(&|p| DirectLingam::new().fit(p, x.as_ordering()).unwrap()),
+            ),
+            None => (f64::NAN, f64::NAN),
+        };
         t.row(&[
             n.to_string(),
             d.to_string(),
@@ -51,6 +83,9 @@ fn session_vs_stateless(grid: &[(usize, usize)]) {
             secs(t_par_sl),
             secs(t_par_ss),
             f(t_par_sl / t_par_ss, 2),
+            cell(t_xla_sl),
+            cell(t_xla_ss),
+            ratio(t_xla_sl, t_xla_ss),
         ]);
     }
     t.print();
@@ -58,8 +93,11 @@ fn session_vs_stateless(grid: &[(usize, usize)]) {
         "\nshape check: the session advantage grows with d — per step it trades\n\
          the stateless path's O(d·n) re-standardize + O(d²·n) correlation dots\n\
          for one O(d·n) fused cache update + an O(d²) closed-form matrix update;\n\
-         the remaining per-step cost (entropy + pair-score sweeps) is shared."
+         the remaining per-step cost (entropy + pair-score sweeps) is shared.\n\
+         On the xla rows the trade is host↔device traffic: O(steps) panel\n\
+         uploads collapse to one session_init."
     );
+    t
 }
 
 fn main() {
@@ -68,8 +106,13 @@ fn main() {
         "parallel implementation up to 32× over sequential",
     );
     if common::smoke() {
-        // CI smoke cell: one d=32 session-vs-stateless comparison
-        session_vs_stateless(&[(1_000, 32)]);
+        // CI smoke cell: one d=32 session-vs-stateless comparison,
+        // including the device-session row when artifacts are present
+        let xla = Engine::build(EngineChoice::Xla)
+            .map_err(|e| println!("(xla engine unavailable: {e})"))
+            .ok();
+        let t = session_vs_stateless(&[(1_000, 32)], xla.as_ref());
+        common::emit_json("fig2_speedup", &[&t]);
         return;
     }
     // (n, d, run_sequential): sequential is O(n d³) and becomes the
@@ -97,7 +140,17 @@ fn main() {
 
     let mut t = Table::new(
         "wall-clock per engine + speed-up over sequential",
-        &["samples", "dims", "sequential", "vectorized", "parallel", "xla", "vec ×", "par ×", "xla ×"],
+        &[
+            "samples",
+            "dims",
+            "sequential",
+            "vectorized",
+            "parallel",
+            "xla",
+            "vec ×",
+            "par ×",
+            "xla ×",
+        ],
     );
     // model constant for estimating skipped sequential cells
     let mut model_c: Option<f64> = None;
@@ -166,5 +219,6 @@ fn main() {
     } else {
         vec![(1_000, 32), (2_000, 48)]
     };
-    session_vs_stateless(&session_grid);
+    let ts = session_vs_stateless(&session_grid, xla.as_ref());
+    common::emit_json("fig2_speedup", &[&t, &ts]);
 }

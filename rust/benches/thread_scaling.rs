@@ -23,8 +23,15 @@ fn main() {
     println!("machine reports {} available cores\n", alingam::lingam::parallel::default_workers());
 
     let n = 2_000;
-    let dims: Vec<usize> =
-        if common::full_scale() { vec![32, 64, 128] } else { vec![32, 64] };
+    // CI smoke: the single d=32 cell (same cell ROADMAP's pending table
+    // records); full scale: the ParaLiNGAM-style d sweep
+    let dims: Vec<usize> = if common::smoke() {
+        vec![32]
+    } else if common::full_scale() {
+        vec![32, 64, 128]
+    } else {
+        vec![32, 64]
+    };
     let worker_grid = [1usize, 2, 4, 8];
 
     let mut t = Table::new(
@@ -60,6 +67,7 @@ fn main() {
         t.row(&row);
     }
     t.print();
+    common::emit_json("thread_scaling", &[&t]);
     println!(
         "\nshape check: the speed-up over vectorized should grow toward the\n\
          worker count as d grows (the pair loop is O(d²·n) while the merge\n\

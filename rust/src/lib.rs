@@ -34,10 +34,24 @@
 //! and pair-score sweeps still touch sample data, instead of the
 //! re-standardize + O(d²·n) correlation dots the stateless path pays on
 //! every step (ParaLiNGAM-style cross-iteration reuse). Engines without
-//! an incremental workspace (the sequential baseline, the fused XLA
-//! artifact) run under a stateless shim with their exact legacy per-step
-//! behavior, and `DirectLingam::fit_stateless` keeps the legacy loop as
-//! the measured baseline.
+//! an incremental workspace (the sequential baseline) run under a
+//! stateless shim with their exact legacy per-step behavior, and
+//! `DirectLingam::fit_stateless` keeps the legacy loop as the measured
+//! baseline.
+//!
+//! On the accelerated path the same lifecycle is **device-resident**
+//! ([`lingam::XlaSession`]): `session_init` uploads and standardizes
+//! the panel once into a packed on-device state (column cache +
+//! correlation matrix as one PJRT buffer), then each step downloads
+//! only the `session_scores` row, picks the root on the host (NaN-safe,
+//! same tie-breaking as the CPU engines) and uploads only the one-hot
+//! choice to `session_update`, which residualizes the cache and updates
+//! the correlations on the device. Artifact names:
+//! `session_{init,scores,update}_n{N}_d{D}.hlo.txt` next to the legacy
+//! `order_scores`/`order_step`/`var_fit` artifacts in `artifacts/`
+//! (regenerate with `make artifacts`). The stateless fused `order_step`
+//! remains as the measured baseline and as the fallback when a manifest
+//! predates the session kinds.
 //!
 //! On machines without an accelerator the default CPU path is the
 //! multi-threaded [`lingam::ParallelEngine`], which tiles the same

@@ -13,6 +13,10 @@
 //!   cache) with in-place incremental residualization and closed-form
 //!   O(d²) correlation updates between steps (ParaLiNGAM-style reuse),
 //!   plus the stateless compatibility shim.
+//! - [`xla_session`] — the device-resident counterpart: the same
+//!   workspace packed into one resident PJRT buffer, driven by the
+//!   `session_init`/`session_scores`/`session_update` artifacts; one
+//!   panel upload per fit, O(d) transfers per step.
 //! - [`parallel`] — the multi-threaded CPU engine: the restructured pair
 //!   kernel tiled across a work-stealing worker pool (ParaLiNGAM-style);
 //!   the default CPU engine for the apps. Its sessions tile the shared
@@ -29,6 +33,7 @@
 pub mod entropy;
 pub mod engine;
 pub mod session;
+pub mod xla_session;
 pub mod direct;
 pub mod fastica;
 pub mod ica;
@@ -40,5 +45,6 @@ pub use direct::{DirectLingam, LingamFit};
 pub use engine::{OrderingEngine, SequentialEngine, VectorizedEngine};
 pub use parallel::ParallelEngine;
 pub use session::{IncrementalSession, OrderingSession, StatelessSession};
+pub use xla_session::XlaSession;
 pub use ica::{IcaLingam, IcaLingamFit};
 pub use var::{VarLingam, VarLingamFit};

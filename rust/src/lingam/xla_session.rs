@@ -1,0 +1,246 @@
+//! `XlaSession` — the device-resident ordering session behind
+//! `XlaEngine`: the accelerated analogue of [`IncrementalSession`].
+//!
+//! The stateless XLA path re-uploads the zero-padded panel and
+//! re-derives its statistics on every `order_step` call — O(steps) panel
+//! transfers per fit. This session instead keeps the whole workspace
+//! *on the device* as one packed PJRT buffer
+//! (`python/compile/kernels/session.py` #state-layout) and drives it
+//! through three single-output artifacts:
+//!
+//! 1. `session_init` — the **one panel upload of the fit**: masked
+//!    standardize + correlation matmul, packed into the resident state.
+//! 2. `session_scores` — per step, the [d] score row is the **only
+//!    download**; the NaN-safe argmax then runs on the host
+//!    ([`argmax_active`]), which keeps tie-breaking and degenerate-panel
+//!    rejection bit-identical to the CPU engines.
+//! 3. `session_update` — per step, the [d] one-hot choice is the **only
+//!    upload**; on the device the standardized cache is residualized in
+//!    place via the shared ρ²-clamped closed form and the correlation
+//!    matrix updated analytically in O(d²), exactly the
+//!    `IncrementalSession` math in f32.
+//!
+//! Buffer lifetime: the state handle is owned by the executor's device
+//! thread; each `session_update` swaps the handle (old state freed, new
+//! state kept resident) and `Drop`/`reset` release it, so a bootstrap
+//! worker can park and reuse the session like any CPU workspace — a
+//! `reset` costs one fresh `session_init` upload for the new resample
+//! and nothing else.
+//!
+//! [`IncrementalSession`]: super::session::IncrementalSession
+//! [`argmax_active`]: super::engine::argmax_active
+
+use super::engine::{argmax_active, OrderStep, INACTIVE_SCORE};
+use super::session::OrderingSession;
+use crate::linalg::Mat;
+use crate::runtime::{
+    ArgValue, ArtifactKind, ArtifactRegistry, Bucket, BufferId, DeviceExecutor, HostArray,
+};
+use crate::util::{Error, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Resolve the session artifact triple for a panel shape: `best` buckets
+/// the init request, then the scores/update kinds must exist at exactly
+/// that shape (the packed state threads between them, so re-bucketing
+/// any one of them would desynchronize the layout).
+pub(crate) fn resolve_session_buckets(
+    registry: &ArtifactRegistry,
+    n: usize,
+    d: usize,
+) -> Result<(Bucket, Bucket, Bucket)> {
+    let init = registry.best(ArtifactKind::SessionInit, n, d)?.clone();
+    let scores = registry.exact(ArtifactKind::SessionScores, init.n, init.d)?.clone();
+    let update = registry.exact(ArtifactKind::SessionUpdate, init.n, init.d)?.clone();
+    Ok((init, scores, update))
+}
+
+/// A device-resident ordering session (see module docs).
+pub struct XlaSession {
+    executor: Arc<DeviceExecutor>,
+    init_path: PathBuf,
+    scores_path: PathBuf,
+    update_path: PathBuf,
+    /// Bucket (padded) shape.
+    nb: usize,
+    db: usize,
+    /// True panel extents.
+    n: usize,
+    d: usize,
+    active: Vec<bool>,
+    /// Handle to the packed on-device state (cache + correlations +
+    /// masks); swapped on every step.
+    state: Option<BufferId>,
+}
+
+impl XlaSession {
+    /// Open a session over a panel: resolve the artifact triple and
+    /// perform the fit's single panel upload (`session_init`).
+    pub fn new(
+        executor: Arc<DeviceExecutor>,
+        registry: &ArtifactRegistry,
+        data: &Mat,
+    ) -> Result<XlaSession> {
+        let (n, d) = (data.rows(), data.cols());
+        let (init, scores, update) = resolve_session_buckets(registry, n, d)?;
+        let (nb, db) = (init.n, init.d);
+        let mut session = XlaSession {
+            executor,
+            init_path: init.path,
+            scores_path: scores.path,
+            update_path: update.path,
+            nb,
+            db,
+            n,
+            d,
+            active: vec![true; d],
+            state: None,
+        };
+        session.upload_panel(data)?;
+        Ok(session)
+    }
+
+    /// The one host→device panel transfer: pad into the bucket shape and
+    /// run `session_init`, keeping the packed state resident. Also the
+    /// whole cost of a [`reset`](OrderingSession::reset).
+    fn upload_panel(&mut self, data: &Mat) -> Result<()> {
+        let mut x_pad = vec![0.0f32; self.nb * self.db];
+        for r in 0..self.n {
+            let src = data.row(r);
+            let dst = &mut x_pad[r * self.db..r * self.db + self.d];
+            for (c, out) in dst.iter_mut().enumerate() {
+                *out = src[c] as f32;
+            }
+        }
+        let mut row_mask = vec![0.0f32; self.nb];
+        for v in row_mask.iter_mut().take(self.n) {
+            *v = 1.0;
+        }
+        let mut col_mask = vec![0.0f32; self.db];
+        for v in col_mask.iter_mut().take(self.d) {
+            *v = 1.0;
+        }
+        let args = vec![
+            ArgValue::Host(HostArray::new(vec![self.nb as i64, self.db as i64], x_pad)),
+            ArgValue::Host(HostArray::vector(row_mask)),
+            ArgValue::Host(HostArray::vector(col_mask)),
+        ];
+        let fresh = self.executor.run_resident(self.init_path.clone(), args)?;
+        if let Some(old) = self.state.take() {
+            self.executor.free_buffer(old);
+        }
+        self.state = Some(fresh);
+        Ok(())
+    }
+}
+
+impl OrderingSession for XlaSession {
+    fn remaining(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    fn rows(&self) -> usize {
+        self.n
+    }
+
+    fn active(&self) -> &[bool] {
+        &self.active
+    }
+
+    fn step(&mut self) -> Result<OrderStep> {
+        let state = self
+            .state
+            .ok_or_else(|| Error::Runtime("session has no device state".into()))?;
+        // download half: the [db] score row (O(d) bytes)
+        let out = self
+            .executor
+            .run_fetch(self.scores_path.clone(), vec![ArgValue::Device(state)])?;
+        let padded = out.f32s()?;
+        if padded.len() < self.d {
+            return Err(Error::Runtime(format!(
+                "session_scores returned {} entries for d={}",
+                padded.len(),
+                self.d
+            )));
+        }
+        let scores: Vec<f64> = (0..self.d)
+            .map(|i| if self.active[i] { padded[i] as f64 } else { INACTIVE_SCORE })
+            .collect();
+        // host argmax: NaN-skip + lowest-index tie-break, and the
+        // degenerate-panel Err the CPU engines raise (an all-NaN/−∞ row
+        // never silently elects a variable)
+        let chosen = argmax_active(&scores, &self.active)?;
+        // upload half: the [db] one-hot choice (O(d) bytes); the state
+        // swap happens entirely on the device
+        let mut onehot = vec![0.0f32; self.db];
+        onehot[chosen] = 1.0;
+        let args = vec![ArgValue::Device(state), ArgValue::Host(HostArray::vector(onehot))];
+        let next = self.executor.run_resident(self.update_path.clone(), args)?;
+        self.executor.free_buffer(state);
+        self.state = Some(next);
+        self.active[chosen] = false;
+        Ok(OrderStep { chosen, scores })
+    }
+
+    fn reset(&mut self, data: &Mat) -> Result<()> {
+        if (data.rows(), data.cols()) != (self.n, self.d) {
+            return Err(Error::Shape(format!(
+                "session reset: panel is {}x{}, workspace is {}x{}",
+                data.rows(),
+                data.cols(),
+                self.n,
+                self.d
+            )));
+        }
+        self.upload_panel(data)?;
+        self.active.fill(true);
+        Ok(())
+    }
+}
+
+impl Drop for XlaSession {
+    fn drop(&mut self) {
+        if let Some(id) = self.state.take() {
+            self.executor.free_buffer(id);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn reg() -> ArtifactRegistry {
+        let text = "\
+session_init 1024 16 session_init_n1024_d16.hlo.txt
+session_scores 1024 16 session_scores_n1024_d16.hlo.txt
+session_update 1024 16 session_update_n1024_d16.hlo.txt
+session_init 4096 32 session_init_n4096_d32.hlo.txt
+session_scores 4096 32 session_scores_n4096_d32.hlo.txt
+";
+        ArtifactRegistry::parse(text, Path::new("/a")).unwrap()
+    }
+
+    #[test]
+    fn bucket_triple_resolves_at_one_shape() {
+        let (init, scores, update) = resolve_session_buckets(&reg(), 800, 10).unwrap();
+        assert_eq!((init.n, init.d), (1024, 16));
+        assert_eq!((scores.n, scores.d), (1024, 16));
+        assert_eq!((update.n, update.d), (1024, 16));
+    }
+
+    #[test]
+    fn incomplete_triple_is_rejected() {
+        // the 4096x32 bucket has no session_update artifact: the triple
+        // must fail rather than mix shapes
+        assert!(resolve_session_buckets(&reg(), 2000, 20).is_err());
+    }
+
+    #[test]
+    fn missing_kinds_error_with_inventory() {
+        let empty = ArtifactRegistry::parse("", Path::new("/a")).unwrap();
+        let e = resolve_session_buckets(&empty, 100, 8).unwrap_err();
+        assert!(matches!(e, Error::NoArtifact { .. }), "{e}");
+    }
+}

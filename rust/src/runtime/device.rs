@@ -51,6 +51,41 @@ impl Device {
         Ok(lit.to_tuple()?)
     }
 
+    /// Transfer a host literal to the device (the session path's
+    /// explicit-upload half; the output stays wherever the caller puts
+    /// it).
+    pub fn upload(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+
+    /// Execute a **single-output** artifact (non-tuple root — the
+    /// `session_*` kinds) entirely over device buffers; the returned
+    /// buffer is still resident and can feed the next execution.
+    pub fn execute_buffers(
+        &mut self,
+        path: &Path,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<xla::PjRtBuffer> {
+        let exe = self.executable(path)?;
+        let mut per_device = exe.execute_b(args)?;
+        if per_device.is_empty() || per_device[0].is_empty() {
+            return Err(Error::Runtime(format!(
+                "artifact {} produced no output buffer",
+                path.display()
+            )));
+        }
+        let mut outs = per_device.swap_remove(0);
+        if outs.len() != 1 {
+            return Err(Error::Runtime(format!(
+                "artifact {} produced {} outputs (session artifacts must have a \
+                 single non-tuple root)",
+                path.display(),
+                outs.len()
+            )));
+        }
+        Ok(outs.swap_remove(0))
+    }
+
     /// Number of cached executables.
     pub fn cached(&self) -> usize {
         self.cache.len()

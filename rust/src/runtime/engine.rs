@@ -1,16 +1,27 @@
 //! `XlaEngine` — the accelerated `OrderingEngine` backed by the AOT
 //! Pallas/JAX artifacts, executed on PJRT through the device thread.
 //!
-//! Per DirectLiNGAM iteration the engine makes **one** artifact call (the
-//! fused `order_step`: scores → argmax → residualize), uploading the
-//! zero-padded panel + masks and downloading the residualized panel, the
-//! chosen index and the k_list. Padded buffers are preallocated once per
-//! fit and reused across iterations (see EXPERIMENTS.md §Perf).
+//! Two per-step modes:
+//!
+//! - **Session (default)** — `session()` hands out the device-resident
+//!   [`XlaSession`]: one `session_init` panel upload per fit, then per
+//!   step only the score row comes down and the one-hot choice goes up
+//!   while the standardized cache and correlation matrix stay on the
+//!   device (`crate::lingam::xla_session`).
+//! - **Stateless** — `order_step` makes one fused artifact call per
+//!   iteration (scores → argmax → residualize), uploading the
+//!   zero-padded panel + masks and downloading the residualized panel,
+//!   the chosen index and the k_list. Padded buffers are preallocated
+//!   once per fit and reused across iterations (see EXPERIMENTS.md
+//!   §Perf). Kept as the measured baseline (`fit_stateless`), the
+//!   residency ablation (`with_resident(false)`) and the fallback for
+//!   manifests that predate the session kinds.
 
 use super::executor::{DeviceExecutor, HostArray};
 use super::registry::{ArtifactKind, ArtifactRegistry, Bucket};
 use crate::lingam::engine::{OrderStep, OrderingEngine, INACTIVE_SCORE};
 use crate::lingam::session::{OrderingSession, StatelessSession};
+use crate::lingam::xla_session::XlaSession;
 use crate::linalg::Mat;
 use crate::util::{Error, Result};
 use std::sync::{Arc, Mutex};
@@ -36,6 +47,11 @@ pub struct XlaEngine {
     /// artifact + host-side argmax/residualize — kept for the fusion
     /// ablation (`cargo bench --bench ablation_fusion`).
     fused: bool,
+    /// Serve [`OrderingEngine::session`] with the device-resident
+    /// [`XlaSession`] (panel uploaded once, state kept on device across
+    /// steps). `false` forces the stateless shim — the legacy per-step
+    /// path, kept as the measured baseline and the residency ablation.
+    resident: bool,
 }
 
 impl XlaEngine {
@@ -45,12 +61,25 @@ impl XlaEngine {
         if registry.of_kind(ArtifactKind::OrderStep).is_empty() {
             return Err(Error::Runtime("no order_step artifacts in manifest".into()));
         }
-        Ok(XlaEngine { executor, registry, scratch: Mutex::new(Scratch::default()), fused: true })
+        Ok(XlaEngine {
+            executor,
+            registry,
+            scratch: Mutex::new(Scratch::default()),
+            fused: true,
+            resident: true,
+        })
     }
 
     /// Toggle the fused order_step artifact (see field docs).
     pub fn with_fused(mut self, fused: bool) -> XlaEngine {
         self.fused = fused;
+        self
+    }
+
+    /// Toggle the device-resident session (see field docs). `false`
+    /// pins `session()` to the stateless shim.
+    pub fn with_resident(mut self, resident: bool) -> XlaEngine {
+        self.resident = resident;
         self
     }
 
@@ -191,13 +220,26 @@ impl OrderingEngine for XlaEngine {
         Ok(OrderStep { chosen, scores })
     }
 
-    /// The XLA path adapts to the session API through the stateless
-    /// shim: its per-step state already lives on the device side (padded
-    /// upload buffers reused across iterations, see `Scratch`), and
-    /// each shim step is exactly one fused `order_step` artifact call —
-    /// so the fused hot path is preserved unchanged under
-    /// `DirectLingam::fit`'s session loop.
+    /// The device-resident [`XlaSession`]: the panel is uploaded once
+    /// (`session_init`) and every step round-trips only the score row
+    /// and the chosen index (see `lingam::xla_session`). Falls back to
+    /// the stateless shim — one fused `order_step` artifact call per
+    /// step, panel re-uploaded each time — when the manifest predates
+    /// the session kinds or has no session bucket covering the shape
+    /// (the host-mirror fallback: `fit` degrades, never fails, on a
+    /// stale artifact dir).
     fn session<'a>(&'a self, data: &Mat) -> Result<Box<dyn OrderingSession + 'a>> {
+        if self.resident {
+            // any session-creation failure — no session bucket for this
+            // shape, a manifest row whose HLO file is missing/corrupt, a
+            // failed init compile — degrades to the shim rather than
+            // failing the fit: the shim revalidates the order_step path,
+            // so a genuinely broken device/artifact dir still surfaces
+            // as an error there instead of being masked here
+            if let Ok(s) = XlaSession::new(self.executor.clone(), &self.registry, data) {
+                return Ok(Box::new(s));
+            }
+        }
         Ok(Box::new(StatelessSession::new(self, data)))
     }
 }

@@ -3,8 +3,27 @@
 //!
 //! XLA wrapper types hold raw pointers and are not `Send`; confining them
 //! to one thread makes the rest of the system (coordinator workers,
-//! engines, benches) free to share a cheap cloneable handle. Jobs are
-//! plain host arrays in, plain host arrays out.
+//! engines, benches) free to share a cheap cloneable handle.
+//!
+//! Two execution surfaces:
+//!
+//! - [`DeviceExecutor::run`] — the legacy tuple-root artifacts
+//!   (`order_scores`/`order_step`/`var_fit`): plain host arrays in, the
+//!   whole decomposed output tuple downloaded back out.
+//! - [`DeviceExecutor::run_resident`] / [`DeviceExecutor::run_fetch`] —
+//!   the single-output session artifacts. Arguments mix host arrays
+//!   (uploaded for this call) with [`BufferId`] handles to buffers
+//!   already resident on the device; `run_resident` keeps the output on
+//!   the device and returns a new handle, `run_fetch` downloads it. The
+//!   device thread owns the handle table, so buffer lifetime is tied to
+//!   the thread exactly like every other XLA object; callers free a
+//!   handle with [`DeviceExecutor::free_buffer`] (the `XlaSession` drops
+//!   its state this way).
+//!
+//! Transfer accounting ([`DeviceStats`]) counts only real host↔device
+//! traffic: resident arguments and resident outputs move no bytes. The
+//! runtime-roundtrip suite asserts the session contract on top of this —
+//! one panel upload per fit, O(d) per step.
 
 #[cfg(feature = "xla")]
 use super::device::Device;
@@ -58,6 +77,33 @@ impl OutValue {
     }
 }
 
+/// Opaque handle to a buffer resident on the device (e.g. the packed
+/// ordering-session state). Owned by the device thread; obtained from
+/// [`DeviceExecutor::run_resident`] and released with
+/// [`DeviceExecutor::free_buffer`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BufferId(u64);
+
+/// One argument of a raw-root artifact execution: a host array uploaded
+/// for this call, or a buffer already resident on the device (no
+/// transfer).
+#[derive(Clone, Debug)]
+pub enum ArgValue {
+    Host(HostArray),
+    Device(BufferId),
+}
+
+/// Where a raw-root execution's single output went.
+// without the xla feature the producing side (run_raw_job) is compiled
+// out, so the variants are matched but never constructed
+#[cfg_attr(not(feature = "xla"), allow(dead_code))]
+enum RawOut {
+    /// Kept on the device; handle into the device thread's table.
+    Resident(BufferId),
+    /// Downloaded to the host.
+    Host(OutValue),
+}
+
 // without the xla feature the consuming side (device_loop) is compiled
 // out, so the fields are written but never read
 #[cfg_attr(not(feature = "xla"), allow(dead_code))]
@@ -67,8 +113,19 @@ struct Job {
     reply: mpsc::Sender<Result<Vec<OutValue>>>,
 }
 
+#[cfg_attr(not(feature = "xla"), allow(dead_code))]
+struct RawJob {
+    path: PathBuf,
+    args: Vec<ArgValue>,
+    /// `true` → keep the output resident; `false` → download it.
+    keep: bool,
+    reply: mpsc::Sender<Result<RawOut>>,
+}
+
 enum Msg {
     Run(Job),
+    RunRaw(RawJob),
+    Free(BufferId),
     Platform(mpsc::Sender<String>),
     Shutdown,
 }
@@ -78,12 +135,17 @@ enum Msg {
 pub struct DeviceStats {
     /// Artifact executions.
     pub calls: AtomicU64,
-    /// Bytes uploaded to the device.
+    /// Bytes uploaded to the device (host arguments only — resident
+    /// buffers passed by handle move nothing).
     pub bytes_up: AtomicU64,
-    /// Bytes downloaded.
+    /// Bytes downloaded (fetched outputs only — resident outputs move
+    /// nothing).
     pub bytes_down: AtomicU64,
     /// Nanoseconds spent inside execute (incl. transfers).
     pub exec_nanos: AtomicU64,
+    /// Device-resident buffers currently alive (leak canary for the
+    /// session tests).
+    pub buffers_live: AtomicU64,
 }
 
 impl DeviceStats {
@@ -94,6 +156,11 @@ impl DeviceStats {
             self.bytes_down.load(Ordering::Relaxed),
             self.exec_nanos.load(Ordering::Relaxed) as f64 / 1e9,
         )
+    }
+
+    /// Number of device-resident buffers currently alive.
+    pub fn live_buffers(&self) -> u64 {
+        self.buffers_live.load(Ordering::Relaxed)
     }
 }
 
@@ -149,6 +216,43 @@ impl DeviceExecutor {
         rx.recv().map_err(|_| Error::Runtime("device thread dropped reply".into()))?
     }
 
+    fn run_raw(&self, path: PathBuf, args: Vec<ArgValue>, keep: bool) -> Result<RawOut> {
+        let (reply, rx) = mpsc::channel();
+        {
+            let tx = self.tx.lock().expect("executor mutex");
+            tx.send(Msg::RunRaw(RawJob { path, args, keep, reply }))
+                .map_err(|_| Error::Runtime("device thread gone".into()))?;
+        }
+        rx.recv().map_err(|_| Error::Runtime("device thread dropped reply".into()))?
+    }
+
+    /// Execute a single-output ("raw root") artifact and keep its output
+    /// resident on the device. Returns the handle to pass as
+    /// [`ArgValue::Device`] in later calls.
+    pub fn run_resident(&self, path: PathBuf, args: Vec<ArgValue>) -> Result<BufferId> {
+        match self.run_raw(path, args, true)? {
+            RawOut::Resident(id) => Ok(id),
+            RawOut::Host(_) => Err(Error::Runtime("resident run returned host data".into())),
+        }
+    }
+
+    /// Execute a single-output artifact and download its output.
+    pub fn run_fetch(&self, path: PathBuf, args: Vec<ArgValue>) -> Result<OutValue> {
+        match self.run_raw(path, args, false)? {
+            RawOut::Host(v) => Ok(v),
+            RawOut::Resident(_) => Err(Error::Runtime("fetch run kept data resident".into())),
+        }
+    }
+
+    /// Release a device-resident buffer (fire-and-forget: the free is
+    /// queued behind any in-flight executions that still use it, so a
+    /// `Drop` impl can call this without blocking).
+    pub fn free_buffer(&self, id: BufferId) {
+        if let Ok(tx) = self.tx.lock() {
+            let _ = tx.send(Msg::Free(id));
+        }
+    }
+
     /// Platform description string.
     pub fn platform(&self) -> Result<String> {
         let (reply, rx) = mpsc::channel();
@@ -188,11 +292,21 @@ fn device_loop(
             return;
         }
     };
+    // the device thread owns every resident buffer; dropping the map on
+    // shutdown releases whatever sessions leaked
+    let mut buffers: std::collections::HashMap<BufferId, xla::PjRtBuffer> =
+        std::collections::HashMap::new();
+    let mut next_id: u64 = 1;
     while let Ok(msg) = rx.recv() {
         match msg {
             Msg::Shutdown => break,
             Msg::Platform(reply) => {
                 let _ = reply.send(device.platform());
+            }
+            Msg::Free(id) => {
+                if buffers.remove(&id).is_some() {
+                    stats.buffers_live.fetch_sub(1, Ordering::Relaxed);
+                }
             }
             Msg::Run(job) => {
                 let t0 = std::time::Instant::now();
@@ -201,7 +315,33 @@ fn device_loop(
                 stats.calls.fetch_add(1, Ordering::Relaxed);
                 let _ = job.reply.send(result);
             }
+            Msg::RunRaw(job) => {
+                let t0 = std::time::Instant::now();
+                let result = run_raw_job(&mut device, &mut buffers, &mut next_id, &job, &stats);
+                stats.exec_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                stats.calls.fetch_add(1, Ordering::Relaxed);
+                let _ = job.reply.send(result);
+            }
         }
+    }
+}
+
+/// Reshape a host array into an input literal.
+#[cfg(feature = "xla")]
+fn literal_of(a: &HostArray) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&a.data);
+    Ok(if a.dims.len() == 1 { lit } else { lit.reshape(&a.dims)? })
+}
+
+/// Decode a downloaded (non-tuple) literal into a host value.
+#[cfg(feature = "xla")]
+fn decode_literal(lit: &xla::Literal) -> Result<OutValue> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => Ok(OutValue::F32 { dims, data: lit.to_vec::<f32>()? }),
+        xla::ElementType::S32 => Ok(OutValue::I32 { dims, data: lit.to_vec::<i32>()? }),
+        other => Err(Error::Runtime(format!("unsupported output type {other:?}"))),
     }
 }
 
@@ -211,9 +351,7 @@ fn run_job(device: &mut Device, job: &Job, stats: &DeviceStats) -> Result<Vec<Ou
     let mut up = 0usize;
     for a in &job.inputs {
         up += a.data.len() * 4;
-        let lit = xla::Literal::vec1(&a.data);
-        let lit = if a.dims.len() == 1 { lit } else { lit.reshape(&a.dims)? };
-        literals.push(lit);
+        literals.push(literal_of(a)?);
     }
     stats.bytes_up.fetch_add(up as u64, Ordering::Relaxed);
 
@@ -221,20 +359,60 @@ fn run_job(device: &mut Device, job: &Job, stats: &DeviceStats) -> Result<Vec<Ou
     let mut values = Vec::with_capacity(outs.len());
     let mut down = 0usize;
     for lit in outs {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
         down += lit.size_bytes();
-        let v = match shape.ty() {
-            xla::ElementType::F32 => OutValue::F32 { dims, data: lit.to_vec::<f32>()? },
-            xla::ElementType::S32 => OutValue::I32 { dims, data: lit.to_vec::<i32>()? },
-            other => {
-                return Err(Error::Runtime(format!("unsupported output type {other:?}")));
-            }
-        };
-        values.push(v);
+        values.push(decode_literal(&lit)?);
     }
     stats.bytes_down.fetch_add(down as u64, Ordering::Relaxed);
     Ok(values)
+}
+
+/// Execute a single-output session artifact over a mix of fresh host
+/// uploads and already-resident buffers.
+#[cfg(feature = "xla")]
+fn run_raw_job(
+    device: &mut Device,
+    buffers: &mut std::collections::HashMap<BufferId, xla::PjRtBuffer>,
+    next_id: &mut u64,
+    job: &RawJob,
+    stats: &DeviceStats,
+) -> Result<RawOut> {
+    // upload every host argument first so the argument slice below can
+    // borrow the uploads and the resident table at the same time
+    let mut uploads = Vec::new();
+    let mut up = 0usize;
+    for a in &job.args {
+        if let ArgValue::Host(h) = a {
+            up += h.data.len() * 4;
+            uploads.push(device.upload(&literal_of(h)?)?);
+        }
+    }
+    stats.bytes_up.fetch_add(up as u64, Ordering::Relaxed);
+
+    let mut next_upload = uploads.iter();
+    let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(job.args.len());
+    for a in &job.args {
+        match a {
+            ArgValue::Host(_) => {
+                args.push(next_upload.next().expect("one upload per host arg"));
+            }
+            ArgValue::Device(id) => args.push(buffers.get(id).ok_or_else(|| {
+                Error::Runtime(format!("stale device buffer handle {id:?}"))
+            })?),
+        }
+    }
+
+    let out = device.execute_buffers(&job.path, &args)?;
+    if job.keep {
+        let id = BufferId(*next_id);
+        *next_id += 1;
+        buffers.insert(id, out);
+        stats.buffers_live.fetch_add(1, Ordering::Relaxed);
+        Ok(RawOut::Resident(id))
+    } else {
+        let lit = out.to_literal_sync()?;
+        stats.bytes_down.fetch_add(lit.size_bytes() as u64, Ordering::Relaxed);
+        Ok(RawOut::Host(decode_literal(&lit)?))
+    }
 }
 
 #[cfg(test)]

@@ -9,9 +9,14 @@
 //!   coordinator's stand-in for a CUDA stream. XLA handles are raw
 //!   pointers (!Send), so all device interaction is confined to this
 //!   thread; the rest of the system talks to it through channels, which
-//!   also makes the engine shareable across coordinator workers.
-//! - [`engine`] — `XlaEngine`: the `OrderingEngine` backed by the fused
-//!   `order_step` artifact (the repo's accelerated path).
+//!   also makes the engine shareable across coordinator workers. The
+//!   thread also owns the **resident-buffer table**: single-output
+//!   session artifacts can keep their output on the device (`BufferId`
+//!   handles) and feed it back into later calls without any transfer.
+//! - [`engine`] — `XlaEngine`: the `OrderingEngine` backed by the AOT
+//!   artifacts — the device-resident session triple by default
+//!   (`crate::lingam::XlaSession`), the fused `order_step` as the
+//!   stateless baseline/fallback.
 
 // The PJRT client wrapper is the only module that touches the `xla`
 // crate; without the `xla` feature it is compiled out and
@@ -24,7 +29,7 @@ pub mod executor;
 pub mod registry;
 
 pub use engine::XlaEngine;
-pub use executor::{DeviceExecutor, DeviceStats, HostArray, OutValue};
+pub use executor::{ArgValue, BufferId, DeviceExecutor, DeviceStats, HostArray, OutValue};
 pub use registry::{ArtifactKind, ArtifactRegistry, Bucket};
 
 /// Default artifact directory relative to the repo root.

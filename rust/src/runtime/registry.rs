@@ -15,6 +15,16 @@ pub enum ArtifactKind {
     OrderScores,
     /// `order_step(x, row_mask, col_mask) -> (x', m, k_list)`
     OrderStep,
+    /// `session_init(x, row_mask, col_mask) -> state` — the one panel
+    /// upload of a device-resident ordering session (non-tuple root;
+    /// the output buffer stays on the device).
+    SessionInit,
+    /// `session_scores(state) -> k_list` — the per-step score row, the
+    /// only per-step download.
+    SessionScores,
+    /// `session_update(state, m_onehot) -> state` — commit the host's
+    /// choice; the one-hot is the only per-step upload.
+    SessionUpdate,
     /// `var_fit(series, row_mask) -> (m1, resid)`
     VarFit,
 }
@@ -24,6 +34,9 @@ impl ArtifactKind {
         match self {
             ArtifactKind::OrderScores => "order_scores",
             ArtifactKind::OrderStep => "order_step",
+            ArtifactKind::SessionInit => "session_init",
+            ArtifactKind::SessionScores => "session_scores",
+            ArtifactKind::SessionUpdate => "session_update",
             ArtifactKind::VarFit => "var_fit",
         }
     }
@@ -32,6 +45,9 @@ impl ArtifactKind {
         match s {
             "order_scores" => Some(ArtifactKind::OrderScores),
             "order_step" => Some(ArtifactKind::OrderStep),
+            "session_init" => Some(ArtifactKind::SessionInit),
+            "session_scores" => Some(ArtifactKind::SessionScores),
+            "session_update" => Some(ArtifactKind::SessionUpdate),
             "var_fit" => Some(ArtifactKind::VarFit),
             _ => None,
         }
@@ -115,6 +131,26 @@ impl ArtifactRegistry {
             })
     }
 
+    /// The bucket of `kind` at exactly `(n, d)`. The three session kinds
+    /// must share one shape (the packed state threads between them), so
+    /// after [`best`](Self::best) picks the init bucket the scores and
+    /// update artifacts are resolved exactly, not re-bucketed.
+    pub fn exact(&self, kind: ArtifactKind, n: usize, d: usize) -> Result<&Bucket> {
+        self.buckets
+            .iter()
+            .find(|b| b.kind == kind && b.n == n && b.d == d)
+            .ok_or_else(|| Error::NoArtifact {
+                n,
+                d,
+                available: self
+                    .of_kind(kind)
+                    .iter()
+                    .map(|b| format!("{}x{}", b.n, b.d))
+                    .collect::<Vec<_>>()
+                    .join(","),
+            })
+    }
+
     pub fn len(&self) -> usize {
         self.buckets.len()
     }
@@ -134,6 +170,9 @@ order_step 256 8 order_step_n256_d8.hlo.txt
 order_step 1024 16 order_step_n1024_d16.hlo.txt
 order_step 4096 16 order_step_n4096_d16.hlo.txt
 order_step 4096 64 order_step_n4096_d64.hlo.txt
+session_init 1024 16 session_init_n1024_d16.hlo.txt
+session_scores 1024 16 session_scores_n1024_d16.hlo.txt
+session_update 1024 16 session_update_n1024_d16.hlo.txt
 var_fit 512 16 var_fit_t512_d16.hlo.txt
 ";
         ArtifactRegistry::parse(text, Path::new("/a")).unwrap()
@@ -173,8 +212,22 @@ var_fit 512 16 var_fit_t512_d16.hlo.txt
         assert!(ArtifactRegistry::parse("order_step 1 2", Path::new("/")).is_err());
         assert!(ArtifactRegistry::parse("nope 1 2 f", Path::new("/")).is_err());
         // comments and blanks ok
-        let ok = ArtifactRegistry::parse("# comment\n\norder_step 1 2 f\n", Path::new("/")).unwrap();
+        let ok =
+            ArtifactRegistry::parse("# comment\n\norder_step 1 2 f\n", Path::new("/")).unwrap();
         assert_eq!(ok.len(), 1);
+    }
+
+    #[test]
+    fn session_kinds_parse_and_resolve_exactly() {
+        let r = reg();
+        // best() buckets a request; the companion kinds must then be
+        // looked up at the exact same shape
+        let b = r.best(ArtifactKind::SessionInit, 800, 10).unwrap();
+        assert_eq!((b.n, b.d), (1024, 16));
+        assert!(r.exact(ArtifactKind::SessionScores, b.n, b.d).is_ok());
+        assert!(r.exact(ArtifactKind::SessionUpdate, b.n, b.d).is_ok());
+        // exact() does not re-bucket: a shape with no exact artifact errs
+        assert!(r.exact(ArtifactKind::SessionScores, 800, 10).is_err());
     }
 
     #[test]

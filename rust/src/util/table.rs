@@ -62,6 +62,40 @@ impl Table {
     pub fn print(&self) {
         print!("{}", self.render());
     }
+
+    /// Render as a small JSON object (no serde in the offline crate set):
+    /// `{"title": ..., "header": [...], "rows": [[...]]}` — the machine
+    /// half of the bench output; the CI smoke jobs upload these as
+    /// `BENCH_*.json` workflow artifacts.
+    pub fn to_json(&self) -> String {
+        let arr = |cells: &[String]| -> String {
+            let quoted: Vec<String> =
+                cells.iter().map(|c| format!("\"{}\"", json_escape(c))).collect();
+            format!("[{}]", quoted.join(","))
+        };
+        let rows: Vec<String> = self.rows.iter().map(|r| arr(r)).collect();
+        format!(
+            "{{\"title\":\"{}\",\"header\":{},\"rows\":[{}]}}",
+            json_escape(&self.title),
+            arr(&self.header),
+            rows.join(",")
+        )
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 /// Format a float with fixed decimals (bench output convention).
@@ -141,6 +175,17 @@ mod tests {
             .filter_map(|l| l.rsplit('|').next().and_then(|c| c.trim().parse::<usize>().ok()))
             .sum();
         assert_eq!(total, 6);
+    }
+
+    #[test]
+    fn json_shape_and_escaping() {
+        let mut t = Table::new("ti\"tle", &["a", "b"]);
+        t.row(&["x\\y".into(), "1".into()]);
+        let j = t.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"title\":\"ti\\\"tle\""), "{j}");
+        assert!(j.contains("\"header\":[\"a\",\"b\"]"), "{j}");
+        assert!(j.contains("\"rows\":[[\"x\\\\y\",\"1\"]]"), "{j}");
     }
 
     #[test]

@@ -3,21 +3,17 @@
 //! paper's central validation ("Both implementations produce the exact
 //! same result").
 //!
-//! Requires `make artifacts` (the XLA engine loads AOT artifacts).
+//! The CPU-engine tests run in the tier-1 suite; everything touching the
+//! XLA engine (which needs a live PJRT device plus `make artifacts`) is
+//! gated behind the `xla` feature.
 
 use alingam::apps::simbench::{agreement_sweep, fig3_spec};
 use alingam::lingam::{
     DirectLingam, OrderingEngine, ParallelEngine, SequentialEngine, VectorizedEngine,
 };
-use alingam::runtime::XlaEngine;
 use alingam::sim::{simulate_sem, SemSpec};
 use alingam::util::prop::props;
 use alingam::util::rng::Pcg64;
-
-fn xla_engine() -> XlaEngine {
-    XlaEngine::from_default_artifacts()
-        .expect("XLA engine unavailable — run `make artifacts` first")
-}
 
 #[test]
 fn sequential_vs_vectorized_ten_seeds() {
@@ -156,85 +152,151 @@ fn three_cpu_engines_identical_orders_on_one_fit() {
     assert!(alingam::metrics::adjacency_max_diff(&vec.adjacency, &par.adjacency) < 1e-8);
 }
 
-#[test]
-fn sequential_vs_xla_orders_agree() {
-    // the XLA path computes in f32; the validated property is the paper's:
-    // identical causal orders and matching recovery metrics
-    let engine = xla_engine();
-    let seeds: Vec<u64> = (0..5).collect();
-    let runs = agreement_sweep(&fig3_spec(), 4_000, &seeds, &SequentialEngine, &engine, 1);
-    let identical = runs.iter().filter(|r| r.orders_identical).count();
-    assert_eq!(
-        identical,
-        runs.len(),
-        "xla orders diverged on seeds {:?}",
-        runs.iter().filter(|r| !r.orders_identical).map(|r| r.seed).collect::<Vec<_>>()
-    );
-    for r in &runs {
-        assert_eq!(r.metrics_a.shd, r.metrics_b.shd, "seed {}", r.seed);
-        // adjacencies differ only by f32 rounding
-        assert!(r.adj_max_diff < 1e-3, "seed {}: {}", r.seed, r.adj_max_diff);
-    }
-}
+#[cfg(feature = "xla")]
+mod xla {
+    use super::*;
+    use alingam::lingam::{IncrementalSession, OrderingSession};
+    use alingam::runtime::XlaEngine;
 
-#[test]
-fn xla_scores_match_vectorized_scores() {
-    let engine = xla_engine();
-    let mut rng = Pcg64::seed_from_u64(42);
-    let ds = simulate_sem(&SemSpec::layered(8, 2, 0.5), 1_000, &mut rng);
-    let active = vec![true; 8];
-    let k_vec = VectorizedEngine.scores(&ds.data, &active).unwrap();
-    let k_xla = engine.scores(&ds.data, &active).unwrap();
-    for i in 0..8 {
-        let rel = (k_vec[i] - k_xla[i]).abs() / (1.0 + k_vec[i].abs());
-        assert!(rel < 1e-3, "i={i}: vec {} xla {}", k_vec[i], k_xla[i]);
+    fn xla_engine() -> XlaEngine {
+        XlaEngine::from_default_artifacts()
+            .expect("XLA engine unavailable — run `make artifacts` first")
     }
-}
 
-#[test]
-fn xla_engine_respects_masking_and_padding() {
-    let engine = xla_engine();
-    // n=777, d=7 forces zero-padding into a larger bucket
-    let mut rng = Pcg64::seed_from_u64(7);
-    let ds = simulate_sem(&SemSpec::layered(7, 2, 0.6), 777, &mut rng);
-    let mut active = vec![true; 7];
-    active[3] = false;
-    let k = engine.scores(&ds.data, &active).unwrap();
-    assert_eq!(k[3], f64::NEG_INFINITY);
-    let k_ref = VectorizedEngine.scores(&ds.data, &active).unwrap();
-    for i in 0..7 {
-        if i == 3 {
-            continue;
+    #[test]
+    fn sequential_vs_xla_orders_agree() {
+        // the XLA path computes in f32; the validated property is the
+        // paper's: identical causal orders and matching recovery metrics
+        let engine = xla_engine();
+        let seeds: Vec<u64> = (0..5).collect();
+        let runs = agreement_sweep(&fig3_spec(), 4_000, &seeds, &SequentialEngine, &engine, 1);
+        let identical = runs.iter().filter(|r| r.orders_identical).count();
+        assert_eq!(
+            identical,
+            runs.len(),
+            "xla orders diverged on seeds {:?}",
+            runs.iter().filter(|r| !r.orders_identical).map(|r| r.seed).collect::<Vec<_>>()
+        );
+        for r in &runs {
+            assert_eq!(r.metrics_a.shd, r.metrics_b.shd, "seed {}", r.seed);
+            // adjacencies differ only by f32 rounding
+            assert!(r.adj_max_diff < 1e-3, "seed {}: {}", r.seed, r.adj_max_diff);
         }
-        let rel = (k[i] - k_ref[i]).abs() / (1.0 + k_ref[i].abs());
-        assert!(rel < 1e-3, "i={i}: {} vs {}", k[i], k_ref[i]);
     }
-}
 
-#[test]
-fn full_fit_through_xla_recovers_truth() {
-    let engine = xla_engine();
-    let mut rng = Pcg64::seed_from_u64(3);
-    let ds = simulate_sem(&fig3_spec(), 4_000, &mut rng);
-    let fit = DirectLingam::new().fit(&ds.data, &engine).unwrap();
-    assert!(
-        alingam::graph::order_consistent(&ds.adjacency, &fit.order),
-        "xla order {:?} inconsistent with truth",
-        fit.order
-    );
-    let m = alingam::metrics::graph_metrics(&ds.adjacency, &fit.adjacency, 0.05);
-    assert!(m.f1 > 0.8, "f1 = {}", m.f1);
-}
+    #[test]
+    fn xla_scores_match_vectorized_scores() {
+        let engine = xla_engine();
+        let mut rng = Pcg64::seed_from_u64(42);
+        let ds = simulate_sem(&SemSpec::layered(8, 2, 0.5), 1_000, &mut rng);
+        let active = vec![true; 8];
+        let k_vec = VectorizedEngine.scores(&ds.data, &active).unwrap();
+        let k_xla = engine.scores(&ds.data, &active).unwrap();
+        for i in 0..8 {
+            let rel = (k_vec[i] - k_xla[i]).abs() / (1.0 + k_vec[i].abs());
+            assert!(rel < 1e-3, "i={i}: vec {} xla {}", k_vec[i], k_xla[i]);
+        }
+    }
 
-#[test]
-fn device_stats_accumulate() {
-    let engine = xla_engine();
-    let mut rng = Pcg64::seed_from_u64(9);
-    let ds = simulate_sem(&SemSpec::layered(6, 2, 0.6), 500, &mut rng);
-    let before = engine.executor().stats.snapshot();
-    let _ = DirectLingam::new().fit(&ds.data, &engine).unwrap();
-    let after = engine.executor().stats.snapshot();
-    assert!(after.0 > before.0, "no artifact calls recorded");
-    assert!(after.1 > before.1, "no upload bytes recorded");
-    assert!(after.3 > before.3, "no execute time recorded");
+    #[test]
+    fn xla_engine_respects_masking_and_padding() {
+        let engine = xla_engine();
+        // n=777, d=7 forces zero-padding into a larger bucket
+        let mut rng = Pcg64::seed_from_u64(7);
+        let ds = simulate_sem(&SemSpec::layered(7, 2, 0.6), 777, &mut rng);
+        let mut active = vec![true; 7];
+        active[3] = false;
+        let k = engine.scores(&ds.data, &active).unwrap();
+        assert_eq!(k[3], f64::NEG_INFINITY);
+        let k_ref = VectorizedEngine.scores(&ds.data, &active).unwrap();
+        for i in 0..7 {
+            if i == 3 {
+                continue;
+            }
+            let rel = (k[i] - k_ref[i]).abs() / (1.0 + k_ref[i].abs());
+            assert!(rel < 1e-3, "i={i}: {} vs {}", k[i], k_ref[i]);
+        }
+    }
+
+    #[test]
+    fn full_fit_through_xla_recovers_truth() {
+        let engine = xla_engine();
+        let mut rng = Pcg64::seed_from_u64(3);
+        let ds = simulate_sem(&fig3_spec(), 4_000, &mut rng);
+        let fit = DirectLingam::new().fit(&ds.data, &engine).unwrap();
+        assert!(
+            alingam::graph::order_consistent(&ds.adjacency, &fit.order),
+            "xla order {:?} inconsistent with truth",
+            fit.order
+        );
+        let m = alingam::metrics::graph_metrics(&ds.adjacency, &fit.adjacency, 0.05);
+        assert!(m.f1 > 0.8, "f1 = {}", m.f1);
+    }
+
+    #[test]
+    fn device_stats_accumulate() {
+        let engine = xla_engine();
+        let mut rng = Pcg64::seed_from_u64(9);
+        let ds = simulate_sem(&SemSpec::layered(6, 2, 0.6), 500, &mut rng);
+        let before = engine.executor().stats.snapshot();
+        let _ = DirectLingam::new().fit(&ds.data, &engine).unwrap();
+        let after = engine.executor().stats.snapshot();
+        assert!(after.0 > before.0, "no artifact calls recorded");
+        assert!(after.1 > before.1, "no upload bytes recorded");
+        assert!(after.3 > before.3, "no execute time recorded");
+    }
+
+    #[test]
+    fn device_session_agrees_with_incremental_session_per_step() {
+        // the device-resident XlaSession must make the same per-step
+        // choices as the CPU IncrementalSession on the agreement panels,
+        // with score rows equal to f32 precision — the accelerated
+        // analogue of session_scores_match_stateless_scores
+        let engine = xla_engine();
+        for seed in [11u64, 12, 13] {
+            let mut rng = Pcg64::seed_from_u64(seed);
+            let ds = simulate_sem(&SemSpec::layered(8, 2, 0.5), 2_000, &mut rng);
+            let mut dev = engine.session(&ds.data).unwrap();
+            let mut cpu = IncrementalSession::new(&ds.data, 1, false).unwrap();
+            for step in 0..7 {
+                let a = dev.step().unwrap();
+                let b = cpu.step().unwrap();
+                assert_eq!(
+                    a.chosen, b.chosen,
+                    "seed {seed} step {step}: device chose {} vs cpu {}",
+                    a.chosen, b.chosen
+                );
+                for i in 0..8 {
+                    let (sa, sb) = (a.scores[i], b.scores[i]);
+                    if sb == f64::NEG_INFINITY {
+                        assert_eq!(sa, f64::NEG_INFINITY, "seed {seed} step {step} var {i}");
+                        continue;
+                    }
+                    let rel = (sa - sb).abs() / (1.0 + sb.abs());
+                    assert!(
+                        rel < 1e-3,
+                        "seed {seed} step {step} var {i}: device {sa} cpu {sb}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn device_session_fit_matches_stateless_xla_fit() {
+        // residency must not change the answer: the session fit and the
+        // legacy stateless fused-step fit elect the same causal order
+        let engine = xla_engine();
+        let mut rng = Pcg64::seed_from_u64(21);
+        let ds = simulate_sem(&SemSpec::layered(8, 2, 0.5), 2_000, &mut rng);
+        let session_fit = DirectLingam::new().fit(&ds.data, &engine).unwrap();
+        let stateless_fit = DirectLingam::new().fit_stateless(&ds.data, &engine).unwrap();
+        assert_eq!(session_fit.order, stateless_fit.order, "residency changed the order");
+        assert!(
+            alingam::metrics::adjacency_max_diff(
+                &session_fit.adjacency,
+                &stateless_fit.adjacency
+            ) < 1e-8
+        );
+    }
 }

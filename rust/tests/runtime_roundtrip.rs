@@ -1,12 +1,13 @@
 //! Runtime integration: the AOT HLO artifacts load, compile and execute
-//! via PJRT, and their numerics match the Rust reference implementations.
+//! via PJRT, their numerics match the Rust reference implementations,
+//! and the device-resident session keeps its transfer contract (one
+//! panel upload per fit, O(d) per step).
 //!
-//! Requires `make artifacts`.
+//! Requires `make artifacts`. Everything that needs a live PJRT device
+//! is gated behind the `xla` feature (`cargo test --features xla`); the
+//! manifest checks below run in the plain tier-1 suite too.
 
-use alingam::lingam::var::var1_fit;
-use alingam::runtime::{artifact_dir, ArtifactKind, ArtifactRegistry, DeviceExecutor, HostArray};
-use alingam::sim::{simulate_var, VarSpec};
-use alingam::util::rng::Pcg64;
+use alingam::runtime::{artifact_dir, ArtifactKind, ArtifactRegistry};
 
 #[test]
 fn manifest_loads_and_covers_default_shapes() {
@@ -24,155 +25,287 @@ fn manifest_loads_and_covers_default_shapes() {
 }
 
 #[test]
-fn executor_reports_platform() {
-    let exec = DeviceExecutor::start().unwrap();
-    let p = exec.platform().unwrap();
-    assert!(p.to_lowercase().contains("cpu") || p.contains("Host"), "platform = {p}");
-}
-
-#[test]
-fn var_fit_artifact_matches_rust_var_fit() {
+fn manifest_session_triples_complete() {
+    // every order bucket must carry the full session triple at the same
+    // shape, or XlaSession would fall back to the stateless shim there
     let reg = ArtifactRegistry::load(&artifact_dir()).expect("run `make artifacts`");
-    let exec = DeviceExecutor::start().unwrap();
-
-    let spec = VarSpec { dim: 12, ..Default::default() };
-    let mut rng = Pcg64::seed_from_u64(5);
-    let ds = simulate_var(&spec, 400, &mut rng);
-    let (t, d) = (ds.data.rows(), ds.data.cols());
-
-    // rust reference
-    let (m1_ref, _) = var1_fit(&ds.data).unwrap();
-
-    // artifact path: pad into the bucket
-    let bucket = reg.best(ArtifactKind::VarFit, t, d).unwrap();
-    let (tb, db) = (bucket.n, bucket.d);
-    let mut series = vec![0.0f32; tb * db];
-    for r in 0..t {
-        for c in 0..d {
-            series[r * db + c] = ds.data[(r, c)] as f32;
-        }
-    }
-    let mut row_mask = vec![0.0f32; tb];
-    for v in row_mask.iter_mut().take(t) {
-        *v = 1.0;
-    }
-    let outs = exec
-        .run(
-            bucket.path.clone(),
-            vec![
-                HostArray::new(vec![tb as i64, db as i64], series),
-                HostArray::vector(row_mask),
-            ],
-        )
-        .unwrap();
-    let m1_pad = outs[0].f32s().unwrap();
-    for i in 0..d {
-        for j in 0..d {
-            let a = m1_ref[(i, j)];
-            let b = m1_pad[i * db + j] as f64;
-            assert!(
-                (a - b).abs() < 1e-3 * (1.0 + a.abs()),
-                "M1[{i},{j}]: rust {a} vs artifact {b}"
-            );
-        }
+    let inits = reg.of_kind(ArtifactKind::SessionInit);
+    assert!(!inits.is_empty(), "no session_init artifacts in manifest");
+    for b in inits {
+        assert!(
+            reg.exact(ArtifactKind::SessionScores, b.n, b.d).is_ok(),
+            "no session_scores at {}x{}",
+            b.n,
+            b.d
+        );
+        assert!(
+            reg.exact(ArtifactKind::SessionUpdate, b.n, b.d).is_ok(),
+            "no session_update at {}x{}",
+            b.n,
+            b.d
+        );
     }
 }
 
-#[test]
-fn executable_cache_compiles_once() {
-    let reg = ArtifactRegistry::load(&artifact_dir()).expect("run `make artifacts`");
-    let exec = DeviceExecutor::start().unwrap();
-    let bucket = reg.best(ArtifactKind::OrderScores, 100, 8).unwrap();
-
-    let run = |exec: &DeviceExecutor| {
-        let x = vec![0.5f32; bucket.n * bucket.d];
-        let mut rm = vec![0.0f32; bucket.n];
-        rm[..50].iter_mut().for_each(|v| *v = 1.0);
-        let cm = vec![1.0f32; bucket.d];
-        exec.run(
-            bucket.path.clone(),
-            vec![
-                HostArray::new(vec![bucket.n as i64, bucket.d as i64], x),
-                HostArray::vector(rm),
-                HostArray::vector(cm),
-            ],
-        )
-        .unwrap()
+#[cfg(feature = "xla")]
+mod with_device {
+    use alingam::lingam::var::var1_fit;
+    use alingam::lingam::DirectLingam;
+    use alingam::runtime::{
+        artifact_dir, ArtifactKind, ArtifactRegistry, DeviceExecutor, HostArray, XlaEngine,
     };
-    let t0 = std::time::Instant::now();
-    let _ = run(&exec);
-    let first = t0.elapsed();
-    let t1 = std::time::Instant::now();
-    let _ = run(&exec);
-    let second = t1.elapsed();
-    // second call skips XLA compilation: must be much faster
-    assert!(
-        second < first / 2,
-        "no caching effect: first {first:?}, second {second:?}"
-    );
-}
+    use alingam::sim::{simulate_sem, simulate_var, SemSpec, VarSpec};
+    use alingam::util::rng::Pcg64;
 
-#[test]
-fn constant_columns_do_not_crash_scores() {
-    // degenerate input: zero-variance column (std clamped by STD_EPS)
-    let reg = ArtifactRegistry::load(&artifact_dir()).expect("run `make artifacts`");
-    let exec = DeviceExecutor::start().unwrap();
-    let bucket = reg.best(ArtifactKind::OrderScores, 64, 4).unwrap();
-    let mut x = vec![0.0f32; bucket.n * bucket.d];
-    for r in 0..64 {
-        x[r * bucket.d] = 1.0; // constant column 0
-        x[r * bucket.d + 1] = r as f32; // ramp
-        x[r * bucket.d + 2] = (r * r % 17) as f32;
-        x[r * bucket.d + 3] = (r % 5) as f32;
+    #[test]
+    fn executor_reports_platform() {
+        let exec = DeviceExecutor::start().unwrap();
+        let p = exec.platform().unwrap();
+        assert!(p.to_lowercase().contains("cpu") || p.contains("Host"), "platform = {p}");
     }
-    let mut rm = vec![0.0f32; bucket.n];
-    rm[..64].iter_mut().for_each(|v| *v = 1.0);
-    let mut cm = vec![0.0f32; bucket.d];
-    cm[..4].iter_mut().for_each(|v| *v = 1.0);
-    let outs = exec
-        .run(
-            bucket.path.clone(),
-            vec![
-                HostArray::new(vec![bucket.n as i64, bucket.d as i64], x),
-                HostArray::vector(rm),
-                HostArray::vector(cm),
-            ],
-        )
-        .unwrap();
-    let k = outs[0].f32s().unwrap();
-    for i in 0..4 {
-        assert!(k[i].is_finite(), "k[{i}] = {}", k[i]);
-    }
-}
 
-#[test]
-fn executor_shared_across_threads() {
-    use std::sync::Arc;
-    let reg = Arc::new(ArtifactRegistry::load(&artifact_dir()).expect("run `make artifacts`"));
-    let exec = DeviceExecutor::start().unwrap();
-    let bucket = reg.best(ArtifactKind::OrderScores, 100, 8).unwrap().clone();
-    std::thread::scope(|s| {
-        for t in 0..3 {
-            let exec = exec.clone();
-            let path = bucket.path.clone();
-            let (nb, db) = (bucket.n, bucket.d);
-            s.spawn(move || {
-                let x = vec![(t as f32) * 0.1 + 0.3; nb * db];
-                let mut rm = vec![0.0f32; nb];
-                rm[..64].iter_mut().for_each(|v| *v = 1.0);
-                let cm = vec![1.0f32; db];
-                let outs = exec
-                    .run(
-                        path,
-                        vec![
-                            HostArray::new(vec![nb as i64, db as i64], x),
-                            HostArray::vector(rm),
-                            HostArray::vector(cm),
-                        ],
-                    )
-                    .unwrap();
-                assert_eq!(outs[0].f32s().unwrap().len(), db);
-            });
+    #[test]
+    fn var_fit_artifact_matches_rust_var_fit() {
+        let reg = ArtifactRegistry::load(&artifact_dir()).expect("run `make artifacts`");
+        let exec = DeviceExecutor::start().unwrap();
+
+        let spec = VarSpec { dim: 12, ..Default::default() };
+        let mut rng = Pcg64::seed_from_u64(5);
+        let ds = simulate_var(&spec, 400, &mut rng);
+        let (t, d) = (ds.data.rows(), ds.data.cols());
+
+        // rust reference
+        let (m1_ref, _) = var1_fit(&ds.data).unwrap();
+
+        // artifact path: pad into the bucket
+        let bucket = reg.best(ArtifactKind::VarFit, t, d).unwrap();
+        let (tb, db) = (bucket.n, bucket.d);
+        let mut series = vec![0.0f32; tb * db];
+        for r in 0..t {
+            for c in 0..d {
+                series[r * db + c] = ds.data[(r, c)] as f32;
+            }
         }
-    });
+        let mut row_mask = vec![0.0f32; tb];
+        for v in row_mask.iter_mut().take(t) {
+            *v = 1.0;
+        }
+        let outs = exec
+            .run(
+                bucket.path.clone(),
+                vec![
+                    HostArray::new(vec![tb as i64, db as i64], series),
+                    HostArray::vector(row_mask),
+                ],
+            )
+            .unwrap();
+        let m1_pad = outs[0].f32s().unwrap();
+        for i in 0..d {
+            for j in 0..d {
+                let a = m1_ref[(i, j)];
+                let b = m1_pad[i * db + j] as f64;
+                assert!(
+                    (a - b).abs() < 1e-3 * (1.0 + a.abs()),
+                    "M1[{i},{j}]: rust {a} vs artifact {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn executable_cache_compiles_once() {
+        let reg = ArtifactRegistry::load(&artifact_dir()).expect("run `make artifacts`");
+        let exec = DeviceExecutor::start().unwrap();
+        let bucket = reg.best(ArtifactKind::OrderScores, 100, 8).unwrap();
+
+        let run = |exec: &DeviceExecutor| {
+            let x = vec![0.5f32; bucket.n * bucket.d];
+            let mut rm = vec![0.0f32; bucket.n];
+            rm[..50].iter_mut().for_each(|v| *v = 1.0);
+            let cm = vec![1.0f32; bucket.d];
+            exec.run(
+                bucket.path.clone(),
+                vec![
+                    HostArray::new(vec![bucket.n as i64, bucket.d as i64], x),
+                    HostArray::vector(rm),
+                    HostArray::vector(cm),
+                ],
+            )
+            .unwrap()
+        };
+        let t0 = std::time::Instant::now();
+        let _ = run(&exec);
+        let first = t0.elapsed();
+        let t1 = std::time::Instant::now();
+        let _ = run(&exec);
+        let second = t1.elapsed();
+        // second call skips XLA compilation: must be much faster
+        assert!(
+            second < first / 2,
+            "no caching effect: first {first:?}, second {second:?}"
+        );
+    }
+
+    #[test]
+    fn constant_columns_do_not_crash_scores() {
+        // degenerate input: zero-variance column (std clamped by STD_EPS)
+        let reg = ArtifactRegistry::load(&artifact_dir()).expect("run `make artifacts`");
+        let exec = DeviceExecutor::start().unwrap();
+        let bucket = reg.best(ArtifactKind::OrderScores, 64, 4).unwrap();
+        let mut x = vec![0.0f32; bucket.n * bucket.d];
+        for r in 0..64 {
+            x[r * bucket.d] = 1.0; // constant column 0
+            x[r * bucket.d + 1] = r as f32; // ramp
+            x[r * bucket.d + 2] = (r * r % 17) as f32;
+            x[r * bucket.d + 3] = (r % 5) as f32;
+        }
+        let mut rm = vec![0.0f32; bucket.n];
+        rm[..64].iter_mut().for_each(|v| *v = 1.0);
+        let mut cm = vec![0.0f32; bucket.d];
+        cm[..4].iter_mut().for_each(|v| *v = 1.0);
+        let outs = exec
+            .run(
+                bucket.path.clone(),
+                vec![
+                    HostArray::new(vec![bucket.n as i64, bucket.d as i64], x),
+                    HostArray::vector(rm),
+                    HostArray::vector(cm),
+                ],
+            )
+            .unwrap();
+        let k = outs[0].f32s().unwrap();
+        for i in 0..4 {
+            assert!(k[i].is_finite(), "k[{i}] = {}", k[i]);
+        }
+    }
+
+    #[test]
+    fn executor_shared_across_threads() {
+        use std::sync::Arc;
+        let reg =
+            Arc::new(ArtifactRegistry::load(&artifact_dir()).expect("run `make artifacts`"));
+        let exec = DeviceExecutor::start().unwrap();
+        let bucket = reg.best(ArtifactKind::OrderScores, 100, 8).unwrap().clone();
+        std::thread::scope(|s| {
+            for t in 0..3 {
+                let exec = exec.clone();
+                let path = bucket.path.clone();
+                let (nb, db) = (bucket.n, bucket.d);
+                s.spawn(move || {
+                    let x = vec![(t as f32) * 0.1 + 0.3; nb * db];
+                    let mut rm = vec![0.0f32; nb];
+                    rm[..64].iter_mut().for_each(|v| *v = 1.0);
+                    let cm = vec![1.0f32; db];
+                    let outs = exec
+                        .run(
+                            path,
+                            vec![
+                                HostArray::new(vec![nb as i64, db as i64], x),
+                                HostArray::vector(rm),
+                                HostArray::vector(cm),
+                            ],
+                        )
+                        .unwrap();
+                    assert_eq!(outs[0].f32s().unwrap().len(), db);
+                });
+            }
+        });
+    }
+
+    // -----------------------------------------------------------------
+    // Device-resident session: the transfer contract.
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn session_fit_uploads_panel_exactly_once_and_steps_are_o_d() {
+        // the tentpole's acceptance assertion: with the session path, a
+        // fit performs exactly ONE panel upload (session_init) and every
+        // step moves only the [db] score row down and the [db] one-hot
+        // up — counted byte-exactly from the executor stats
+        let engine = XlaEngine::from_default_artifacts().expect("run `make artifacts`");
+        let mut rng = Pcg64::seed_from_u64(41);
+        let (n, d) = (200usize, 6usize);
+        let ds = simulate_sem(&SemSpec::layered(d, 2, 0.5), n, &mut rng);
+        let bucket = engine
+            .registry()
+            .best(ArtifactKind::SessionInit, n, d)
+            .expect("session bucket")
+            .clone();
+        let (nb, db) = (bucket.n, bucket.d);
+
+        let before = engine.executor().stats.snapshot();
+        let fit = DirectLingam::new().fit(&ds.data, &engine).unwrap();
+        let after = engine.executor().stats.snapshot();
+        assert_eq!(fit.order.len(), d);
+
+        let steps = (d - 1) as u64;
+        let calls = after.0 - before.0;
+        let up = after.1 - before.1;
+        let down = after.2 - before.2;
+        // one init + (scores, update) per step
+        assert_eq!(calls, 1 + 2 * steps, "unexpected device call count");
+        // uploads: the padded panel + row/col masks once, then one [db]
+        // one-hot per step — NOT one panel per step
+        let init_bytes = 4 * (nb * db + nb + db) as u64;
+        assert_eq!(up, init_bytes + steps * 4 * db as u64, "upload bytes");
+        // downloads: one [db] score row per step — the residualized
+        // panel never comes back to the host
+        assert_eq!(down, steps * 4 * db as u64, "download bytes");
+    }
+
+    #[test]
+    fn session_state_buffers_do_not_leak() {
+        let engine = XlaEngine::from_default_artifacts().expect("run `make artifacts`");
+        let mut rng = Pcg64::seed_from_u64(43);
+        let ds = simulate_sem(&SemSpec::layered(5, 2, 0.5), 300, &mut rng);
+        for _ in 0..3 {
+            let _ = DirectLingam::new().fit(&ds.data, &engine).unwrap();
+        }
+        // the Free messages are fire-and-forget; a synchronous platform
+        // round-trip drains the FIFO queue behind them
+        let _ = engine.executor().platform().unwrap();
+        assert_eq!(
+            engine.executor().stats.live_buffers(),
+            0,
+            "device-resident session state leaked"
+        );
+    }
+
+    #[test]
+    fn session_reset_reuses_workspace_across_panels() {
+        use alingam::lingam::{OrderingEngine, OrderingSession};
+        let engine = XlaEngine::from_default_artifacts().expect("run `make artifacts`");
+        let mut rng = Pcg64::seed_from_u64(44);
+        let a = simulate_sem(&SemSpec::layered(5, 2, 0.5), 300, &mut rng).data;
+        let b = simulate_sem(&SemSpec::layered(5, 2, 0.5), 300, &mut rng).data;
+        let mut session = engine.session(&a).unwrap();
+        let fit_a = DirectLingam::new().fit_session(&a, session.as_mut()).unwrap();
+        // pooled-reuse path (what the bootstrap does): reset re-seeds the
+        // same workspace with one fresh panel upload
+        session.reset(&b).unwrap();
+        let fit_b = DirectLingam::new().fit_session(&b, session.as_mut()).unwrap();
+        let fresh_b = DirectLingam::new().fit(&b, &engine).unwrap();
+        assert_eq!(fit_b.order, fresh_b.order, "reset session diverged from fresh fit");
+        assert_eq!(fit_a.order.len(), 5);
+        // shape mismatch must be rejected
+        let small = simulate_sem(&SemSpec::layered(4, 2, 0.5), 300, &mut rng).data;
+        assert!(session.reset(&small).is_err());
+    }
+
+    #[test]
+    fn resident_toggle_falls_back_to_stateless_shim() {
+        // with_resident(false) must still fit correctly — it pins the
+        // session API to the legacy fused order_step path
+        let engine = XlaEngine::from_default_artifacts()
+            .expect("run `make artifacts`")
+            .with_resident(false);
+        let mut rng = Pcg64::seed_from_u64(45);
+        let ds = simulate_sem(&SemSpec::layered(5, 2, 0.5), 400, &mut rng);
+        let before = engine.executor().stats.snapshot();
+        let fit = DirectLingam::new().fit(&ds.data, &engine).unwrap();
+        let after = engine.executor().stats.snapshot();
+        assert_eq!(fit.order.len(), 5);
+        // the shim pays one fused call per step, not 1 + 2·steps
+        assert_eq!(after.0 - before.0, 4, "stateless shim call count");
+    }
 }
