@@ -1,0 +1,175 @@
+//! Bound-pruned sweep vs exact sweep: wall-clock and work-avoidance of
+//! the ParaLiNGAM-style early-termination path (`lingam::sweep`).
+//!
+//! The pruned sweep provably selects the identical root sequence, so the
+//! only question is the work profile: on favorable panels (a chain SEM
+//! with a clearly separated root) the bound tightens after the first
+//! candidate and most of the O(d²·n) pair work is skipped; on
+//! adversarial panels — tie-heavy i.i.d. columns where every candidate
+//! scores the same, including the near-Gaussian worst case for the
+//! max-ent measure — the bound never separates and the pruned sweep
+//! degrades to the exact one plus bookkeeping noise. Both ends are
+//! measured here, at d ∈ {32, 64, 128}, with the session counters
+//! (visited % of the exact sweep's kernel calls, for the serial and the
+//! pooled run separately) printed next to the timings and the
+//! pruned/exact wall-clock ratio recorded in `BENCH_sweep_pruning.json`.
+
+mod common;
+
+use alingam::lingam::{IncrementalSession, OrderingSession, SweepStrategy};
+use alingam::linalg::Mat;
+use alingam::sim::{sample_from_dag, simulate_sem, Noise, SemSpec};
+use alingam::util::rng::Pcg64;
+use alingam::util::table::{f, secs, Table};
+
+/// d-variable chain 0 → 1 → … → d−1 with uniform noise (shared
+/// `graph::chain_dag`, the same panel `tests/pruning_exactness.rs` pins).
+fn chain_panel(n: usize, d: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    sample_from_dag(&alingam::graph::chain_dag(d, 1.0), Noise::Uniform01, n, &mut rng)
+}
+
+fn panel(kind: &str, n: usize, d: usize) -> Mat {
+    let mut rng = Pcg64::seed_from_u64(31);
+    match kind {
+        "chain" => chain_panel(n, d, 31),
+        "layered" => simulate_sem(&SemSpec::layered(d, 2, 0.5), n, &mut rng).data,
+        // adversarial: independent columns — every candidate is equally
+        // exogenous, scores tie and the bound cannot separate; the
+        // normal variant is additionally the max-ent measure's
+        // near-Gaussian worst case (all entropies ≈ H_NU)
+        "ties-gauss" => Mat::from_fn(n, d, |_, _| rng.normal()),
+        "ties-unif" => Mat::from_fn(n, d, |_, _| rng.uniform(-1.0, 1.0)),
+        other => panic!("unknown panel kind {other}"),
+    }
+}
+
+/// Run the full d−1-step ordering loop on a fresh session (creation
+/// included — it is identical work for both strategies) and return the
+/// wall-clock plus the session's sweep counters.
+fn time_ordering(
+    x: &Mat,
+    workers: usize,
+    strategy: SweepStrategy,
+) -> (f64, alingam::lingam::SweepCounters) {
+    let run = || {
+        let mut s = IncrementalSession::with_strategy(x, workers, false, strategy).unwrap();
+        while s.remaining() > 1 {
+            s.step().unwrap();
+        }
+        s.sweep_counters()
+    };
+    let _ = run(); // warm-up
+    let (counters, dt) = common::time(run);
+    (dt, counters)
+}
+
+fn main() {
+    common::header(
+        "Bound-pruned pair sweep vs exact sweep (session ordering path)",
+        "ParaLiNGAM-style early termination: identical orders, skipped pair work",
+    );
+
+    // (panel kind, d) grid; n fixed per scale
+    let (n, cells): (usize, Vec<(&str, usize)>) = if common::smoke() {
+        (1_000, vec![("chain", 32), ("ties-gauss", 32)])
+    } else if common::full_scale() {
+        (
+            2_000,
+            vec![
+                ("chain", 32),
+                ("chain", 64),
+                ("chain", 128),
+                ("layered", 32),
+                ("layered", 64),
+                ("layered", 128),
+                ("ties-gauss", 64),
+                ("ties-unif", 64),
+            ],
+        )
+    } else {
+        (
+            1_000,
+            vec![
+                ("chain", 32),
+                ("chain", 64),
+                ("layered", 32),
+                ("layered", 64),
+                ("ties-gauss", 32),
+                ("ties-unif", 32),
+            ],
+        )
+    };
+
+    let workers = alingam::lingam::parallel::default_workers();
+    let mut t = Table::new(
+        "full ordering wall-clock, exact vs pruned (serial and pooled sessions)",
+        &[
+            "panel",
+            "dims",
+            "exact(1)",
+            "pruned(1)",
+            "×(1)",
+            "exact(par)",
+            "pruned(par)",
+            "×(par)",
+            "visited %(1)",
+            "visited %(par)",
+        ],
+    );
+    for &(kind, d) in &cells {
+        let x = panel(kind, n, d);
+        let (t_exact_1, _) = time_ordering(&x, 1, SweepStrategy::Exact);
+        let (t_pruned_1, c1) = time_ordering(&x, 1, SweepStrategy::Pruned);
+        let (t_exact_p, _) = time_ordering(&x, workers, SweepStrategy::Exact);
+        let (t_pruned_p, cp) = time_ordering(&x, workers, SweepStrategy::Pruned);
+        t.row(&[
+            kind.to_string(),
+            d.to_string(),
+            secs(t_exact_1),
+            secs(t_pruned_1),
+            f(t_exact_1 / t_pruned_1, 2),
+            secs(t_exact_p),
+            secs(t_pruned_p),
+            f(t_exact_p / t_pruned_p, 2),
+            f(100.0 * c1.visited_fraction(), 1),
+            f(100.0 * cp.visited_fraction(), 1),
+        ]);
+    }
+    t.print();
+    common::emit_json("sweep_pruning", &[&t]);
+    println!(
+        "\nshape check: on the chain panels the pruned column should be well\n\
+         under the exact column (visited % far below 100 — the bound locks in\n\
+         after the true root completes); on the ties-* panels the two columns\n\
+         should be within noise of each other (visited % ≈ 100), bounding the\n\
+         scheduling overhead. The ×(·) ratios are exact/pruned wall-clock —\n\
+         ≥ 1.0 means pruning paid for itself."
+    );
+
+    #[cfg(feature = "fastmath")]
+    {
+        // the optional polynomial-exp kernel, measured on the same loop
+        // (opt-in per session; never the default — agreement suites pin
+        // the precise kernel bitwise)
+        let x = panel("chain", n, 64);
+        let run_fast = || {
+            let mut s = IncrementalSession::with_strategy(&x, 1, false, SweepStrategy::Pruned)
+                .unwrap()
+                .with_fast_kernel();
+            while s.remaining() > 1 {
+                s.step().unwrap();
+            }
+        };
+        let _ = run_fast();
+        let (_, t_fast) = common::time(run_fast);
+        let (t_precise, _) = time_ordering(&x, 1, SweepStrategy::Pruned);
+        println!(
+            "\nfastmath kernel (chain, d={}): precise {} vs fast {} ({}×)",
+            x.cols(),
+            secs(t_precise),
+            secs(t_fast),
+            f(t_precise / t_fast, 2)
+        );
+    }
+}

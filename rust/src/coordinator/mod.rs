@@ -30,13 +30,19 @@ pub enum EngineChoice {
     Vectorized,
     /// Multi-threaded restructured path (`workers == 0` ⇒ one per core).
     Parallel { workers: usize },
+    /// The parallel engine with the bound-pruned sweep
+    /// ([`crate::lingam::sweep`]): identical causal orders, part of the
+    /// O(d²·n) pair work skipped. `workers == 1` is the serial pruned
+    /// path.
+    Pruned { workers: usize },
     /// AOT Pallas/JAX artifacts over PJRT (the accelerated path).
     Xla,
 }
 
 impl EngineChoice {
-    /// Parse an engine spec. `parallel`/`par` take an optional worker
-    /// count suffix: `parallel:4` (0 or absent ⇒ one worker per core).
+    /// Parse an engine spec. `parallel`/`par` and `pruned` take an
+    /// optional worker count suffix: `parallel:4`, `pruned:4` (0 or
+    /// absent ⇒ one worker per core).
     pub fn parse(s: &str) -> Result<EngineChoice> {
         if let Some(rest) = s.strip_prefix("parallel:").or_else(|| s.strip_prefix("par:")) {
             let workers: usize = rest.parse().map_err(|_| {
@@ -46,13 +52,22 @@ impl EngineChoice {
             })?;
             return Ok(EngineChoice::Parallel { workers });
         }
+        if let Some(rest) = s.strip_prefix("pruned:") {
+            let workers: usize = rest.parse().map_err(|_| {
+                Error::InvalidArgument(format!(
+                    "bad worker count {rest:?} in engine spec {s:?} (want pruned:N)"
+                ))
+            })?;
+            return Ok(EngineChoice::Pruned { workers });
+        }
         match s {
             "sequential" | "seq" => Ok(EngineChoice::Sequential),
             "vectorized" | "vec" => Ok(EngineChoice::Vectorized),
             "parallel" | "par" => Ok(EngineChoice::Parallel { workers: 0 }),
+            "pruned" => Ok(EngineChoice::Pruned { workers: 0 }),
             "xla" => Ok(EngineChoice::Xla),
             other => Err(Error::InvalidArgument(format!(
-                "unknown engine {other:?} (sequential|vectorized|parallel[:N]|xla)"
+                "unknown engine {other:?} (sequential|vectorized|parallel[:N]|pruned[:N]|xla)"
             ))),
         }
     }
@@ -62,6 +77,7 @@ impl EngineChoice {
             EngineChoice::Sequential => "sequential",
             EngineChoice::Vectorized => "vectorized",
             EngineChoice::Parallel { .. } => "parallel",
+            EngineChoice::Pruned { .. } => "pruned",
             EngineChoice::Xla => "xla",
         }
     }
@@ -85,6 +101,9 @@ impl Engine {
             EngineChoice::Sequential => Engine::Sequential(SequentialEngine),
             EngineChoice::Vectorized => Engine::Vectorized(VectorizedEngine),
             EngineChoice::Parallel { workers } => Engine::Parallel(ParallelEngine::new(workers)),
+            EngineChoice::Pruned { workers } => {
+                Engine::Parallel(ParallelEngine::new(workers).with_pruning())
+            }
             EngineChoice::Xla => Engine::Xla(Arc::new(XlaEngine::from_default_artifacts()?)),
         })
     }
@@ -110,6 +129,22 @@ mod tests {
         assert_eq!(EngineChoice::parse("vectorized").unwrap(), EngineChoice::Vectorized);
         assert_eq!(EngineChoice::parse("xla").unwrap(), EngineChoice::Xla);
         assert!(EngineChoice::parse("cuda").is_err());
+    }
+
+    #[test]
+    fn pruned_choice_parsing_and_build() {
+        assert_eq!(EngineChoice::parse("pruned").unwrap(), EngineChoice::Pruned { workers: 0 });
+        assert_eq!(
+            EngineChoice::parse("pruned:3").unwrap(),
+            EngineChoice::Pruned { workers: 3 }
+        );
+        assert!(EngineChoice::parse("pruned:x").is_err());
+        let e = Engine::build(EngineChoice::Pruned { workers: 2 }).unwrap();
+        assert_eq!(e.as_ordering().name(), "pruned");
+        assert_eq!(
+            e.as_ordering().sweep_strategy(),
+            crate::lingam::SweepStrategy::Pruned
+        );
     }
 
     #[test]

@@ -154,6 +154,19 @@ pub fn layered_dag(dim: usize, levels: usize, p_edge: f64, rng: &mut Pcg64) -> D
     Dag::new(adj).expect("layered construction is acyclic by construction")
 }
 
+/// Deterministic chain DAG `0 → 1 → … → dim−1`, every edge with weight
+/// `weight`. The canonical clearly-separated-root panel the pruning
+/// exactness suite and the `sweep_pruning` bench both sample from (one
+/// shared definition so the bench can never drift from what the tests
+/// pin).
+pub fn chain_dag(dim: usize, weight: f64) -> Dag {
+    let mut adj = Mat::zeros(dim, dim);
+    for i in 1..dim {
+        adj[(i, i - 1)] = weight;
+    }
+    Dag::new(adj).expect("a chain is acyclic by construction")
+}
+
 /// Erdős–Rényi random DAG: sample a random permutation as the causal
 /// order, include each forward edge with probability chosen to hit an
 /// expected `edges_per_node` average degree; weights uniform in

@@ -60,6 +60,20 @@
 //! (ParaLiNGAM-style). Degenerate panels — constant or collinear columns
 //! — surface as [`util::Error::InvalidArgument`] rather than NaN panics.
 //!
+//! Every CPU sweep runs on the [`lingam::sweep`] subsystem: a chunked,
+//! autovectorizable fused pair kernel underneath, and on top either the
+//! exact pair loops or the opt-in **bound-pruned scheduled sweep**
+//! (`ParallelEngine::with_pruning()`, `pruned[:N]` on the CLI,
+//! [`lingam::SweepStrategy::Pruned`] on a session). Because Algorithm
+//! 1's per-candidate penalty only accumulates, a candidate whose running
+//! penalty exceeds the best completed total can stop mid-sweep without
+//! changing the chosen root — ParaLiNGAM-style work *avoidance* layered
+//! under the same work *distribution*, provably order-identical, with
+//! [`lingam::SweepCounters`] reporting pairs visited/skipped through
+//! `OrderingSession::sweep_counters`. The optional `fastmath` feature
+//! compiles an accuracy-bounded polynomial-`exp` kernel
+//! (≤ 2e-7 relative error per call) that sessions can opt into.
+//!
 //! ## Quick example
 //!
 //! ```no_run

@@ -38,17 +38,23 @@
 //!   the stateless shim around its fused on-device `order_step`.
 //!
 //! The restructured math itself — standardize-once column cache, ρ
-//! precompute, fused log-cosh/gauss-score pair reduction — lives in the
-//! free functions [`standardized_active_columns`], [`column_entropies`],
-//! [`pair_diff`] and [`pair_diff_with_rho`], which the stateless CPU
-//! engines and the incremental session share so their scores agree to
-//! float precision.
+//! precompute, fused log-cosh/gauss-score pair reduction — lives in
+//! [`super::sweep`] (the chunked pair kernel plus the exact and
+//! bound-pruned sweep schedulers) and is re-exported here, so the
+//! stateless CPU engines and the incremental session share every numeric
+//! detail and their scores agree to float precision. The pruned mode
+//! ([`super::sweep::SweepStrategy::Pruned`]) is opt-in per engine
+//! ([`super::parallel::ParallelEngine::with_pruning`]) or per session.
 
-use super::entropy::{diff_mi, entropy_from_moments, gauss_score, log_cosh, order_penalty};
+use super::entropy::{diff_mi, order_penalty};
 use super::session::{IncrementalSession, OrderingSession, StatelessSession};
+use super::sweep::SweepStrategy;
 use crate::linalg::Mat;
 use crate::stats;
 use crate::util::{Error, Result};
+
+pub use super::sweep::{accumulate_pair_diffs, entropy_fused, pair_diff, pair_diff_with_rho};
+pub(crate) use super::sweep::dot;
 
 /// Score assigned to inactive variables so argmax never selects them.
 pub const INACTIVE_SCORE: f64 = f64::NEG_INFINITY;
@@ -92,6 +98,13 @@ pub trait OrderingEngine: Send + Sync {
     /// [`StatelessSession`](super::session::StatelessSession) shim, which
     /// keeps their exact per-step semantics.
     fn session<'a>(&'a self, data: &Mat) -> Result<Box<dyn OrderingSession + 'a>>;
+
+    /// How this engine's sweeps visit the pair space (reported in logs
+    /// and benches; [`SweepStrategy::Exact`] unless the engine was
+    /// explicitly configured for the bound-pruned sweep).
+    fn sweep_strategy(&self) -> SweepStrategy {
+        SweepStrategy::Exact
+    }
 }
 
 /// Argmax of scores over active entries (ties → lowest index, matching
@@ -263,69 +276,6 @@ pub fn column_entropies(cols: &[Vec<f64>]) -> Vec<f64> {
     cols.iter().map(|c| entropy_fused(c)).collect()
 }
 
-/// The fused pair kernel: correlation ρ of two standardized columns, both
-/// standardized regression residuals, their entropies via a single fused
-/// log-cosh / gauss-score pass, and the MI difference for candidate a
-/// against b (negate for the b-against-a direction).
-///
-/// ρ² is clamped to ≤ 1 before the sqrt: collinear or duplicated columns
-/// push the float ρ² past 1, and the old `sqrt(1−ρ²).max(1e-150)` then
-/// floored the resulting NaN to 1e-150 (`f64::max` ignores NaN) — which
-/// blew the standardized residuals up to ~1e150, overflowed the entropy
-/// penalty to +∞ and drove every affected score to −∞, tripping the old
-/// argmax panic. The clamp plus the saner 1e-12 floor keeps degenerate
-/// pairs finite: a huge-but-finite penalty deprioritizes them instead of
-/// wiping out the k_list.
-pub fn pair_diff(ca: &[f64], cb: &[f64], h_a: f64, h_b: f64) -> f64 {
-    let n = ca.len();
-    let r = dot(ca, cb) / n as f64;
-    pair_diff_with_rho(ca, cb, r, h_a, h_b)
-}
-
-/// [`pair_diff`] with the correlation supplied by the caller instead of
-/// recomputed with an O(n) dot — the form the incremental
-/// [`OrderingSession`](super::session::OrderingSession) runs against its
-/// persistent correlation matrix. `pair_diff` delegates here, so the two
-/// paths share every numeric detail (including the ρ²-clamp).
-pub fn pair_diff_with_rho(ca: &[f64], cb: &[f64], r: f64, h_a: f64, h_b: f64) -> f64 {
-    let n = ca.len();
-    let denom = (1.0 - (r * r).min(1.0)).sqrt().max(1e-12);
-    let (mut lc_ab, mut gs_ab, mut lc_ba, mut gs_ba) = (0.0, 0.0, 0.0, 0.0);
-    for t in 0..n {
-        let u = (ca[t] - r * cb[t]) / denom; // resid a|b, standardized
-        let v = (cb[t] - r * ca[t]) / denom; // resid b|a
-        lc_ab += log_cosh(u);
-        gs_ab += gauss_score(u);
-        lc_ba += log_cosh(v);
-        gs_ba += gauss_score(v);
-    }
-    let inv_n = 1.0 / n as f64;
-    let h_rab = entropy_from_moments(lc_ab * inv_n, gs_ab * inv_n);
-    let h_rba = entropy_from_moments(lc_ba * inv_n, gs_ba * inv_n);
-    diff_mi(h_a, h_b, h_rab, h_rba)
-}
-
-/// Serial upper-triangle accumulation of an antisymmetric pair statistic
-/// `diff(a, b)` over positions `0..m`: each unordered pair is computed
-/// once and contributes to both i=a and i=b (the GPU kernel computes
-/// ordered pairs redundantly; same numbers either way). The one serial
-/// copy of the `order_penalty` bookkeeping — shared by
-/// [`accumulate_pairs`] and the incremental session's cached-ρ sweep
-/// (the parallel row-tiled variant lives in `tiled_pair_sweep`).
-pub fn accumulate_pair_diffs<F: Fn(usize, usize) -> f64>(m: usize, diff: F) -> Vec<f64> {
-    let mut k = vec![0.0; m];
-    for a in 0..m {
-        for b in (a + 1)..m {
-            // candidate i=a against j=b; i=b against j=a is the
-            // antisymmetric direction of the same pair
-            let diff_a = diff(a, b);
-            k[a] += order_penalty(diff_a);
-            k[b] += order_penalty(-diff_a);
-        }
-    }
-    k
-}
-
 /// [`accumulate_pair_diffs`] over freshly standardized columns. This is
 /// the loop `VectorizedEngine` runs — and `ParallelEngine`'s
 /// small-problem fallback, where spawning threads would cost more than
@@ -342,26 +292,6 @@ pub fn scatter_scores(d: usize, idx: &[usize], k: &[f64]) -> Vec<f64> {
         k_list[i] = -k[pos];
     }
     k_list
-}
-
-/// Fused entropy over an already-standardized column (one log-cosh /
-/// gauss-score pass). Shared with the incremental session's per-step
-/// entropy-cache refresh.
-pub fn entropy_fused(u: &[f64]) -> f64 {
-    let n = u.len() as f64;
-    let (mut lc, mut gs) = (0.0, 0.0);
-    for &v in u {
-        lc += log_cosh(v);
-        gs += gauss_score(v);
-    }
-    entropy_from_moments(lc / n, gs / n)
-}
-
-/// Plain dot product (shared with the session's one-time correlation
-/// build so its ρ values are bitwise-identical to the stateless path's).
-#[inline]
-pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
-    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
 }
 
 /// On standardized data, the residual of the centered regression equals

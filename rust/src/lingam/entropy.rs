@@ -41,14 +41,13 @@ pub fn gauss_score(u: f64) -> f64 {
 }
 
 /// Max-ent entropy approximation of an (assumed standardized) sample.
+///
+/// Delegates to [`super::sweep::entropy_fused`] — the one fused
+/// log-cosh/gauss-score loop in the crate, which lives next to the
+/// chunked pair kernel so every entropy pass shares code (this module
+/// and `engine` used to carry an identical copy each).
 pub fn entropy(u: &[f64]) -> f64 {
-    let n = u.len() as f64;
-    let (mut s_lc, mut s_gs) = (0.0, 0.0);
-    for &v in u {
-        s_lc += log_cosh(v);
-        s_gs += gauss_score(v);
-    }
-    entropy_from_moments(s_lc / n, s_gs / n)
+    super::sweep::entropy_fused(u)
 }
 
 /// Entropy from the two precomputed expectations (the form both the

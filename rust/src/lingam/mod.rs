@@ -5,9 +5,16 @@
 //!   `_diff_mutual_info`).
 //! - [`engine`] — the `OrderingEngine` abstraction over the causal-order
 //!   scoring hot spot, with the sequential (paper's CPU baseline) and
-//!   vectorized (restructured, GPU-shaped) implementations plus the
-//!   shared pair kernel they are built from. The XLA-backed engine lives
-//!   in [`crate::runtime`]. Engines also act as *session factories*.
+//!   vectorized (restructured, GPU-shaped) implementations. The
+//!   XLA-backed engine lives in [`crate::runtime`]. Engines also act as
+//!   *session factories*.
+//! - [`sweep`] — the pair-sweep subsystem every CPU ordering path runs
+//!   on: the chunked fused pair kernel, the exact serial/tiled sweeps,
+//!   and the **bound-pruned scheduled sweep** (ParaLiNGAM-style early
+//!   termination — provably the identical root sequence with part of
+//!   the O(d²·n) work skipped), plus the [`SweepCounters`]
+//!   instrumentation and the optional `fastmath` polynomial-`exp`
+//!   kernel.
 //! - [`session`] — stateful ordering sessions: the per-fit workspace
 //!   (standardized column cache, persistent correlation matrix, entropy
 //!   cache) with in-place incremental residualization and closed-form
@@ -33,6 +40,7 @@
 pub mod entropy;
 pub mod engine;
 pub mod session;
+pub mod sweep;
 pub mod xla_session;
 pub mod direct;
 pub mod fastica;
@@ -45,6 +53,7 @@ pub use direct::{DirectLingam, LingamFit};
 pub use engine::{OrderingEngine, SequentialEngine, VectorizedEngine};
 pub use parallel::ParallelEngine;
 pub use session::{IncrementalSession, OrderingSession, StatelessSession};
+pub use sweep::{SweepCounters, SweepStrategy};
 pub use xla_session::XlaSession;
 pub use ica::{IcaLingam, IcaLingamFit};
 pub use var::{VarLingam, VarLingamFit};

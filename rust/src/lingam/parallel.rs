@@ -33,17 +33,26 @@
 //! in-place cache residualization (workers own disjoint column buffers
 //! taken out of the shared session cache, so no aliasing unsafety is
 //! needed there either).
+//!
+//! [`ParallelEngine::with_pruning`] switches the engine (and its
+//! sessions) from the exact row tiles to the **bound-pruned** sweep of
+//! [`super::sweep`]: candidates become the dynamic tiles, a shared
+//! atomic carries the best completed penalty, and dominated candidates
+//! stop mid-row — the same root sequence as the exact sweep, provably,
+//! with the per-pair work avoided instead of merely parallelized.
 
 use super::engine::{
     accumulate_pairs, argmax_active, column_entropies, pair_diff, residualize_in_place,
     scatter_scores, standardized_active_columns, OrderStep, OrderingEngine,
 };
 use super::session::{IncrementalSession, OrderingSession};
-use super::entropy::order_penalty;
+use super::sweep::{pair_work, pruned_sweep, pruned_sweep_parallel, SweepCounters, SweepStrategy};
 use crate::linalg::Mat;
 use crate::stats;
 use crate::util::pool::parallel_indexed;
 use crate::util::Result;
+
+pub(crate) use super::sweep::tiled_pair_sweep;
 
 /// Worker count to use when the caller passes 0: one per available core.
 pub fn default_workers() -> usize {
@@ -65,13 +74,16 @@ pub struct ParallelEngine {
     /// Skip the small-problem serial fallback (tests/benches that need
     /// the threaded path exercised regardless of problem size).
     force_parallel: bool,
+    /// How the pair space is visited: exact (default) or bound-pruned
+    /// (ParaLiNGAM early termination, [`super::sweep`]).
+    strategy: SweepStrategy,
 }
 
 impl ParallelEngine {
     /// `workers == 0` means auto (one worker per available core).
     pub fn new(workers: usize) -> ParallelEngine {
         let workers = if workers == 0 { default_workers() } else { workers };
-        ParallelEngine { workers, force_parallel: false }
+        ParallelEngine { workers, force_parallel: false, strategy: SweepStrategy::Exact }
     }
 
     /// The resolved worker count.
@@ -86,6 +98,23 @@ impl ParallelEngine {
         self.force_parallel = true;
         self
     }
+
+    /// Switch the engine — and every session it opens — to the
+    /// bound-pruned sweep: provably the identical root sequence as the
+    /// exact sweep (dominated candidates report partial, strictly losing
+    /// scores; see [`super::sweep`] for the argument). `workers == 1`
+    /// gives the serial memoized pruned sweep — the single-threaded
+    /// pruned counterpart of
+    /// [`VectorizedEngine`](super::engine::VectorizedEngine).
+    pub fn with_pruning(mut self) -> ParallelEngine {
+        self.strategy = SweepStrategy::Pruned;
+        self
+    }
+
+    /// The engine's sweep strategy.
+    pub fn strategy(&self) -> SweepStrategy {
+        self.strategy
+    }
 }
 
 impl Default for ParallelEngine {
@@ -97,21 +126,38 @@ impl Default for ParallelEngine {
 
 impl OrderingEngine for ParallelEngine {
     fn name(&self) -> &'static str {
-        "parallel"
+        match self.strategy {
+            SweepStrategy::Exact => "parallel",
+            SweepStrategy::Pruned => "pruned",
+        }
     }
 
     fn scores(&self, x: &Mat, active: &[bool]) -> Result<Vec<f64>> {
         let (idx, cols) = standardized_active_columns(x, active);
         let m = idx.len();
         let h = column_entropies(&cols);
-        let pair_work = m * m.saturating_sub(1) / 2 * x.rows();
-        let k = if m < 2
-            || self.workers == 1
-            || (!self.force_parallel && pair_work < MIN_PARALLEL_PAIR_WORK)
-        {
-            accumulate_pairs(&cols, &h)
-        } else {
-            pair_sweep(&cols, &h, self.workers)
+        let work = pair_work(m, x.rows());
+        let serial =
+            m < 2 || self.workers == 1 || (!self.force_parallel && work < MIN_PARALLEL_PAIR_WORK);
+        let k = match self.strategy {
+            SweepStrategy::Exact => {
+                if serial {
+                    accumulate_pairs(&cols, &h)
+                } else {
+                    pair_sweep(&cols, &h, self.workers)
+                }
+            }
+            SweepStrategy::Pruned => {
+                // the stateless path has no previous-step scores to seed
+                // the schedule and no session to surface counters into
+                let mut counters = SweepCounters::default();
+                let diff = |a: usize, b: usize| pair_diff(&cols[a], &cols[b], h[a], h[b]);
+                if serial {
+                    pruned_sweep(m, &diff, None, x.rows(), &mut counters)
+                } else {
+                    pruned_sweep_parallel(m, self.workers, &diff, None, x.rows(), &mut counters)
+                }
+            }
         };
         Ok(scatter_scores(x.cols(), &idx, &k))
     }
@@ -131,54 +177,20 @@ impl OrderingEngine for ParallelEngine {
 
     /// Incremental workspace session with this engine's worker pool
     /// tiling the sweeps (and the same small-problem serial fallback /
-    /// `force_parallel` override as the stateless path).
+    /// `force_parallel` override — and sweep strategy — as the
+    /// stateless path).
     fn session<'a>(&'a self, data: &Mat) -> Result<Box<dyn OrderingSession + 'a>> {
-        Ok(Box::new(IncrementalSession::new(data, self.workers, self.force_parallel)?))
+        Ok(Box::new(IncrementalSession::with_strategy(
+            data,
+            self.workers,
+            self.force_parallel,
+            self.strategy,
+        )?))
     }
-}
 
-/// One row of the pair triangle: the candidate's own accumulated penalty
-/// plus its antisymmetric contributions to every later candidate.
-struct RowContrib {
-    /// Σ_{b>a} penalty(diff(a, b)) — row a's own k-accumulator.
-    own: f64,
-    /// penalty(−diff(a, b)) for b = a+1..m (contribution to k[b]).
-    cross: Vec<f64>,
-}
-
-/// Tile the upper-triangle pair loop across the worker pool: `diff(a, b)`
-/// is the antisymmetric pair statistic over positions `0..m`. Each pool
-/// task is one whole *row* (candidate `a` against every `b > a`);
-/// [`parallel_indexed`] returns the rows in index order, so the merge
-/// below — and therefore the final sum — is deterministic regardless of
-/// which worker processed which row. Shared between the stateless engine
-/// path ([`pair_sweep`]) and the incremental session's sweep over the
-/// shared workspace cache (where `diff` reads the persistent correlation
-/// matrix instead of re-doing the dot).
-pub(crate) fn tiled_pair_sweep<F>(m: usize, workers: usize, diff: F) -> Vec<f64>
-where
-    F: Fn(usize, usize) -> f64 + Sync,
-{
-    // the last row has no b > a pairs, so m−1 workers suffice (and an
-    // empty or single-element sweep degrades to one no-op worker)
-    let rows = parallel_indexed(m, workers.clamp(1, m.saturating_sub(1).max(1)), |a| {
-        let mut own = 0.0;
-        let mut cross = vec![0.0; m - a - 1];
-        for b in (a + 1)..m {
-            let diff_a = diff(a, b);
-            own += order_penalty(diff_a);
-            cross[b - a - 1] = order_penalty(-diff_a);
-        }
-        RowContrib { own, cross }
-    });
-    let mut k = vec![0.0; m];
-    for (a, row) in rows.into_iter().enumerate() {
-        k[a] += row.own;
-        for (off, v) in row.cross.into_iter().enumerate() {
-            k[a + 1 + off] += v;
-        }
+    fn sweep_strategy(&self) -> SweepStrategy {
+        self.strategy
     }
-    k
 }
 
 /// The stateless pair sweep: row-tiled [`pair_diff`] over freshly

@@ -31,6 +31,13 @@
 //!   deliberately unoptimized one (the sequential baseline) keep their
 //!   exact per-step semantics under the session API.
 //!
+//! The per-step pair sweep itself runs under a [`SweepStrategy`]: exact
+//! (every pair, the default) or bound-pruned ([`super::sweep`]) — where
+//! the persistent correlation matrix makes per-pair setup free, so every
+//! comparison the bound prunes is pure saving. What each sweep touched
+//! is accumulated into [`SweepCounters`] and surfaced through
+//! [`OrderingSession::sweep_counters`].
+//!
 //! Why the closed forms are exact: the cached columns are standardized,
 //! so the residual `c_j − ρ_jm·c_m` has mean 0 and variance `1 − ρ_jm²`;
 //! dividing by `√(1−ρ_jm²)` re-standardizes it without another pass over
@@ -40,10 +47,14 @@
 //! pinned per step by `tests/session_state.rs`.
 
 use super::engine::{
-    accumulate_pair_diffs, argmax_active, dot, entropy_fused, pair_diff_with_rho,
-    scatter_scores, OrderStep, OrderingEngine, INACTIVE_SCORE,
+    accumulate_pair_diffs, argmax_active, dot, scatter_scores, OrderStep, OrderingEngine,
+    INACTIVE_SCORE,
 };
 use super::parallel::tiled_pair_sweep;
+use super::sweep::{
+    entropy_fused_kernel, pair_diff_with_rho_kernel, pair_work, pruned_sweep,
+    pruned_sweep_parallel, SweepCounters, SweepStrategy,
+};
 use crate::linalg::Mat;
 use crate::stats;
 use crate::util::pool::{parallel_chunks_mut, parallel_indexed};
@@ -81,6 +92,14 @@ pub trait OrderingSession: Send {
     /// shape, reusing every buffer (the bootstrap's session pool calls
     /// this once per resample). Errors on a shape mismatch.
     fn reset(&mut self, data: &Mat) -> Result<()>;
+
+    /// Instrumentation counters accumulated over this fit's sweeps
+    /// (pairs visited / skipped, elements touched — see
+    /// [`SweepCounters`]). Sessions without an instrumented sweep (the
+    /// stateless shim, the device session) report zeros.
+    fn sweep_counters(&self) -> SweepCounters {
+        SweepCounters::default()
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -168,14 +187,45 @@ pub struct IncrementalSession {
     idx: Vec<usize>,
     workers: usize,
     force_parallel: bool,
+    /// Exact or bound-pruned pair sweeps ([`super::sweep`]).
+    strategy: SweepStrategy,
+    /// Previous step's full-width scores: the pruned sweep's candidate
+    /// schedule (likely roots first, so the bound tightens early).
+    /// Empty before the first step and after a reset.
+    prev_scores: Vec<f64>,
+    /// Sweep instrumentation, accumulated across the fit's steps.
+    counters: SweepCounters,
+    /// Route the transcendental pass through the `fastmath` polynomial
+    /// `exp` (only settable when that feature is compiled in; always
+    /// false otherwise).
+    fast_kernel: bool,
 }
 
 impl IncrementalSession {
     /// Build the workspace: standardize every column once and compute
     /// the full correlation matrix once. `workers == 1` keeps every
     /// sweep serial; `force_parallel` disables the small-problem serial
-    /// fallback (tests and scaling benches).
+    /// fallback (tests and scaling benches). Sweeps are exact; use
+    /// [`with_strategy`](IncrementalSession::with_strategy) for the
+    /// bound-pruned mode.
     pub fn new(data: &Mat, workers: usize, force_parallel: bool) -> Result<IncrementalSession> {
+        IncrementalSession::with_strategy(data, workers, force_parallel, SweepStrategy::Exact)
+    }
+
+    /// [`new`](IncrementalSession::new) with an explicit sweep strategy.
+    /// Under [`SweepStrategy::Pruned`] every step's pair sweep carries a
+    /// running penalty per candidate, schedules candidates by the
+    /// previous step's scores, and drops dominated candidates early —
+    /// choosing the identical root sequence as the exact sweep while
+    /// skipping part of the O(d²·n) pair work (the cached correlation
+    /// matrix already makes per-pair setup free here, so the skipped
+    /// kernel sweeps are pure saving).
+    pub fn with_strategy(
+        data: &Mat,
+        workers: usize,
+        force_parallel: bool,
+        strategy: SweepStrategy,
+    ) -> Result<IncrementalSession> {
         let (n, d) = (data.rows(), data.cols());
         if d < 1 || n < 2 {
             return Err(Error::InvalidArgument(format!(
@@ -192,6 +242,10 @@ impl IncrementalSession {
             idx: Vec::with_capacity(d),
             workers: workers.max(1),
             force_parallel,
+            strategy,
+            prev_scores: Vec::new(),
+            counters: SweepCounters::default(),
+            fast_kernel: false,
         };
         s.rebuild(data);
         Ok(s)
@@ -200,6 +254,26 @@ impl IncrementalSession {
     /// Resolved worker count of the session's sweeps.
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// The session's sweep strategy.
+    pub fn strategy(&self) -> SweepStrategy {
+        self.strategy
+    }
+
+    /// Counters accumulated over this fit's sweeps (zeroed by `reset`).
+    pub fn counters(&self) -> SweepCounters {
+        self.counters
+    }
+
+    /// Swap the transcendental pass to the accuracy-bounded polynomial
+    /// `exp` of [`super::sweep::fastmath`] (relative error ≤ 2e-7 per
+    /// `exp` call). Never on by default: the agreement suites pin the
+    /// precise kernel bitwise.
+    #[cfg(feature = "fastmath")]
+    pub fn with_fast_kernel(mut self) -> IncrementalSession {
+        self.fast_kernel = true;
+        self
     }
 
     /// The cached correlation matrix (active block is live; rows and
@@ -217,7 +291,11 @@ impl IncrementalSession {
 
     /// Score the active set from the workspace: refresh the entropy
     /// cache (one fused pass per active column), then run the pair sweep
-    /// with the *cached* correlations — no per-pair dot.
+    /// with the *cached* correlations — no per-pair dot. Under the
+    /// pruned strategy the sweep is scheduled by the previous step's
+    /// scores and dominated candidates stop early (identical argmax,
+    /// partial losing scores); either way the sweep's work is booked
+    /// into [`counters`](IncrementalSession::counters).
     pub fn scores(&mut self) -> Result<Vec<f64>> {
         self.idx.clear();
         self.idx.extend((0..self.d).filter(|&i| self.active[i]));
@@ -225,30 +303,66 @@ impl IncrementalSession {
         if m == 0 {
             return Ok(vec![INACTIVE_SCORE; self.d]);
         }
-        if self.use_pool(m * self.n, MIN_PARALLEL_COL_WORK) {
+        let fast = self.fast_kernel;
+        if self.use_pool(m.saturating_mul(self.n), MIN_PARALLEL_COL_WORK) {
             let (cols, idx) = (&self.cols, &self.idx);
-            let hs = parallel_indexed(m, self.workers.min(m), |t| entropy_fused(&cols[idx[t]]));
+            let hs = parallel_indexed(m, self.workers.min(m), |t| {
+                entropy_fused_kernel(fast, &cols[idx[t]])
+            });
             for (t, hv) in hs.into_iter().enumerate() {
                 self.h[self.idx[t]] = hv;
             }
         } else {
             for t in 0..m {
                 let i = self.idx[t];
-                self.h[i] = entropy_fused(&self.cols[i]);
+                self.h[i] = entropy_fused_kernel(fast, &self.cols[i]);
             }
         }
         let (cols, corr, h, idx) = (&self.cols, &self.corr, &self.h, &self.idx);
         let diff = |a: usize, b: usize| {
             let (ia, ib) = (idx[a], idx[b]);
-            pair_diff_with_rho(&cols[ia], &cols[ib], corr[(ia, ib)], h[ia], h[ib])
+            pair_diff_with_rho_kernel(fast, &cols[ia], &cols[ib], corr[(ia, ib)], h[ia], h[ib])
         };
-        let pair_work = m * m.saturating_sub(1) / 2 * self.n;
-        let k = if m >= 2 && self.use_pool(pair_work, MIN_PARALLEL_PAIR_WORK) {
-            tiled_pair_sweep(m, self.workers, &diff)
-        } else {
-            accumulate_pair_diffs(m, &diff)
+        let pooled = m >= 2 && self.use_pool(pair_work(m, self.n), MIN_PARALLEL_PAIR_WORK);
+        let mut call = SweepCounters::default();
+        let k = match self.strategy {
+            SweepStrategy::Exact => {
+                call.record_exact(m, self.n);
+                if pooled {
+                    tiled_pair_sweep(m, self.workers, &diff)
+                } else {
+                    accumulate_pair_diffs(m, &diff)
+                }
+            }
+            SweepStrategy::Pruned => {
+                // schedule by the previous step's scores over the still
+                // active variables (likely roots first)
+                let priority: Option<Vec<f64>> = if self.prev_scores.len() == self.d {
+                    Some(idx.iter().map(|&i| self.prev_scores[i]).collect())
+                } else {
+                    None
+                };
+                if pooled {
+                    pruned_sweep_parallel(
+                        m,
+                        self.workers,
+                        &diff,
+                        priority.as_deref(),
+                        self.n,
+                        &mut call,
+                    )
+                } else {
+                    pruned_sweep(m, &diff, priority.as_deref(), self.n, &mut call)
+                }
+            }
         };
-        Ok(scatter_scores(self.d, &self.idx, &k))
+        self.counters.merge(&call);
+        let out = scatter_scores(self.d, &self.idx, &k);
+        if self.strategy == SweepStrategy::Pruned {
+            self.prev_scores.clear();
+            self.prev_scores.extend_from_slice(&out);
+        }
+        Ok(out)
     }
 
     /// Commit a choice: residualize the cache against `chosen`, update
@@ -300,7 +414,7 @@ impl IncrementalSession {
         // 1) cache update: one fused pass per column (standardized by
         // construction — no mean/std sweeps)
         let cm = std::mem::take(&mut self.cols[m]);
-        if self.use_pool(targets.len() * self.n, MIN_PARALLEL_COL_WORK) {
+        if self.use_pool(targets.len().saturating_mul(self.n), MIN_PARALLEL_COL_WORK) {
             // take the target columns out so workers own disjoint buffers
             let mut taken: Vec<(usize, Vec<f64>)> = targets
                 .iter()
@@ -355,8 +469,7 @@ impl IncrementalSession {
             col.extend((0..self.n).map(|r| data[(r, c)]));
             stats::standardize(col);
         }
-        let pair_work = self.d * self.d.saturating_sub(1) / 2 * self.n;
-        if self.d >= 2 && self.use_pool(pair_work, MIN_PARALLEL_PAIR_WORK) {
+        if self.d >= 2 && self.use_pool(pair_work(self.d, self.n), MIN_PARALLEL_PAIR_WORK) {
             let n = self.n;
             let rows = {
                 let cols = &self.cols;
@@ -386,6 +499,10 @@ impl IncrementalSession {
             self.corr[(i, i)] = 1.0;
         }
         self.active.fill(true);
+        // a rebuilt workspace is a fresh fit: no schedule seed, fresh
+        // instrumentation
+        self.prev_scores.clear();
+        self.counters = SweepCounters::default();
     }
 
     fn use_pool(&self, work: usize, cutoff: usize) -> bool {
@@ -425,6 +542,10 @@ impl OrderingSession for IncrementalSession {
         }
         self.rebuild(data);
         Ok(())
+    }
+
+    fn sweep_counters(&self) -> SweepCounters {
+        self.counters
     }
 }
 

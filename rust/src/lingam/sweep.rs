@@ -1,0 +1,951 @@
+//! The pair-sweep subsystem: every CPU ordering path's O(d²·n) hot loop,
+//! in one place — with an exact mode and a **bound-pruned, scheduled**
+//! mode (ParaLiNGAM-style early termination, Shahbazinia et al. 2023).
+//!
+//! # Why pruning is exact
+//!
+//! Algorithm 1 scores candidate root `i` as `−k_i` with
+//! `k_i = Σ_{j≠i} min(0, diff_mi(i, j))²` — a sum of **non-negative**
+//! penalty terms, so a candidate's running penalty only grows as its
+//! pairs are visited. The next root is the candidate with the *smallest*
+//! total penalty. Therefore a candidate whose running penalty already
+//! exceeds the total penalty of any *completed* candidate can be dropped
+//! mid-sweep: its final score is certain to lose the argmax. Three
+//! details make the pruned sweep's choice provably identical to the
+//! exact sweep's, not just approximately so:
+//!
+//! 1. **Per-candidate accumulation order is preserved.** A candidate's
+//!    penalty is accumulated over `j` in ascending index order — the
+//!    same order [`accumulate_pair_diffs`] uses — so a candidate that is
+//!    never pruned ends with the *bitwise identical* float total. Pair
+//!    antisymmetry is exploited by always evaluating the kernel in the
+//!    canonical `(min, max)` direction and negating (IEEE negation of a
+//!    subtraction is exact), matching the exact sweep's shared-pair
+//!    arithmetic.
+//! 2. **Pruning is strict.** A candidate is dropped only when
+//!    `running > bound`; exact ties keep sweeping, complete exactly, and
+//!    fall through to the same lowest-index argmax tie-break.
+//! 3. **Partial scores stay below the winner.** At prune time
+//!    `running > bound ≥ (eventual minimum total)`, so the partial score
+//!    `−running` is *strictly below* the winner's exact score and can
+//!    never steal the argmax — and since penalties are non-negative and
+//!    IEEE addition of a non-negative term is monotone, `−running` is
+//!    also an upper bound on the candidate's true score. The winner
+//!    itself is never pruned (its running penalty can never exceed a
+//!    completed total without exceeding its own minimal total).
+//!
+//! NaN penalties (overflowed entropies on wildly degenerate panels)
+//! never satisfy the strict comparisons, so NaN candidates are neither
+//! pruned nor allowed to tighten the bound — degenerate-panel behavior
+//! is byte-for-byte the exact sweep's.
+//!
+//! # Scheduling
+//!
+//! Candidates are visited in a priority order seeded by the *previous*
+//! step's scores (likely roots first): the eventual winner then tends to
+//! complete first, the bound tightens immediately, and the remaining
+//! candidates prune after a handful of pairs. The serial sweep memoizes
+//! each unordered pair so no kernel evaluation is ever repeated; the
+//! parallel sweep shares the memo across workers through a lock-free
+//! atomic table (ParaLiNGAM's "messaging") and the bound through a
+//! single atomic word, with candidates handed to the work-stealing pool
+//! in priority order as dynamic tiles.
+//!
+//! Pruned sweeps report what they did through [`SweepCounters`]
+//! (pairs visited / skipped, elements touched), which the
+//! [`IncrementalSession`](super::session::IncrementalSession) surfaces
+//! via [`OrderingSession::sweep_counters`](super::session::OrderingSession::sweep_counters).
+//! The `sweep_pruning` bench records pruned-vs-exact wall-clock and the
+//! counters across favorable (chain) and adversarial (tie-heavy,
+//! near-Gaussian) panels.
+//!
+//! # The chunked kernel
+//!
+//! Underneath both modes, the inner pair kernel is restructured into
+//! fixed-width chunked buffers: the two standardized regression
+//! residuals are materialized `CHUNK` samples at a time in a tight
+//! mul/div loop LLVM can autovectorize, and the transcendental
+//! `log_cosh`/`gauss_score` reductions then run over the chunk. Each
+//! accumulator still sees its terms in sample order, so the chunked
+//! kernel is bitwise-identical to the scalar loop it replaces. With the
+//! optional `fastmath` feature an accuracy-bounded polynomial `exp`
+//! (relative error ≤ 2e-7, see [`fastmath`]) can be swapped into the
+//! transcendental pass — off by default, opt-in per session.
+
+use super::entropy::{entropy_from_moments, gauss_score, log_cosh, order_penalty};
+use crate::util::pool::parallel_indexed;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+// ---------------------------------------------------------------------
+// Strategy + instrumentation surface.
+// ---------------------------------------------------------------------
+
+/// How a pair sweep visits the O(d²) candidate/pair space.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SweepStrategy {
+    /// Visit every pair (the measured baseline and the mode every
+    /// agreement suite runs): scores are fully computed for every
+    /// candidate.
+    #[default]
+    Exact,
+    /// Bound-pruned scheduled sweep: identical root choice and identical
+    /// winning score, but dominated candidates stop early and report
+    /// only their partial (strictly losing) scores.
+    Pruned,
+}
+
+/// Instrumentation counters threaded through the ordering sessions:
+/// what a sweep actually touched, accumulated across the steps of a fit
+/// (reset together with the workspace).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SweepCounters {
+    /// Unordered pairs the exact sweep would evaluate (Σ m(m−1)/2 over
+    /// steps).
+    pub pairs_total: u64,
+    /// Unique pair-kernel evaluations actually performed.
+    pub pairs_visited: u64,
+    /// Candidate-side comparisons skipped by the bound (a skipped
+    /// comparison may still be evaluated later from the other
+    /// endpoint's row; `pairs_total − pairs_visited` is the kernel-call
+    /// saving, this is ParaLiNGAM's per-candidate saving).
+    pub pairs_skipped: u64,
+    /// Candidates dropped mid-sweep.
+    pub candidates_pruned: u64,
+    /// Samples streamed through the pair kernel (`pairs_visited × n`).
+    pub elements_touched: u64,
+}
+
+impl SweepCounters {
+    /// Accumulate another sweep's counters (saturating).
+    pub fn merge(&mut self, o: &SweepCounters) {
+        self.pairs_total = self.pairs_total.saturating_add(o.pairs_total);
+        self.pairs_visited = self.pairs_visited.saturating_add(o.pairs_visited);
+        self.pairs_skipped = self.pairs_skipped.saturating_add(o.pairs_skipped);
+        self.candidates_pruned = self.candidates_pruned.saturating_add(o.candidates_pruned);
+        self.elements_touched = self.elements_touched.saturating_add(o.elements_touched);
+    }
+
+    /// Fraction of the exact sweep's kernel evaluations that actually
+    /// ran (1.0 when nothing was pruned or nothing was swept).
+    pub fn visited_fraction(&self) -> f64 {
+        if self.pairs_total == 0 {
+            1.0
+        } else {
+            self.pairs_visited as f64 / self.pairs_total as f64
+        }
+    }
+
+    /// Book an exact sweep: every pair evaluated, nothing skipped.
+    pub(crate) fn record_exact(&mut self, m: usize, n: usize) {
+        let pairs = pair_count(m);
+        self.pairs_total = self.pairs_total.saturating_add(pairs);
+        self.pairs_visited = self.pairs_visited.saturating_add(pairs);
+        self.elements_touched =
+            self.elements_touched.saturating_add(pairs.saturating_mul(n as u64));
+    }
+}
+
+/// Unordered pair count m(m−1)/2 as u64 (no overflow for any usize m
+/// that can index memory).
+fn pair_count(m: usize) -> u64 {
+    let m = m as u64;
+    if m % 2 == 0 {
+        (m / 2).saturating_mul(m.saturating_sub(1))
+    } else {
+        m.saturating_mul(m.saturating_sub(1) / 2)
+    }
+}
+
+/// Pair-work heuristic `m(m−1)/2 · n` with saturating arithmetic, so a
+/// huge n·d panel can never overflow the pool-cutoff comparison (it
+/// saturates to `usize::MAX`, which correctly selects the pooled path).
+/// Shares [`pair_count`] so the cutoff heuristic and the counters can
+/// never disagree about the same quantity.
+pub fn pair_work(m: usize, n: usize) -> usize {
+    usize::try_from(pair_count(m)).unwrap_or(usize::MAX).saturating_mul(n)
+}
+
+// ---------------------------------------------------------------------
+// The chunked fused kernel.
+// ---------------------------------------------------------------------
+
+/// Chunk width of the residual buffers: small enough to stay in L1
+/// alongside the two source columns, wide enough that the fill loop
+/// amortizes across full vector registers.
+const CHUNK: usize = 64;
+
+/// The one chunked residual/reduction loop, generic over the
+/// transcendental pair so the precise and `fastmath` kernels share it
+/// (monomorphized: the function items inline to the same code the
+/// hand-specialized loops would be). Returns
+/// `(Σ lc(u), Σ gs(u), Σ lc(v), Σ gs(v))` for
+/// `u = (ca − r·cb)/denom`, `v = (cb − r·ca)/denom`. Each accumulator
+/// sees its terms in sample order, so the result is bitwise-identical to
+/// the scalar interleaved loop.
+#[inline]
+fn pair_moments_with(
+    ca: &[f64],
+    cb: &[f64],
+    r: f64,
+    denom: f64,
+    lc: impl Fn(f64) -> f64,
+    gs: impl Fn(f64) -> f64,
+) -> (f64, f64, f64, f64) {
+    let n = ca.len();
+    let mut u = [0.0f64; CHUNK];
+    let mut v = [0.0f64; CHUNK];
+    let (mut lc_ab, mut gs_ab, mut lc_ba, mut gs_ba) = (0.0, 0.0, 0.0, 0.0);
+    let mut t = 0;
+    while t < n {
+        let len = CHUNK.min(n - t);
+        let (caw, cbw) = (&ca[t..t + len], &cb[t..t + len]);
+        // residual fill: pure mul/sub/div, autovectorizable
+        for (((uo, vo), &av), &bv) in u.iter_mut().zip(v.iter_mut()).zip(caw).zip(cbw) {
+            *uo = (av - r * bv) / denom;
+            *vo = (bv - r * av) / denom;
+        }
+        // transcendental reduction over the chunk
+        for &x in &u[..len] {
+            lc_ab += lc(x);
+            gs_ab += gs(x);
+        }
+        for &x in &v[..len] {
+            lc_ba += lc(x);
+            gs_ba += gs(x);
+        }
+        t += len;
+    }
+    (lc_ab, gs_ab, lc_ba, gs_ba)
+}
+
+/// [`pair_moments_with`] on the precise transcendentals.
+#[inline]
+fn pair_moments(ca: &[f64], cb: &[f64], r: f64, denom: f64) -> (f64, f64, f64, f64) {
+    pair_moments_with(ca, cb, r, denom, log_cosh, gauss_score)
+}
+
+/// The shared ρ²-clamped residual denominator (see [`pair_diff`] docs
+/// for the degeneracy story behind the clamp and the 1e-12 floor).
+#[inline]
+pub(crate) fn residual_denom(r: f64) -> f64 {
+    (1.0 - (r * r).min(1.0)).sqrt().max(1e-12)
+}
+
+/// The fused pair kernel: correlation ρ of two standardized columns, both
+/// standardized regression residuals, their entropies via the chunked
+/// fused log-cosh / gauss-score pass, and the MI difference for candidate
+/// a against b (negate for the b-against-a direction).
+///
+/// ρ² is clamped to ≤ 1 before the sqrt: collinear or duplicated columns
+/// push the float ρ² past 1, and the old `sqrt(1−ρ²).max(1e-150)` then
+/// floored the resulting NaN to 1e-150 (`f64::max` ignores NaN) — which
+/// blew the standardized residuals up to ~1e150, overflowed the entropy
+/// penalty to +∞ and drove every affected score to −∞, tripping the old
+/// argmax panic. The clamp plus the saner 1e-12 floor keeps degenerate
+/// pairs finite: a huge-but-finite penalty deprioritizes them instead of
+/// wiping out the k_list.
+pub fn pair_diff(ca: &[f64], cb: &[f64], h_a: f64, h_b: f64) -> f64 {
+    let n = ca.len();
+    let r = dot(ca, cb) / n as f64;
+    pair_diff_with_rho(ca, cb, r, h_a, h_b)
+}
+
+/// [`pair_diff`] with the correlation supplied by the caller instead of
+/// recomputed with an O(n) dot — the form the incremental
+/// [`OrderingSession`](super::session::OrderingSession) runs against its
+/// persistent correlation matrix. `pair_diff` delegates here, so the two
+/// paths share every numeric detail (including the ρ²-clamp).
+pub fn pair_diff_with_rho(ca: &[f64], cb: &[f64], r: f64, h_a: f64, h_b: f64) -> f64 {
+    let denom = residual_denom(r);
+    let (lc_ab, gs_ab, lc_ba, gs_ba) = pair_moments(ca, cb, r, denom);
+    diff_from_moments(ca.len(), h_a, h_b, lc_ab, gs_ab, lc_ba, gs_ba)
+}
+
+/// Final reduction shared by the precise and `fastmath` kernels.
+#[inline]
+fn diff_from_moments(
+    n: usize,
+    h_a: f64,
+    h_b: f64,
+    lc_ab: f64,
+    gs_ab: f64,
+    lc_ba: f64,
+    gs_ba: f64,
+) -> f64 {
+    let inv_n = 1.0 / n as f64;
+    let h_rab = entropy_from_moments(lc_ab * inv_n, gs_ab * inv_n);
+    let h_rba = entropy_from_moments(lc_ba * inv_n, gs_ba * inv_n);
+    super::entropy::diff_mi(h_a, h_b, h_rab, h_rba)
+}
+
+/// Shared fused entropy loop, generic over the transcendental pair
+/// (precise and `fastmath` instantiations).
+#[inline]
+fn entropy_with(u: &[f64], lc_f: impl Fn(f64) -> f64, gs_f: impl Fn(f64) -> f64) -> f64 {
+    let n = u.len() as f64;
+    let (mut lc, mut gs) = (0.0, 0.0);
+    for &v in u {
+        lc += lc_f(v);
+        gs += gs_f(v);
+    }
+    entropy_from_moments(lc / n, gs / n)
+}
+
+/// Fused entropy over an already-standardized column (one log-cosh /
+/// gauss-score pass). The one copy of the fused entropy loop in the
+/// crate: `entropy::entropy` and the engines' `entropy_fused` re-export
+/// both resolve here, next to the chunked pair kernel, so every entropy
+/// pass shares code.
+pub fn entropy_fused(u: &[f64]) -> f64 {
+    entropy_with(u, log_cosh, gauss_score)
+}
+
+/// Kernel dispatch used by the session sweeps: the precise kernel, or —
+/// when the `fastmath` feature is compiled in *and* the session opted in
+/// — the polynomial-exp fast path. Without the feature `fast` is
+/// ignored and the precise kernel always runs.
+#[inline]
+pub(crate) fn pair_diff_with_rho_kernel(
+    fast: bool,
+    ca: &[f64],
+    cb: &[f64],
+    r: f64,
+    h_a: f64,
+    h_b: f64,
+) -> f64 {
+    #[cfg(feature = "fastmath")]
+    if fast {
+        return fastmath::pair_diff_with_rho_fast(ca, cb, r, h_a, h_b);
+    }
+    pair_diff_with_rho(ca, cb, r, h_a, h_b)
+}
+
+/// Entropy-kernel dispatch, mirroring [`pair_diff_with_rho_kernel`].
+#[inline]
+pub(crate) fn entropy_fused_kernel(fast: bool, u: &[f64]) -> f64 {
+    #[cfg(feature = "fastmath")]
+    if fast {
+        return fastmath::entropy_fused_fast(u);
+    }
+    entropy_fused(u)
+}
+
+/// Plain dot product (shared with the session's one-time correlation
+/// build so its ρ values are bitwise-identical to the stateless path's).
+#[inline]
+pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+// ---------------------------------------------------------------------
+// Exact sweeps (the flat loops, now living next to their pruned
+// replacements).
+// ---------------------------------------------------------------------
+
+/// Serial upper-triangle accumulation of an antisymmetric pair statistic
+/// `diff(a, b)` over positions `0..m`: each unordered pair is computed
+/// once and contributes to both i=a and i=b (the GPU kernel computes
+/// ordered pairs redundantly; same numbers either way). The one serial
+/// copy of the `order_penalty` bookkeeping, and the accumulation order
+/// the pruned sweep reproduces per candidate.
+pub fn accumulate_pair_diffs<F: Fn(usize, usize) -> f64>(m: usize, diff: F) -> Vec<f64> {
+    let mut k = vec![0.0; m];
+    for a in 0..m {
+        for b in (a + 1)..m {
+            // candidate i=a against j=b; i=b against j=a is the
+            // antisymmetric direction of the same pair
+            let diff_a = diff(a, b);
+            k[a] += order_penalty(diff_a);
+            k[b] += order_penalty(-diff_a);
+        }
+    }
+    k
+}
+
+/// One row of the pair triangle: the candidate's own accumulated penalty
+/// plus its antisymmetric contributions to every later candidate.
+struct RowContrib {
+    /// Σ_{b>a} penalty(diff(a, b)) — row a's own k-accumulator.
+    own: f64,
+    /// penalty(−diff(a, b)) for b = a+1..m (contribution to k[b]).
+    cross: Vec<f64>,
+}
+
+/// Tile the upper-triangle pair loop across the worker pool: `diff(a, b)`
+/// is the antisymmetric pair statistic over positions `0..m`. Each pool
+/// task is one whole *row* (candidate `a` against every `b > a`);
+/// [`parallel_indexed`] returns the rows in index order, so the merge
+/// below — and therefore the final sum — is deterministic regardless of
+/// which worker processed which row. Shared between the stateless
+/// parallel engine path and the incremental session's sweep over the
+/// shared workspace cache (where `diff` reads the persistent correlation
+/// matrix instead of re-doing the dot).
+pub fn tiled_pair_sweep<F>(m: usize, workers: usize, diff: F) -> Vec<f64>
+where
+    F: Fn(usize, usize) -> f64 + Sync,
+{
+    // the last row has no b > a pairs, so m−1 workers suffice (and an
+    // empty or single-element sweep degrades to one no-op worker)
+    let rows = parallel_indexed(m, workers.clamp(1, m.saturating_sub(1).max(1)), |a| {
+        let mut own = 0.0;
+        let mut cross = vec![0.0; m - a - 1];
+        for b in (a + 1)..m {
+            let diff_a = diff(a, b);
+            own += order_penalty(diff_a);
+            cross[b - a - 1] = order_penalty(-diff_a);
+        }
+        RowContrib { own, cross }
+    });
+    let mut k = vec![0.0; m];
+    for (a, row) in rows.into_iter().enumerate() {
+        k[a] += row.own;
+        for (off, v) in row.cross.into_iter().enumerate() {
+            k[a + 1 + off] += v;
+        }
+    }
+    k
+}
+
+// ---------------------------------------------------------------------
+// Bound-pruned scheduled sweeps.
+// ---------------------------------------------------------------------
+
+/// Candidate visit order: descending priority (previous-step scores —
+/// likely roots first), ties and the no-priority case falling back to
+/// ascending index. NaN priorities sort via the IEEE total order, which
+/// only affects scheduling, never correctness.
+fn candidate_order(m: usize, priority: Option<&[f64]>) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..m).collect();
+    if let Some(p) = priority {
+        if p.len() == m {
+            order.sort_by(|&x, &y| p[y].total_cmp(&p[x]).then(x.cmp(&y)));
+        }
+    }
+    order
+}
+
+/// Oriented comparisons remaining for candidate `i` after pair `j` was
+/// just processed (used to book skipped comparisons at prune time).
+#[inline]
+fn remaining_after(m: usize, i: usize, j: usize) -> u64 {
+    let rest = (m - 1 - j) as u64;
+    if i > j {
+        rest - 1
+    } else {
+        rest
+    }
+}
+
+/// Serial bound-pruned sweep (see module docs for the exactness
+/// argument). `diff(a, b)` must be evaluated with `a < b`; the sweep
+/// memoizes each unordered pair so no kernel evaluation is repeated,
+/// which makes its kernel-call count ≤ the exact sweep's even before any
+/// pruning. `elems_per_pair` is the sample count a single kernel call
+/// streams (for the `elements_touched` counter).
+///
+/// Returns the per-candidate penalty vector `k` (negate for scores):
+/// completed candidates carry the bitwise-exact total, pruned candidates
+/// their partial running penalty, which is strictly above the winning
+/// total — the argmax over `−k` is identical to the exact sweep's.
+pub fn pruned_sweep<F>(
+    m: usize,
+    diff: &F,
+    priority: Option<&[f64]>,
+    elems_per_pair: usize,
+    counters: &mut SweepCounters,
+) -> Vec<f64>
+where
+    F: Fn(usize, usize) -> f64,
+{
+    counters.pairs_total = counters.pairs_total.saturating_add(pair_count(m));
+    let mut k = vec![0.0; m];
+    if m < 2 {
+        return k;
+    }
+    let order = candidate_order(m, priority);
+    let mut memo = vec![0.0f64; m * m];
+    let mut have = vec![false; m * m];
+    let mut bound = f64::INFINITY;
+    let mut visited: u64 = 0;
+    for &i in &order {
+        let mut running = 0.0f64;
+        let mut pruned = false;
+        for j in 0..m {
+            if j == i {
+                continue;
+            }
+            let (a, b) = if i < j { (i, j) } else { (j, i) };
+            let p = a * m + b;
+            let d_ab = if have[p] {
+                memo[p]
+            } else {
+                let v = diff(a, b);
+                memo[p] = v;
+                have[p] = true;
+                visited += 1;
+                v
+            };
+            let oriented = if i < j { d_ab } else { -d_ab };
+            running += order_penalty(oriented);
+            // strict: exact ties keep sweeping and complete exactly
+            if running > bound {
+                pruned = true;
+                counters.pairs_skipped =
+                    counters.pairs_skipped.saturating_add(remaining_after(m, i, j));
+                counters.candidates_pruned += 1;
+                break;
+            }
+        }
+        k[i] = running;
+        // NaN totals never tighten the bound (comparison is false)
+        if !pruned && running < bound {
+            bound = running;
+        }
+    }
+    counters.pairs_visited = counters.pairs_visited.saturating_add(visited);
+    counters.elements_touched =
+        counters.elements_touched.saturating_add(visited.saturating_mul(elems_per_pair as u64));
+    k
+}
+
+/// Sentinel for "pair not yet computed" in the shared memo: a negative
+/// all-ones NaN bit pattern no IEEE arithmetic result ever carries
+/// (hardware produces the canonical quiet NaN). A false positive would
+/// only cost a redundant recompute of the same deterministic value.
+const MEMO_EMPTY: u64 = u64::MAX;
+
+/// Parallel bound-pruned sweep: candidates are handed to the
+/// work-stealing pool in priority order (one candidate per dynamic
+/// tile), the bound lives in one shared atomic word that only ever
+/// decreases, and computed pair diffs are published through a lock-free
+/// atomic memo so another worker's row reuses them instead of
+/// re-evaluating (the messaging that keeps total kernel calls ≤ the
+/// exact sweep's up to rare benign races).
+///
+/// The *choice* is deterministic and identical to the exact sweep's —
+/// completed candidates carry bitwise-exact totals and pruned ones sit
+/// strictly below the winner (module docs) — but *which* losing
+/// candidates get pruned, and therefore their reported partial scores
+/// and the counters, may vary run to run with thread timing.
+pub fn pruned_sweep_parallel<F>(
+    m: usize,
+    workers: usize,
+    diff: &F,
+    priority: Option<&[f64]>,
+    elems_per_pair: usize,
+    counters: &mut SweepCounters,
+) -> Vec<f64>
+where
+    F: Fn(usize, usize) -> f64 + Sync,
+{
+    counters.pairs_total = counters.pairs_total.saturating_add(pair_count(m));
+    let mut k = vec![0.0; m];
+    if m < 2 {
+        return k;
+    }
+    let order = candidate_order(m, priority);
+    let memo: Vec<AtomicU64> = (0..m * m).map(|_| AtomicU64::new(MEMO_EMPTY)).collect();
+    let bound = AtomicU64::new(f64::INFINITY.to_bits());
+    let visited = AtomicU64::new(0);
+    let rows = parallel_indexed(m, workers.clamp(1, m), |t| {
+        let i = order[t];
+        let mut running = 0.0f64;
+        let mut skipped: u64 = 0;
+        let mut pruned = false;
+        for j in 0..m {
+            if j == i {
+                continue;
+            }
+            let (a, b) = if i < j { (i, j) } else { (j, i) };
+            let p = a * m + b;
+            let bits = memo[p].load(Ordering::Relaxed);
+            let d_ab = if bits != MEMO_EMPTY {
+                f64::from_bits(bits)
+            } else {
+                let v = diff(a, b);
+                // count only the winning publish: two workers racing on
+                // the same fresh pair both do the work (same
+                // deterministic value), but `pairs_visited` keeps its
+                // documented "unique evaluations" meaning and can never
+                // exceed pairs_total
+                if memo[p]
+                    .compare_exchange(
+                        MEMO_EMPTY,
+                        v.to_bits(),
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                    )
+                    .is_ok()
+                {
+                    visited.fetch_add(1, Ordering::Relaxed);
+                }
+                v
+            };
+            let oriented = if i < j { d_ab } else { -d_ab };
+            running += order_penalty(oriented);
+            // a stale bound is always ≥ the current one, so pruning on
+            // it is still exact — one relaxed load per pair keeps it
+            // fresh at negligible cost next to the O(n) kernel
+            if running > f64::from_bits(bound.load(Ordering::Relaxed)) {
+                pruned = true;
+                skipped = remaining_after(m, i, j);
+                break;
+            }
+        }
+        if !pruned {
+            // lock-free fetch-min: penalties are ≥ 0 (or NaN, which
+            // never passes the `<` and is correctly ignored)
+            let mut cur = bound.load(Ordering::Relaxed);
+            while running < f64::from_bits(cur) {
+                match bound.compare_exchange_weak(
+                    cur,
+                    running.to_bits(),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => break,
+                    Err(c) => cur = c,
+                }
+            }
+        }
+        (i, running, pruned, skipped)
+    });
+    for (i, running, pruned, skipped) in rows {
+        k[i] = running;
+        if pruned {
+            counters.candidates_pruned += 1;
+            counters.pairs_skipped = counters.pairs_skipped.saturating_add(skipped);
+        }
+    }
+    let visited = visited.load(Ordering::Relaxed);
+    counters.pairs_visited = counters.pairs_visited.saturating_add(visited);
+    counters.elements_touched =
+        counters.elements_touched.saturating_add(visited.saturating_mul(elems_per_pair as u64));
+    k
+}
+
+// ---------------------------------------------------------------------
+// fastmath: accuracy-bounded polynomial exp fast path.
+// ---------------------------------------------------------------------
+
+/// Accuracy-bounded fast transcendentals, compiled only with the
+/// `fastmath` feature and opted into per session
+/// ([`IncrementalSession::with_fast_kernel`](super::session::IncrementalSession::with_fast_kernel)) —
+/// never silently swapped into a default build, because the agreement
+/// suites pin the precise kernel bitwise.
+///
+/// [`fast_exp`](fastmath::fast_exp) does standard range reduction
+/// `x = k·ln2 + r` with `|r| ≤ ln2/2` and a degree-6 Taylor polynomial,
+/// giving relative error ≤ 2e-7 (truncation `r⁷/5040 ≈ 1.2e-7` plus
+/// rounding) — comfortably inside the ~1e-5 score tolerance the
+/// engine-agreement suites run at, but **not** bitwise, hence the
+/// opt-in.
+#[cfg(feature = "fastmath")]
+pub mod fastmath {
+    use super::{diff_from_moments, residual_denom};
+
+    /// Polynomial `exp` with relative error ≤ 2e-7 on the normal range.
+    /// Inputs below −708 flush to 0 (the true value is ≤ 3.3e-308, at
+    /// the subnormal boundary — an absolute error far below any moment
+    /// this kernel accumulates); above +709 it returns ∞; NaN
+    /// propagates.
+    #[inline]
+    pub fn fast_exp(x: f64) -> f64 {
+        if x < -708.0 {
+            return 0.0;
+        }
+        if x > 709.0 {
+            return f64::INFINITY;
+        }
+        const LN_2_HI: f64 = 6.93147180369123816490e-01;
+        const LN_2_LO: f64 = 1.90821492927058770002e-10;
+        let k = (x * std::f64::consts::LOG2_E).round();
+        let r = (x - k * LN_2_HI) - k * LN_2_LO;
+        // degree-6 Taylor on |r| ≤ ln2/2 (Horner)
+        let p = 1.0
+            + r * (1.0
+                + r * (0.5
+                    + r * (1.0 / 6.0
+                        + r * (1.0 / 24.0 + r * (1.0 / 120.0 + r * (1.0 / 720.0))))));
+        // 2^k via the exponent field: k ∈ [−1021, 1023] after the clamps
+        let scale = f64::from_bits(((1023 + k as i64) as u64) << 52);
+        p * scale
+    }
+
+    /// [`log_cosh`](super::super::entropy::log_cosh) with [`fast_exp`].
+    #[inline]
+    pub fn log_cosh_fast(u: f64) -> f64 {
+        let a = u.abs();
+        a + fast_exp(-2.0 * a).ln_1p() - std::f64::consts::LN_2
+    }
+
+    /// [`gauss_score`](super::super::entropy::gauss_score) with
+    /// [`fast_exp`].
+    #[inline]
+    pub fn gauss_score_fast(u: f64) -> f64 {
+        u * fast_exp(-0.5 * u * u)
+    }
+
+    /// [`entropy_fused`](super::entropy_fused) on the fast
+    /// transcendentals (the same shared loop, instantiated with
+    /// [`log_cosh_fast`]/[`gauss_score_fast`]).
+    pub fn entropy_fused_fast(u: &[f64]) -> f64 {
+        super::entropy_with(u, log_cosh_fast, gauss_score_fast)
+    }
+
+    /// [`pair_diff_with_rho`](super::pair_diff_with_rho) with the fast
+    /// transcendental pass — the identical chunked loop
+    /// ([`pair_moments_with`](super::pair_moments_with) is generic over
+    /// the transcendental pair, so there is exactly one copy to keep
+    /// correct), same ρ²-clamp.
+    pub fn pair_diff_with_rho_fast(ca: &[f64], cb: &[f64], r: f64, h_a: f64, h_b: f64) -> f64 {
+        let denom = residual_denom(r);
+        let (lc_ab, gs_ab, lc_ba, gs_ba) =
+            super::pair_moments_with(ca, cb, r, denom, log_cosh_fast, gauss_score_fast);
+        diff_from_moments(ca.len(), h_a, h_b, lc_ab, gs_ab, lc_ba, gs_ba)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lingam::engine::{argmax_active, scatter_scores};
+    use crate::util::rng::Pcg64;
+
+    /// Synthetic antisymmetric pair statistic backed by a dense matrix.
+    fn random_diff_matrix(m: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let mut d = vec![0.0; m * m];
+        for a in 0..m {
+            for b in (a + 1)..m {
+                let v = rng.normal();
+                d[a * m + b] = v;
+                d[b * m + a] = -v;
+            }
+        }
+        d
+    }
+
+    fn winner(k: &[f64]) -> usize {
+        let idx: Vec<usize> = (0..k.len()).collect();
+        let scores = scatter_scores(k.len(), &idx, k);
+        let active = vec![true; k.len()];
+        argmax_active(&scores, &active).unwrap()
+    }
+
+    #[test]
+    fn pruned_matches_exact_winner_and_winning_total() {
+        for seed in 0..20 {
+            let m = 3 + (seed as usize % 10);
+            let d = random_diff_matrix(m, seed);
+            let diff = |a: usize, b: usize| d[a * m + b];
+            let exact = accumulate_pair_diffs(m, diff);
+            let mut c = SweepCounters::default();
+            let pruned = pruned_sweep(m, &diff, None, 100, &mut c);
+            let (we, wp) = (winner(&exact), winner(&pruned));
+            assert_eq!(we, wp, "seed {seed}: winners diverged");
+            assert_eq!(exact[we], pruned[wp], "seed {seed}: winning total not bitwise-equal");
+            // partial penalties are prefixes of the exact accumulation:
+            // never above the exact total, and the winner's is exact
+            for i in 0..m {
+                assert!(
+                    pruned[i] <= exact[i],
+                    "seed {seed} cand {i}: partial {} > exact {}",
+                    pruned[i],
+                    exact[i]
+                );
+            }
+            assert!(c.pairs_visited <= c.pairs_total);
+        }
+    }
+
+    #[test]
+    fn pruned_priority_order_does_not_change_the_choice() {
+        let m = 9;
+        let d = random_diff_matrix(m, 42);
+        let diff = |a: usize, b: usize| d[a * m + b];
+        let exact = accumulate_pair_diffs(m, diff);
+        let w = winner(&exact);
+        // adversarial priority: visit the true winner last
+        let mut prio = vec![0.0f64; m];
+        prio[w] = f64::NEG_INFINITY;
+        let mut c = SweepCounters::default();
+        let pruned = pruned_sweep(m, &diff, Some(&prio), 10, &mut c);
+        assert_eq!(winner(&pruned), w);
+        assert_eq!(pruned[w], exact[w]);
+    }
+
+    #[test]
+    fn parallel_pruned_matches_serial_choice_across_workers_and_runs() {
+        let m = 12;
+        let d = random_diff_matrix(m, 7);
+        let diff = |a: usize, b: usize| d[a * m + b];
+        let exact = accumulate_pair_diffs(m, diff);
+        let w = winner(&exact);
+        for workers in [1usize, 2, 3, 8] {
+            for _ in 0..3 {
+                let mut c = SweepCounters::default();
+                let k = pruned_sweep_parallel(m, workers, &diff, None, 10, &mut c);
+                assert_eq!(winner(&k), w, "workers={workers}");
+                assert_eq!(k[w], exact[w], "workers={workers}: winning total drifted");
+                // CAS-counted publishes: unique evaluations only, even
+                // when two workers race on the same fresh pair
+                assert!(c.pairs_visited <= c.pairs_total, "visited exceeded total");
+                assert!(c.visited_fraction() <= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_counters_report_skips_on_separated_candidates() {
+        // one dominant candidate (all diffs in its favor) and many
+        // heavily-penalized ones: everything but the winner should prune
+        let m = 16;
+        let diff = |a: usize, b: usize| {
+            if a == 0 {
+                2.0 // candidate 0 always looks exogenous
+            } else if (a + b) % 2 == 0 {
+                1.5 // strong mutual evidence against both others
+            } else {
+                -1.5
+            }
+        };
+        let mut c = SweepCounters::default();
+        let k = pruned_sweep(m, &diff, None, 50, &mut c);
+        assert_eq!(winner(&k), 0);
+        assert!(c.candidates_pruned > 0, "no candidate pruned: {c:?}");
+        assert!(c.pairs_skipped > 0, "no pair skipped: {c:?}");
+        assert!(c.pairs_visited < c.pairs_total, "no kernel call saved: {c:?}");
+        assert_eq!(c.elements_touched, c.pairs_visited * 50);
+    }
+
+    #[test]
+    fn exact_mode_counters_visit_everything() {
+        let mut c = SweepCounters::default();
+        c.record_exact(10, 100);
+        assert_eq!(c.pairs_total, 45);
+        assert_eq!(c.pairs_visited, 45);
+        assert_eq!(c.pairs_skipped, 0);
+        assert_eq!(c.elements_touched, 4500);
+        assert!((c.visited_fraction() - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn counters_merge_saturates() {
+        let mut a = SweepCounters {
+            pairs_total: u64::MAX - 1,
+            pairs_visited: 1,
+            pairs_skipped: 0,
+            candidates_pruned: 0,
+            elements_touched: u64::MAX,
+        };
+        let b = a;
+        a.merge(&b);
+        assert_eq!(a.pairs_total, u64::MAX);
+        assert_eq!(a.elements_touched, u64::MAX);
+    }
+
+    #[test]
+    fn pair_work_saturates_instead_of_overflowing() {
+        assert_eq!(pair_work(4, 10), 60);
+        assert_eq!(pair_work(5, 10), 100);
+        assert_eq!(pair_work(0, 10), 0);
+        assert_eq!(pair_work(1, 10), 0);
+        // the overflow case the cutoff heuristic must survive: saturates
+        // high (which selects the pooled path) rather than wrapping low
+        assert_eq!(pair_work(usize::MAX, usize::MAX), usize::MAX);
+        assert_eq!(pair_work(1 << 33, 1 << 33), usize::MAX);
+    }
+
+    #[test]
+    fn candidate_order_sorts_descending_with_index_ties() {
+        assert_eq!(candidate_order(4, None), vec![0, 1, 2, 3]);
+        let p = [1.0, 3.0, 3.0, -1.0];
+        assert_eq!(candidate_order(4, Some(&p)), vec![1, 2, 0, 3]);
+        // NaN priorities must not panic (total order)
+        let pn = [f64::NAN, 1.0, f64::NEG_INFINITY];
+        let o = candidate_order(3, Some(&pn));
+        assert_eq!(o.len(), 3);
+    }
+
+    #[test]
+    fn chunked_kernel_is_bitwise_identical_to_scalar_loop() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        for &n in &[1usize, 5, 63, 64, 65, 257, 1000] {
+            let ca: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let cb: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let r = 0.3;
+            let denom = residual_denom(r);
+            // scalar reference: the pre-chunking interleaved loop
+            let (mut lc_ab, mut gs_ab, mut lc_ba, mut gs_ba) = (0.0, 0.0, 0.0, 0.0);
+            for t in 0..n {
+                let u = (ca[t] - r * cb[t]) / denom;
+                let v = (cb[t] - r * ca[t]) / denom;
+                lc_ab += log_cosh(u);
+                gs_ab += gauss_score(u);
+                lc_ba += log_cosh(v);
+                gs_ba += gauss_score(v);
+            }
+            let got = pair_moments(&ca, &cb, r, denom);
+            assert_eq!(got, (lc_ab, gs_ab, lc_ba, gs_ba), "n={n}");
+        }
+    }
+
+    #[test]
+    fn nan_diffs_never_prune_or_tighten() {
+        // a NaN-poisoned pair statistic: every candidate completes (no
+        // bound exists), exactly like the exact sweep
+        let m = 5;
+        let diff = |_a: usize, _b: usize| f64::NAN;
+        let mut c = SweepCounters::default();
+        let k = pruned_sweep(m, &diff, None, 10, &mut c);
+        assert!(k.iter().all(|v| v.is_nan()));
+        assert_eq!(c.candidates_pruned, 0);
+        assert_eq!(c.pairs_visited, c.pairs_total);
+    }
+
+    #[cfg(feature = "fastmath")]
+    mod fast {
+        use super::super::fastmath::*;
+        use super::super::{entropy_fused, pair_diff_with_rho};
+        use crate::util::rng::Pcg64;
+
+        #[test]
+        fn fast_exp_relative_error_within_bound() {
+            let mut worst: f64 = 0.0;
+            let mut x = -700.0;
+            while x <= 5.0 {
+                let (f, e) = (fast_exp(x), x.exp());
+                if e > 0.0 {
+                    worst = worst.max(((f - e) / e).abs());
+                }
+                x += 0.0137;
+            }
+            assert!(worst < 5e-7, "fast_exp worst relative error {worst}");
+            assert_eq!(fast_exp(-1000.0), 0.0);
+            assert_eq!(fast_exp(800.0), f64::INFINITY);
+            assert!(fast_exp(f64::NAN).is_nan());
+        }
+
+        #[test]
+        fn fast_kernels_track_precise_kernels() {
+            let mut rng = Pcg64::seed_from_u64(9);
+            let n = 4_000;
+            let mut ca: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut cb: Vec<f64> = ca.iter().map(|&v| 0.6 * v + rng.normal()).collect();
+            crate::stats::standardize(&mut ca);
+            crate::stats::standardize(&mut cb);
+            let (ha, hb) = (entropy_fused(&ca), entropy_fused(&cb));
+            let (ha_f, hb_f) = (entropy_fused_fast(&ca), entropy_fused_fast(&cb));
+            assert!((ha - ha_f).abs() < 1e-5, "entropy drift {} vs {}", ha, ha_f);
+            assert!((hb - hb_f).abs() < 1e-5);
+            let r = super::super::dot(&ca, &cb) / n as f64;
+            let precise = pair_diff_with_rho(&ca, &cb, r, ha, hb);
+            let fast = pair_diff_with_rho_fast(&ca, &cb, r, ha_f, hb_f);
+            assert!(
+                (precise - fast).abs() < 1e-4,
+                "pair diff drift: precise {precise} fast {fast}"
+            );
+        }
+    }
+}

@@ -79,10 +79,16 @@ fn build_engine(args: &Args) -> alingam::util::Result<Engine> {
 /// as given.
 fn build_engine_for_sweep(args: &Args, sweep_workers: usize) -> alingam::util::Result<Engine> {
     let mut choice = EngineChoice::parse(&args.req("engine"))?;
-    if choice == (EngineChoice::Parallel { workers: 0 }) {
-        let per_job =
-            (alingam::lingam::parallel::default_workers() / sweep_workers.max(1)).max(1);
-        choice = EngineChoice::Parallel { workers: per_job };
+    let per_job =
+        || (alingam::lingam::parallel::default_workers() / sweep_workers.max(1)).max(1);
+    match choice {
+        EngineChoice::Parallel { workers: 0 } => {
+            choice = EngineChoice::Parallel { workers: per_job() };
+        }
+        EngineChoice::Pruned { workers: 0 } => {
+            choice = EngineChoice::Pruned { workers: per_job() };
+        }
+        _ => {}
     }
     Engine::build(choice)
 }

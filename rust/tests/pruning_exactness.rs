@@ -1,0 +1,308 @@
+//! Pruning-exactness suite: the bound-pruned sweep (`lingam::sweep`)
+//! must select the **identical** root sequence — and carry the
+//! **identical** (bitwise) winning score — as the exact sweep, on random
+//! panels, degenerate panels, and through every wired path: the
+//! stateless pruned engine, the serial and pooled pruned sessions, and
+//! the CLI-facing `pruned[:N]` engine.
+//!
+//! Why bitwise identity is even possible: a completed candidate's
+//! penalty is accumulated over ascending pair index, the same order as
+//! the exact serial sweep, over the same kernel values (the canonical
+//! (min, max) evaluation direction, negated exactly for the reverse);
+//! pruned candidates report partial penalties strictly *above* the
+//! winner's total, so they can never steal the argmax. The exact
+//! reference below is therefore `VectorizedEngine`/the exact session
+//! (serial accumulation) rather than the tiled sweep, whose merge
+//! associates sums differently (1e-9-level slop the repo tolerates
+//! elsewhere).
+
+use alingam::lingam::engine::INACTIVE_SCORE;
+use alingam::lingam::{
+    DirectLingam, IncrementalSession, OrderingEngine, OrderingSession, ParallelEngine,
+    SequentialEngine, SweepCounters, SweepStrategy, VectorizedEngine,
+};
+use alingam::linalg::Mat;
+use alingam::sim::{sample_from_dag, simulate_sem, Noise, SemSpec};
+use alingam::util::prop::props;
+use alingam::util::rng::Pcg64;
+
+fn toy_panel(n: usize, d: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    simulate_sem(&SemSpec::layered(d, 2, 0.6), n, &mut rng).data
+}
+
+/// A d-variable chain 0 → 1 → … → d−1 with uniform noise: the panel the
+/// acceptance criteria quote (clear root separation, so the bound
+/// tightens immediately). Shares `graph::chain_dag` with the
+/// `sweep_pruning` bench so both measure/pin the same panel.
+fn chain_panel(n: usize, d: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    sample_from_dag(&alingam::graph::chain_dag(d, 1.0), Noise::Uniform01, n, &mut rng)
+}
+
+/// Drive exact and pruned sessions side by side to completion, asserting
+/// the identical choice and the bitwise-identical winning score at every
+/// step.
+fn assert_sessions_agree(mut exact: IncrementalSession, mut pruned: IncrementalSession) {
+    let d = exact.active().len();
+    for step_no in 0..(d - 1) {
+        let e = exact.step().unwrap();
+        let p = pruned.step().unwrap();
+        assert_eq!(
+            e.chosen, p.chosen,
+            "step {step_no}: pruned chose {} but exact chose {}",
+            p.chosen, e.chosen
+        );
+        assert_eq!(
+            e.scores[e.chosen], p.scores[p.chosen],
+            "step {step_no}: winning score not bitwise-identical"
+        );
+        // pruned candidates stop early, so their partial penalties are
+        // *upper* bounds on the score: never below the exact score, and
+        // never above the winner's
+        for i in 0..d {
+            let (se, sp) = (e.scores[i], p.scores[i]);
+            if se == INACTIVE_SCORE {
+                assert_eq!(sp, INACTIVE_SCORE, "step {step_no} var {i}");
+                continue;
+            }
+            if se.is_nan() || sp.is_nan() {
+                continue;
+            }
+            assert!(
+                sp >= se,
+                "step {step_no} var {i}: pruned partial score {sp} below exact {se}"
+            );
+            assert!(
+                sp <= p.scores[p.chosen],
+                "step {step_no} var {i}: pruned score {sp} above the winner's"
+            );
+        }
+    }
+}
+
+#[test]
+fn pruned_session_matches_exact_session_on_chain() {
+    let x = chain_panel(3_000, 8, 1);
+    let exact = IncrementalSession::new(&x, 1, false).unwrap();
+    let pruned =
+        IncrementalSession::with_strategy(&x, 1, false, SweepStrategy::Pruned).unwrap();
+    assert_sessions_agree(exact, pruned);
+}
+
+#[test]
+fn pooled_pruned_session_matches_exact_session() {
+    // force_parallel: the toy panel is below the pool cutoff and the
+    // shared-atomic-bound path is what needs coverage
+    let x = chain_panel(2_000, 8, 2);
+    let exact = IncrementalSession::new(&x, 1, false).unwrap();
+    let pruned =
+        IncrementalSession::with_strategy(&x, 4, true, SweepStrategy::Pruned).unwrap();
+    assert_sessions_agree(exact, pruned);
+}
+
+#[test]
+fn prop_pruned_sessions_match_exact_on_random_panels() {
+    props("pruned session vs exact session", 15, |g| {
+        let d = g.usize_in(4, 10);
+        let n = g.usize_in(64, 400);
+        let seed = g.rng().next_u64();
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let ds = simulate_sem(&SemSpec::layered(d, 2, 0.6), n, &mut rng);
+        let workers = g.usize_in(1, 4);
+        let exact = IncrementalSession::new(&ds.data, 1, false).unwrap();
+        let pruned = IncrementalSession::with_strategy(
+            &ds.data,
+            workers,
+            workers > 1,
+            SweepStrategy::Pruned,
+        )
+        .unwrap();
+        assert_sessions_agree(exact, pruned);
+    });
+}
+
+#[test]
+fn pruned_fits_produce_identical_orders_across_engines() {
+    // full-fit agreement for every pruned path against the exact CPU
+    // engines (sequential reference included — the paper's validation,
+    // extended to the pruned sweep). Same panel as engine_agreement's
+    // three_cpu_engines_identical_orders_on_one_fit, which pins that
+    // seq/vec agree here.
+    let mut rng = Pcg64::seed_from_u64(17);
+    let x = simulate_sem(&SemSpec::layered(9, 2, 0.5), 3_000, &mut rng).data;
+    let seq = DirectLingam::new().fit(&x, &SequentialEngine).unwrap();
+    let vec = DirectLingam::new().fit(&x, &VectorizedEngine).unwrap();
+    let pruned_serial =
+        DirectLingam::new().fit(&x, &ParallelEngine::new(1).with_pruning()).unwrap();
+    let pruned_pooled = DirectLingam::new()
+        .fit(&x, &ParallelEngine::new(4).with_pruning().force_parallel())
+        .unwrap();
+    assert_eq!(seq.order, vec.order);
+    assert_eq!(vec.order, pruned_serial.order, "serial pruned fit diverged");
+    assert_eq!(vec.order, pruned_pooled.order, "pooled pruned fit diverged");
+    assert!(
+        alingam::metrics::adjacency_max_diff(&vec.adjacency, &pruned_serial.adjacency) < 1e-10,
+        "identical orders must give identical regressions"
+    );
+}
+
+#[test]
+fn prop_stateless_pruned_scores_pick_the_exact_argmax() {
+    // the stateless pruned path (no session, no priority seed): same
+    // argmax and bitwise winning score as the serial exact engine, on
+    // random panels and random active masks
+    props("stateless pruned vs exact scores", 15, |g| {
+        let d = g.usize_in(3, 11);
+        let n = g.usize_in(64, 384);
+        let seed = g.rng().next_u64();
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let ds = simulate_sem(&SemSpec::layered(d, 2, 0.6), n, &mut rng);
+        let mut active = vec![true; d];
+        for slot in active.iter_mut() {
+            if g.bool_p(0.2) {
+                *slot = false;
+            }
+        }
+        if active.iter().filter(|&&a| a).count() < 2 {
+            active[0] = true;
+            active[1] = true;
+        }
+        let workers = g.usize_in(1, 4);
+        let exact = VectorizedEngine.scores(&ds.data, &active).unwrap();
+        let engine = if workers > 1 {
+            ParallelEngine::new(workers).with_pruning().force_parallel()
+        } else {
+            ParallelEngine::new(1).with_pruning()
+        };
+        let pruned = engine.scores(&ds.data, &active).unwrap();
+        let we = alingam::lingam::engine::argmax_active(&exact, &active).unwrap();
+        let wp = alingam::lingam::engine::argmax_active(&pruned, &active).unwrap();
+        assert_eq!(we, wp, "argmax diverged (d={d} n={n} workers={workers})");
+        assert_eq!(exact[we], pruned[wp], "winning score not bitwise-identical");
+        for i in 0..d {
+            if !active[i] {
+                assert_eq!(pruned[i], INACTIVE_SCORE);
+            }
+        }
+    });
+}
+
+#[test]
+fn pruned_sessions_track_exact_on_degenerate_panels() {
+    // duplicated / negatively-scaled / near-collinear columns: the
+    // pruned session must make the same choices as the exact one for as
+    // long as both run, and fail together when the panel is unusable
+    let dup = {
+        let mut rng = Pcg64::seed_from_u64(7);
+        let mut m = Mat::from_fn(300, 5, |_, _| rng.normal());
+        let col = m.col(1);
+        m.set_col(3, &col);
+        m
+    };
+    let neg = {
+        let mut rng = Pcg64::seed_from_u64(8);
+        let mut m = Mat::from_fn(300, 4, |_, _| rng.normal());
+        let flipped: Vec<f64> = m.col(0).iter().map(|&v| -2.5 * v).collect();
+        m.set_col(3, &flipped);
+        m
+    };
+    for (label, x) in [("duplicated column", dup), ("negative duplicate", neg)] {
+        let mut exact = IncrementalSession::new(&x, 1, false).unwrap();
+        let mut pruned =
+            IncrementalSession::with_strategy(&x, 1, false, SweepStrategy::Pruned).unwrap();
+        loop {
+            match (exact.step(), pruned.step()) {
+                (Ok(e), Ok(p)) => {
+                    assert_eq!(e.chosen, p.chosen, "{label}: choices diverged");
+                    for (i, &v) in p.scores.iter().enumerate() {
+                        assert!(!v.is_nan(), "{label}: pruned NaN score at {i}");
+                    }
+                    if pruned.remaining() <= 1 {
+                        break;
+                    }
+                }
+                (Err(_), Err(_)) => break, // both reject the panel: fine
+                (e, p) => panic!(
+                    "{label}: exact and pruned disagreed on usability: {:?} vs {:?}",
+                    e.map(|s| s.chosen),
+                    p.map(|s| s.chosen)
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn pruned_engine_rejects_constant_columns_like_exact() {
+    let mut x = toy_panel(400, 5, 9);
+    let constant = vec![0.1; 400];
+    x.set_col(2, &constant);
+    let res = DirectLingam::new().fit(&x, &ParallelEngine::new(1).with_pruning());
+    assert!(res.is_err(), "constant column must be rejected up front");
+}
+
+#[test]
+fn counters_report_pruning_on_chain_sem_d32() {
+    // the acceptance criterion: on a d ≥ 32 chain SEM the pruned sweep
+    // must actually skip work, and the counters must say so
+    let x = chain_panel(2_000, 32, 11);
+    let mut s = IncrementalSession::with_strategy(&x, 1, false, SweepStrategy::Pruned).unwrap();
+    while s.remaining() > 1 {
+        s.step().unwrap();
+    }
+    let c = s.sweep_counters();
+    assert!(c.pairs_total > 0);
+    assert!(c.pairs_skipped > 0, "no pair skipped on a chain SEM: {c:?}");
+    assert!(c.candidates_pruned > 0, "no candidate pruned on a chain SEM: {c:?}");
+    assert!(
+        c.pairs_visited < c.pairs_total,
+        "pruning saved no kernel calls: {c:?}"
+    );
+    assert_eq!(c.elements_touched, c.pairs_visited * 2_000);
+    assert!(c.visited_fraction() < 1.0);
+}
+
+#[test]
+fn exact_sessions_report_full_visits_and_reset_clears() {
+    let x = toy_panel(500, 6, 12);
+    let mut s = IncrementalSession::new(&x, 1, false).unwrap();
+    assert_eq!(s.sweep_counters(), SweepCounters::default(), "fresh session must be zeroed");
+    while s.remaining() > 1 {
+        s.step().unwrap();
+    }
+    let c = s.sweep_counters();
+    assert!(c.pairs_total > 0);
+    assert_eq!(c.pairs_visited, c.pairs_total, "exact mode must visit everything");
+    assert_eq!(c.pairs_skipped, 0);
+    assert_eq!(c.candidates_pruned, 0);
+    s.reset(&x).unwrap();
+    assert_eq!(s.sweep_counters(), SweepCounters::default(), "reset must zero the counters");
+}
+
+#[test]
+fn stateless_shim_reports_zero_counters() {
+    // the OrderingSession surface default: sessions without an
+    // instrumented sweep answer with zeros rather than lying
+    let x = toy_panel(300, 4, 13);
+    let session = SequentialEngine.session(&x).unwrap();
+    assert_eq!(session.sweep_counters(), SweepCounters::default());
+}
+
+#[test]
+fn pruned_session_reuse_across_resamples_matches_fresh_fits() {
+    // the bootstrap pool pattern under the pruned strategy: reset +
+    // fit_session must equal a fresh exact fit on every resample
+    let base = toy_panel(600, 6, 21);
+    let mut rng = Pcg64::seed_from_u64(22);
+    let engine = ParallelEngine::new(1).with_pruning();
+    let mut session = engine.session(&base).unwrap();
+    for _ in 0..3 {
+        let rows: Vec<usize> = (0..base.rows()).map(|_| rng.below(base.rows())).collect();
+        let sample = base.select_rows(&rows);
+        session.reset(&sample).unwrap();
+        let reused = DirectLingam::new().fit_session(&sample, session.as_mut()).unwrap();
+        let fresh = DirectLingam::new().fit(&sample, &VectorizedEngine).unwrap();
+        assert_eq!(reused.order, fresh.order, "pruned pooled fit diverged from fresh exact");
+    }
+}
