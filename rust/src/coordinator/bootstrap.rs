@@ -15,6 +15,7 @@ use crate::lingam::{DirectLingam, LingamFit, OrderingEngine, OrderingSession};
 use crate::linalg::Mat;
 use crate::util::rng::Pcg64;
 use crate::util::{Error, Result};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Bootstrap configuration.
@@ -73,6 +74,23 @@ pub fn bootstrap_direct<'e>(
     engine: &'e dyn OrderingEngine,
     opts: &BootstrapOpts,
 ) -> Result<BootstrapResult> {
+    bootstrap_direct_observed(data, engine, opts, None, |_, _| {})
+}
+
+/// [`bootstrap_direct`] with per-resample observation and cooperative
+/// cancellation — the entry point the serve layer drives so it can
+/// stream `progress` events and honor `cancel` requests at resample
+/// boundaries. `on_resample(done, total)` is called after every
+/// completed refit (from worker threads, possibly concurrently — it must
+/// be `Sync`); when `cancel` flips to `true`, workers stop picking up
+/// new resamples and the whole run returns [`Error::Canceled`].
+pub fn bootstrap_direct_observed<'e>(
+    data: &Mat,
+    engine: &'e dyn OrderingEngine,
+    opts: &BootstrapOpts,
+    cancel: Option<&AtomicBool>,
+    on_resample: impl Fn(usize, usize) + Sync,
+) -> Result<BootstrapResult> {
     let (n, d) = (data.rows(), data.cols());
     if opts.resamples == 0 {
         return Err(Error::InvalidArgument("resamples must be ≥ 1".into()));
@@ -81,7 +99,11 @@ pub fn bootstrap_direct<'e>(
     // parked session workspaces, reused across resamples (shapes always
     // match: every resample is [n, d])
     let session_pool: Mutex<Vec<Box<dyn OrderingSession + 'e>>> = Mutex::new(Vec::new());
+    let completed = AtomicUsize::new(0);
     let fits = parallel_map(&seeds, opts.workers, |seed| -> Result<LingamFit> {
+        if cancel.is_some_and(|c| c.load(Ordering::Relaxed)) {
+            return Err(Error::Canceled("bootstrap resample skipped".into()));
+        }
         let mut rng = Pcg64::seed_from_u64(seed);
         let rows: Vec<usize> = (0..n).map(|_| rng.below(n)).collect();
         let sample = data.select_rows(&rows);
@@ -97,8 +119,15 @@ pub fn bootstrap_direct<'e>(
         // park the workspace even after a failed refit: reset restores
         // its invariants before the next use
         session_pool.lock().expect("session pool").push(session);
+        if fit.is_ok() {
+            let done = completed.fetch_add(1, Ordering::Relaxed) + 1;
+            on_resample(done, opts.resamples);
+        }
         fit
     });
+    if cancel.is_some_and(|c| c.load(Ordering::Relaxed)) {
+        return Err(Error::Canceled("bootstrap canceled".into()));
+    }
 
     let mut edge_probs = Mat::zeros(d, d);
     let mut weight_sums = Mat::zeros(d, d);
@@ -198,6 +227,34 @@ mod tests {
         assert_eq!(a.edge_probs, b.edge_probs);
         assert_eq!(a.precedence, b.precedence);
         assert_eq!(a.resamples, b.resamples);
+    }
+
+    #[test]
+    fn observer_sees_every_resample_and_cancel_aborts() {
+        let mut rng = Pcg64::seed_from_u64(31);
+        let ds = simulate_sem(&SemSpec::layered(4, 2, 0.7), 600, &mut rng);
+        let opts = BootstrapOpts { resamples: 8, workers: 2, ..Default::default() };
+        // observer: every resample reported exactly once, monotone `done`
+        let seen = std::sync::Mutex::new(Vec::new());
+        let r = bootstrap_direct_observed(&ds.data, &VectorizedEngine, &opts, None, |done, total| {
+            assert_eq!(total, 8);
+            seen.lock().unwrap().push(done);
+        })
+        .unwrap();
+        assert_eq!(r.resamples, 8);
+        let mut seen = seen.into_inner().unwrap();
+        seen.sort_unstable();
+        assert_eq!(seen, (1..=8).collect::<Vec<_>>());
+        // a pre-flipped cancel flag aborts before any refit
+        let cancel = AtomicBool::new(true);
+        let err = bootstrap_direct_observed(
+            &ds.data,
+            &VectorizedEngine,
+            &opts,
+            Some(&cancel),
+            |_, _| panic!("canceled run must not report progress"),
+        );
+        assert!(matches!(err, Err(Error::Canceled(_))), "expected Canceled, got {err:?}");
     }
 
     #[test]

@@ -12,7 +12,9 @@ pub mod bootstrap;
 pub mod profile;
 pub mod sweep;
 
-pub use bootstrap::{bootstrap_direct, BootstrapOpts, BootstrapResult};
+pub use bootstrap::{
+    bootstrap_direct, bootstrap_direct_observed, BootstrapOpts, BootstrapResult,
+};
 pub use profile::{profile_direct, profile_var, ProfileRow};
 pub use sweep::{parallel_map, SweepStats};
 
@@ -79,6 +81,39 @@ impl EngineChoice {
             EngineChoice::Parallel { .. } => "parallel",
             EngineChoice::Pruned { .. } => "pruned",
             EngineChoice::Xla => "xla",
+        }
+    }
+
+    /// Resolve the `workers == 0` (auto) placeholder against a core
+    /// budget shared by `concurrent` sibling jobs: one auto-sized
+    /// parallel engine per job would oversubscribe every core
+    /// `concurrent`-fold, so the machine's cores are divided instead.
+    /// Explicit worker counts (`parallel:4`) are honored as given, and
+    /// engines without a pool are untouched. This is the one copy of the
+    /// worker-default normalization — the CLI sweep commands and the
+    /// serve layer's per-request engine construction both go through it.
+    pub fn resolve_workers(self, concurrent: usize) -> EngineChoice {
+        let per_job =
+            || (crate::lingam::parallel::default_workers() / concurrent.max(1)).max(1);
+        match self {
+            EngineChoice::Parallel { workers: 0 } => {
+                EngineChoice::Parallel { workers: per_job() }
+            }
+            EngineChoice::Pruned { workers: 0 } => EngineChoice::Pruned { workers: per_job() },
+            other => other,
+        }
+    }
+
+    /// Canonical spec string — the inverse of [`EngineChoice::parse`]
+    /// (`parse(spec()) == self`). The serve layer keys its result cache
+    /// on this, so two requests naming the same effective engine hash
+    /// identically regardless of which alias (`par`, `parallel`) the
+    /// client wrote.
+    pub fn spec(self) -> String {
+        match self {
+            EngineChoice::Parallel { workers } => format!("parallel:{workers}"),
+            EngineChoice::Pruned { workers } => format!("pruned:{workers}"),
+            other => other.name().to_string(),
         }
     }
 }
@@ -161,6 +196,42 @@ mod tests {
         assert_eq!(EngineChoice::parse("par:2").unwrap(), EngineChoice::Parallel { workers: 2 });
         assert!(EngineChoice::parse("parallel:x").is_err());
         assert!(EngineChoice::parse("par:").is_err());
+    }
+
+    #[test]
+    fn resolve_workers_only_touches_auto_pools() {
+        // explicit counts and pool-less engines pass through unchanged
+        assert_eq!(
+            EngineChoice::Parallel { workers: 3 }.resolve_workers(4),
+            EngineChoice::Parallel { workers: 3 }
+        );
+        assert_eq!(EngineChoice::Sequential.resolve_workers(4), EngineChoice::Sequential);
+        assert_eq!(EngineChoice::Xla.resolve_workers(4), EngineChoice::Xla);
+        // auto resolves to at least one worker, however many siblings
+        for concurrent in [0usize, 1, 2, 1024] {
+            match EngineChoice::Parallel { workers: 0 }.resolve_workers(concurrent) {
+                EngineChoice::Parallel { workers } => assert!(workers >= 1),
+                other => panic!("unexpected {other:?}"),
+            }
+            match EngineChoice::Pruned { workers: 0 }.resolve_workers(concurrent) {
+                EngineChoice::Pruned { workers } => assert!(workers >= 1),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn spec_roundtrips_through_parse() {
+        for c in [
+            EngineChoice::Sequential,
+            EngineChoice::Vectorized,
+            EngineChoice::Parallel { workers: 0 },
+            EngineChoice::Parallel { workers: 5 },
+            EngineChoice::Pruned { workers: 2 },
+            EngineChoice::Xla,
+        ] {
+            assert_eq!(EngineChoice::parse(&c.spec()).unwrap(), c, "spec {}", c.spec());
+        }
     }
 
     #[test]

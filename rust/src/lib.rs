@@ -70,9 +70,29 @@
 //! changing the chosen root — ParaLiNGAM-style work *avoidance* layered
 //! under the same work *distribution*, provably order-identical, with
 //! [`lingam::SweepCounters`] reporting pairs visited/skipped through
-//! `OrderingSession::sweep_counters`. The optional `fastmath` feature
-//! compiles an accuracy-bounded polynomial-`exp` kernel
-//! (≤ 2e-7 relative error per call) that sessions can opt into.
+//! `OrderingSession::sweep_counters`. Pruned sweeps are scheduled
+//! likely-roots-first: by the previous step's scores, and on the very
+//! first step by cheap per-column non-Gaussianity proxies (|excess
+//! kurtosis| of the standardized cache) — scheduling only, never
+//! pruning semantics. The optional `fastmath` feature compiles an
+//! accuracy-bounded polynomial-`exp` kernel (≤ 2e-7 relative error per
+//! call) that sessions can opt into.
+//!
+//! ## The serving layer
+//!
+//! [`serve`] makes the repo a long-lived process instead of a batch
+//! tool: a std-only JSON-lines-over-TCP service (`alingam serve` /
+//! `alingam client`) with a bounded job queue (backpressure,
+//! FIFO-per-client fairness), N workers holding parked
+//! [`lingam::IncrementalSession`] workspaces hot across requests, a
+//! panel-hash LRU result cache answering byte-identical requests
+//! without recomputation, streamed per-step/per-resample progress over
+//! the session lifecycle, cooperative cancellation, and graceful drain
+//! on shutdown. The protocol and the CLI `--json` mode share one
+//! serialization surface (`serve::protocol` over the same escaping
+//! primitives as `util::table::Table::to_json`), so every JSON the repo
+//! emits — bench artifacts, CLI results, service frames — parses the
+//! same way.
 //!
 //! ## Quick example
 //!
@@ -100,6 +120,7 @@ pub mod data;
 pub mod lingam;
 pub mod runtime;
 pub mod coordinator;
+pub mod serve;
 pub mod baselines;
 pub mod apps;
 

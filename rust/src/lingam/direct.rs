@@ -66,7 +66,7 @@ impl DirectLingam {
         self.validate(data)?;
         let mut profile = StageProfile::new();
         let mut session = profile.time("ordering", || engine.session(data))?;
-        self.drive(data, session.as_mut(), profile)
+        self.drive(data, session.as_mut(), profile, &mut |_, _| Ok(()))
     }
 
     /// Fit by driving a caller-provided session that has already been
@@ -83,6 +83,20 @@ impl DirectLingam {
         data: &Mat,
         session: &mut dyn OrderingSession,
     ) -> Result<LingamFit> {
+        self.fit_session_observed(data, session, &mut |_, _| Ok(()))
+    }
+
+    /// [`fit_session`](DirectLingam::fit_session) with a per-step
+    /// observer: `observer(completed, total)` runs after every search
+    /// step, and an `Err` aborts the fit — the seam the serve layer uses
+    /// to stream per-step progress and honor cancellation at step
+    /// boundaries without duplicating the drive loop.
+    pub fn fit_session_observed(
+        &self,
+        data: &Mat,
+        session: &mut dyn OrderingSession,
+        observer: &mut dyn FnMut(usize, usize) -> Result<()>,
+    ) -> Result<LingamFit> {
         self.validate(data)?;
         if session.active().len() != data.cols()
             || session.rows() != data.rows()
@@ -94,7 +108,7 @@ impl DirectLingam {
                     .into(),
             ));
         }
-        self.drive(data, session, StageProfile::new())
+        self.drive(data, session, StageProfile::new(), observer)
     }
 
     /// The legacy stateless path: clone the panel and call
@@ -109,25 +123,31 @@ impl DirectLingam {
         // panel clone (inside the shim) deliberately untimed, matching
         // the legacy loop's untimed `data.clone()`
         let mut shim = StatelessSession::new(engine, data);
-        self.drive(data, &mut shim, StageProfile::new())
+        self.drive(data, &mut shim, StageProfile::new(), &mut |_, _| Ok(()))
     }
 
     /// Drive a session through the d−1 search steps and estimate the
-    /// adjacency over the original (un-residualized) data.
+    /// adjacency over the original (un-residualized) data. The one copy
+    /// of the step loop behind every fit entry point; `observer` runs
+    /// after each step (progress/cancellation hooks — see
+    /// [`fit_session_observed`](DirectLingam::fit_session_observed)).
     fn drive(
         &self,
         data: &Mat,
         session: &mut dyn OrderingSession,
         mut profile: StageProfile,
+        observer: &mut dyn FnMut(usize, usize) -> Result<()>,
     ) -> Result<LingamFit> {
         let d = data.cols();
+        let steps = d - 1;
         let mut order = Vec::with_capacity(d);
         let mut step_scores = Vec::with_capacity(d);
         // causal ordering: d−1 search steps; the last variable is forced
-        for _ in 0..(d - 1) {
+        for k in 0..steps {
             let step: OrderStep = profile.time("ordering", || session.step())?;
             order.push(step.chosen);
             step_scores.push(step.scores);
+            observer(k + 1, steps)?;
         }
         let last = session
             .active()
@@ -152,33 +172,41 @@ impl DirectLingam {
     }
 
     fn validate(&self, data: &Mat) -> Result<()> {
-        let (n, d) = (data.rows(), data.cols());
-        if d < 2 {
-            return Err(Error::InvalidArgument(format!("need ≥ 2 variables, got {d}")));
-        }
-        if n < 8 {
-            return Err(Error::InvalidArgument(format!("need ≥ 8 samples, got {n}")));
-        }
-        if !data.is_finite() {
-            return Err(Error::InvalidArgument("data contains NaN/inf".into()));
-        }
-        // a (near-)constant column has no causal direction to estimate
-        // (its correlation with everything is 0/0); reject it up front
-        // instead of letting degenerate scores reach the engines. The
-        // threshold is relative to the column's scale: an exact-zero test
-        // would miss constants like 0.1 whose float sums leave ~1e-17 of
-        // rounding variance, and std below the standardize() floor means
-        // the column is constant to working precision anyway
-        for c in 0..d {
-            let col = data.col(c);
-            if crate::stats::std(&col) <= 1e-12 * (1.0 + crate::stats::mean(&col).abs()) {
-                return Err(Error::InvalidArgument(format!(
-                    "column {c} is constant (zero variance): causal order undefined"
-                )));
-            }
-        }
-        Ok(())
+        validate_panel(data)
     }
+}
+
+/// The panel preconditions every DirectLiNGAM entry point enforces —
+/// shared as a free function so callers that drive sessions themselves
+/// (the serve workers, which need per-step progress hooks `fit` does not
+/// expose) reject exactly the panels `DirectLingam::fit` would.
+pub(crate) fn validate_panel(data: &Mat) -> Result<()> {
+    let (n, d) = (data.rows(), data.cols());
+    if d < 2 {
+        return Err(Error::InvalidArgument(format!("need ≥ 2 variables, got {d}")));
+    }
+    if n < 8 {
+        return Err(Error::InvalidArgument(format!("need ≥ 8 samples, got {n}")));
+    }
+    if !data.is_finite() {
+        return Err(Error::InvalidArgument("data contains NaN/inf".into()));
+    }
+    // a (near-)constant column has no causal direction to estimate
+    // (its correlation with everything is 0/0); reject it up front
+    // instead of letting degenerate scores reach the engines. The
+    // threshold is relative to the column's scale: an exact-zero test
+    // would miss constants like 0.1 whose float sums leave ~1e-17 of
+    // rounding variance, and std below the standardize() floor means
+    // the column is constant to working precision anyway
+    for c in 0..d {
+        let col = data.col(c);
+        if crate::stats::std(&col) <= 1e-12 * (1.0 + crate::stats::mean(&col).abs()) {
+            return Err(Error::InvalidArgument(format!(
+                "column {c} is constant (zero variance): causal order undefined"
+            )));
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -248,6 +276,38 @@ mod tests {
                 eng.name()
             );
         }
+    }
+
+    #[test]
+    fn observed_fit_reports_every_step_and_can_abort() {
+        let mut rng = Pcg64::seed_from_u64(13);
+        let ds = simulate_sem(&SemSpec::layered(6, 2, 0.5), 800, &mut rng);
+        let engine = VectorizedEngine;
+        let mut session = engine.session(&ds.data).unwrap();
+        let mut seen = Vec::new();
+        let fit = DirectLingam::new()
+            .fit_session_observed(&ds.data, session.as_mut(), &mut |k, total| {
+                seen.push((k, total));
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(seen, (1..=5).map(|k| (k, 5)).collect::<Vec<_>>());
+        let plain = DirectLingam::new().fit(&ds.data, &engine).unwrap();
+        assert_eq!(fit.order, plain.order, "observer must not change the fit");
+        // an observer error aborts the drive and surfaces unchanged
+        session.reset(&ds.data).unwrap();
+        let res = DirectLingam::new().fit_session_observed(
+            &ds.data,
+            session.as_mut(),
+            &mut |k, _| {
+                if k == 2 {
+                    Err(Error::Canceled("stop".into()))
+                } else {
+                    Ok(())
+                }
+            },
+        );
+        assert!(matches!(res, Err(Error::Canceled(_))), "got {res:?}");
     }
 
     #[test]

@@ -8,20 +8,29 @@
 //!   agree      the Figure-3 parallel-vs-sequential agreement sweep
 //!   bootstrap  bootstrap edge-confidence estimation
 //!   ica        ICA-LiNGAM (the original estimator) on simulated data
+//!   serve      resident JSON-lines-over-TCP discovery service
+//!   client     drive a running server (fit|bootstrap|varlingam|status|
+//!              metrics|cancel|shutdown as the second positional)
 //!   info       runtime/artifact inventory
+//!
+//! The fit paths (`discover`, `var`, `bootstrap`) accept a bare `--json`
+//! flag to emit the result as one machine-readable line — the same
+//! `result` frame the serve protocol streams, so both surfaces parse
+//! identically.
 
 use alingam::apps::{genes, simbench, stocks};
 use alingam::coordinator::{Engine, EngineChoice};
-use alingam::lingam::{DirectLingam, VarLingam};
+use alingam::lingam::{DirectLingam, SweepCounters, VarLingam};
 use alingam::metrics::graph_metrics;
 use alingam::prelude::*;
 use alingam::runtime::{ArtifactKind, ArtifactRegistry};
+use alingam::serve::protocol;
 use alingam::sim::{MarketSpec, VarSpec};
-use alingam::util::cli::{engine_opt, opt, Args, OptSpec};
+use alingam::util::cli::{engine_opt, opt, serve_opts, Args, OptSpec};
 use alingam::util::table::{f, secs, Table};
 
 fn specs() -> Vec<OptSpec> {
-    vec![
+    let mut specs = vec![
         engine_opt(),
         opt("dims", "number of variables", Some("10")),
         opt("samples", "number of samples / time steps", Some("4000")),
@@ -34,7 +43,9 @@ fn specs() -> Vec<OptSpec> {
         opt("svgd-particles", "Stein VI particles", Some("50")),
         opt("resamples", "bootstrap resamples", Some("50")),
         opt("lags", "VAR order k", Some("1")),
-    ]
+    ];
+    specs.extend(serve_opts());
+    specs
 }
 
 fn main() {
@@ -58,10 +69,13 @@ fn dispatch(cmd: &str, args: &Args) -> alingam::util::Result<()> {
         "agree" => agree(args),
         "bootstrap" => bootstrap_cmd(args),
         "ica" => ica_cmd(args),
+        "serve" => serve_cmd(args),
+        "client" => client_cmd(args),
         "info" => info(),
         other => {
             eprintln!(
-                "unknown command {other:?} (discover|var|genes|stocks|agree|bootstrap|ica|info)"
+                "unknown command {other:?} \
+                 (discover|var|genes|stocks|agree|bootstrap|ica|serve|client|info)"
             );
             std::process::exit(2);
         }
@@ -75,35 +89,34 @@ fn build_engine(args: &Args) -> alingam::util::Result<Engine> {
 /// Engine for commands that fan jobs across `sweep_workers` threads of
 /// their own (`agree`, `bootstrap`): an auto-sized parallel engine inside
 /// such a sweep would oversubscribe every core `sweep_workers`-fold, so
-/// divide the core budget instead. An explicit `parallel:N` is honored
-/// as given.
+/// the core budget is divided instead — the one normalization rule,
+/// [`EngineChoice::resolve_workers`], shared with the serve layer. An
+/// explicit `parallel:N` is honored as given.
 fn build_engine_for_sweep(args: &Args, sweep_workers: usize) -> alingam::util::Result<Engine> {
-    let mut choice = EngineChoice::parse(&args.req("engine"))?;
-    let per_job =
-        || (alingam::lingam::parallel::default_workers() / sweep_workers.max(1)).max(1);
-    match choice {
-        EngineChoice::Parallel { workers: 0 } => {
-            choice = EngineChoice::Parallel { workers: per_job() };
-        }
-        EngineChoice::Pruned { workers: 0 } => {
-            choice = EngineChoice::Pruned { workers: per_job() };
-        }
-        _ => {}
-    }
-    Engine::build(choice)
+    Engine::build(EngineChoice::parse(&args.req("engine"))?.resolve_workers(sweep_workers))
 }
 
 fn discover(args: &Args) -> alingam::util::Result<()> {
     let d = args.usize("dims");
     let n = args.usize("samples");
     let seed = args.usize("seed") as u64;
-    let engine = build_engine(args)?;
+    let choice = EngineChoice::parse(&args.req("engine"))?;
+    let engine = Engine::build(choice)?;
     let mut rng = Pcg64::seed_from_u64(seed);
     let ds = sim::simulate_sem(&sim::SemSpec::layered(d, 2, 0.5), n, &mut rng);
 
     let t0 = std::time::Instant::now();
     let fit = DirectLingam::new().fit(&ds.data, engine.as_ordering())?;
     let dt = t0.elapsed().as_secs_f64();
+    if args.flag("json") {
+        // the serve protocol's result frame (counters are zero here:
+        // `DirectLingam::fit` does not surface its session's sweep
+        // instrumentation, matching the shim's zeros convention)
+        let counters = SweepCounters::default();
+        let data = protocol::fit_data(&choice.spec(), &fit.order, &fit.adjacency, &counters);
+        println!("{}", protocol::frame_result(None, false, dt * 1e3, &data));
+        return Ok(());
+    }
     let m = graph_metrics(&ds.adjacency, &fit.adjacency, 0.05);
 
     println!("engine       : {}", engine.as_ordering().name());
@@ -122,12 +135,18 @@ fn var(args: &Args) -> alingam::util::Result<()> {
     let d = args.usize("dims");
     let n = args.usize("samples");
     let seed = args.usize("seed") as u64;
-    let engine = build_engine(args)?;
+    let choice = EngineChoice::parse(&args.req("engine"))?;
+    let engine = Engine::build(choice)?;
     let mut rng = Pcg64::seed_from_u64(seed);
     let ds = sim::simulate_var(&VarSpec { dim: d, ..Default::default() }, n, &mut rng);
     let t0 = std::time::Instant::now();
     let fit = VarLingam::new().with_lags(args.usize("lags")).fit(&ds.data, engine.as_ordering())?;
     let dt = t0.elapsed().as_secs_f64();
+    if args.flag("json") {
+        let data = protocol::var_data(&choice.spec(), &fit);
+        println!("{}", protocol::frame_result(None, false, dt * 1e3, &data));
+        return Ok(());
+    }
     let m0 = graph_metrics(&ds.b0, &fit.b0, 0.05);
     println!("engine  : {}", engine.as_ordering().name());
     println!("B0 F1   : {:.3}  SHD {}", m0.f1, m0.shd);
@@ -248,7 +267,8 @@ fn bootstrap_cmd(args: &Args) -> alingam::util::Result<()> {
     use alingam::coordinator::{bootstrap_direct, BootstrapOpts};
     let d = args.usize("dims");
     let n = args.usize("samples");
-    let engine = build_engine_for_sweep(args, args.usize("workers"))?;
+    let choice = EngineChoice::parse(&args.req("engine"))?.resolve_workers(args.usize("workers"));
+    let engine = Engine::build(choice)?;
     let mut rng = Pcg64::seed_from_u64(args.usize("seed") as u64);
     let ds = sim::simulate_sem(&sim::SemSpec::layered(d, 2, 0.5), n, &mut rng);
     let opts = BootstrapOpts {
@@ -256,7 +276,14 @@ fn bootstrap_cmd(args: &Args) -> alingam::util::Result<()> {
         workers: args.usize("workers"),
         ..Default::default()
     };
+    let t0 = std::time::Instant::now();
     let result = bootstrap_direct(&ds.data, engine.as_ordering(), &opts)?;
+    let dt = t0.elapsed().as_secs_f64();
+    if args.flag("json") {
+        let data = protocol::bootstrap_data(&choice.spec(), &result, 0.5);
+        println!("{}", protocol::frame_result(None, false, dt * 1e3, &data));
+        return Ok(());
+    }
     let mut t = Table::new(
         "bootstrap edge stability (prob ≥ 0.5)",
         &["edge", "probability", "mean weight", "true weight"],
@@ -289,6 +316,117 @@ fn ica_cmd(args: &Args) -> alingam::util::Result<()> {
     println!("order ok: {}", alingam::graph::order_consistent(&ds.adjacency, &fit.order));
     println!("F1 / SHD: {:.3} / {}   wall {}", m.f1, m.shd, secs(dt));
     Ok(())
+}
+
+/// Run the resident discovery service until some client sends a
+/// `shutdown` frame, then drain and exit.
+fn serve_cmd(args: &Args) -> alingam::util::Result<()> {
+    use std::io::Write;
+    let cfg = alingam::serve::ServeConfig {
+        addr: args.req("addr"),
+        workers: args.usize("serve-workers"),
+        queue_capacity: args.usize("queue-cap"),
+        cache_entries: args.usize("cache-entries"),
+    };
+    let server = alingam::serve::Server::start(cfg)?;
+    // flushed eagerly so scripted callers (the CI smoke) can read the
+    // bound address even through a pipe
+    println!("serving on {}", server.local_addr());
+    std::io::stdout().flush()?;
+    server.wait_for_shutdown_request();
+    println!("shutdown requested; draining queued jobs");
+    server.shutdown();
+    println!("drained cleanly");
+    Ok(())
+}
+
+/// One-shot protocol client: build a request from the CLI options, send
+/// it, echo every streamed frame, and exit on the terminal frame.
+fn client_cmd(args: &Args) -> alingam::util::Result<()> {
+    use alingam::serve::protocol::Json;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    let action = args.positional(1).unwrap_or("fit").to_string();
+    let addr = args.req("addr");
+    let mut stream = TcpStream::connect(&addr)?;
+    let reader = BufReader::new(stream.try_clone()?);
+    let engine = args.req("engine");
+    let id = args.req("job-id");
+
+    let request = match action.as_str() {
+        "status" | "metrics" | "shutdown" => protocol::control_request(&action),
+        "cancel" => protocol::cancel_request(&id),
+        "fit" | "bootstrap" | "varlingam" => {
+            if let Some(path) = args.get("csv") {
+                if action != "fit" {
+                    return Err(alingam::util::Error::InvalidArgument(
+                        "--csv panels are supported for the fit action only".into(),
+                    ));
+                }
+                protocol::csv_fit_request(&id, &engine, &path)
+            } else {
+                // simulate the same layered SEM panel `discover` uses,
+                // client-side, and ship it inline
+                let d = args.usize("dims");
+                let n = args.usize("samples");
+                let seed = args.usize("seed") as u64;
+                let mut rng = Pcg64::seed_from_u64(seed);
+                let panel = sim::simulate_sem(&sim::SemSpec::layered(d, 2, 0.5), n, &mut rng).data;
+                match action.as_str() {
+                    "fit" => protocol::fit_request(&id, &engine, &panel),
+                    "bootstrap" => protocol::bootstrap_request(
+                        &id,
+                        &engine,
+                        &panel,
+                        args.usize("resamples"),
+                        seed,
+                        args.f64("threshold"),
+                    ),
+                    _ => protocol::var_request(&id, &engine, &panel, args.usize("lags")),
+                }
+            }
+        }
+        other => {
+            eprintln!(
+                "unknown client action {other:?} \
+                 (fit|bootstrap|varlingam|status|metrics|cancel|shutdown)"
+            );
+            std::process::exit(2);
+        }
+    };
+    stream.write_all(request.as_bytes())?;
+    stream.write_all(b"\n")?;
+
+    let one_shot = matches!(action.as_str(), "status" | "metrics" | "shutdown" | "cancel");
+    for line in reader.lines() {
+        let line = line?;
+        println!("{line}");
+        let frame = protocol::parse_json(&line).unwrap_or(Json::Null);
+        match frame.get("event").and_then(Json::as_str) {
+            Some("result") => {
+                let cached = frame.get("cached").and_then(Json::as_bool).unwrap_or(false);
+                println!("# result received (cached: {cached})");
+                return Ok(());
+            }
+            Some("canceled") => return Ok(()),
+            Some("error") => {
+                let msg = frame
+                    .get("message")
+                    .and_then(Json::as_str)
+                    .unwrap_or("server error")
+                    .to_string();
+                return Err(alingam::util::Error::Runtime(msg));
+            }
+            _ => {}
+        }
+        if one_shot {
+            return Ok(());
+        }
+    }
+    Err(alingam::util::Error::Runtime(
+        "connection closed before a terminal frame arrived".into(),
+    ))
 }
 
 fn info() -> alingam::util::Result<()> {

@@ -1,0 +1,246 @@
+//! Panel-hash result cache: repeated fits on overlapping workloads are
+//! the serve layer's cheapest speedup — a byte-identical request (same
+//! panel bits, same effective engine spec, same options) returns the
+//! previously computed result payload without touching a worker session.
+//!
+//! Keys are 128-bit FNV-1a digests over the request's full semantic
+//! content (job kind + options, canonical engine spec, panel dims and
+//! every sample's bit pattern), streamed through [`Fnv128`] so the panel
+//! is never re-serialized just to be hashed. 128 bits makes accidental
+//! collisions negligible (~2⁻⁶⁴ at a billion entries); the cache is a
+//! correctness-relevant map, which is why the 64-bit hash the repo uses
+//! for property seeds is not enough here.
+//!
+//! The store is a mutex-guarded MRU-ordered vector — an LRU for the
+//! two-digit capacities a discovery service wants (results are large,
+//! panels larger; the win is in skipping recomputation, not in hoarding
+//! thousands of entries), with hit/miss/eviction counters feeding
+//! [`ServeMetrics`](super::ServeMetrics).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Streaming 128-bit FNV-1a hasher.
+pub struct Fnv128 {
+    state: u128,
+}
+
+impl Fnv128 {
+    const OFFSET: u128 = 0x6c62_272e_07bb_0142_62b8_2175_6295_c58d;
+    const PRIME: u128 = 0x0000_0000_0100_0000_0000_0000_0000_013b;
+
+    pub fn new() -> Fnv128 {
+        Fnv128 { state: Self::OFFSET }
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u128;
+            self.state = self.state.wrapping_mul(Self::PRIME);
+        }
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    /// Hash the exact bit pattern (so −0.0 ≠ 0.0 and every NaN payload
+    /// is distinct — byte-identical panels, not value-equal ones).
+    pub fn write_f64_bits(&mut self, v: f64) {
+        self.write_u64(v.to_bits());
+    }
+
+    /// Length-prefixed, so `("ab","c")` and `("a","bc")` differ.
+    pub fn write_str(&mut self, s: &str) {
+        self.write_u64(s.len() as u64);
+        self.write(s.as_bytes());
+    }
+
+    pub fn finish(&self) -> u128 {
+        self.state
+    }
+}
+
+impl Default for Fnv128 {
+    fn default() -> Self {
+        Fnv128::new()
+    }
+}
+
+/// A snapshot of the cache's counters (for the `metrics` frame).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+    pub capacity: usize,
+}
+
+impl CacheStats {
+    /// Hits over lookups (1.0 when nothing has been looked up).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// LRU result cache keyed by [`Fnv128`] digests, storing the serialized
+/// `data` payload of a result frame (shared via `Arc` so a hit costs a
+/// pointer clone, not a payload copy). `capacity == 0` disables caching
+/// entirely (every lookup is a miss, nothing is stored).
+pub struct ResultCache {
+    /// MRU-first: index 0 is the most recently used entry.
+    entries: Mutex<Vec<(u128, Arc<String>)>>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl ResultCache {
+    pub fn new(capacity: usize) -> ResultCache {
+        ResultCache {
+            entries: Mutex::new(Vec::new()),
+            capacity,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Look a key up, promoting it to most-recently-used on a hit.
+    pub fn get(&self, key: u128) -> Option<Arc<String>> {
+        let mut entries = self.entries.lock().expect("result cache");
+        match entries.iter().position(|(k, _)| *k == key) {
+            Some(pos) => {
+                let entry = entries.remove(pos);
+                let value = entry.1.clone();
+                entries.insert(0, entry);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(value)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) a key, evicting from the LRU end past
+    /// capacity.
+    pub fn put(&self, key: u128, value: Arc<String>) {
+        if self.capacity == 0 {
+            return;
+        }
+        let mut entries = self.entries.lock().expect("result cache");
+        if let Some(pos) = entries.iter().position(|(k, _)| *k == key) {
+            entries.remove(pos);
+        }
+        entries.insert(0, (key, value));
+        while entries.len() > self.capacity {
+            entries.pop();
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.entries.lock().expect("result cache").len(),
+            capacity: self.capacity,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &str) -> Arc<String> {
+        Arc::new(s.to_string())
+    }
+
+    #[test]
+    fn hashes_separate_fields_and_bit_patterns() {
+        let digest = |f: &dyn Fn(&mut Fnv128)| {
+            let mut h = Fnv128::new();
+            f(&mut h);
+            h.finish()
+        };
+        // length prefixes keep field boundaries distinct
+        let ab_c = digest(&|h| {
+            h.write_str("ab");
+            h.write_str("c");
+        });
+        let a_bc = digest(&|h| {
+            h.write_str("a");
+            h.write_str("bc");
+        });
+        assert_ne!(ab_c, a_bc);
+        // bit-pattern hashing distinguishes −0.0 from 0.0
+        assert_ne!(
+            digest(&|h| h.write_f64_bits(0.0)),
+            digest(&|h| h.write_f64_bits(-0.0))
+        );
+        // deterministic
+        assert_eq!(digest(&|h| h.write_u64(42)), digest(&|h| h.write_u64(42)));
+    }
+
+    #[test]
+    fn hit_miss_counters_and_payload_sharing() {
+        let c = ResultCache::new(4);
+        assert!(c.get(1).is_none());
+        c.put(1, v("one"));
+        let got = c.get(1).expect("hit");
+        assert_eq!(*got, "one");
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn evicts_least_recently_used_and_touch_protects() {
+        let c = ResultCache::new(2);
+        c.put(1, v("1"));
+        c.put(2, v("2"));
+        // touch 1 so it becomes MRU; inserting 3 must evict 2
+        assert!(c.get(1).is_some());
+        c.put(3, v("3"));
+        assert!(c.get(2).is_none(), "LRU entry must have been evicted");
+        assert!(c.get(1).is_some());
+        assert!(c.get(3).is_some());
+        let s = c.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.entries, 2);
+    }
+
+    #[test]
+    fn refresh_replaces_value_without_growth() {
+        let c = ResultCache::new(2);
+        c.put(7, v("old"));
+        c.put(7, v("new"));
+        assert_eq!(*c.get(7).unwrap(), "new");
+        assert_eq!(c.stats().entries, 1);
+        assert_eq!(c.stats().evictions, 0);
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let c = ResultCache::new(0);
+        c.put(1, v("x"));
+        assert!(c.get(1).is_none());
+        assert_eq!(c.stats().entries, 0);
+    }
+
+    #[test]
+    fn empty_hit_rate_is_one() {
+        assert_eq!(ResultCache::new(2).stats().hit_rate(), 1.0);
+    }
+}

@@ -1,0 +1,525 @@
+//! `serve` — the resident causal-discovery service: a JSON-lines-over-TCP
+//! front on the ordering/bootstrap/VarLiNGAM machinery, turning the
+//! one-shot CLI repo into a long-lived process that keeps workers hot and
+//! reuses work across requests.
+//!
+//! # Why a service
+//!
+//! Every other entry point pays full engine/session construction per fit
+//! and serves exactly one caller. The ROADMAP's north star — heavy
+//! traffic, batching, caching — starts here, with the two reuse levers
+//! ParaLiNGAM's scheduler identifies applied across *requests* instead of
+//! within one fit: parked session workspaces (hot workers, no per-request
+//! allocation/build for repeated shapes) and a content-addressed result
+//! cache (repeated panels answered without any computation at all).
+//!
+//! # Architecture
+//!
+//! ```text
+//! client --TCP--> connection reader --> bounded JobQueue --> N workers
+//!                  | parse frames         (per-client lanes,  | parked
+//!                  | cache short-circuit   backpressure)      | sessions
+//!                  <---------------- shared line sink <-------+
+//! ```
+//!
+//! - [`protocol`] — the newline-delimited JSON frames (requests: `fit`,
+//!   `bootstrap`, `varlingam`, `status`, `metrics`, `cancel`,
+//!   `shutdown`; responses: `accepted` → `progress`… → one terminal
+//!   `result`/`error`/`canceled`), with the total, never-panicking
+//!   parser. See its docs for the frame grammar with examples.
+//! - [`queue`] — the bounded job queue: producers block at capacity
+//!   (real backpressure down the TCP connection), consumers round-robin
+//!   per-client lanes, each client's jobs run strictly FIFO, shutdown
+//!   drains.
+//! - [`worker`] — worker threads owning parked [`IncrementalSession`]
+//!   workspaces keyed by shape + engine config, honoring per-request
+//!   `exact`/`pruned` strategy and worker counts, streaming per-step
+//!   ordering and per-resample bootstrap progress, checking cancel flags
+//!   at step boundaries.
+//! - [`cache`] — the panel-hash LRU: 128-bit FNV over panel bits +
+//!   canonical engine spec + options, hit/miss/eviction counters.
+//!
+//! Progress streams because the ordering subsystem already has the right
+//! seam: the [`OrderingSession`](crate::lingam::OrderingSession)
+//! lifecycle exposes every search step, so the serve driver is
+//! `DirectLingam::fit`'s loop with frames between steps — same math,
+//! same results (pinned by the integration suite against direct fits).
+//!
+//! The `alingam serve` and `alingam client` subcommands wrap this module
+//! on the CLI; `Server::start` is the embeddable entry point the
+//! integration tests drive.
+//!
+//! [`IncrementalSession`]: crate::lingam::IncrementalSession
+
+pub mod cache;
+pub mod protocol;
+pub mod queue;
+pub mod worker;
+
+pub use self::cache::{CacheStats, ResultCache};
+pub use self::queue::JobQueue;
+
+use crate::coordinator::{Engine, EngineChoice};
+use crate::lingam::SweepCounters;
+use crate::runtime::XlaEngine;
+use crate::util::table::{json_escape, json_f64};
+use crate::util::Result;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Instant;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks a free port (read it back from
+    /// [`Server::local_addr`]).
+    pub addr: String,
+    /// Worker threads (0 ⇒ one per core, capped at 4 — each worker may
+    /// itself run a multi-threaded engine, and
+    /// [`EngineChoice::resolve_workers`] divides the cores between
+    /// them).
+    pub workers: usize,
+    /// Bounded queue capacity: producers block past this
+    /// (backpressure).
+    pub queue_capacity: usize,
+    /// Result-cache capacity in entries (0 disables caching).
+    pub cache_entries: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            queue_capacity: 64,
+            cache_entries: 32,
+        }
+    }
+}
+
+/// Service-level counters, exposed through the `metrics` request (cache
+/// counters live on the cache itself; sweep totals are summed from every
+/// fit session's [`SweepCounters`]).
+#[derive(Default)]
+pub struct ServeMetrics {
+    pub(crate) jobs_submitted: AtomicU64,
+    pub(crate) jobs_completed: AtomicU64,
+    pub(crate) jobs_failed: AtomicU64,
+    pub(crate) jobs_canceled: AtomicU64,
+    /// Results answered at submit time straight from the cache (no job
+    /// queued or executed).
+    pub(crate) cache_short_circuits: AtomicU64,
+    pub(crate) in_flight: AtomicU64,
+    /// Total per-job wall-clock, milliseconds.
+    pub(crate) busy_ms_total: AtomicU64,
+    pub(crate) sweep_pairs_total: AtomicU64,
+    pub(crate) sweep_pairs_visited: AtomicU64,
+    pub(crate) sweep_pairs_skipped: AtomicU64,
+}
+
+impl ServeMetrics {
+    pub(crate) fn add_sweep(&self, c: &SweepCounters) {
+        self.sweep_pairs_total.fetch_add(c.pairs_total, Ordering::Relaxed);
+        self.sweep_pairs_visited.fetch_add(c.pairs_visited, Ordering::Relaxed);
+        self.sweep_pairs_skipped.fetch_add(c.pairs_skipped, Ordering::Relaxed);
+    }
+}
+
+/// Server-wide cancel-flag registry: job id → the live flags of every
+/// in-progress job submitted under that id (ids are client-chosen, so
+/// duplicates across connections are possible — `cancel` flips them
+/// all). Entries are unregistered when their job reaches a terminal
+/// frame, so the registry only ever holds live jobs.
+#[derive(Default)]
+pub(crate) struct CancelRegistry {
+    inner: Mutex<HashMap<String, Vec<Arc<AtomicBool>>>>,
+}
+
+impl CancelRegistry {
+    pub(crate) fn register(&self, id: &str, flag: Arc<AtomicBool>) {
+        self.inner.lock().expect("cancel registry").entry(id.to_string()).or_default().push(flag);
+    }
+
+    /// Set every live flag registered under `id`; `true` if any existed.
+    pub(crate) fn cancel(&self, id: &str) -> bool {
+        match self.inner.lock().expect("cancel registry").get(id) {
+            Some(flags) => {
+                for flag in flags {
+                    flag.store(true, Ordering::Relaxed);
+                }
+                !flags.is_empty()
+            }
+            None => false,
+        }
+    }
+
+    /// Drop one specific job's flag (pointer identity), pruning the id's
+    /// entry once empty.
+    pub(crate) fn unregister(&self, id: &str, flag: &Arc<AtomicBool>) {
+        let mut inner = self.inner.lock().expect("cancel registry");
+        if let Some(flags) = inner.get_mut(id) {
+            flags.retain(|f| !Arc::ptr_eq(f, flag));
+            if flags.is_empty() {
+                inner.remove(id);
+            }
+        }
+    }
+
+    #[cfg(test)]
+    fn len(&self) -> usize {
+        self.inner.lock().expect("cancel registry").len()
+    }
+}
+
+/// State shared between the acceptor, the connection readers and the
+/// workers.
+pub(crate) struct Shared {
+    pub(crate) queue: JobQueue<worker::Job>,
+    pub(crate) cache: ResultCache,
+    pub(crate) metrics: ServeMetrics,
+    pub(crate) cancels: CancelRegistry,
+    pub(crate) worker_count: usize,
+    /// Lazily built, shared XLA engine (a device thread + compile cache
+    /// is far too expensive to stand up per request).
+    xla: Mutex<Option<Arc<XlaEngine>>>,
+    started: Instant,
+    shutdown: AtomicBool,
+    stop_flag: Mutex<bool>,
+    stop_cv: Condvar,
+    /// Live connections (by client id) so shutdown can sever them; each
+    /// connection handler removes its own entry when the client goes
+    /// away.
+    conns: Mutex<Vec<(u64, TcpStream)>>,
+    next_client: AtomicU64,
+}
+
+impl Shared {
+    pub(crate) fn xla_engine(&self) -> Result<Arc<XlaEngine>> {
+        let mut slot = self.xla.lock().expect("xla engine slot");
+        if let Some(engine) = &*slot {
+            return Ok(engine.clone());
+        }
+        let engine = Arc::new(XlaEngine::from_default_artifacts()?);
+        *slot = Some(engine.clone());
+        Ok(engine)
+    }
+
+    /// Per-request engine construction: cheap CPU engines are built
+    /// fresh, the XLA engine is shared.
+    pub(crate) fn build_engine(&self, choice: EngineChoice) -> Result<Engine> {
+        match choice {
+            EngineChoice::Xla => Ok(Engine::Xla(self.xla_engine()?)),
+            other => Engine::build(other),
+        }
+    }
+}
+
+/// A running service: acceptor thread + worker threads around a
+/// [`Shared`] core. Create with [`Server::start`], stop with
+/// [`Server::shutdown`] (graceful: queued jobs drain first).
+pub struct Server {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind, spawn the workers and the acceptor, return immediately.
+    pub fn start(cfg: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let worker_count = if cfg.workers == 0 {
+            crate::lingam::parallel::default_workers().min(4)
+        } else {
+            cfg.workers
+        };
+        let shared = Arc::new(Shared {
+            queue: JobQueue::new(cfg.queue_capacity.max(1)),
+            cache: ResultCache::new(cfg.cache_entries),
+            metrics: ServeMetrics::default(),
+            cancels: CancelRegistry::default(),
+            worker_count,
+            xla: Mutex::new(None),
+            started: Instant::now(),
+            shutdown: AtomicBool::new(false),
+            stop_flag: Mutex::new(false),
+            stop_cv: Condvar::new(),
+            conns: Mutex::new(Vec::new()),
+            next_client: AtomicU64::new(1),
+        });
+        let workers = (0..worker_count)
+            .map(|k| {
+                let sh = shared.clone();
+                thread::Builder::new()
+                    .name(format!("serve-worker-{k}"))
+                    .spawn(move || worker::worker_loop(&sh))
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        let accept = {
+            let sh = shared.clone();
+            thread::Builder::new()
+                .name("serve-accept".to_string())
+                .spawn(move || accept_loop(listener, sh))
+                .expect("spawn serve acceptor")
+        };
+        Ok(Server { addr, shared, accept: Some(accept), workers })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Jobs queued and not yet running.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.depth()
+    }
+
+    /// Result-cache counters (tests; clients use the `metrics` frame).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.shared.cache.stats()
+    }
+
+    /// Block until some client sends a `shutdown` frame (the CLI `serve`
+    /// command waits here, then calls [`Server::shutdown`]).
+    pub fn wait_for_shutdown_request(&self) {
+        let mut stop = self.shared.stop_flag.lock().expect("stop flag");
+        while !*stop {
+            stop = self.shared.stop_cv.wait(stop).expect("stop flag");
+        }
+    }
+
+    /// Graceful shutdown: stop accepting connections and jobs, let the
+    /// workers drain everything already queued (results still stream to
+    /// their clients), then sever remaining connections.
+    pub fn shutdown(mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.queue.close();
+        // the acceptor blocks in accept(): poke it awake
+        let _ = TcpStream::connect(self.addr);
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+        // workers are done and every result is written; now unblock the
+        // connection readers so their threads exit
+        for (_client, conn) in self.shared.conns.lock().expect("conn list").drain(..) {
+            let _ = conn.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                let client = shared.next_client.fetch_add(1, Ordering::Relaxed);
+                if let Ok(clone) = stream.try_clone() {
+                    shared.conns.lock().expect("conn list").push((client, clone));
+                }
+                let sh = shared.clone();
+                let _ = thread::Builder::new()
+                    .name("serve-conn".to_string())
+                    .spawn(move || handle_connection(stream, sh, client));
+            }
+            Err(_) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// One connection: read frames line by line, answer control requests
+/// inline, queue jobs. `cancel` targets are looked up in the
+/// server-wide [`CancelRegistry`], so a second connection (the one-shot
+/// `alingam client cancel`) can cancel a job submitted on another.
+fn handle_connection(stream: TcpStream, shared: Arc<Shared>, client: u64) {
+    use protocol::Request;
+    // bound how long a worker can stall writing results to a client
+    // that stopped reading: past this, frames to that client are dropped
+    // instead of wedging the worker (and the graceful drain) forever
+    let _ = stream.set_write_timeout(Some(std::time::Duration::from_secs(30)));
+    let reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let out = Mutex::new(stream);
+    let sink: worker::Sink = Arc::new(move |line: &str| {
+        if let Ok(mut s) = out.lock() {
+            let _ = s.write_all(line.as_bytes());
+            let _ = s.write_all(b"\n");
+        }
+    });
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        match protocol::parse_request(&line) {
+            Err(e) => sink(&protocol::frame_error(None, &e.to_string())),
+            Ok(Request::Status { id }) => sink(&status_frame(id.as_deref(), &shared)),
+            Ok(Request::Metrics { id }) => sink(&metrics_frame(id.as_deref(), &shared)),
+            Ok(Request::Cancel { id, target }) => {
+                let known = shared.cancels.cancel(&target);
+                sink(&protocol::frame_ack(id.as_deref(), "cancel", known));
+            }
+            Ok(Request::Shutdown { id }) => {
+                sink(&protocol::frame_ack(id.as_deref(), "shutdown", true));
+                let mut stop = shared.stop_flag.lock().expect("stop flag");
+                *stop = true;
+                shared.stop_cv.notify_all();
+            }
+            Ok(Request::Job(spec)) => {
+                shared.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+                if short_circuit(&shared, &spec, &sink) {
+                    continue;
+                }
+                let id = spec.id.clone();
+                let cancel = Arc::new(AtomicBool::new(false));
+                shared.cancels.register(&id, cancel.clone());
+                // `accepted` goes out before the push: the sink mutex
+                // then guarantees it precedes any frame the job itself
+                // emits, whatever worker timing does
+                sink(&protocol::frame_accepted(&id, shared.queue.depth()));
+                let job = worker::Job { spec, cancel: cancel.clone(), sink: sink.clone() };
+                // push blocks at capacity: backpressure reaches the
+                // client through its stalled connection
+                if let Err(e) = shared.queue.push(client, job) {
+                    shared.cancels.unregister(&id, &cancel);
+                    sink(&protocol::frame_error(Some(id.as_str()), &e.to_string()));
+                }
+            }
+        }
+    }
+    // this connection is gone: drop its tracked clone so a long-lived
+    // server does not leak one fd per client ever served
+    shared.conns.lock().expect("conn list").retain(|(c, _)| *c != client);
+}
+
+/// Submit-time cache short-circuit: a byte-identical inline request
+/// replays its cached result frame without queueing a job at all (CSV
+/// panels are hashed by the worker after loading instead, so disk reads
+/// stay off the connection thread). Returns `true` when the request was
+/// answered here.
+fn short_circuit(shared: &Shared, spec: &protocol::JobSpec, sink: &worker::Sink) -> bool {
+    let protocol::PanelSource::Inline(panel) = &spec.panel else {
+        return false;
+    };
+    let Ok(choice) = EngineChoice::parse(&spec.engine) else {
+        return false;
+    };
+    let choice = choice.resolve_workers(shared.worker_count);
+    let key = worker::cache_key(panel, choice, &spec.kind);
+    match shared.cache.get(key) {
+        Some(hit) => {
+            shared.metrics.cache_short_circuits.fetch_add(1, Ordering::Relaxed);
+            sink(&protocol::frame_result(Some(spec.id.as_str()), true, 0.0, &hit));
+            true
+        }
+        None => false,
+    }
+}
+
+fn with_id(id: Option<&str>, body: &str) -> String {
+    match id {
+        Some(id) => format!("{{\"id\":\"{}\",{body}}}", json_escape(id)),
+        None => format!("{{{body}}}"),
+    }
+}
+
+fn status_frame(id: Option<&str>, shared: &Shared) -> String {
+    let body = format!(
+        "\"event\":\"status\",\"queue_depth\":{},\"in_flight\":{},\"workers\":{},\
+         \"uptime_ms\":{},\"accepting\":{}",
+        shared.queue.depth(),
+        shared.metrics.in_flight.load(Ordering::Relaxed),
+        shared.worker_count,
+        shared.started.elapsed().as_millis(),
+        shared.queue.is_open()
+    );
+    with_id(id, &body)
+}
+
+fn metrics_frame(id: Option<&str>, shared: &Shared) -> String {
+    let m = &shared.metrics;
+    let c = shared.cache.stats();
+    let jobs = format!(
+        "{{\"submitted\":{},\"completed\":{},\"failed\":{},\"canceled\":{},\
+         \"cache_short_circuits\":{}}}",
+        m.jobs_submitted.load(Ordering::Relaxed),
+        m.jobs_completed.load(Ordering::Relaxed),
+        m.jobs_failed.load(Ordering::Relaxed),
+        m.jobs_canceled.load(Ordering::Relaxed),
+        m.cache_short_circuits.load(Ordering::Relaxed),
+    );
+    let cache = format!(
+        "{{\"hits\":{},\"misses\":{},\"evictions\":{},\"entries\":{},\"capacity\":{},\
+         \"hit_rate\":{}}}",
+        c.hits,
+        c.misses,
+        c.evictions,
+        c.entries,
+        c.capacity,
+        json_f64(c.hit_rate()),
+    );
+    let sweep = format!(
+        "{{\"pairs_total\":{},\"pairs_visited\":{},\"pairs_skipped\":{}}}",
+        m.sweep_pairs_total.load(Ordering::Relaxed),
+        m.sweep_pairs_visited.load(Ordering::Relaxed),
+        m.sweep_pairs_skipped.load(Ordering::Relaxed),
+    );
+    let body = format!(
+        "\"event\":\"metrics\",\"workers\":{},\"uptime_ms\":{},\"queue_depth\":{},\
+         \"in_flight\":{},\"busy_ms_total\":{},\"jobs\":{jobs},\"cache\":{cache},\
+         \"sweep\":{sweep}",
+        shared.worker_count,
+        shared.started.elapsed().as_millis(),
+        shared.queue.depth(),
+        m.in_flight.load(Ordering::Relaxed),
+        m.busy_ms_total.load(Ordering::Relaxed),
+    );
+    with_id(id, &body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cancel_registry_flips_all_flags_for_an_id_and_prunes_on_unregister() {
+        let reg = CancelRegistry::default();
+        assert!(!reg.cancel("missing"), "unknown ids report not-found");
+        let a = Arc::new(AtomicBool::new(false));
+        let b = Arc::new(AtomicBool::new(false));
+        reg.register("job", a.clone());
+        reg.register("job", b.clone());
+        assert_eq!(reg.len(), 1);
+        assert!(reg.cancel("job"));
+        assert!(a.load(Ordering::Relaxed) && b.load(Ordering::Relaxed));
+        // unregister is by flag identity and prunes empty entries
+        reg.unregister("job", &a);
+        assert_eq!(reg.len(), 1);
+        assert!(reg.cancel("job"), "b is still live");
+        reg.unregister("job", &b);
+        assert_eq!(reg.len(), 0);
+        assert!(!reg.cancel("job"));
+        // unregistering something never registered is a no-op
+        reg.unregister("job", &a);
+    }
+}

@@ -1,0 +1,914 @@
+//! The serve wire protocol: newline-delimited JSON frames over TCP,
+//! parsed and emitted by a hand-rolled `std`-only JSON layer that
+//! extends the crate's existing serialization surface
+//! ([`Table::to_json`](crate::util::table::Table::to_json)'s
+//! [`json_escape`](crate::util::table::json_escape) /
+//! [`json_f64`](crate::util::table::json_f64) primitives), so the CLI
+//! `--json` mode, the bench artifacts and the service speak one dialect.
+//!
+//! # Frames
+//!
+//! Every frame is one line of JSON. Requests carry a `cmd`; job requests
+//! (`fit`, `bootstrap`, `varlingam`) also carry a client-chosen `id` the
+//! streamed responses echo, and a panel — inline
+//! (`"panel":{"rows":N,"cols":D,"data":[row-major f64…]}`) or as a
+//! server-side CSV path (`"csv":"/path.csv"`). Examples:
+//!
+//! ```json
+//! {"cmd":"fit","id":"a1","engine":"parallel:2","panel":{"rows":2,"cols":2,"data":[1,2,3,4]}}
+//! {"cmd":"bootstrap","id":"b1","engine":"pruned","resamples":50,"seed":7,"panel":{...}}
+//! {"cmd":"varlingam","id":"v1","lags":1,"csv":"/data/stocks.csv"}
+//! {"cmd":"status"}
+//! {"cmd":"metrics"}
+//! {"cmd":"cancel","target":"a1"}
+//! {"cmd":"shutdown"}
+//! ```
+//!
+//! Responses stream: a job is acknowledged on receipt (the `accepted`
+//! frame always precedes any frame the job itself emits; under
+//! backpressure the connection then stalls until the queue has room),
+//! emits progress while it runs, and terminates with exactly one
+//! `result`, `error` or `canceled` frame:
+//!
+//! ```json
+//! {"id":"a1","event":"accepted","queue_depth":1}
+//! {"id":"a1","event":"progress","stage":"ordering","step":3,"total":31}
+//! {"id":"a1","event":"result","cached":false,"elapsed_ms":12.5,"data":{"kind":"fit",...}}
+//! {"id":"b1","event":"progress","stage":"bootstrap","step":17,"total":50}
+//! {"id":"a1","event":"canceled"}
+//! {"event":"error","message":"json: expected ',' or '}' at byte 17"}
+//! ```
+//!
+//! Malformed frames never panic the server: the parser is total (depth-
+//! limited recursive descent returning [`Error::Parse`]) and the
+//! connection answers with an `error` frame, then resynchronizes at the
+//! next newline.
+
+use crate::coordinator::BootstrapResult;
+use crate::linalg::Mat;
+use crate::lingam::{SweepCounters, VarLingamFit};
+use crate::util::table::{json_escape, json_f64};
+use crate::util::{Error, Result};
+
+// ---------------------------------------------------------------------
+// JSON values: total parser + renderer.
+// ---------------------------------------------------------------------
+
+/// A parsed JSON value. Objects keep insertion order (a `Vec`, not a
+/// map: frames are small and order-preserving round-trips are easier to
+/// test).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object field lookup (first match).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kvs) => kvs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// Non-negative integer (rejects fractions and anything above 2⁵³,
+    /// where f64 stops being exact).
+    pub fn as_usize(&self) -> Option<usize> {
+        let v = self.as_f64()?;
+        if v >= 0.0 && v.fract() == 0.0 && v <= 9_007_199_254_740_992.0 {
+            Some(v as usize)
+        } else {
+            None
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_usize().map(|v| v as u64)
+    }
+
+    /// Render back to compact JSON (non-finite numbers, which only a
+    /// hand-constructed value can carry, become `null`).
+    pub fn render(&self) -> String {
+        match self {
+            Json::Null => "null".to_string(),
+            Json::Bool(b) => b.to_string(),
+            Json::Num(v) => json_f64(*v),
+            Json::Str(s) => format!("\"{}\"", json_escape(s)),
+            Json::Arr(items) => {
+                let body: Vec<String> = items.iter().map(Json::render).collect();
+                format!("[{}]", body.join(","))
+            }
+            Json::Obj(kvs) => {
+                let body: Vec<String> = kvs
+                    .iter()
+                    .map(|(k, v)| format!("\"{}\":{}", json_escape(k), v.render()))
+                    .collect();
+                format!("{{{}}}", body.join(","))
+            }
+        }
+    }
+}
+
+/// Recursion guard: protocol frames are shallow; anything deeper than
+/// this is hostile or broken, and recursing into it would risk the real
+/// panic the parser exists to prevent (stack overflow).
+const MAX_DEPTH: usize = 128;
+
+/// Parse one complete JSON value (trailing content is an error). Total:
+/// every input returns `Ok` or [`Error::Parse`], never a panic — pinned
+/// by the fuzz-ish property suite in `tests/serve_protocol.rs`.
+pub fn parse_json(s: &str) -> Result<Json> {
+    let mut p = Parser { b: s.as_bytes(), i: 0 };
+    let v = p.value(0)?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(p.err("trailing content after value"));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn err(&self, msg: &str) -> Error {
+        Error::Parse(format!("json: {msg} at byte {}", self.i))
+    }
+
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected {:?}", c as char)))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json> {
+        if depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        self.ws();
+        match self.peek() {
+            None => Err(self.err("unexpected end of input")),
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(_) => self.number(),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(self.err("bad literal"))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while matches!(self.peek(), Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')) {
+            self.i += 1;
+        }
+        if start == self.i {
+            return Err(self.err("expected a value"));
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| self.err("non-utf8 number"))?;
+        let v: f64 = text.parse().map_err(|_| self.err("bad number"))?;
+        if !v.is_finite() {
+            return Err(self.err("non-finite number"));
+        }
+        Ok(Json::Num(v))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out: Vec<u8> = Vec::new();
+        loop {
+            let c = self.peek().ok_or_else(|| self.err("unterminated string"))?;
+            self.i += 1;
+            match c {
+                b'"' => break,
+                b'\\' => {
+                    let e = self.peek().ok_or_else(|| self.err("unterminated escape"))?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push(b'"'),
+                        b'\\' => out.push(b'\\'),
+                        b'/' => out.push(b'/'),
+                        b'b' => out.push(0x08),
+                        b'f' => out.push(0x0c),
+                        b'n' => out.push(b'\n'),
+                        b'r' => out.push(b'\r'),
+                        b't' => out.push(b'\t'),
+                        b'u' => {
+                            let ch = self.unicode_escape()?;
+                            let mut buf = [0u8; 4];
+                            out.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                }
+                0x00..=0x1f => return Err(self.err("raw control character in string")),
+                other => out.push(other),
+            }
+        }
+        String::from_utf8(out).map_err(|_| self.err("invalid utf-8 in string"))
+    }
+
+    /// `\uXXXX`, including surrogate pairs; unpaired surrogates become
+    /// U+FFFD rather than an error (lenient, but never panicking).
+    fn unicode_escape(&mut self) -> Result<char> {
+        let hi = self.hex4()?;
+        let cp = if (0xD800..0xDC00).contains(&hi) {
+            if self.b[self.i..].starts_with(b"\\u") {
+                self.i += 2;
+                let lo = self.hex4()?;
+                if (0xDC00..0xE000).contains(&lo) {
+                    0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                } else {
+                    0xFFFD
+                }
+            } else {
+                0xFFFD
+            }
+        } else if (0xDC00..0xE000).contains(&hi) {
+            0xFFFD
+        } else {
+            hi
+        };
+        Ok(char::from_u32(cp).unwrap_or('\u{FFFD}'))
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        let mut v: u32 = 0;
+        for _ in 0..4 {
+            let c = self.peek().ok_or_else(|| self.err("truncated \\u escape"))?;
+            self.i += 1;
+            let digit =
+                (c as char).to_digit(16).ok_or_else(|| self.err("bad hex digit"))?;
+            v = v * 16 + digit;
+        }
+        Ok(v)
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value(depth + 1)?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    break;
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+        Ok(Json::Arr(items))
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut kvs = Vec::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(kvs));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            let value = self.value(depth + 1)?;
+            kvs.push((key, value));
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    break;
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+        Ok(Json::Obj(kvs))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Requests.
+// ---------------------------------------------------------------------
+
+/// Where a job's data panel comes from.
+#[derive(Clone, Debug)]
+pub enum PanelSource {
+    /// Row-major values shipped in the frame.
+    Inline(Mat),
+    /// A CSV path resolved on the server's filesystem (loaded by the
+    /// worker, so a slow disk never stalls the connection reader).
+    Csv(String),
+}
+
+/// What a job computes.
+#[derive(Clone, Debug)]
+pub enum JobKind {
+    /// DirectLiNGAM fit: causal order + pruned adjacency.
+    Fit,
+    /// Bootstrap edge-confidence estimation.
+    Bootstrap { resamples: usize, seed: u64, threshold: f64, workers: usize },
+    /// VarLiNGAM on a time-series panel.
+    Var { lags: usize },
+}
+
+/// A queued unit of work (the protocol half; the runtime half wraps it
+/// with a cancel flag and a reply sink in [`super::worker::Job`]).
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// Client-chosen id echoed on every response frame.
+    pub id: String,
+    pub panel: PanelSource,
+    /// Raw engine spec string (parsed/normalized by the worker).
+    pub engine: String,
+    pub kind: JobKind,
+}
+
+/// A parsed request frame.
+#[derive(Clone, Debug)]
+pub enum Request {
+    Job(JobSpec),
+    Status { id: Option<String> },
+    Metrics { id: Option<String> },
+    Cancel { id: Option<String>, target: String },
+    Shutdown { id: Option<String> },
+}
+
+/// Parse one request line. Every failure is a recoverable
+/// [`Error::Parse`]/[`Error::Shape`] the connection reports as an
+/// `error` frame.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let j = parse_json(line)?;
+    let cmd = j
+        .get("cmd")
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::Parse("frame missing string \"cmd\"".into()))?
+        .to_string();
+    let id = j.get("id").and_then(Json::as_str).map(str::to_string);
+    let job = |kind: JobKind| -> Result<Request> {
+        let id = id
+            .clone()
+            .ok_or_else(|| Error::Parse(format!("{cmd:?} frame missing string \"id\"")))?;
+        Ok(Request::Job(JobSpec {
+            id,
+            panel: parse_panel_source(&j)?,
+            engine: j
+                .get("engine")
+                .and_then(Json::as_str)
+                .unwrap_or("parallel")
+                .to_string(),
+            kind,
+        }))
+    };
+    match cmd.as_str() {
+        "fit" => job(JobKind::Fit),
+        "bootstrap" => {
+            let resamples = field_usize(&j, "resamples", 50)?;
+            if resamples == 0 {
+                return Err(Error::Parse("\"resamples\" must be ≥ 1".into()));
+            }
+            let seed = j
+                .get("seed")
+                .map(|v| v.as_u64().ok_or_else(|| bad_field("seed")))
+                .transpose()?
+                .unwrap_or(0);
+            let threshold = j
+                .get("threshold")
+                .map(|v| v.as_f64().ok_or_else(|| bad_field("threshold")))
+                .transpose()?
+                .unwrap_or(0.05);
+            let workers = field_usize(&j, "workers", 1)?;
+            job(JobKind::Bootstrap { resamples, seed, threshold, workers })
+        }
+        "varlingam" | "var" => {
+            let lags = field_usize(&j, "lags", 1)?;
+            if lags == 0 {
+                return Err(Error::Parse("\"lags\" must be ≥ 1".into()));
+            }
+            job(JobKind::Var { lags })
+        }
+        "status" => Ok(Request::Status { id }),
+        "metrics" => Ok(Request::Metrics { id }),
+        "cancel" => {
+            let target = j
+                .get("target")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Parse("cancel frame missing string \"target\"".into()))?
+                .to_string();
+            Ok(Request::Cancel { id, target })
+        }
+        "shutdown" => Ok(Request::Shutdown { id }),
+        other => Err(Error::Parse(format!(
+            "unknown cmd {other:?} (fit|bootstrap|varlingam|status|metrics|cancel|shutdown)"
+        ))),
+    }
+}
+
+fn bad_field(name: &str) -> Error {
+    Error::Parse(format!("field {name:?} has the wrong type"))
+}
+
+fn field_usize(j: &Json, name: &str, default: usize) -> Result<usize> {
+    match j.get(name) {
+        None => Ok(default),
+        Some(v) => v.as_usize().ok_or_else(|| bad_field(name)),
+    }
+}
+
+fn parse_panel_source(j: &Json) -> Result<PanelSource> {
+    if let Some(path) = j.get("csv").and_then(Json::as_str) {
+        return Ok(PanelSource::Csv(path.to_string()));
+    }
+    let p = j
+        .get("panel")
+        .ok_or_else(|| Error::Parse("job frame needs \"panel\" or \"csv\"".into()))?;
+    Ok(PanelSource::Inline(parse_mat(p)?))
+}
+
+/// Decode `{"rows":N,"cols":D,"data":[...]}` into a [`Mat`]. Shared by
+/// the server (inline panels) and the round-trip tests (adjacency
+/// matrices coming back out of result frames).
+pub fn parse_mat(j: &Json) -> Result<Mat> {
+    let rows = j
+        .get("rows")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| Error::Parse("matrix needs integer \"rows\"".into()))?;
+    let cols = j
+        .get("cols")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| Error::Parse("matrix needs integer \"cols\"".into()))?;
+    let data = j
+        .get("data")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Parse("matrix needs array \"data\"".into()))?;
+    if rows.checked_mul(cols) != Some(data.len()) {
+        return Err(Error::Shape(format!(
+            "matrix data length {} != rows {rows} × cols {cols}",
+            data.len()
+        )));
+    }
+    let flat: Result<Vec<f64>> = data
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| Error::Parse("matrix data must be numbers".into())))
+        .collect();
+    Mat::from_vec(rows, cols, flat?)
+}
+
+// ---------------------------------------------------------------------
+// Frame builders (responses and client-side requests).
+// ---------------------------------------------------------------------
+
+fn id_prefix(id: Option<&str>) -> String {
+    match id {
+        Some(id) => format!("\"id\":\"{}\",", json_escape(id)),
+        None => String::new(),
+    }
+}
+
+pub fn frame_accepted(id: &str, queue_depth: usize) -> String {
+    format!(
+        "{{\"id\":\"{}\",\"event\":\"accepted\",\"queue_depth\":{queue_depth}}}",
+        json_escape(id)
+    )
+}
+
+pub fn frame_progress(id: &str, stage: &str, step: usize, total: usize) -> String {
+    format!(
+        "{{\"id\":\"{}\",\"event\":\"progress\",\"stage\":\"{}\",\"step\":{step},\
+         \"total\":{total}}}",
+        json_escape(id),
+        json_escape(stage)
+    )
+}
+
+pub fn frame_result(id: Option<&str>, cached: bool, elapsed_ms: f64, data: &str) -> String {
+    format!(
+        "{{{}\"event\":\"result\",\"cached\":{cached},\"elapsed_ms\":{},\"data\":{data}}}",
+        id_prefix(id),
+        json_f64(elapsed_ms)
+    )
+}
+
+pub fn frame_error(id: Option<&str>, message: &str) -> String {
+    format!(
+        "{{{}\"event\":\"error\",\"message\":\"{}\"}}",
+        id_prefix(id),
+        json_escape(message)
+    )
+}
+
+pub fn frame_canceled(id: &str) -> String {
+    format!("{{\"id\":\"{}\",\"event\":\"canceled\"}}", json_escape(id))
+}
+
+/// Acknowledgement for the control commands (`cancel`, `shutdown`).
+pub fn frame_ack(id: Option<&str>, what: &str, ok: bool) -> String {
+    format!(
+        "{{{}\"event\":\"ack\",\"of\":\"{}\",\"ok\":{ok}}}",
+        id_prefix(id),
+        json_escape(what)
+    )
+}
+
+/// `{"rows":..,"cols":..,"data":[...]}` — row-major, shortest-roundtrip
+/// float tokens.
+pub fn mat_json(m: &Mat) -> String {
+    let mut data = String::with_capacity(16 * m.rows() * m.cols() + 32);
+    for (k, v) in m.as_slice().iter().enumerate() {
+        if k > 0 {
+            data.push(',');
+        }
+        data.push_str(&json_f64(*v));
+    }
+    format!("{{\"rows\":{},\"cols\":{},\"data\":[{}]}}", m.rows(), m.cols(), data)
+}
+
+fn usize_array(v: &[usize]) -> String {
+    let body: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+    format!("[{}]", body.join(","))
+}
+
+fn sweep_json(c: &SweepCounters) -> String {
+    format!(
+        "{{\"pairs_total\":{},\"pairs_visited\":{},\"pairs_skipped\":{},\
+         \"candidates_pruned\":{},\"elements_touched\":{}}}",
+        c.pairs_total, c.pairs_visited, c.pairs_skipped, c.candidates_pruned, c.elements_touched
+    )
+}
+
+/// The `data` payload of a fit result. `counters` are the session's
+/// sweep instrumentation (all-zero when the path is not instrumented —
+/// the stateless shim, the device session, the non-session CLI fit).
+pub fn fit_data(
+    engine: &str,
+    order: &[usize],
+    adjacency: &Mat,
+    counters: &SweepCounters,
+) -> String {
+    format!(
+        "{{\"kind\":\"fit\",\"engine\":\"{}\",\"order\":{},\"adjacency\":{},\"sweep\":{}}}",
+        json_escape(engine),
+        usize_array(order),
+        mat_json(adjacency),
+        sweep_json(counters)
+    )
+}
+
+/// The `data` payload of a bootstrap result: edges at or above the
+/// requested stability threshold, sorted by probability.
+pub fn bootstrap_data(engine: &str, r: &BootstrapResult, threshold: f64) -> String {
+    let edges: Vec<String> = r
+        .stable_edges(threshold)
+        .into_iter()
+        .map(|(from, to, p, w)| {
+            format!(
+                "{{\"from\":{from},\"to\":{to},\"prob\":{},\"weight\":{}}}",
+                json_f64(p),
+                json_f64(w)
+            )
+        })
+        .collect();
+    format!(
+        "{{\"kind\":\"bootstrap\",\"engine\":\"{}\",\"resamples\":{},\"threshold\":{},\
+         \"stable_edges\":[{}]}}",
+        json_escape(engine),
+        r.resamples,
+        json_f64(threshold),
+        edges.join(",")
+    )
+}
+
+/// The `data` payload of a VarLiNGAM result.
+pub fn var_data(engine: &str, fit: &VarLingamFit) -> String {
+    let lags: Vec<String> = fit.b_tau.iter().map(mat_json).collect();
+    format!(
+        "{{\"kind\":\"varlingam\",\"engine\":\"{}\",\"order\":{},\"b0\":{},\"b_tau\":[{}]}}",
+        json_escape(engine),
+        usize_array(&fit.order),
+        mat_json(&fit.b0),
+        lags.join(",")
+    )
+}
+
+/// Client-side: a `fit` request with an inline panel.
+pub fn fit_request(id: &str, engine: &str, panel: &Mat) -> String {
+    format!(
+        "{{\"cmd\":\"fit\",\"id\":\"{}\",\"engine\":\"{}\",\"panel\":{}}}",
+        json_escape(id),
+        json_escape(engine),
+        mat_json(panel)
+    )
+}
+
+/// Client-side: a `fit` request naming a server-side CSV.
+pub fn csv_fit_request(id: &str, engine: &str, path: &str) -> String {
+    format!(
+        "{{\"cmd\":\"fit\",\"id\":\"{}\",\"engine\":\"{}\",\"csv\":\"{}\"}}",
+        json_escape(id),
+        json_escape(engine),
+        json_escape(path)
+    )
+}
+
+/// Client-side: a `bootstrap` request with an inline panel.
+pub fn bootstrap_request(
+    id: &str,
+    engine: &str,
+    panel: &Mat,
+    resamples: usize,
+    seed: u64,
+    threshold: f64,
+) -> String {
+    format!(
+        "{{\"cmd\":\"bootstrap\",\"id\":\"{}\",\"engine\":\"{}\",\"resamples\":{resamples},\
+         \"seed\":{seed},\"threshold\":{},\"panel\":{}}}",
+        json_escape(id),
+        json_escape(engine),
+        json_f64(threshold),
+        mat_json(panel)
+    )
+}
+
+/// Client-side: a `varlingam` request with an inline panel.
+pub fn var_request(id: &str, engine: &str, panel: &Mat, lags: usize) -> String {
+    format!(
+        "{{\"cmd\":\"varlingam\",\"id\":\"{}\",\"engine\":\"{}\",\"lags\":{lags},\"panel\":{}}}",
+        json_escape(id),
+        json_escape(engine),
+        mat_json(panel)
+    )
+}
+
+/// Client-side: a bare control request (`status`, `metrics`,
+/// `shutdown`).
+pub fn control_request(cmd: &str) -> String {
+    format!("{{\"cmd\":\"{}\"}}", json_escape(cmd))
+}
+
+/// Client-side: cancel a submitted job by id. Lookup is server-wide, so
+/// a one-shot connection (`alingam client cancel`) can cancel a job
+/// submitted on another connection; every live job under that id is
+/// flagged.
+pub fn cancel_request(target: &str) -> String {
+    format!("{{\"cmd\":\"cancel\",\"target\":\"{}\"}}", json_escape(target))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_values_parse() {
+        assert_eq!(parse_json("null").unwrap(), Json::Null);
+        assert_eq!(parse_json(" true ").unwrap(), Json::Bool(true));
+        assert_eq!(parse_json("false").unwrap(), Json::Bool(false));
+        assert_eq!(parse_json("-1.5e3").unwrap(), Json::Num(-1500.0));
+        assert_eq!(parse_json("\"a\\nb\"").unwrap(), Json::Str("a\nb".into()));
+        assert_eq!(parse_json("\"\\u00e9\"").unwrap(), Json::Str("é".into()));
+        // surrogate pair
+        assert_eq!(parse_json("\"\\ud83d\\ude00\"").unwrap(), Json::Str("😀".into()));
+    }
+
+    #[test]
+    fn containers_parse_and_render_roundtrip() {
+        let src = "{\"a\":[1,2.5,\"x\"],\"b\":{\"c\":null,\"d\":false}}";
+        let v = parse_json(src).unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.render(), src);
+        // render → parse is the identity on parsed values
+        assert_eq!(parse_json(&v.render()).unwrap(), v);
+    }
+
+    #[test]
+    fn malformed_inputs_error_cleanly() {
+        for bad in [
+            "",
+            "{",
+            "}",
+            "[1,",
+            "{\"a\"}",
+            "{\"a\":}",
+            "\"unterminated",
+            "\"bad\\escape\"",
+            "nul",
+            "1.2.3",
+            "inf",
+            "NaN",
+            "[1] trailing",
+            "{\"a\":1,}x",
+            "\"\\u12\"",
+            "\u{1}",
+        ] {
+            assert!(parse_json(bad).is_err(), "accepted malformed {bad:?}");
+        }
+        // deep nesting hits the depth guard, not the stack
+        let deep = "[".repeat(10_000);
+        assert!(parse_json(&deep).is_err());
+    }
+
+    #[test]
+    fn mat_roundtrip() {
+        let m = Mat::from_rows(&[&[1.0, -2.5, 0.0], &[3.25, 4.0, 1e-9]]);
+        let j = parse_json(&mat_json(&m)).unwrap();
+        let back = parse_mat(&j).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn mat_rejects_bad_shapes() {
+        assert!(parse_mat(&parse_json("{\"rows\":2,\"cols\":2,\"data\":[1,2,3]}").unwrap())
+            .is_err());
+        assert!(parse_mat(&parse_json("{\"rows\":1,\"cols\":1}").unwrap()).is_err());
+        assert!(
+            parse_mat(&parse_json("{\"rows\":1,\"cols\":2,\"data\":[1,\"x\"]}").unwrap()).is_err()
+        );
+    }
+
+    #[test]
+    fn requests_parse() {
+        let m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        match parse_request(&fit_request("j1", "parallel:2", &m)).unwrap() {
+            Request::Job(spec) => {
+                assert_eq!(spec.id, "j1");
+                assert_eq!(spec.engine, "parallel:2");
+                assert!(matches!(spec.kind, JobKind::Fit));
+                match spec.panel {
+                    PanelSource::Inline(p) => assert_eq!(p, m),
+                    other => panic!("unexpected panel source {other:?}"),
+                }
+            }
+            other => panic!("unexpected request {other:?}"),
+        }
+        match parse_request(&bootstrap_request("b", "vec", &m, 20, 7, 0.25)).unwrap() {
+            Request::Job(spec) => match spec.kind {
+                JobKind::Bootstrap { resamples, seed, threshold, workers } => {
+                    assert_eq!((resamples, seed, workers), (20, 7, 1));
+                    assert!((threshold - 0.25).abs() < 1e-12);
+                }
+                other => panic!("unexpected kind {other:?}"),
+            },
+            other => panic!("unexpected request {other:?}"),
+        }
+        match parse_request(&var_request("v", "seq", &m, 2)).unwrap() {
+            Request::Job(spec) => assert!(matches!(spec.kind, JobKind::Var { lags: 2 })),
+            other => panic!("unexpected request {other:?}"),
+        }
+        assert!(matches!(
+            parse_request(&control_request("status")).unwrap(),
+            Request::Status { .. }
+        ));
+        assert!(matches!(
+            parse_request(&control_request("metrics")).unwrap(),
+            Request::Metrics { .. }
+        ));
+        assert!(matches!(
+            parse_request(&control_request("shutdown")).unwrap(),
+            Request::Shutdown { .. }
+        ));
+        match parse_request(&cancel_request("j1")).unwrap() {
+            Request::Cancel { target, .. } => assert_eq!(target, "j1"),
+            other => panic!("unexpected request {other:?}"),
+        }
+        match parse_request(&csv_fit_request("c", "par", "/tmp/x.csv")).unwrap() {
+            Request::Job(spec) => {
+                assert!(matches!(spec.panel, PanelSource::Csv(p) if p == "/tmp/x.csv"))
+            }
+            other => panic!("unexpected request {other:?}"),
+        }
+    }
+
+    #[test]
+    fn request_validation_errors() {
+        // job frames need an id and a panel
+        assert!(parse_request("{\"cmd\":\"fit\"}").is_err());
+        assert!(parse_request("{\"cmd\":\"fit\",\"id\":\"a\"}").is_err());
+        let boot0 = "{\"cmd\":\"bootstrap\",\"id\":\"a\",\"resamples\":0,\"csv\":\"x\"}";
+        assert!(parse_request(boot0).is_err());
+        let var0 = "{\"cmd\":\"varlingam\",\"id\":\"a\",\"lags\":0,\"csv\":\"x\"}";
+        assert!(parse_request(var0).is_err());
+        assert!(parse_request("{\"cmd\":\"cancel\"}").is_err());
+        assert!(parse_request("{\"cmd\":\"nope\"}").is_err());
+        assert!(parse_request("[]").is_err());
+    }
+
+    #[test]
+    fn fit_result_roundtrips_through_the_parser() {
+        // the one serialization surface: what the CLI --json mode and
+        // the serve result frames emit must parse back to the same
+        // order/adjacency (the satellite's round-trip requirement)
+        let order = vec![2usize, 0, 1];
+        let adj = Mat::from_rows(&[&[0.0, 0.0, 1.25], &[-0.5, 0.0, 0.75], &[0.0, 0.0, 0.0]]);
+        let mut counters = SweepCounters::default();
+        counters.record_exact(3, 100);
+        let payload = fit_data("vectorized", &order, &adj, &counters);
+        let frame = frame_result(Some("x1"), false, 12.5, &payload);
+        let j = parse_json(&frame).unwrap();
+        assert_eq!(j.get("id").and_then(Json::as_str), Some("x1"));
+        assert_eq!(j.get("event").and_then(Json::as_str), Some("result"));
+        assert_eq!(j.get("cached").and_then(Json::as_bool), Some(false));
+        let data = j.get("data").unwrap();
+        assert_eq!(data.get("kind").and_then(Json::as_str), Some("fit"));
+        assert_eq!(data.get("engine").and_then(Json::as_str), Some("vectorized"));
+        let got_order: Vec<usize> = data
+            .get("order")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        assert_eq!(got_order, order);
+        let got_adj = parse_mat(data.get("adjacency").unwrap()).unwrap();
+        assert_eq!(got_adj, adj);
+        let sweep = data.get("sweep").unwrap();
+        assert_eq!(sweep.get("pairs_total").and_then(Json::as_u64), Some(3));
+        assert_eq!(sweep.get("elements_touched").and_then(Json::as_u64), Some(300));
+    }
+
+    #[test]
+    fn frames_are_single_lines_with_escaped_payloads() {
+        let e = frame_error(Some("a\"b"), "boom\nline2");
+        assert!(!e.contains('\n'), "frames must stay newline-free: {e:?}");
+        let j = parse_json(&e).unwrap();
+        assert_eq!(j.get("id").and_then(Json::as_str), Some("a\"b"));
+        assert_eq!(j.get("message").and_then(Json::as_str), Some("boom\nline2"));
+        let p = frame_progress("i", "ordering", 3, 31);
+        let pj = parse_json(&p).unwrap();
+        assert_eq!(pj.get("step").and_then(Json::as_usize), Some(3));
+        assert_eq!(pj.get("total").and_then(Json::as_usize), Some(31));
+        let a = parse_json(&frame_accepted("i", 4)).unwrap();
+        assert_eq!(a.get("queue_depth").and_then(Json::as_usize), Some(4));
+        let c = parse_json(&frame_canceled("i")).unwrap();
+        assert_eq!(c.get("event").and_then(Json::as_str), Some("canceled"));
+        let k = parse_json(&frame_ack(None, "shutdown", true)).unwrap();
+        assert_eq!(k.get("of").and_then(Json::as_str), Some("shutdown"));
+        assert_eq!(k.get("ok").and_then(Json::as_bool), Some(true));
+    }
+}

@@ -1,0 +1,291 @@
+//! The bounded job queue: backpressure for producers, FIFO-per-client
+//! fairness for consumers, graceful drain on shutdown.
+//!
+//! Jobs live in per-client *lanes* (a `VecDeque` each). Consumers
+//! round-robin across lanes, so one client queueing a hundred panels
+//! cannot starve another's single fit — and a lane is skipped while one
+//! of its jobs is in flight, which serializes each client's work:
+//! results stream back in exactly the order that client submitted them
+//! (the per-client FIFO the integration suite pins), while different
+//! clients still run concurrently across workers.
+//!
+//! [`JobQueue::push`] blocks while the queue is at capacity — real
+//! backpressure: the connection reader stalls, the client's TCP writes
+//! stall, and the client slows down, instead of the server buffering
+//! unboundedly. [`JobQueue::close`] stops accepting new work but lets
+//! consumers drain everything already queued; once empty, every
+//! [`JobQueue::pop`] returns `None` and the workers exit.
+
+use crate::util::{Error, Result};
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// One client's pending jobs.
+struct Lane<T> {
+    client: u64,
+    jobs: VecDeque<T>,
+    /// A popped job from this lane has not been marked done yet; the
+    /// lane is ineligible until [`JobQueue::done`] is called, which is
+    /// what makes per-client execution (and thus result order) FIFO.
+    in_flight: bool,
+}
+
+struct State<T> {
+    lanes: Vec<Lane<T>>,
+    /// Round-robin start position for the next pop.
+    cursor: usize,
+    /// Queued (not yet popped) jobs across all lanes.
+    len: usize,
+    open: bool,
+}
+
+/// Bounded multi-producer multi-consumer queue with per-client lanes
+/// (see module docs).
+pub struct JobQueue<T> {
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+impl<T> JobQueue<T> {
+    /// `capacity` is the total queued-job bound across all clients
+    /// (must be ≥ 1).
+    pub fn new(capacity: usize) -> JobQueue<T> {
+        assert!(capacity >= 1, "queue capacity must be ≥ 1");
+        JobQueue {
+            state: Mutex::new(State { lanes: Vec::new(), cursor: 0, len: 0, open: true }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Enqueue a job for `client`, blocking while the queue is full
+    /// (backpressure). Errors once the queue has been closed.
+    pub fn push(&self, client: u64, job: T) -> Result<()> {
+        let mut s = self.state.lock().expect("job queue");
+        while s.open && s.len >= self.capacity {
+            s = self.not_full.wait(s).expect("job queue");
+        }
+        if !s.open {
+            return Err(Error::InvalidArgument(
+                "job queue is shut down: request rejected".into(),
+            ));
+        }
+        match s.lanes.iter_mut().find(|l| l.client == client) {
+            Some(lane) => lane.jobs.push_back(job),
+            None => s.lanes.push(Lane {
+                client,
+                jobs: VecDeque::from([job]),
+                in_flight: false,
+            }),
+        }
+        s.len += 1;
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue the next job, blocking while nothing is eligible. Lanes
+    /// are visited round-robin; a lane with an in-flight job is skipped.
+    /// Returns `None` only after [`close`](JobQueue::close) once every
+    /// queued job has been handed out.
+    pub fn pop(&self) -> Option<(u64, T)> {
+        let mut s = self.state.lock().expect("job queue");
+        loop {
+            let nl = s.lanes.len();
+            for k in 0..nl {
+                let li = (s.cursor + k) % nl;
+                let lane = &mut s.lanes[li];
+                if !lane.in_flight && !lane.jobs.is_empty() {
+                    let job = lane.jobs.pop_front().expect("non-empty lane");
+                    let client = lane.client;
+                    lane.in_flight = true;
+                    s.cursor = (li + 1) % nl;
+                    s.len -= 1;
+                    self.not_full.notify_one();
+                    return Some((client, job));
+                }
+            }
+            if !s.open && s.len == 0 {
+                return None;
+            }
+            s = self.not_empty.wait(s).expect("job queue");
+        }
+    }
+
+    /// Mark `client`'s in-flight job finished, making its next queued
+    /// job eligible. Workers must call this after completing (or
+    /// skipping) every popped job.
+    pub fn done(&self, client: u64) {
+        let mut s = self.state.lock().expect("job queue");
+        if let Some(pos) = s.lanes.iter().position(|l| l.client == client) {
+            s.lanes[pos].in_flight = false;
+            if s.lanes[pos].jobs.is_empty() {
+                // drop the empty lane so the round-robin set stays the
+                // set of clients with pending work
+                s.lanes.remove(pos);
+                if s.cursor > pos {
+                    s.cursor -= 1;
+                }
+                let nl = s.lanes.len();
+                s.cursor = if nl == 0 { 0 } else { s.cursor % nl };
+            }
+        }
+        // a lane may have just become eligible: wake all waiters (pops
+        // blocked on in-flight lanes, and close() drainers)
+        self.not_empty.notify_all();
+    }
+
+    /// Stop accepting new jobs; queued jobs still drain. Idempotent.
+    pub fn close(&self) {
+        {
+            let mut s = self.state.lock().expect("job queue");
+            s.open = false;
+        }
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Jobs queued and not yet handed to a worker.
+    pub fn depth(&self) -> usize {
+        self.state.lock().expect("job queue").len
+    }
+
+    pub fn is_open(&self) -> bool {
+        self.state.lock().expect("job queue").open
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn single_client_is_fifo() {
+        let q = JobQueue::new(8);
+        for j in 0..5 {
+            q.push(1, j).unwrap();
+        }
+        for j in 0..5 {
+            let (c, got) = q.pop().unwrap();
+            assert_eq!((c, got), (1, j));
+            q.done(1);
+        }
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn lanes_round_robin_across_clients() {
+        let q = JobQueue::new(16);
+        // client 1 floods, client 2 submits one job afterwards
+        for j in 0..4 {
+            q.push(1, (1, j)).unwrap();
+        }
+        q.push(2, (2, 0)).unwrap();
+        let (c1, _) = q.pop().unwrap();
+        q.done(c1);
+        let (c2, _) = q.pop().unwrap();
+        q.done(c2);
+        // both clients must have been served within the first two pops
+        assert_ne!(c1, c2, "round-robin must alternate clients, got {c1} then {c2}");
+    }
+
+    #[test]
+    fn in_flight_lane_is_skipped_until_done() {
+        let q = JobQueue::new(8);
+        q.push(1, "a1").unwrap();
+        q.push(1, "a2").unwrap();
+        q.push(2, "b1").unwrap();
+        let (c, j) = q.pop().unwrap();
+        assert_eq!((c, j), (1, "a1"));
+        // client 1 has a job in flight: the next pop must serve client 2
+        let (c, j) = q.pop().unwrap();
+        assert_eq!((c, j), (2, "b1"));
+        q.done(2);
+        // a2 stays ineligible until a1's done() lands
+        q.close();
+        q.done(1);
+        let (c, j) = q.pop().unwrap();
+        assert_eq!((c, j), (1, "a2"), "a2 must follow a1's done()");
+        q.done(1);
+        assert!(q.pop().is_none(), "closed and drained");
+    }
+
+    #[test]
+    fn push_blocks_at_capacity_until_a_pop() {
+        let q = Arc::new(JobQueue::new(1));
+        q.push(1, 0).unwrap();
+        let pushed = Arc::new(AtomicBool::new(false));
+        let handle = {
+            let (q, pushed) = (q.clone(), pushed.clone());
+            std::thread::spawn(move || {
+                q.push(1, 1).unwrap();
+                pushed.store(true, Ordering::SeqCst);
+            })
+        };
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(!pushed.load(Ordering::SeqCst), "push must block at capacity");
+        let (_, j) = q.pop().unwrap();
+        assert_eq!(j, 0);
+        handle.join().unwrap();
+        assert!(pushed.load(Ordering::SeqCst));
+        assert_eq!(q.depth(), 1);
+    }
+
+    #[test]
+    fn close_rejects_new_pushes_but_drains_queued() {
+        let q = JobQueue::new(4);
+        q.push(1, "kept").unwrap();
+        q.close();
+        assert!(!q.is_open());
+        assert!(q.push(1, "rejected").is_err());
+        let (_, j) = q.pop().unwrap();
+        assert_eq!(j, "kept");
+        q.done(1);
+        assert!(q.pop().is_none());
+        assert!(q.pop().is_none(), "pop stays None after drain");
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumers() {
+        let q = Arc::new(JobQueue::<u8>::new(2));
+        let handle = {
+            let q = q.clone();
+            std::thread::spawn(move || q.pop())
+        };
+        std::thread::sleep(Duration::from_millis(30));
+        q.close();
+        assert_eq!(handle.join().unwrap(), None);
+    }
+
+    #[test]
+    fn drain_completes_even_with_jobs_in_flight_at_close() {
+        let q = Arc::new(JobQueue::new(8));
+        q.push(1, "first").unwrap();
+        q.push(1, "second").unwrap();
+        let (_, j) = q.pop().unwrap();
+        assert_eq!(j, "first");
+        q.close();
+        // "second" is queued behind an in-flight lane: a drainer must
+        // block until done() releases it, then get it, then see None
+        let handle = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let got = q.pop();
+                if got.is_some() {
+                    q.done(1);
+                }
+                (got, q.pop())
+            })
+        };
+        std::thread::sleep(Duration::from_millis(30));
+        q.done(1);
+        let (second, end) = handle.join().unwrap();
+        assert_eq!(second.map(|(_, j)| j), Some("second"));
+        assert!(end.is_none());
+    }
+}

@@ -1,0 +1,357 @@
+//! The worker half of the service: N threads, each owning a pool of
+//! parked [`IncrementalSession`] workspaces, draining the job queue.
+//!
+//! This is the PR 2 bootstrap-pool pattern promoted to the process
+//! level: a worker that has once fitted an `[n, d]` panel with a given
+//! engine configuration keeps that session parked, and the next job with
+//! the same shape re-seeds it with [`OrderingSession::reset`] — reusing
+//! the standardized-cache / correlation-matrix buffers instead of paying
+//! the allocation and build again (hot workers, ParaLiNGAM-style reuse
+//! across *requests* rather than resamples). Pools are per-worker-thread
+//! owned, so there is no locking on the session path.
+//!
+//! Engines whose sessions borrow the engine — the sequential baseline's
+//! stateless shim and the device-resident XLA session — run one session
+//! per job instead; the XLA engine itself (device thread + compile
+//! cache) is shared server-wide and built lazily on first use.
+//!
+//! Every job honors its request's `exact`/`pruned` strategy and worker
+//! count through [`EngineChoice`] (auto counts are divided across the
+//! server's workers by [`EngineChoice::resolve_workers`]), checks its
+//! cancel flag at step/resample boundaries, and books its session's
+//! [`SweepCounters`](crate::lingam::SweepCounters) into the server
+//! metrics.
+
+use super::cache::Fnv128;
+use super::protocol::{self, JobKind, JobSpec, PanelSource};
+use super::Shared;
+use crate::coordinator::{bootstrap_direct_observed, BootstrapOpts, EngineChoice};
+use crate::linalg::Mat;
+use crate::lingam::direct::validate_panel;
+use crate::lingam::{
+    DirectLingam, IncrementalSession, LingamFit, OrderingEngine, OrderingSession,
+    SequentialEngine, SweepStrategy, VarLingam,
+};
+use crate::util::{Error, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Where a job's response frames go: a connection-owned line writer
+/// (tests substitute a collecting closure). Must tolerate a vanished
+/// client (writes to a closed socket are silently dropped).
+pub type Sink = Arc<dyn Fn(&str) + Send + Sync>;
+
+/// A queued unit of work: the protocol spec plus the runtime attachments
+/// the connection handler created for it.
+pub struct Job {
+    pub spec: JobSpec,
+    /// Cooperative cancel flag, checked at step/resample boundaries.
+    pub cancel: Arc<AtomicBool>,
+    pub sink: Sink,
+}
+
+/// Shape + engine configuration a parked workspace can be reused for.
+#[derive(Clone, Copy, Debug, Hash, PartialEq, Eq)]
+struct PoolKey {
+    n: usize,
+    d: usize,
+    workers: usize,
+    pruned: bool,
+}
+
+type SessionPool = HashMap<PoolKey, IncrementalSession>;
+
+/// Parked sessions kept per worker: a workspace is O(n·d) cache plus an
+/// O(d²) correlation matrix, so the pool is capped — past this, an
+/// arbitrary parked entry is evicted (shape traffic is usually highly
+/// repetitive, so any small cap keeps the hot shapes resident).
+const MAX_PARKED_SESSIONS: usize = 8;
+
+/// One worker thread: drain the queue until close-and-empty, keeping
+/// per-shape parked sessions across jobs.
+pub(super) fn worker_loop(shared: &Shared) {
+    let mut pool: SessionPool = HashMap::new();
+    while let Some((client, job)) = shared.queue.pop() {
+        shared.metrics.in_flight.fetch_add(1, Ordering::Relaxed);
+        run_job(shared, &mut pool, &job);
+        shared.metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
+        shared.cancels.unregister(&job.spec.id, &job.cancel);
+        shared.queue.done(client);
+    }
+}
+
+/// Execute one job end to end, translating the outcome into exactly one
+/// terminal frame (`result`, `canceled` or `error`).
+fn run_job(shared: &Shared, pool: &mut SessionPool, job: &Job) {
+    let id = &job.spec.id;
+    let t0 = Instant::now();
+    if job.cancel.load(Ordering::Relaxed) {
+        shared.metrics.jobs_canceled.fetch_add(1, Ordering::Relaxed);
+        (job.sink)(&protocol::frame_canceled(id));
+        return;
+    }
+    match execute(shared, pool, job) {
+        Ok((payload, cached)) => {
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            shared.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+            shared.metrics.busy_ms_total.fetch_add(ms.round() as u64, Ordering::Relaxed);
+            (job.sink)(&protocol::frame_result(Some(id.as_str()), cached, ms, &payload));
+        }
+        Err(Error::Canceled(_)) => {
+            shared.metrics.jobs_canceled.fetch_add(1, Ordering::Relaxed);
+            (job.sink)(&protocol::frame_canceled(id));
+        }
+        Err(e) => {
+            shared.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+            (job.sink)(&protocol::frame_error(Some(id.as_str()), &e.to_string()));
+        }
+    }
+}
+
+fn execute(shared: &Shared, pool: &mut SessionPool, job: &Job) -> Result<(Arc<String>, bool)> {
+    let choice = EngineChoice::parse(&job.spec.engine)?.resolve_workers(shared.worker_count);
+    let loaded;
+    let panel: &Mat = match &job.spec.panel {
+        PanelSource::Inline(m) => m,
+        PanelSource::Csv(path) => {
+            let (_header, m) = crate::data::read_csv(std::path::Path::new(path))?;
+            loaded = m;
+            &loaded
+        }
+    };
+    // the reader already short-circuits inline panels, but the key is
+    // re-checked here so CSV panels (hashable only after loading) and
+    // identical inline jobs that were queued concurrently still hit
+    let key = cache_key(panel, choice, &job.spec.kind);
+    if let Some(hit) = shared.cache.get(key) {
+        return Ok((hit, true));
+    }
+    let payload = match &job.spec.kind {
+        JobKind::Fit => run_fit(shared, pool, job, panel, choice)?,
+        JobKind::Bootstrap { resamples, seed, threshold, workers } => {
+            let opts = BootstrapOpts {
+                resamples: *resamples,
+                workers: (*workers).max(1),
+                seed: *seed,
+                ..Default::default()
+            };
+            run_bootstrap(shared, job, panel, choice, &opts, *threshold)?
+        }
+        JobKind::Var { lags } => run_var(shared, job, panel, choice, *lags)?,
+    };
+    let payload = Arc::new(payload);
+    shared.cache.put(key, payload.clone());
+    Ok((payload, false))
+}
+
+/// Content hash of a request's full semantic identity: job kind +
+/// options, canonical engine spec, panel dims and sample bit patterns.
+/// Byte-identical requests — and only they — collide, so a cache hit is
+/// a replay of the exact same computation.
+pub(super) fn cache_key(panel: &Mat, choice: EngineChoice, kind: &JobKind) -> u128 {
+    let mut h = Fnv128::new();
+    match kind {
+        JobKind::Fit => h.write_str("fit"),
+        JobKind::Bootstrap { resamples, seed, threshold, workers: _ } => {
+            // `workers` changes scheduling, never the estimate, so it is
+            // deliberately outside the key
+            h.write_str("bootstrap");
+            h.write_u64(*resamples as u64);
+            h.write_u64(*seed);
+            h.write_f64_bits(*threshold);
+        }
+        JobKind::Var { lags } => {
+            h.write_str("varlingam");
+            h.write_u64(*lags as u64);
+        }
+    }
+    h.write_str(&choice.spec());
+    h.write_u64(panel.rows() as u64);
+    h.write_u64(panel.cols() as u64);
+    for &v in panel.as_slice() {
+        h.write_f64_bits(v);
+    }
+    h.finish()
+}
+
+/// `(workers, strategy)` for choices whose session is the owned
+/// [`IncrementalSession`] workspace (poolable across jobs); `None` for
+/// engines whose sessions borrow the engine.
+fn incremental_params(choice: EngineChoice) -> Option<(usize, SweepStrategy)> {
+    match choice {
+        EngineChoice::Vectorized => Some((1, SweepStrategy::Exact)),
+        EngineChoice::Parallel { workers } => Some((workers.max(1), SweepStrategy::Exact)),
+        EngineChoice::Pruned { workers } => Some((workers.max(1), SweepStrategy::Pruned)),
+        EngineChoice::Sequential | EngineChoice::Xla => None,
+    }
+}
+
+fn run_fit(
+    shared: &Shared,
+    pool: &mut SessionPool,
+    job: &Job,
+    panel: &Mat,
+    choice: EngineChoice,
+) -> Result<String> {
+    validate_panel(panel)?;
+    let spec = choice.spec();
+    let (outcome, counters) = match incremental_params(choice) {
+        Some((workers, strategy)) => {
+            let key = PoolKey {
+                n: panel.rows(),
+                d: panel.cols(),
+                workers,
+                pruned: strategy == SweepStrategy::Pruned,
+            };
+            let mut session = match pool.remove(&key) {
+                Some(mut parked) => {
+                    parked.reset(panel)?;
+                    parked
+                }
+                None => IncrementalSession::with_strategy(panel, workers, false, strategy)?,
+            };
+            let outcome = drive_fit(&mut session, panel, job);
+            let counters = session.sweep_counters();
+            if pool.len() >= MAX_PARKED_SESSIONS {
+                if let Some(evict) = pool.keys().next().copied() {
+                    pool.remove(&evict);
+                }
+            }
+            pool.insert(key, session);
+            (outcome, counters)
+        }
+        None => {
+            let seq_engine;
+            let xla_engine;
+            let mut session: Box<dyn OrderingSession + '_> = match choice {
+                EngineChoice::Sequential => {
+                    seq_engine = SequentialEngine;
+                    seq_engine.session(panel)?
+                }
+                _ => {
+                    xla_engine = shared.xla_engine()?;
+                    xla_engine.session(panel)?
+                }
+            };
+            let outcome = drive_fit(session.as_mut(), panel, job);
+            let counters = session.sweep_counters();
+            (outcome, counters)
+        }
+    };
+    // book the sweep work before bailing, so even a canceled or failed
+    // fit's visited pairs show up in the server metrics
+    shared.metrics.add_sweep(&counters);
+    let fit = outcome?;
+    Ok(protocol::fit_data(&spec, &fit.order, &fit.adjacency, &counters))
+}
+
+/// The serve fit driver: `DirectLingam::fit_session_observed` — the one
+/// shared d−1-step loop — with the observer streaming per-step progress
+/// frames and turning a raised cancel flag into [`Error::Canceled`] at
+/// the step boundary.
+fn drive_fit(session: &mut dyn OrderingSession, panel: &Mat, job: &Job) -> Result<LingamFit> {
+    DirectLingam::new().fit_session_observed(panel, session, &mut |step, total| {
+        if job.cancel.load(Ordering::Relaxed) {
+            return Err(Error::Canceled(format!("fit canceled at step {step}/{total}")));
+        }
+        (job.sink)(&protocol::frame_progress(&job.spec.id, "ordering", step, total));
+        Ok(())
+    })
+}
+
+fn run_bootstrap(
+    shared: &Shared,
+    job: &Job,
+    panel: &Mat,
+    choice: EngineChoice,
+    opts: &BootstrapOpts,
+    threshold: f64,
+) -> Result<String> {
+    let engine = shared.build_engine(choice)?;
+    let (id, sink) = (&job.spec.id, &job.sink);
+    let result = bootstrap_direct_observed(
+        panel,
+        engine.as_ordering(),
+        opts,
+        Some(&*job.cancel),
+        |done, total| sink(&protocol::frame_progress(id, "bootstrap", done, total)),
+    )?;
+    Ok(protocol::bootstrap_data(&choice.spec(), &result, threshold))
+}
+
+fn run_var(
+    shared: &Shared,
+    job: &Job,
+    panel: &Mat,
+    choice: EngineChoice,
+    lags: usize,
+) -> Result<String> {
+    if job.cancel.load(Ordering::Relaxed) {
+        return Err(Error::Canceled("varlingam canceled before start".into()));
+    }
+    // VarLiNGAM's inner fit is monolithic: coarse stage progress only
+    (job.sink)(&protocol::frame_progress(&job.spec.id, "varlingam", 0, 1));
+    let engine = shared.build_engine(choice)?;
+    let fit = VarLingam::new().with_lags(lags).fit(panel, engine.as_ordering())?;
+    (job.sink)(&protocol::frame_progress(&job.spec.id, "varlingam", 1, 1));
+    Ok(protocol::var_data(&choice.spec(), &fit))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn panel() -> Mat {
+        Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, -6.0]])
+    }
+
+    #[test]
+    fn cache_key_is_deterministic_and_content_sensitive() {
+        let p = panel();
+        let base = cache_key(&p, EngineChoice::Vectorized, &JobKind::Fit);
+        assert_eq!(base, cache_key(&p, EngineChoice::Vectorized, &JobKind::Fit));
+        // engine, kind, options and panel bits all separate keys
+        assert_ne!(base, cache_key(&p, EngineChoice::Sequential, &JobKind::Fit));
+        assert_ne!(base, cache_key(&p, EngineChoice::Vectorized, &JobKind::Var { lags: 1 }));
+        let boot = JobKind::Bootstrap { resamples: 10, seed: 0, threshold: 0.5, workers: 1 };
+        let boot2 = JobKind::Bootstrap { resamples: 11, seed: 0, threshold: 0.5, workers: 1 };
+        assert_ne!(
+            cache_key(&p, EngineChoice::Vectorized, &boot),
+            cache_key(&p, EngineChoice::Vectorized, &boot2)
+        );
+        let mut p2 = panel();
+        p2[(0, 0)] = 1.0000000001;
+        assert_ne!(base, cache_key(&p2, EngineChoice::Vectorized, &JobKind::Fit));
+    }
+
+    #[test]
+    fn bootstrap_worker_count_is_not_part_of_the_key() {
+        let p = panel();
+        let a = JobKind::Bootstrap { resamples: 10, seed: 1, threshold: 0.5, workers: 1 };
+        let b = JobKind::Bootstrap { resamples: 10, seed: 1, threshold: 0.5, workers: 4 };
+        assert_eq!(
+            cache_key(&p, EngineChoice::Vectorized, &a),
+            cache_key(&p, EngineChoice::Vectorized, &b)
+        );
+    }
+
+    #[test]
+    fn incremental_params_route_engines_correctly() {
+        assert_eq!(
+            incremental_params(EngineChoice::Vectorized),
+            Some((1, SweepStrategy::Exact))
+        );
+        assert_eq!(
+            incremental_params(EngineChoice::Parallel { workers: 3 }),
+            Some((3, SweepStrategy::Exact))
+        );
+        assert_eq!(
+            incremental_params(EngineChoice::Pruned { workers: 2 }),
+            Some((2, SweepStrategy::Pruned))
+        );
+        assert_eq!(incremental_params(EngineChoice::Sequential), None);
+        assert_eq!(incremental_params(EngineChoice::Xla), None);
+    }
+}

@@ -33,7 +33,12 @@ impl Args {
     }
 
     /// Parse an explicit vector (testable).
-    pub fn parse_from(prog: String, argv: Vec<String>, about: &'static str, specs: &[OptSpec]) -> Args {
+    pub fn parse_from(
+        prog: String,
+        argv: Vec<String>,
+        about: &'static str,
+        specs: &[OptSpec],
+    ) -> Args {
         let mut opts = BTreeMap::new();
         let mut flags = Vec::new();
         let mut positional = Vec::new();
@@ -144,6 +149,23 @@ pub fn engine_opt() -> OptSpec {
     )
 }
 
+/// Option specs for the `serve`/`client` subcommands — one shared list
+/// so the binary and any future driver advertise the same grammar.
+/// (`--json`, being a bare flag, is deliberately not an `OptSpec`:
+/// specs consume a following value, which would swallow a positional
+/// subcommand.)
+pub fn serve_opts() -> Vec<OptSpec> {
+    vec![
+        opt("addr", "serve/client: TCP address (port 0 picks a free port)", Some("127.0.0.1:0")),
+        opt("serve-workers", "serve: worker threads (0 = per-core, capped at 4)", Some("2")),
+        opt("queue-cap", "serve: job-queue capacity (backpressure past it)", Some("64")),
+        opt("cache-entries", "serve: result-cache capacity (0 disables)", Some("32")),
+        opt("job-id", "client: job id echoed on response frames", Some("job-1")),
+        opt("csv", "client: server-side CSV path instead of an inline panel", None),
+        opt("threshold", "client bootstrap: stable-edge probability cutoff", Some("0.5")),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -178,6 +200,17 @@ mod tests {
         let a = parse(&["--verbose", "--dims", "7"]);
         assert!(a.flag("verbose"));
         assert_eq!(a.usize("dims"), 7);
+    }
+
+    #[test]
+    fn serve_opts_carry_defaults() {
+        let specs = serve_opts();
+        let a = Args::parse_from("test".into(), vec![], "t", &specs);
+        assert_eq!(a.req("addr"), "127.0.0.1:0");
+        assert_eq!(a.usize("serve-workers"), 2);
+        assert_eq!(a.usize("queue-cap"), 64);
+        assert_eq!(a.usize("cache-entries"), 32);
+        assert_eq!(a.get("csv"), None);
     }
 
     #[test]

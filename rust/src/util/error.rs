@@ -29,6 +29,12 @@ pub enum Error {
     #[error("xla: {0}")]
     Xla(String),
 
+    /// A job was cooperatively canceled (checked at step/resample
+    /// boundaries by the long-running drivers; the serve layer maps this
+    /// to a `canceled` protocol event rather than an error).
+    #[error("canceled: {0}")]
+    Canceled(String),
+
     /// I/O failure.
     #[error("io: {0}")]
     Io(#[from] std::io::Error),

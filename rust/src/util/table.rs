@@ -84,7 +84,11 @@ impl Table {
 }
 
 /// Minimal JSON string escaping (quotes, backslashes, control chars).
-fn json_escape(s: &str) -> String {
+/// Public because it is the crate's one escaping routine: `Table::to_json`
+/// (the bench artifacts), the CLI `--json` mode and the serve protocol
+/// ([`crate::serve::protocol`]) all emit through it, so every JSON the
+/// repo produces shares one serialization surface.
+pub fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     for c in s.chars() {
         match c {
@@ -96,6 +100,17 @@ fn json_escape(s: &str) -> String {
         }
     }
     out
+}
+
+/// Render an `f64` as a JSON number token. Rust's `Display` for finite
+/// floats is the shortest round-trippable form, which is valid JSON;
+/// non-finite values (which JSON cannot carry) become `null`.
+pub fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
 }
 
 /// Format a float with fixed decimals (bench output convention).
@@ -186,6 +201,17 @@ mod tests {
         assert!(j.contains("\"title\":\"ti\\\"tle\""), "{j}");
         assert!(j.contains("\"header\":[\"a\",\"b\"]"), "{j}");
         assert!(j.contains("\"rows\":[[\"x\\\\y\",\"1\"]]"), "{j}");
+    }
+
+    #[test]
+    fn json_f64_tokens() {
+        assert_eq!(json_f64(1.5), "1.5");
+        assert_eq!(json_f64(-0.25), "-0.25");
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(json_f64(f64::INFINITY), "null");
+        // shortest-roundtrip: parses back to the identical bits
+        let v = 0.1f64 + 0.2f64;
+        assert_eq!(json_f64(v).parse::<f64>().unwrap(), v);
     }
 
     #[test]

@@ -1,0 +1,100 @@
+//! Fuzz-ish property coverage for the serve wire protocol: the parser
+//! is total — random garbage and mutated valid frames must produce
+//! `Ok`/`Err`, never a panic (the server turns every `Err` into an
+//! `error` frame and keeps the connection alive) — and well-formed
+//! inline-panel requests round-trip exactly.
+
+use alingam::linalg::Mat;
+use alingam::serve::protocol::{self, Json, PanelSource, Request};
+use alingam::util::prop::props;
+
+#[test]
+fn random_garbage_never_panics_the_parser() {
+    props("garbage frames error cleanly", 200, |g| {
+        let len = g.usize_in(0, 256);
+        let bytes: Vec<u8> = (0..len).map(|_| g.rng().below(256) as u8).collect();
+        let s = String::from_utf8_lossy(&bytes).into_owned();
+        let _ = protocol::parse_json(&s);
+        let _ = protocol::parse_request(&s);
+    });
+}
+
+#[test]
+fn structured_garbage_never_panics_the_parser() {
+    // garbage drawn from JSON's own alphabet reaches much deeper into
+    // the parser than uniform bytes do
+    const ALPHABET: &[u8] = b"{}[]\",:.\\u0123456789eE+-truefalsn ";
+    props("json-alphabet garbage errors cleanly", 300, |g| {
+        let len = g.usize_in(0, 120);
+        let bytes: Vec<u8> =
+            (0..len).map(|_| ALPHABET[g.rng().below(ALPHABET.len())]).collect();
+        let s = String::from_utf8_lossy(&bytes).into_owned();
+        let _ = protocol::parse_json(&s);
+        let _ = protocol::parse_request(&s);
+    });
+}
+
+#[test]
+fn mutated_valid_frames_never_panic() {
+    props("mutated frames error cleanly", 150, |g| {
+        let d = g.usize_in(2, 4);
+        let n = g.usize_in(2, 5);
+        let m = Mat::from_fn(n, d, |_, _| g.normal());
+        let frame = match g.usize_in(0, 2) {
+            0 => protocol::fit_request("id-1", "parallel:2", &m),
+            1 => protocol::bootstrap_request("id-2", "pruned", &m, 10, 3, 0.5),
+            _ => protocol::var_request("id-3", "vectorized", &m, 1),
+        };
+        let mut bytes = frame.into_bytes();
+        for _ in 0..g.usize_in(1, 6) {
+            let pos = g.rng().below(bytes.len());
+            bytes[pos] = g.rng().below(256) as u8;
+        }
+        if g.bool_p(0.3) {
+            let cut = g.rng().below(bytes.len() + 1);
+            bytes.truncate(cut);
+        }
+        let s = String::from_utf8_lossy(&bytes).into_owned();
+        let _ = protocol::parse_request(&s);
+    });
+}
+
+#[test]
+fn inline_panel_requests_roundtrip_exactly() {
+    props("inline panels roundtrip", 40, |g| {
+        let d = g.usize_in(2, 6);
+        let n = g.usize_in(2, 8);
+        let m = Mat::from_fn(n, d, |_, _| g.normal());
+        let line = protocol::fit_request("rt", "pruned:3", &m);
+        match protocol::parse_request(&line).expect("valid frame") {
+            Request::Job(spec) => {
+                assert_eq!(spec.id, "rt");
+                assert_eq!(spec.engine, "pruned:3");
+                match spec.panel {
+                    PanelSource::Inline(p) => assert_eq!(p, m, "panel bits must survive"),
+                    other => panic!("unexpected source {other:?}"),
+                }
+            }
+            other => panic!("unexpected request {other:?}"),
+        }
+    });
+}
+
+#[test]
+fn rendered_json_reparses_to_the_same_value() {
+    props("render∘parse is the identity", 60, |g| {
+        // build a random shallow value, render, reparse
+        let mut kvs = Vec::new();
+        for k in 0..g.usize_in(0, 5) {
+            let v = match g.usize_in(0, 3) {
+                0 => Json::Num((g.normal() * 100.0).round() / 8.0),
+                1 => Json::Str(format!("s-{}\n\"{}\"", k, g.usize_in(0, 9))),
+                2 => Json::Bool(g.bool_p(0.5)),
+                _ => Json::Arr(vec![Json::Null, Json::Num(g.usize_in(0, 99) as f64)]),
+            };
+            kvs.push((format!("k{k}"), v));
+        }
+        let v = Json::Obj(kvs);
+        assert_eq!(protocol::parse_json(&v.render()).expect("rendered json parses"), v);
+    });
+}

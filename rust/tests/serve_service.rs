@@ -1,0 +1,402 @@
+//! End-to-end serve integration over real loopback sockets: fit parity
+//! with direct `DirectLingam::fit`, the panel-hash cache (submit-time
+//! short-circuit and worker-side CSV path), streamed per-step and
+//! per-resample progress, ≥ 4 concurrent clients with per-client FIFO
+//! completion, cooperative cancellation, error recovery on one
+//! connection, and graceful drain on shutdown — the acceptance criteria
+//! of the serve subsystem.
+
+use alingam::lingam::{DirectLingam, VectorizedEngine};
+use alingam::linalg::Mat;
+use alingam::serve::protocol::{self, Json};
+use alingam::serve::{ServeConfig, Server};
+use alingam::sim::{sample_from_dag, simulate_sem, Noise, SemSpec};
+use alingam::util::rng::Pcg64;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+
+fn start(workers: usize, queue: usize, cache: usize) -> Server {
+    Server::start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers,
+        queue_capacity: queue,
+        cache_entries: cache,
+    })
+    .expect("server start")
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let writer = TcpStream::connect(addr).expect("connect");
+        let reader = BufReader::new(writer.try_clone().expect("clone stream"));
+        Client { reader, writer }
+    }
+
+    fn send(&mut self, line: &str) {
+        self.writer.write_all(line.as_bytes()).expect("send");
+        self.writer.write_all(b"\n").expect("send newline");
+    }
+
+    fn recv(&mut self) -> Json {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("recv");
+        assert!(n > 0, "connection closed mid-stream");
+        protocol::parse_json(line.trim_end()).expect("server frames must be valid json")
+    }
+
+    /// Skip frames until the terminal frame (`result`/`error`/
+    /// `canceled`) for `id`; returns `(event, frame)`.
+    fn recv_terminal(&mut self, id: &str) -> (String, Json) {
+        loop {
+            let f = self.recv();
+            if f.get("id").and_then(Json::as_str) != Some(id) {
+                continue;
+            }
+            if let Some(ev @ ("result" | "error" | "canceled")) =
+                f.get("event").and_then(Json::as_str)
+            {
+                let ev = ev.to_string();
+                return (ev, f);
+            }
+        }
+    }
+
+    /// Skip frames until one whose `event` matches.
+    fn recv_event(&mut self, event: &str) -> Json {
+        loop {
+            let f = self.recv();
+            if f.get("event").and_then(Json::as_str) == Some(event) {
+                return f;
+            }
+        }
+    }
+}
+
+fn chain_panel(n: usize, d: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    sample_from_dag(&alingam::graph::chain_dag(d, 1.0), Noise::Uniform01, n, &mut rng)
+}
+
+fn layered_panel(n: usize, d: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    simulate_sem(&SemSpec::layered(d, 2, 0.6), n, &mut rng).data
+}
+
+fn order_of(frame: &Json) -> Vec<usize> {
+    frame
+        .get("data")
+        .and_then(|d| d.get("order"))
+        .and_then(Json::as_arr)
+        .expect("result frame carries data.order")
+        .iter()
+        .map(|v| v.as_usize().expect("order entries are indices"))
+        .collect()
+}
+
+fn jobs_counter(frame: &Json, key: &str) -> u64 {
+    frame
+        .get("jobs")
+        .and_then(|j| j.get(key))
+        .and_then(Json::as_u64)
+        .unwrap_or_else(|| panic!("metrics frame missing jobs.{key}"))
+}
+
+/// The acceptance criterion: a d=32 chain fit over the socket returns
+/// the same causal order as a direct fit with the same engine spec, with
+/// per-step progress streamed; a byte-identical second request is served
+/// from cache without executing a new job.
+#[test]
+fn fit_matches_direct_fit_and_byte_identical_request_hits_cache() {
+    let server = start(2, 16, 8);
+    let panel = chain_panel(1_000, 32, 5);
+    let direct = DirectLingam::new().fit(&panel, &VectorizedEngine).unwrap();
+
+    let mut c = Client::connect(server.local_addr());
+    let req = protocol::fit_request("f1", "vectorized", &panel);
+    c.send(&req);
+    let (mut accepted, mut progress) = (0usize, 0usize);
+    let frame = loop {
+        let f = c.recv();
+        match f.get("event").and_then(Json::as_str) {
+            Some("accepted") => accepted += 1,
+            Some("progress") => {
+                assert_eq!(f.get("stage").and_then(Json::as_str), Some("ordering"));
+                assert_eq!(f.get("total").and_then(Json::as_usize), Some(31));
+                progress += 1;
+            }
+            Some("result") => break f,
+            other => panic!("unexpected event {other:?}"),
+        }
+    };
+    assert_eq!(accepted, 1);
+    assert_eq!(progress, 31, "one progress frame per ordering step");
+    assert_eq!(frame.get("cached").and_then(Json::as_bool), Some(false));
+    assert_eq!(order_of(&frame), direct.order, "serve order must match the direct fit");
+    let adj = frame.get("data").and_then(|d| d.get("adjacency")).expect("adjacency");
+    let adj = protocol::parse_mat(adj).unwrap();
+    assert!(
+        alingam::metrics::adjacency_max_diff(&adj, &direct.adjacency) < 1e-12,
+        "serve adjacency must match the direct fit"
+    );
+
+    c.send(&protocol::control_request("metrics"));
+    let m1 = c.recv_event("metrics");
+    assert_eq!(jobs_counter(&m1, "completed"), 1);
+
+    // byte-identical replay: served from cache, no new job executed
+    c.send(&req);
+    let (ev, frame2) = c.recv_terminal("f1");
+    assert_eq!(ev, "result");
+    assert_eq!(frame2.get("cached").and_then(Json::as_bool), Some(true));
+    assert_eq!(order_of(&frame2), direct.order);
+    let stats = server.cache_stats();
+    assert_eq!(stats.hits, 1, "replay must hit the cache: {stats:?}");
+    c.send(&protocol::control_request("metrics"));
+    let m2 = c.recv_event("metrics");
+    assert_eq!(jobs_counter(&m2, "completed"), 1, "no new job may execute on a cache hit");
+    assert_eq!(jobs_counter(&m2, "cache_short_circuits"), 1);
+    server.shutdown();
+}
+
+/// ≥ 4 concurrent clients with mixed fit/bootstrap traffic: every job
+/// completes, and each client's results arrive in its submission order
+/// (per-client FIFO), then the server shuts down cleanly.
+#[test]
+fn four_concurrent_clients_complete_fifo_and_server_drains() {
+    let server = start(3, 8, 0);
+    let addr = server.local_addr();
+    let handles: Vec<_> = (0..4u64)
+        .map(|k| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                let ids: Vec<String> = (0..3).map(|i| format!("c{k}-j{i}")).collect();
+                for (i, id) in ids.iter().enumerate() {
+                    let seed = 100 + k * 10 + i as u64;
+                    if k % 2 == 1 && i == 0 {
+                        let panel = layered_panel(200, 4, seed);
+                        let req =
+                            protocol::bootstrap_request(id, "vectorized", &panel, 4, seed, 0.5);
+                        c.send(&req);
+                    } else {
+                        let panel = layered_panel(250, 5, seed);
+                        c.send(&protocol::fit_request(id, "vectorized", &panel));
+                    }
+                }
+                // terminal frames must arrive in submission order
+                let mut done = Vec::new();
+                while done.len() < ids.len() {
+                    let f = c.recv();
+                    if let Some(ev @ ("result" | "error" | "canceled")) =
+                        f.get("event").and_then(Json::as_str)
+                    {
+                        assert_eq!(ev, "result", "job failed: {}", f.render());
+                        done.push(f.get("id").and_then(Json::as_str).unwrap().to_string());
+                    }
+                }
+                assert_eq!(done, ids, "client {k}: results out of submission order");
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    assert_eq!(server.queue_depth(), 0);
+    server.shutdown();
+}
+
+/// Shutdown drains: jobs already accepted keep running and their
+/// results still reach the client before the server exits.
+#[test]
+fn shutdown_drains_queued_jobs_before_exit() {
+    let server = start(1, 8, 0);
+    let mut c = Client::connect(server.local_addr());
+    let ids = ["d1", "d2", "d3"];
+    for (i, id) in ids.iter().enumerate() {
+        let panel = layered_panel(250, 5, 40 + i as u64);
+        c.send(&protocol::fit_request(id, "vectorized", &panel));
+        loop {
+            let f = c.recv();
+            if f.get("event").and_then(Json::as_str) == Some("accepted")
+                && f.get("id").and_then(Json::as_str) == Some(id)
+            {
+                break;
+            }
+        }
+    }
+    // the connection handler processes frames in order, so once the
+    // status response arrives every earlier push has returned and all
+    // three jobs are owned by the server — shutting down now must drain
+    // them, not drop them
+    c.send(&protocol::control_request("status"));
+    let _ = c.recv_event("status");
+    let drainer = std::thread::spawn(move || server.shutdown());
+    for id in ids {
+        let (ev, _) = c.recv_terminal(id);
+        assert_eq!(ev, "result", "queued job {id} must complete during drain");
+    }
+    drainer.join().expect("shutdown thread");
+}
+
+/// Cooperative cancellation: a running bootstrap stops at a resample
+/// boundary; a queued fit is dropped before it starts. Both report
+/// `canceled`, not `error`.
+#[test]
+fn cancel_stops_running_and_queued_jobs() {
+    let server = start(1, 8, 0);
+    let mut c = Client::connect(server.local_addr());
+    // heavy bootstrap occupies the single worker...
+    let pa = layered_panel(400, 6, 50);
+    c.send(&protocol::bootstrap_request("a", "vectorized", &pa, 500, 1, 0.5));
+    // ...with a fit queued behind it
+    let pb = layered_panel(300, 5, 51);
+    c.send(&protocol::fit_request("b", "vectorized", &pb));
+    c.send(&protocol::cancel_request("b"));
+    c.send(&protocol::cancel_request("a"));
+    let (ev_a, _) = c.recv_terminal("a");
+    assert_eq!(ev_a, "canceled", "running bootstrap must cancel at a resample boundary");
+    let (ev_b, _) = c.recv_terminal("b");
+    assert_eq!(ev_b, "canceled", "queued fit must cancel before starting");
+    c.send(&protocol::control_request("metrics"));
+    let m = c.recv_event("metrics");
+    assert_eq!(jobs_counter(&m, "canceled"), 2);
+    assert_eq!(jobs_counter(&m, "completed"), 0);
+    // canceling an unknown id acks with ok=false instead of erroring
+    c.send(&protocol::cancel_request("nope"));
+    let ack = c.recv_event("ack");
+    assert_eq!(ack.get("ok").and_then(Json::as_bool), Some(false));
+    server.shutdown();
+}
+
+/// Cancellation is server-wide by job id: a second connection (the
+/// one-shot `alingam client cancel`) can cancel a job submitted on the
+/// first.
+#[test]
+fn cancel_works_across_connections() {
+    let server = start(1, 8, 0);
+    let mut submitter = Client::connect(server.local_addr());
+    let panel = layered_panel(400, 6, 60);
+    submitter.send(&protocol::bootstrap_request("xc", "vectorized", &panel, 500, 2, 0.5));
+    // `accepted` implies the cancel flag is registered server-wide
+    let _ = submitter.recv_event("accepted");
+    let mut other = Client::connect(server.local_addr());
+    other.send(&protocol::cancel_request("xc"));
+    let ack = other.recv_event("ack");
+    assert_eq!(ack.get("ok").and_then(Json::as_bool), Some(true), "{}", ack.render());
+    let (ev, _) = submitter.recv_terminal("xc");
+    assert_eq!(ev, "canceled");
+    server.shutdown();
+}
+
+/// Bootstrap jobs stream one progress frame per completed resample.
+#[test]
+fn bootstrap_streams_per_resample_progress() {
+    let server = start(1, 4, 0);
+    let mut c = Client::connect(server.local_addr());
+    let panel = layered_panel(250, 4, 3);
+    c.send(&protocol::bootstrap_request("bp", "vectorized", &panel, 6, 3, 0.5));
+    let mut progress = 0usize;
+    let frame = loop {
+        let f = c.recv();
+        if f.get("id").and_then(Json::as_str) != Some("bp") {
+            continue;
+        }
+        match f.get("event").and_then(Json::as_str) {
+            Some("progress") => {
+                assert_eq!(f.get("stage").and_then(Json::as_str), Some("bootstrap"));
+                progress += 1;
+            }
+            Some("accepted") => {}
+            Some("result") => break f,
+            other => panic!("unexpected event {other:?}"),
+        }
+    };
+    assert_eq!(progress, 6, "one progress frame per resample");
+    let data = frame.get("data").expect("bootstrap data");
+    assert_eq!(data.get("kind").and_then(Json::as_str), Some("bootstrap"));
+    assert_eq!(data.get("resamples").and_then(Json::as_usize), Some(6));
+    server.shutdown();
+}
+
+/// Server-side CSV panels: loaded by the worker, fit matches a direct
+/// fit of the same data, and the repeat request hits the worker-side
+/// cache lookup (CSV keys are hashed after loading).
+#[test]
+fn csv_panel_fit_matches_direct_and_caches() {
+    let server = start(1, 4, 4);
+    let dir = std::env::temp_dir().join("alingam_serve_csv_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("panel.csv");
+    let panel = layered_panel(300, 4, 9);
+    let header: Vec<String> = (0..4).map(|c| format!("v{c}")).collect();
+    alingam::data::write_csv(&path, &header, &panel).unwrap();
+    let direct = DirectLingam::new().fit(&panel, &VectorizedEngine).unwrap();
+
+    let mut c = Client::connect(server.local_addr());
+    let req = protocol::csv_fit_request("csv1", "vectorized", path.to_str().unwrap());
+    c.send(&req);
+    let (ev, frame) = c.recv_terminal("csv1");
+    assert_eq!(ev, "result", "csv fit failed: {}", frame.render());
+    assert_eq!(order_of(&frame), direct.order);
+    c.send(&req);
+    let (ev2, frame2) = c.recv_terminal("csv1");
+    assert_eq!(ev2, "result");
+    assert_eq!(frame2.get("cached").and_then(Json::as_bool), Some(true));
+    assert!(server.cache_stats().hits >= 1);
+    // a missing file is an error frame, not a dead server
+    c.send(&protocol::csv_fit_request("csv2", "vectorized", "/nonexistent/panel.csv"));
+    let (ev3, _) = c.recv_terminal("csv2");
+    assert_eq!(ev3, "error");
+    server.shutdown();
+}
+
+/// Malformed and invalid frames produce `error` frames and leave the
+/// connection (and server) fully serviceable.
+#[test]
+fn malformed_frames_error_without_killing_the_connection() {
+    let server = start(1, 4, 0);
+    let mut c = Client::connect(server.local_addr());
+    c.send("this is not json");
+    let e1 = c.recv_event("error");
+    assert!(e1.get("message").and_then(Json::as_str).is_some());
+    c.send("{\"cmd\":\"nope\"}");
+    let _ = c.recv_event("error");
+    // a degenerate panel is rejected by validation as a job error
+    let mut bad = layered_panel(50, 3, 7);
+    let constant = vec![0.25; 50];
+    bad.set_col(1, &constant);
+    c.send(&protocol::fit_request("bad1", "vectorized", &bad));
+    let (ev, frame) = c.recv_terminal("bad1");
+    assert_eq!(ev, "error");
+    let msg = frame.get("message").and_then(Json::as_str).unwrap_or_default();
+    assert!(msg.contains("constant"), "unexpected message {msg:?}");
+    // the connection still answers real requests afterwards
+    c.send(&protocol::control_request("status"));
+    let s = c.recv_event("status");
+    assert_eq!(s.get("workers").and_then(Json::as_usize), Some(1));
+    assert_eq!(s.get("accepting").and_then(Json::as_bool), Some(true));
+    server.shutdown();
+}
+
+/// Pruned-engine requests run the bound-pruned sweep server-side and
+/// report its counters, while matching the exact engine's order.
+#[test]
+fn pruned_engine_requests_match_exact_and_report_sweep_savings() {
+    let server = start(1, 4, 0);
+    let panel = chain_panel(1_500, 16, 21);
+    let direct = DirectLingam::new().fit(&panel, &VectorizedEngine).unwrap();
+    let mut c = Client::connect(server.local_addr());
+    c.send(&protocol::fit_request("p1", "pruned:1", &panel));
+    let (ev, frame) = c.recv_terminal("p1");
+    assert_eq!(ev, "result", "pruned fit failed: {}", frame.render());
+    assert_eq!(order_of(&frame), direct.order, "pruned serve order diverged from exact");
+    let sweep = frame.get("data").and_then(|d| d.get("sweep")).expect("sweep counters");
+    let total = sweep.get("pairs_total").and_then(Json::as_u64).unwrap();
+    let visited = sweep.get("pairs_visited").and_then(Json::as_u64).unwrap();
+    assert!(visited < total, "pruned sweep saved no kernel calls: {}", frame.render());
+    server.shutdown();
+}
