@@ -1,0 +1,157 @@
+//! Partitioned ordering vs whole-panel ordering: the d-sweep behind the
+//! "scale past d≈1000" claim, on block-diagonal panels (B independent
+//! chain SEMs side by side — the structure partitioning is built for).
+//!
+//! Three plans per cell: the unpartitioned baseline (single-block plan),
+//! the exact merge tier (same fit by construction — its time column
+//! bounds the instrumentation overhead, and its boundary-pair counter
+//! reports the cross-block work a lossy decomposition would skip), and
+//! the approx merge tier (independent per-block sessions plus the
+//! boundary-pair tournament — the tier that actually changes the
+//! asymptotics, whose SHD cost is measured here rather than promised
+//! away). The SHD-vs-speed table is the deliverable: approx-vs-exact
+//! SHD next to the wall-clock ratio, with the visited-boundary-pair
+//! counters alongside. Exact columns are skipped (printed as `-`) past
+//! the d where whole-panel ordering stops being measurable in bench
+//! time — that cliff is the point of the plan layer.
+
+mod common;
+
+use alingam::lingam::{
+    DirectLingam, MergeMode, OrderingPlan, PartitionSpec, PartitionedPlan, PlanFit,
+    SingleBlockPlan,
+};
+use alingam::linalg::Mat;
+use alingam::metrics::graph_metrics;
+use alingam::sim::{sample_from_dag, Noise};
+use alingam::util::rng::Pcg64;
+use alingam::util::table::{f, secs, Table};
+
+/// Correlation threshold for the bench panels: comfortably above the
+/// O(n^{-1/2}) sampling noise of the cross-block correlations at every
+/// n used here, and far below the ≈0.7 adjacent-pair correlation inside
+/// each chain — so the partitioner recovers the true blocks.
+const THRESHOLD: f64 = 0.2;
+
+/// `blocks` independent chains of `d / blocks` variables side by side,
+/// with the block-diagonal ground-truth adjacency.
+fn block_diagonal(n: usize, d: usize, blocks: usize, seed: u64) -> (Mat, Mat) {
+    let per = d / blocks;
+    assert_eq!(per * blocks, d, "grid cells must divide evenly");
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut x = Mat::zeros(n, d);
+    let mut truth = Mat::zeros(d, d);
+    for b in 0..blocks {
+        let base = b * per;
+        let dag = alingam::graph::chain_dag(per, 1.0);
+        let xb = sample_from_dag(&dag, Noise::Uniform01, n, &mut rng);
+        for r in 0..n {
+            for c in 0..per {
+                x[(r, base + c)] = xb[(r, c)];
+            }
+        }
+        for i in 0..per {
+            for j in 0..per {
+                truth[(base + i, base + j)] = dag.adj[(i, j)];
+            }
+        }
+    }
+    (x, truth)
+}
+
+/// Time one full `fit_plan` (ordering + regression); `warm` runs it once
+/// beforehand so allocator effects do not dominate the small cells.
+fn time_plan(x: &Mat, plan: &dyn OrderingPlan, warm: bool) -> (f64, PlanFit) {
+    let run = || DirectLingam::new().fit_plan(x, plan).unwrap();
+    if warm {
+        let _ = run();
+    }
+    let (pf, dt) = common::time(run);
+    (dt, pf)
+}
+
+fn main() {
+    common::header(
+        "Partitioned ordering d-sweep (plan layer, block-diagonal panels)",
+        "exact merge reproduces the whole-panel fit; approx merge trades measured SHD for speed",
+    );
+
+    // (d, blocks) grid; exact plans run only up to `exact_max_d`
+    let (n, exact_max_d, cells): (usize, usize, Vec<(usize, usize)>) = if common::smoke() {
+        (500, 64, vec![(64, 8)])
+    } else if common::full_scale() {
+        (2_000, 256, vec![(64, 8), (128, 8), (256, 16), (512, 16), (1_024, 32)])
+    } else {
+        (1_000, 128, vec![(64, 8), (128, 8), (256, 16)])
+    };
+
+    let mut t = Table::new(
+        "fit wall-clock and SHD, unpartitioned vs partition-exact vs partition-approx",
+        &[
+            "dims",
+            "blocks",
+            "exact(s)",
+            "part-exact(s)",
+            "part-approx(s)",
+            "×(ex/ap)",
+            "shd ap↔ex",
+            "shd ex↔truth",
+            "shd ap↔truth",
+            "bnd visited",
+            "bnd total",
+        ],
+    );
+    for &(d, blocks) in &cells {
+        let (x, truth) = block_diagonal(n, d, blocks, 61);
+        let warm = d <= 128;
+        let exact_spec = PartitionSpec { threshold: THRESHOLD, ..PartitionSpec::default() };
+        let approx_spec = PartitionSpec { merge: MergeMode::Approx, ..exact_spec };
+        let (t_ap, pf_ap) = time_plan(&x, &PartitionedPlan::new(approx_spec), warm);
+        let m_ap = graph_metrics(&truth, &pf_ap.fit.adjacency, 0.1);
+        if d <= exact_max_d {
+            let (t_base, _) = time_plan(&x, &SingleBlockPlan::new(0), warm);
+            let (t_ex, pf_ex) = time_plan(&x, &PartitionedPlan::new(exact_spec), warm);
+            let m_ex = graph_metrics(&truth, &pf_ex.fit.adjacency, 0.1);
+            let m_cross = graph_metrics(&pf_ex.fit.adjacency, &pf_ap.fit.adjacency, 0.1);
+            t.row(&[
+                d.to_string(),
+                pf_ap.blocks_formed.to_string(),
+                secs(t_base),
+                secs(t_ex),
+                secs(t_ap),
+                f(t_ex / t_ap, 2),
+                m_cross.shd.to_string(),
+                m_ex.shd.to_string(),
+                m_ap.shd.to_string(),
+                pf_ap.boundary_pairs.to_string(),
+                pf_ex.boundary_pairs.to_string(),
+            ]);
+        } else {
+            t.row(&[
+                d.to_string(),
+                pf_ap.blocks_formed.to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                secs(t_ap),
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                m_ap.shd.to_string(),
+                pf_ap.boundary_pairs.to_string(),
+                "-".to_string(),
+            ]);
+        }
+    }
+    t.print();
+    common::emit_json("partition_scaling", &[&t]);
+    println!(
+        "\nshape check: part-exact(s) should track exact(s) (the exact tier is\n\
+         the whole-panel fit plus counters) with shd ex↔truth == shd for the\n\
+         unpartitioned fit by construction; part-approx(s) should fall away\n\
+         from both as d grows — the per-step sweep drops from O(d²·n) to\n\
+         O(Σ_b d_b²·n) — while shd ap↔ex stays small on these separable\n\
+         panels. `bnd visited` is the tournament's pruned-sweep kernel-call\n\
+         count; `bnd total` is every active cross-block pair the exact tier\n\
+         evaluated — the gap is the work partitioning avoids."
+    );
+}

@@ -8,9 +8,13 @@
 //! [`reset`](OrderingSession::reset)s it with its resample (reusing the
 //! standardized-cache and correlation-matrix buffers) and parks it again
 //! when the fit is done, instead of reallocating the workspace
-//! `resamples` times.
+//! `resamples` times. The pool is workspace-agnostic: the direct
+//! bootstrap parks engine sessions, the partitioned bootstrap parks
+//! [`PartitionWorkspace`]s (whose reset also re-partitions against the
+//! resample's correlation graph) — one shared core drives both.
 
 use super::sweep::parallel_map;
+use crate::lingam::partition::{PartitionSpec, PartitionWorkspace};
 use crate::lingam::{DirectLingam, LingamFit, OrderingEngine, OrderingSession};
 use crate::linalg::Mat;
 use crate::util::rng::Pcg64;
@@ -91,6 +95,54 @@ pub fn bootstrap_direct_observed<'e>(
     cancel: Option<&AtomicBool>,
     on_resample: impl Fn(usize, usize) + Sync,
 ) -> Result<BootstrapResult> {
+    bootstrap_with_sessions(data, opts, cancel, on_resample, |sample| engine.session(sample))
+}
+
+/// Bootstrap through the partitioned plan's exact tier: every resample
+/// is refit by a pooled [`PartitionWorkspace`], whose
+/// [`reset`](OrderingSession::reset) both re-seeds the inner workspace
+/// buffers *and* re-partitions against the resample's own correlation
+/// graph. The exact tier's fit is the unpartitioned session fit bit for
+/// bit, so at `spec.workers == 1` the aggregates are identical to
+/// [`bootstrap_direct`] over the vectorized engine (pinned by a test
+/// below) — what the partition run adds is the per-resample
+/// boundary-pair instrumentation and, via the pool, block-label reuse.
+pub fn bootstrap_partition(
+    data: &Mat,
+    spec: &PartitionSpec,
+    opts: &BootstrapOpts,
+) -> Result<BootstrapResult> {
+    bootstrap_partition_observed(data, spec, opts, None, |_, _| {})
+}
+
+/// [`bootstrap_partition`] with per-resample observation and
+/// cooperative cancellation — the serve layer's entry point, mirroring
+/// [`bootstrap_direct_observed`].
+pub fn bootstrap_partition_observed(
+    data: &Mat,
+    spec: &PartitionSpec,
+    opts: &BootstrapOpts,
+    cancel: Option<&AtomicBool>,
+    on_resample: impl Fn(usize, usize) + Sync,
+) -> Result<BootstrapResult> {
+    bootstrap_with_sessions(data, opts, cancel, on_resample, |sample| {
+        PartitionWorkspace::new(sample, spec).map(|w| Box::new(w) as Box<dyn OrderingSession>)
+    })
+}
+
+/// The shared resample → pool → refit → aggregate core behind both
+/// bootstrap flavors. `make_session` seeds a fresh workspace for a
+/// resample when the pool is empty — the direct bootstrap passes an
+/// engine's session factory, the partitioned bootstrap a
+/// [`PartitionWorkspace`] constructor — and everything else (seeding,
+/// row resampling, pooling, cancellation, aggregation) is written once.
+fn bootstrap_with_sessions<'e>(
+    data: &Mat,
+    opts: &BootstrapOpts,
+    cancel: Option<&AtomicBool>,
+    on_resample: impl Fn(usize, usize) + Sync,
+    make_session: impl Fn(&Mat) -> Result<Box<dyn OrderingSession + 'e>> + Sync,
+) -> Result<BootstrapResult> {
     let (n, d) = (data.rows(), data.cols());
     if opts.resamples == 0 {
         return Err(Error::InvalidArgument("resamples must be ≥ 1".into()));
@@ -113,7 +165,7 @@ pub fn bootstrap_direct_observed<'e>(
                 s.reset(&sample)?;
                 s
             }
-            None => engine.session(&sample)?,
+            None => make_session(&sample)?,
         };
         let fit = DirectLingam::new().fit_session(&sample, session.as_mut());
         // park the workspace even after a failed refit: reset restores
@@ -227,6 +279,30 @@ mod tests {
         assert_eq!(a.edge_probs, b.edge_probs);
         assert_eq!(a.precedence, b.precedence);
         assert_eq!(a.resamples, b.resamples);
+    }
+
+    #[test]
+    fn partition_bootstrap_matches_direct_and_pool_resets_cleanly() {
+        let mut rng = Pcg64::seed_from_u64(9);
+        let ds = simulate_sem(&SemSpec::layered(5, 2, 0.7), 1_000, &mut rng);
+        let spec = PartitionSpec { workers: 1, ..PartitionSpec::default() };
+        let run = |workers: usize| {
+            let opts = BootstrapOpts { resamples: 12, workers, ..Default::default() };
+            bootstrap_partition(&ds.data, &spec, &opts).unwrap()
+        };
+        // worker count changes which resamples share a pooled workspace;
+        // reset (including the re-partition) must make that invisible
+        let (a, b) = (run(1), run(3));
+        assert_eq!(a.edge_probs, b.edge_probs);
+        assert_eq!(a.precedence, b.precedence);
+        assert_eq!(a.resamples, b.resamples);
+        // the exact tier is the unpartitioned session fit bit for bit,
+        // so the aggregates equal the direct bootstrap's exactly
+        let opts = BootstrapOpts { resamples: 12, workers: 2, ..Default::default() };
+        let direct = bootstrap_direct(&ds.data, &VectorizedEngine, &opts).unwrap();
+        assert_eq!(a.edge_probs, direct.edge_probs);
+        assert_eq!(a.precedence, direct.precedence);
+        assert_eq!(a.resamples, direct.resamples);
     }
 
     #[test]

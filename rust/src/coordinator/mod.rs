@@ -13,7 +13,8 @@ pub mod profile;
 pub mod sweep;
 
 pub use bootstrap::{
-    bootstrap_direct, bootstrap_direct_observed, BootstrapOpts, BootstrapResult,
+    bootstrap_direct, bootstrap_direct_observed, bootstrap_partition,
+    bootstrap_partition_observed, BootstrapOpts, BootstrapResult,
 };
 pub use profile::{profile_direct, profile_var, ProfileRow};
 pub use sweep::{parallel_map, SweepStats};
@@ -37,6 +38,13 @@ pub enum EngineChoice {
     /// O(d²·n) pair work skipped. `workers == 1` is the serial pruned
     /// path.
     Pruned { workers: usize },
+    /// Partitioned ordering plan ([`crate::lingam::partition`]):
+    /// correlation-graph blocks with a boundary-pair reconciliation
+    /// merge. `blocks == 0` ⇒ uncapped (one block per connected
+    /// component). Not a session engine — `Engine::build` rejects it;
+    /// the CLI and serve layers route it through
+    /// [`DirectLingam::fit_plan`](crate::lingam::DirectLingam::fit_plan).
+    Partition { blocks: usize },
     /// AOT Pallas/JAX artifacts over PJRT (the accelerated path).
     Xla,
 }
@@ -62,14 +70,24 @@ impl EngineChoice {
             })?;
             return Ok(EngineChoice::Pruned { workers });
         }
+        if let Some(rest) = s.strip_prefix("partition:") {
+            let blocks: usize = rest.parse().map_err(|_| {
+                Error::InvalidArgument(format!(
+                    "bad block count {rest:?} in engine spec {s:?} (want partition:B)"
+                ))
+            })?;
+            return Ok(EngineChoice::Partition { blocks });
+        }
         match s {
             "sequential" | "seq" => Ok(EngineChoice::Sequential),
             "vectorized" | "vec" => Ok(EngineChoice::Vectorized),
             "parallel" | "par" => Ok(EngineChoice::Parallel { workers: 0 }),
             "pruned" => Ok(EngineChoice::Pruned { workers: 0 }),
+            "partition" => Ok(EngineChoice::Partition { blocks: 0 }),
             "xla" => Ok(EngineChoice::Xla),
             other => Err(Error::InvalidArgument(format!(
-                "unknown engine {other:?} (sequential|vectorized|parallel[:N]|pruned[:N]|xla)"
+                "unknown engine {other:?} \
+                 (sequential|vectorized|parallel[:N]|pruned[:N]|partition[:B]|xla)"
             ))),
         }
     }
@@ -80,8 +98,19 @@ impl EngineChoice {
             EngineChoice::Vectorized => "vectorized",
             EngineChoice::Parallel { .. } => "parallel",
             EngineChoice::Pruned { .. } => "pruned",
+            EngineChoice::Partition { .. } => "partition",
             EngineChoice::Xla => "xla",
         }
+    }
+
+    /// The per-job worker budget when `concurrent` sibling jobs share
+    /// the machine — the one copy of the division
+    /// [`resolve_workers`](EngineChoice::resolve_workers) applies to
+    /// auto-sized pools, exposed so plan-driven paths (the partition
+    /// plan's internal pool, which has no `workers` field in its spec)
+    /// normalize identically in the CLI and the serve layer.
+    pub fn per_job_workers(concurrent: usize) -> usize {
+        (crate::lingam::parallel::default_workers() / concurrent.max(1)).max(1)
     }
 
     /// Resolve the `workers == 0` (auto) placeholder against a core
@@ -93,13 +122,15 @@ impl EngineChoice {
     /// worker-default normalization — the CLI sweep commands and the
     /// serve layer's per-request engine construction both go through it.
     pub fn resolve_workers(self, concurrent: usize) -> EngineChoice {
-        let per_job =
-            || (crate::lingam::parallel::default_workers() / concurrent.max(1)).max(1);
         match self {
             EngineChoice::Parallel { workers: 0 } => {
-                EngineChoice::Parallel { workers: per_job() }
+                EngineChoice::Parallel { workers: Self::per_job_workers(concurrent) }
             }
-            EngineChoice::Pruned { workers: 0 } => EngineChoice::Pruned { workers: per_job() },
+            EngineChoice::Pruned { workers: 0 } => {
+                EngineChoice::Pruned { workers: Self::per_job_workers(concurrent) }
+            }
+            // `partition:B` counts blocks, not workers: its internal
+            // pool is sized by the caller via `per_job_workers`
             other => other,
         }
     }
@@ -113,6 +144,7 @@ impl EngineChoice {
         match self {
             EngineChoice::Parallel { workers } => format!("parallel:{workers}"),
             EngineChoice::Pruned { workers } => format!("pruned:{workers}"),
+            EngineChoice::Partition { blocks } => format!("partition:{blocks}"),
             other => other.name().to_string(),
         }
     }
@@ -138,6 +170,13 @@ impl Engine {
             EngineChoice::Parallel { workers } => Engine::Parallel(ParallelEngine::new(workers)),
             EngineChoice::Pruned { workers } => {
                 Engine::Parallel(ParallelEngine::new(workers).with_pruning())
+            }
+            EngineChoice::Partition { .. } => {
+                return Err(Error::InvalidArgument(
+                    "partition is an ordering plan, not a session engine — route it \
+                     through DirectLingam::fit_plan (the discover/serve paths do)"
+                        .into(),
+                ))
             }
             EngineChoice::Xla => Engine::Xla(Arc::new(XlaEngine::from_default_artifacts()?)),
         })
@@ -199,6 +238,32 @@ mod tests {
     }
 
     #[test]
+    fn partition_choice_parses_but_does_not_build() {
+        assert_eq!(
+            EngineChoice::parse("partition").unwrap(),
+            EngineChoice::Partition { blocks: 0 }
+        );
+        assert_eq!(
+            EngineChoice::parse("partition:8").unwrap(),
+            EngineChoice::Partition { blocks: 8 }
+        );
+        assert!(EngineChoice::parse("partition:x").is_err());
+        assert_eq!(EngineChoice::Partition { blocks: 3 }.name(), "partition");
+        // a plan, not a session engine
+        assert!(matches!(
+            Engine::build(EngineChoice::Partition { blocks: 0 }),
+            Err(Error::InvalidArgument(_))
+        ));
+        // blocks are not a worker count: resolve_workers passes through
+        assert_eq!(
+            EngineChoice::Partition { blocks: 0 }.resolve_workers(4),
+            EngineChoice::Partition { blocks: 0 }
+        );
+        assert!(EngineChoice::per_job_workers(1) >= 1);
+        assert_eq!(EngineChoice::per_job_workers(usize::MAX), 1);
+    }
+
+    #[test]
     fn resolve_workers_only_touches_auto_pools() {
         // explicit counts and pool-less engines pass through unchanged
         assert_eq!(
@@ -228,6 +293,8 @@ mod tests {
             EngineChoice::Parallel { workers: 0 },
             EngineChoice::Parallel { workers: 5 },
             EngineChoice::Pruned { workers: 2 },
+            EngineChoice::Partition { blocks: 0 },
+            EngineChoice::Partition { blocks: 4 },
             EngineChoice::Xla,
         ] {
             assert_eq!(EngineChoice::parse(&c.spec()).unwrap(), c, "spec {}", c.spec());

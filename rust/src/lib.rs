@@ -78,6 +78,28 @@
 //! accuracy-bounded polynomial-`exp` kernel (≤ 2e-7 relative error per
 //! call) that sessions can opt into.
 //!
+//! ## The plan layer: partitioned ordering
+//!
+//! Above engines and sessions sits a third seam, the
+//! [`lingam::OrderingPlan`]: a strategy that produces the *whole* causal
+//! order, which `DirectLingam::fit_plan` validates and finishes with the
+//! shared regression stage. The trivial plan
+//! ([`lingam::SingleBlockPlan`]) is the whole-panel session fit; the
+//! interesting one ([`lingam::PartitionedPlan`], `partition[:B]` on the
+//! CLI and over the wire) decomposes the panel into connected components
+//! of the thresholded correlation graph — read off the correlation
+//! matrix the session has already computed — orders blocks
+//! independently, and reconciles the block orders across boundary pairs.
+//! Its merge tiers mirror the sweep strategies: the **exact** tier is
+//! provably the unpartitioned fit (one global session; the partition
+//! only counts the cross-block work a lossy split would skip), while the
+//! **approx** tier actually drops the per-step sweep from O(d²·n) to
+//! O(Σ_b d_b²·n) plus a bound-pruned boundary-pair tournament, trading
+//! SHD that the `partition_scaling` bench measures rather than promises
+//! away (see [`lingam::partition`] for the exactness argument). The
+//! bootstrap pools [`lingam::PartitionWorkspace`]s across resamples like
+//! any other session workspace.
+//!
 //! ## The serving layer
 //!
 //! [`serve`] makes the repo a long-lived process instead of a batch

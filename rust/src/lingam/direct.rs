@@ -14,7 +14,9 @@
 //! clone-and-`order_step` loop as the comparison baseline, and
 //! [`DirectLingam::fit_session`] drives a caller-provided (pooled,
 //! reset) session so the bootstrap can reuse workspaces across
-//! resamples.
+//! resamples. [`DirectLingam::fit_plan`] generalizes the driver from
+//! "drive one session" to "execute an [`OrderingPlan`]" — the seam the
+//! partitioned ordering layer ([`super::partition`]) plugs into.
 //!
 //! The per-stage timing profile this driver collects is what the
 //! Figure-2 reproduction reports (ordering is ~96% of total runtime).
@@ -22,6 +24,7 @@
 use super::engine::{OrderingEngine, OrderStep};
 use super::prune::{estimate_adjacency, PruneMethod};
 use super::session::{OrderingSession, StatelessSession};
+use super::sweep::SweepCounters;
 use crate::linalg::Mat;
 use crate::util::timer::StageProfile;
 use crate::util::{Error, Result};
@@ -45,6 +48,62 @@ pub struct LingamFit {
     pub step_scores: Vec<Vec<f64>>,
     /// Wall-clock per stage: "ordering" vs "regression".
     pub profile: StageProfile,
+}
+
+/// A strategy for producing the full causal order of a panel — the seam
+/// between [`DirectLingam`] and *how* the ordering work is decomposed.
+///
+/// [`DirectLingam::fit`] is the monolithic case: one session over the
+/// whole panel. A plan generalizes that to "execute a set of sessions
+/// and merge their orders" — the whole-panel fit is the trivial
+/// single-block plan ([`super::partition::SingleBlockPlan`]), and the
+/// partitioned plan ([`super::partition::PartitionedPlan`]) decomposes
+/// the panel into correlation-connected blocks. The driver keeps sole
+/// ownership of validation and adjacency regression, so every plan
+/// rejects exactly the panels `fit` rejects and prices the regression
+/// stage identically.
+pub trait OrderingPlan {
+    /// Short name for logs and profiles.
+    fn name(&self) -> &'static str;
+    /// Produce the full causal order (causes first) for `data`, plus the
+    /// instrumentation the serve layer books into its metrics.
+    fn order(&self, data: &Mat) -> Result<PlanOrdering>;
+}
+
+/// What a plan returns: the order itself plus the decomposition
+/// instrumentation ([`DirectLingam::fit_plan`] turns this into a
+/// [`PlanFit`] by adding the adjacency regression).
+#[derive(Clone, Debug)]
+pub struct PlanOrdering {
+    /// Full causal order — must be a permutation of `0..d`.
+    pub order: Vec<usize>,
+    /// Per-step score vectors where the plan defines them (the exact
+    /// merge tier reports the same d−1 vectors as the unpartitioned
+    /// fit; the approx tier's block-local scores are not comparable
+    /// across blocks, so it reports none).
+    pub step_scores: Vec<Vec<f64>>,
+    /// Sweep work accumulated across every session the plan drove.
+    pub counters: SweepCounters,
+    /// Number of column blocks the plan decomposed the panel into
+    /// (1 for the single-block plan).
+    pub blocks_formed: u64,
+    /// Cross-block candidate pairs the merge visited (0 for the
+    /// single-block plan — there is nothing to reconcile).
+    pub boundary_pairs: u64,
+}
+
+/// A fitted model produced through a plan: the ordinary [`LingamFit`]
+/// plus the plan's decomposition instrumentation.
+#[derive(Clone, Debug)]
+pub struct PlanFit {
+    /// The fit itself (order, adjacency, step scores, stage profile).
+    pub fit: LingamFit,
+    /// Sweep work accumulated across every session the plan drove.
+    pub counters: SweepCounters,
+    /// Blocks the plan formed.
+    pub blocks_formed: u64,
+    /// Cross-block candidate pairs the merge visited.
+    pub boundary_pairs: u64,
 }
 
 impl DirectLingam {
@@ -124,6 +183,35 @@ impl DirectLingam {
         // the legacy loop's untimed `data.clone()`
         let mut shim = StatelessSession::new(engine, data);
         self.drive(data, &mut shim, StageProfile::new(), &mut |_, _| Ok(()))
+    }
+
+    /// Fit by executing an [`OrderingPlan`] instead of driving one
+    /// session directly — the entry point the `partition[:B]` engine
+    /// spec routes through. Validation and the adjacency regression are
+    /// identical to [`fit`](DirectLingam::fit): the plan only supplies
+    /// the causal order, so the partition path rejects exactly the
+    /// panels the monolithic path rejects.
+    pub fn fit_plan(&self, data: &Mat, plan: &dyn OrderingPlan) -> Result<PlanFit> {
+        self.validate(data)?;
+        let mut profile = StageProfile::new();
+        let plan_out = profile.time("ordering", || plan.order(data))?;
+        let d = data.cols();
+        let mut seen = vec![false; d];
+        let valid = plan_out.order.len() == d
+            && plan_out.order.iter().all(|&v| v < d && !std::mem::replace(&mut seen[v], true));
+        if !valid {
+            return Err(Error::Numerical(format!(
+                "plan {:?} returned an invalid order (not a permutation of 0..{d})",
+                plan.name()
+            )));
+        }
+        let fit = self.finish(data, plan_out.order, plan_out.step_scores, profile)?;
+        Ok(PlanFit {
+            fit,
+            counters: plan_out.counters,
+            blocks_formed: plan_out.blocks_formed,
+            boundary_pairs: plan_out.boundary_pairs,
+        })
     }
 
     /// Drive a session through the d−1 search steps and estimate the

@@ -30,6 +30,13 @@
 //!   workspace sweeps across the same pool.
 //! - [`direct`] — DirectLiNGAM (Shimizu et al. 2011): iterative exogenous
 //!   search + residualization, then adjacency estimation over the order.
+//!   Also the [`OrderingPlan`] seam, which generalizes the fit driver
+//!   from "drive one session" to "execute a plan of sessions".
+//! - [`partition`] — partitioned ordering plans: thresholded
+//!   correlation-graph blocks, independent per-block sessions, and a
+//!   boundary-pair reconciliation merge, with an exact tier (provably
+//!   the unpartitioned fit, instrumented) and a measured approx tier —
+//!   the d≈1000+ scaling path.
 //! - [`prune`] — adjacency estimation: OLS over predecessors + adaptive
 //!   lasso pruning.
 //! - [`var`] — VarLiNGAM (Hyvärinen et al. 2010): VAR(k) fit, DirectLiNGAM
@@ -46,10 +53,15 @@ pub mod direct;
 pub mod fastica;
 pub mod ica;
 pub mod parallel;
+pub mod partition;
 pub mod prune;
 pub mod var;
 
-pub use direct::{DirectLingam, LingamFit};
+pub use direct::{DirectLingam, LingamFit, OrderingPlan, PlanFit, PlanOrdering};
+pub use partition::{
+    partition_columns, MergeMode, PartitionSpec, PartitionWorkspace, PartitionedPlan,
+    SingleBlockPlan,
+};
 pub use engine::{OrderingEngine, SequentialEngine, VectorizedEngine};
 pub use parallel::ParallelEngine;
 pub use session::{IncrementalSession, OrderingSession, StatelessSession};

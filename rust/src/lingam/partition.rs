@@ -1,0 +1,583 @@
+//! Partitioned causal ordering: the plan layer that scales DirectLiNGAM
+//! past d≈1000 by decomposing the panel into correlation-connected
+//! column blocks before paying the per-step O(d²·n) pair sweeps.
+//!
+//! The decomposition is a thresholded correlation graph: columns `a` and
+//! `b` are linked when `|ρ_ab| > threshold`, and each connected
+//! component becomes a block ([`partition_columns`], built from the
+//! correlation matrix the [`IncrementalSession`] has already computed —
+//! the partition costs no statistics of its own). A
+//! [`PartitionedPlan`] then orders the blocks' variables and merges
+//! them back into one global causal order through the
+//! [`OrderingPlan`] seam in [`super::direct`].
+//!
+//! # Merge exactness
+//!
+//! The pruned sweep (see [`super::sweep`]) can be exact because every
+//! skipped pair comes with a per-candidate certificate: a running
+//! penalty already above a completed total cannot win the argmax.
+//! Partitioning has no analogous certificate. The idealized lemma *does*
+//! hold: if every cross-block correlation were exactly zero, the
+//! cross-block regression coefficient would be zero, residualization
+//! would be the identity on the other blocks' columns, the closed-form
+//! correlation update would preserve the zeros, and every cross-block
+//! `pair_diff` would contribute zero penalty — the blockwise fit would
+//! *be* the global fit. But sample correlations are never exactly zero
+//! (they concentrate at O(n^{-1/2})), and a near-zero cross-block pair
+//! has no bound that proves it cannot flip an argmax. Exactness
+//! therefore cannot come from omitting boundary work, and the plan
+//! tiers the same way the sweep does:
+//!
+//! 1. **[`MergeMode::Exact`] evaluates everything.** It drives a single
+//!    session over the whole panel through the same step loop as the
+//!    unpartitioned fit — same workers ⇒ bitwise-identical scores,
+//!    identical order and adjacency *by construction* (pinned by
+//!    `tests/partition_exactness.rs`). The partition is used purely for
+//!    instrumentation: at each step it counts how many of the active
+//!    pairs straddle blocks, i.e. exactly the work a lossy
+//!    decomposition would have skipped. This is the measured baseline,
+//!    playing the role `SweepStrategy::Exact` plays for the sweep.
+//! 2. **[`MergeMode::Approx`] actually skips it.** Each block is
+//!    ordered by an independent session over its column subpanel
+//!    (O(Σ_b d_b²·n) per step instead of O(d²·n)), and the block
+//!    orders are reconciled by a k-way tournament restricted to
+//!    boundary pairs: at every merge step the blocks' current heads are
+//!    scored with the exact pair kernel ([`pair_diff_with_rho`]) on the
+//!    initial standardized statistics, under the same bound-pruned
+//!    machinery ([`pruned_sweep`]) scheduled by the blocks' own head
+//!    scores. Every head pair is cross-block, so the sweep's visited
+//!    count *is* the boundary-pair count. The SHD this tier trades for
+//!    speed is measured, not promised away — the `partition_scaling`
+//!    bench reports the SHD-vs-speed table alongside the counters.
+//!
+//! [`PartitionWorkspace`] is the exact tier packaged as an
+//! [`OrderingSession`], so the bootstrap pools it across resamples
+//! exactly like any other session workspace ([`OrderingSession::reset`]
+//! re-seeds the inner workspace *and* re-partitions against the
+//! resample's own correlation graph).
+
+use super::direct::{OrderingPlan, PlanOrdering};
+use super::engine::{argmax_active, scatter_scores, OrderStep};
+use super::parallel::default_workers;
+use super::session::{IncrementalSession, OrderingSession};
+use super::sweep::{entropy_fused, pair_diff_with_rho, pruned_sweep, SweepCounters};
+use crate::linalg::Mat;
+use crate::util::pool::parallel_indexed;
+use crate::util::Result;
+use std::collections::BTreeMap;
+
+/// Correlation-graph edge threshold the `partition[:B]` engine spec
+/// uses: |ρ| above this links two columns into one block.
+pub const DEFAULT_THRESHOLD: f64 = 0.05;
+
+/// How block orders are merged back into one global order (see the
+/// module essay for why these tier like the sweep strategies).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MergeMode {
+    /// Provably identical to the unpartitioned fit: one global session,
+    /// the partition only instruments boundary-pair work.
+    #[default]
+    Exact,
+    /// Independent per-block sessions + boundary-pair tournament merge:
+    /// real asymptotic saving, measured SHD cost.
+    Approx,
+}
+
+/// Configuration of a [`PartitionedPlan`].
+#[derive(Clone, Copy, Debug)]
+pub struct PartitionSpec {
+    /// Upper bound on the number of blocks (0 = uncapped): smallest
+    /// components are merged until the cap holds, so `partition:1`
+    /// degenerates to the whole-panel fit.
+    pub max_blocks: usize,
+    /// Correlation-graph edge threshold ([`DEFAULT_THRESHOLD`]).
+    pub threshold: f64,
+    /// Merge tier ([`MergeMode::Exact`] by default).
+    pub merge: MergeMode,
+    /// Worker threads for sessions and block-level parallelism
+    /// (0 = size to the machine).
+    pub workers: usize,
+}
+
+impl Default for PartitionSpec {
+    fn default() -> Self {
+        PartitionSpec {
+            max_blocks: 0,
+            threshold: DEFAULT_THRESHOLD,
+            merge: MergeMode::Exact,
+            workers: 0,
+        }
+    }
+}
+
+impl PartitionSpec {
+    fn resolved_workers(&self) -> usize {
+        if self.workers == 0 {
+            default_workers()
+        } else {
+            self.workers
+        }
+    }
+}
+
+/// Connected components of the thresholded correlation graph: columns
+/// `a`, `b` are linked when `|corr[(a,b)]| > threshold` (strict, so a
+/// threshold of 0 still separates exactly-orthogonal columns). Blocks
+/// come out sorted by smallest member with members ascending; when
+/// `max_blocks > 0`, the smallest components (ties: lowest first
+/// member) are merged pairwise until the cap holds.
+pub fn partition_columns(corr: &Mat, threshold: f64, max_blocks: usize) -> Vec<Vec<usize>> {
+    let d = corr.rows();
+    // union-find with union-by-minimum, so each root is its component's
+    // smallest member and the BTreeMap below yields blocks pre-sorted
+    let mut parent: Vec<usize> = (0..d).collect();
+    fn find(parent: &mut [usize], mut i: usize) -> usize {
+        while parent[i] != i {
+            parent[i] = parent[parent[i]];
+            i = parent[i];
+        }
+        i
+    }
+    for a in 0..d {
+        for b in (a + 1)..d {
+            if corr[(a, b)].abs() > threshold {
+                let (ra, rb) = (find(&mut parent, a), find(&mut parent, b));
+                if ra != rb {
+                    parent[ra.max(rb)] = ra.min(rb);
+                }
+            }
+        }
+    }
+    let mut by_root: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for i in 0..d {
+        let r = find(&mut parent, i);
+        by_root.entry(r).or_default().push(i);
+    }
+    let mut blocks: Vec<Vec<usize>> = by_root.into_values().collect();
+    if max_blocks > 0 {
+        while blocks.len() > max_blocks {
+            blocks.sort_by_key(|b| (b.len(), b[0]));
+            let small = blocks.remove(0);
+            blocks[0].extend(small);
+            blocks[0].sort_unstable();
+        }
+        blocks.sort_by_key(|b| b[0]);
+    }
+    blocks
+}
+
+/// Unordered active pairs that straddle blocks: C(m,2) minus the
+/// within-block pair counts — the exact tier's per-step boundary-pair
+/// instrumentation.
+fn cross_block_pairs(active: &[bool], labels: &[usize], num_blocks: usize) -> u64 {
+    let choose2 = |k: u64| k * k.saturating_sub(1) / 2;
+    let mut per = vec![0u64; num_blocks];
+    let mut m = 0u64;
+    for (i, &a) in active.iter().enumerate() {
+        if a {
+            per[labels[i]] += 1;
+            m += 1;
+        }
+    }
+    choose2(m) - per.iter().map(|&k| choose2(k)).sum::<u64>()
+}
+
+// ---------------------------------------------------------------------
+// The exact tier as a poolable session.
+// ---------------------------------------------------------------------
+
+/// The exact merge tier packaged as an [`OrderingSession`]: a global
+/// [`IncrementalSession`] plus per-column block labels. Every step
+/// first books the active cross-block pair count, then delegates to the
+/// inner session — so the fit it produces is the inner session's fit,
+/// bit for bit. `reset` re-seeds the inner workspace and re-partitions
+/// against the fresh panel's correlation graph, which is what lets the
+/// bootstrap pool these across resamples like any other session.
+pub struct PartitionWorkspace {
+    inner: IncrementalSession,
+    labels: Vec<usize>,
+    num_blocks: usize,
+    threshold: f64,
+    max_blocks: usize,
+    boundary_pairs: u64,
+}
+
+impl PartitionWorkspace {
+    /// Seed a workspace for `data` (`spec.merge` is ignored — the
+    /// workspace *is* the exact tier).
+    pub fn new(data: &Mat, spec: &PartitionSpec) -> Result<PartitionWorkspace> {
+        let inner = IncrementalSession::new(data, spec.resolved_workers(), false)?;
+        let mut ws = PartitionWorkspace {
+            inner,
+            labels: vec![0; data.cols()],
+            num_blocks: 0,
+            threshold: spec.threshold,
+            max_blocks: spec.max_blocks,
+            boundary_pairs: 0,
+        };
+        ws.relabel();
+        Ok(ws)
+    }
+
+    fn relabel(&mut self) {
+        let blocks = partition_columns(self.inner.corr(), self.threshold, self.max_blocks);
+        for (b, block) in blocks.iter().enumerate() {
+            for &c in block {
+                self.labels[c] = b;
+            }
+        }
+        self.num_blocks = blocks.len();
+        self.boundary_pairs = 0;
+    }
+
+    /// Blocks the current panel decomposed into.
+    pub fn blocks_formed(&self) -> u64 {
+        self.num_blocks as u64
+    }
+
+    /// Cross-block pairs the steps so far have visited.
+    pub fn boundary_pairs(&self) -> u64 {
+        self.boundary_pairs
+    }
+}
+
+impl OrderingSession for PartitionWorkspace {
+    fn remaining(&self) -> usize {
+        self.inner.remaining()
+    }
+
+    fn rows(&self) -> usize {
+        self.inner.rows()
+    }
+
+    fn active(&self) -> &[bool] {
+        self.inner.active()
+    }
+
+    fn step(&mut self) -> Result<OrderStep> {
+        self.boundary_pairs +=
+            cross_block_pairs(self.inner.active(), &self.labels, self.num_blocks);
+        self.inner.step()
+    }
+
+    fn reset(&mut self, data: &Mat) -> Result<()> {
+        self.inner.reset(data)?;
+        self.relabel();
+        Ok(())
+    }
+
+    fn sweep_counters(&self) -> SweepCounters {
+        self.inner.counters()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Plans.
+// ---------------------------------------------------------------------
+
+/// The trivial plan: the whole panel is one block, ordered by one
+/// [`IncrementalSession`] — [`DirectLingam::fit`](super::direct::DirectLingam::fit)
+/// expressed through the plan seam, so plan-driven callers have a
+/// baseline with identical semantics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SingleBlockPlan {
+    /// Worker threads for the session's sweeps (0 = machine-sized).
+    pub workers: usize,
+}
+
+impl SingleBlockPlan {
+    pub fn new(workers: usize) -> SingleBlockPlan {
+        SingleBlockPlan { workers }
+    }
+}
+
+impl OrderingPlan for SingleBlockPlan {
+    fn name(&self) -> &'static str {
+        "single-block"
+    }
+
+    fn order(&self, data: &Mat) -> Result<PlanOrdering> {
+        let workers = if self.workers == 0 { default_workers() } else { self.workers };
+        let mut session = IncrementalSession::new(data, workers, false)?;
+        let (order, step_scores) = drive_session(&mut session, data.cols())?;
+        Ok(PlanOrdering {
+            order,
+            step_scores,
+            counters: session.counters(),
+            blocks_formed: 1,
+            boundary_pairs: 0,
+        })
+    }
+}
+
+/// The partitioned plan: decompose, order per block, merge — with the
+/// tier split described in the module essay.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PartitionedPlan {
+    pub spec: PartitionSpec,
+}
+
+impl PartitionedPlan {
+    pub fn new(spec: PartitionSpec) -> PartitionedPlan {
+        PartitionedPlan { spec }
+    }
+
+    /// The CLI/serve constructor: block cap straight from the
+    /// `partition[:B]` engine spec, workers from the caller's
+    /// normalization, defaults elsewhere (exact merge).
+    pub fn with_blocks(max_blocks: usize, workers: usize) -> PartitionedPlan {
+        PartitionedPlan {
+            spec: PartitionSpec { max_blocks, workers, ..PartitionSpec::default() },
+        }
+    }
+}
+
+impl OrderingPlan for PartitionedPlan {
+    fn name(&self) -> &'static str {
+        "partition"
+    }
+
+    fn order(&self, data: &Mat) -> Result<PlanOrdering> {
+        match self.spec.merge {
+            MergeMode::Exact => exact_order(data, &self.spec),
+            MergeMode::Approx => approx_order(data, &self.spec),
+        }
+    }
+}
+
+/// Shared d−1-step drive loop over a session (the plan-layer twin of
+/// `DirectLingam::drive`, minus profiling/observer concerns).
+fn drive_session(
+    session: &mut dyn OrderingSession,
+    d: usize,
+) -> Result<(Vec<usize>, Vec<Vec<f64>>)> {
+    let mut order = Vec::with_capacity(d);
+    let mut step_scores = Vec::with_capacity(d.saturating_sub(1));
+    for _ in 1..d {
+        let step = session.step()?;
+        order.push(step.chosen);
+        step_scores.push(step.scores);
+    }
+    let last = session
+        .active()
+        .iter()
+        .position(|&a| a)
+        .expect("exactly one variable remains");
+    order.push(last);
+    Ok((order, step_scores))
+}
+
+fn exact_order(data: &Mat, spec: &PartitionSpec) -> Result<PlanOrdering> {
+    let mut ws = PartitionWorkspace::new(data, spec)?;
+    let (order, step_scores) = drive_session(&mut ws, data.cols())?;
+    Ok(PlanOrdering {
+        order,
+        step_scores,
+        counters: ws.sweep_counters(),
+        blocks_formed: ws.blocks_formed(),
+        boundary_pairs: ws.boundary_pairs(),
+    })
+}
+
+/// One block's independent fit: local order mapped to global column
+/// indices, plus each entry's block-local score at the step it was
+/// chosen (the merge's scheduling priority; the forced last entry gets
+/// −∞ so it is scheduled last among heads).
+struct BlockFit {
+    order: Vec<usize>,
+    scores: Vec<f64>,
+    counters: SweepCounters,
+}
+
+fn fit_block(data: &Mat, cols: &[usize]) -> Result<BlockFit> {
+    if cols.len() == 1 {
+        return Ok(BlockFit {
+            order: vec![cols[0]],
+            scores: vec![f64::NEG_INFINITY],
+            counters: SweepCounters::default(),
+        });
+    }
+    // per-block sessions are serial: parallelism lives at block level
+    let sub = data.select_cols(cols);
+    let mut session = IncrementalSession::new(&sub, 1, false)?;
+    let mut order = Vec::with_capacity(cols.len());
+    let mut scores = Vec::with_capacity(cols.len());
+    for _ in 1..cols.len() {
+        let step = session.step()?;
+        order.push(cols[step.chosen]);
+        scores.push(step.scores[step.chosen]);
+    }
+    let last = session
+        .active()
+        .iter()
+        .position(|&a| a)
+        .expect("exactly one variable remains");
+    order.push(cols[last]);
+    scores.push(f64::NEG_INFINITY);
+    Ok(BlockFit { order, scores, counters: session.counters() })
+}
+
+fn approx_order(data: &Mat, spec: &PartitionSpec) -> Result<PlanOrdering> {
+    let (n, d) = (data.rows(), data.cols());
+    // Seed statistics: standardized columns + full correlation matrix,
+    // computed once. The seed session is never stepped, so its cache
+    // stays the *initial* panel statistics the merge scores heads with.
+    let seed = IncrementalSession::new(data, spec.resolved_workers(), false)?;
+    let blocks = partition_columns(seed.corr(), spec.threshold, spec.max_blocks);
+    let workers = spec.resolved_workers();
+
+    // independent per-block fits over column subpanels
+    let fits: Vec<Result<BlockFit>> =
+        parallel_indexed(blocks.len(), workers, |b| fit_block(data, &blocks[b]));
+    let mut block_orders = Vec::with_capacity(blocks.len());
+    let mut head_scores = Vec::with_capacity(blocks.len());
+    let mut counters = SweepCounters::default();
+    for fit in fits {
+        let fit = fit?;
+        counters.merge(&fit.counters);
+        block_orders.push(fit.order);
+        head_scores.push(fit.scores);
+    }
+
+    // Cross-block reconciliation: k-way tournament over the blocks'
+    // current heads, scored by the exact pair kernel on the initial
+    // statistics under the bound-pruned sweep, scheduled by the blocks'
+    // own head scores. Every head pair straddles blocks, so the sweep's
+    // visited count is exactly the boundary-pair count.
+    let h: Vec<f64> = (0..d).map(|i| entropy_fused(seed.cached_column(i))).collect();
+    let corr = seed.corr();
+    let mut heads = vec![0usize; blocks.len()];
+    let mut order = Vec::with_capacity(d);
+    let mut boundary_pairs = 0u64;
+    loop {
+        let live: Vec<usize> =
+            (0..blocks.len()).filter(|&b| heads[b] < block_orders[b].len()).collect();
+        if live.is_empty() {
+            break;
+        }
+        if live.len() == 1 {
+            // one block left: its internal order is already decided
+            let b = live[0];
+            order.extend_from_slice(&block_orders[b][heads[b]..]);
+            break;
+        }
+        let cand: Vec<usize> = live.iter().map(|&b| block_orders[b][heads[b]]).collect();
+        let m = cand.len();
+        let diff = |a: usize, b: usize| {
+            let (ca, cb) = (cand[a], cand[b]);
+            pair_diff_with_rho(
+                seed.cached_column(ca),
+                seed.cached_column(cb),
+                corr[(ca, cb)],
+                h[ca],
+                h[cb],
+            )
+        };
+        let priority: Vec<f64> = live.iter().map(|&b| head_scores[b][heads[b]]).collect();
+        let mut call = SweepCounters::default();
+        let k = pruned_sweep(m, &diff, Some(&priority), n, &mut call);
+        boundary_pairs += call.pairs_visited;
+        counters.merge(&call);
+        let idx: Vec<usize> = (0..m).collect();
+        let scores = scatter_scores(m, &idx, &k);
+        let winner = argmax_active(&scores, &vec![true; m])?;
+        order.push(cand[winner]);
+        heads[live[winner]] += 1;
+    }
+    Ok(PlanOrdering {
+        // block-local scores are not comparable across blocks, so the
+        // approx tier reports no global step scores
+        order,
+        step_scores: Vec::new(),
+        counters,
+        blocks_formed: blocks.len() as u64,
+        boundary_pairs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lingam::{DirectLingam, VectorizedEngine};
+    use crate::sim::{simulate_sem, SemSpec};
+    use crate::util::rng::Pcg64;
+
+    fn corr_from(pairs: &[(usize, usize)], d: usize) -> Mat {
+        let mut c = Mat::eye(d);
+        for &(a, b) in pairs {
+            c[(a, b)] = 0.9;
+            c[(b, a)] = 0.9;
+        }
+        c
+    }
+
+    #[test]
+    fn components_split_and_threshold_is_strict() {
+        let c = corr_from(&[(0, 1), (2, 3)], 4);
+        assert_eq!(partition_columns(&c, 0.05, 0), vec![vec![0, 1], vec![2, 3]]);
+        // |ρ| exactly at the threshold does not link
+        let mut at = Mat::eye(2);
+        at[(0, 1)] = 0.05;
+        at[(1, 0)] = 0.05;
+        assert_eq!(partition_columns(&at, 0.05, 0), vec![vec![0], vec![1]]);
+    }
+
+    #[test]
+    fn fully_connected_is_one_block() {
+        let c = corr_from(&[(0, 1), (1, 2), (2, 3)], 4);
+        assert_eq!(partition_columns(&c, 0.05, 0), vec![vec![0, 1, 2, 3]]);
+    }
+
+    #[test]
+    fn block_cap_merges_smallest_components_and_keeps_every_column() {
+        let blocks = partition_columns(&Mat::eye(5), 0.05, 2);
+        assert_eq!(blocks.len(), 2);
+        let mut all = blocks.concat();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3, 4]);
+        // cap of 1 degenerates to the whole panel
+        assert_eq!(partition_columns(&Mat::eye(5), 0.05, 1), vec![vec![0, 1, 2, 3, 4]]);
+    }
+
+    #[test]
+    fn cross_block_pair_count_is_combinatorial() {
+        // blocks {0,1}, {2,3}: 4 active → C(4,2)=6 pairs, 2 within
+        let labels = vec![0, 0, 1, 1];
+        assert_eq!(cross_block_pairs(&[true; 4], &labels, 2), 4);
+        // deactivate one: C(3,2)=3 pairs, 1 within
+        assert_eq!(cross_block_pairs(&[true, false, true, true], &labels, 2), 2);
+        assert_eq!(cross_block_pairs(&[false; 4], &labels, 2), 0);
+    }
+
+    #[test]
+    fn single_block_plan_is_the_unpartitioned_fit() {
+        let mut rng = Pcg64::seed_from_u64(21);
+        let ds = simulate_sem(&SemSpec::layered(6, 2, 0.5), 1_500, &mut rng);
+        let direct = DirectLingam::new().fit(&ds.data, &VectorizedEngine).unwrap();
+        let pf =
+            DirectLingam::new().fit_plan(&ds.data, &SingleBlockPlan::new(1)).unwrap();
+        assert_eq!(pf.fit.order, direct.order);
+        assert_eq!(pf.fit.step_scores, direct.step_scores);
+        assert_eq!(pf.blocks_formed, 1);
+        assert_eq!(pf.boundary_pairs, 0);
+    }
+
+    #[test]
+    fn workspace_reset_reseeds_and_repartitions() {
+        let mut rng = Pcg64::seed_from_u64(22);
+        let a = simulate_sem(&SemSpec::layered(6, 2, 0.5), 900, &mut rng).data;
+        let b = simulate_sem(&SemSpec::layered(6, 2, 0.5), 900, &mut rng).data;
+        let spec = PartitionSpec { workers: 1, ..PartitionSpec::default() };
+        let mut pooled = PartitionWorkspace::new(&a, &spec).unwrap();
+        let fit_a = DirectLingam::new().fit_session(&a, &mut pooled).unwrap();
+        pooled.reset(&b).unwrap();
+        assert_eq!(pooled.boundary_pairs(), 0, "reset must clear instrumentation");
+        let fit_b = DirectLingam::new().fit_session(&b, &mut pooled).unwrap();
+        let fresh = DirectLingam::new()
+            .fit_session(&b, &mut PartitionWorkspace::new(&b, &spec).unwrap())
+            .unwrap();
+        assert_eq!(fit_b.order, fresh.order, "pooled reset diverged from fresh");
+        assert_eq!(fit_b.step_scores, fresh.step_scores);
+        assert_eq!(fit_a.order.len(), 6);
+    }
+}

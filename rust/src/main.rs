@@ -20,7 +20,7 @@
 
 use alingam::apps::{genes, simbench, stocks};
 use alingam::coordinator::{Engine, EngineChoice};
-use alingam::lingam::{DirectLingam, SweepCounters, VarLingam};
+use alingam::lingam::{DirectLingam, PartitionSpec, PartitionedPlan, SweepCounters, VarLingam};
 use alingam::metrics::graph_metrics;
 use alingam::prelude::*;
 use alingam::runtime::{ArtifactKind, ArtifactRegistry};
@@ -101,10 +101,40 @@ fn discover(args: &Args) -> alingam::util::Result<()> {
     let n = args.usize("samples");
     let seed = args.usize("seed") as u64;
     let choice = EngineChoice::parse(&args.req("engine"))?;
-    let engine = Engine::build(choice)?;
     let mut rng = Pcg64::seed_from_u64(seed);
     let ds = sim::simulate_sem(&sim::SemSpec::layered(d, 2, 0.5), n, &mut rng);
 
+    // `partition[:B]` is a plan, not a session engine: route it through
+    // the plan layer before any Engine::build (which would reject it)
+    if let EngineChoice::Partition { blocks } = choice {
+        let plan = PartitionedPlan::with_blocks(blocks, EngineChoice::per_job_workers(1));
+        let t0 = std::time::Instant::now();
+        let pf = DirectLingam::new().fit_plan(&ds.data, &plan)?;
+        let dt = t0.elapsed().as_secs_f64();
+        if args.flag("json") {
+            let data =
+                protocol::fit_data(&choice.spec(), &pf.fit.order, &pf.fit.adjacency, &pf.counters);
+            println!("{}", protocol::frame_result(None, false, dt * 1e3, &data));
+            return Ok(());
+        }
+        let m = graph_metrics(&ds.adjacency, &pf.fit.adjacency, 0.05);
+        println!("engine       : partition (exact merge)");
+        println!("order        : {:?}", pf.fit.order);
+        println!(
+            "true order ok: {}",
+            alingam::graph::order_consistent(&ds.adjacency, &pf.fit.order)
+        );
+        println!("F1 / recall  : {:.3} / {:.3}   SHD {}", m.f1, m.recall, m.shd);
+        println!("blocks       : {}   boundary pairs {}", pf.blocks_formed, pf.boundary_pairs);
+        println!(
+            "wall         : {}   (ordering {:.1}%)",
+            secs(dt),
+            100.0 * pf.fit.profile.fraction("ordering")
+        );
+        return Ok(());
+    }
+
+    let engine = Engine::build(choice)?;
     let t0 = std::time::Instant::now();
     let fit = DirectLingam::new().fit(&ds.data, engine.as_ordering())?;
     let dt = t0.elapsed().as_secs_f64();
@@ -264,11 +294,10 @@ fn agree(args: &Args) -> alingam::util::Result<()> {
 }
 
 fn bootstrap_cmd(args: &Args) -> alingam::util::Result<()> {
-    use alingam::coordinator::{bootstrap_direct, BootstrapOpts};
+    use alingam::coordinator::{bootstrap_direct, bootstrap_partition, BootstrapOpts};
     let d = args.usize("dims");
     let n = args.usize("samples");
     let choice = EngineChoice::parse(&args.req("engine"))?.resolve_workers(args.usize("workers"));
-    let engine = Engine::build(choice)?;
     let mut rng = Pcg64::seed_from_u64(args.usize("seed") as u64);
     let ds = sim::simulate_sem(&sim::SemSpec::layered(d, 2, 0.5), n, &mut rng);
     let opts = BootstrapOpts {
@@ -277,7 +306,19 @@ fn bootstrap_cmd(args: &Args) -> alingam::util::Result<()> {
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
-    let result = bootstrap_direct(&ds.data, engine.as_ordering(), &opts)?;
+    let result = if let EngineChoice::Partition { blocks } = choice {
+        // plan-layer route: pooled PartitionWorkspaces, sized like any
+        // other per-job pool inside this sweep
+        let spec = PartitionSpec {
+            max_blocks: blocks,
+            workers: EngineChoice::per_job_workers(opts.workers),
+            ..PartitionSpec::default()
+        };
+        bootstrap_partition(&ds.data, &spec, &opts)?
+    } else {
+        let engine = Engine::build(choice)?;
+        bootstrap_direct(&ds.data, engine.as_ordering(), &opts)?
+    };
     let dt = t0.elapsed().as_secs_f64();
     if args.flag("json") {
         let data = protocol::bootstrap_data(&choice.spec(), &result, 0.5);

@@ -35,7 +35,9 @@
 //!   workspaces keyed by shape + engine config, honoring per-request
 //!   `exact`/`pruned` strategy and worker counts, streaming per-step
 //!   ordering and per-resample bootstrap progress, checking cancel flags
-//!   at step boundaries.
+//!   at step boundaries. `partition[:B]` requests are routed through the
+//!   plan layer ([`crate::lingam::partition`]) with blocks-formed /
+//!   boundary-pair counters booked into [`ServeMetrics`].
 //! - [`cache`] — the panel-hash LRU: 128-bit FNV over panel bits +
 //!   canonical engine spec + options, hit/miss/eviction counters.
 //!
@@ -119,6 +121,10 @@ pub struct ServeMetrics {
     pub(crate) sweep_pairs_total: AtomicU64,
     pub(crate) sweep_pairs_visited: AtomicU64,
     pub(crate) sweep_pairs_skipped: AtomicU64,
+    /// Column blocks formed by partitioned (`partition[:B]`) fits.
+    pub(crate) blocks_formed: AtomicU64,
+    /// Cross-block boundary pairs partitioned fits visited.
+    pub(crate) boundary_pairs: AtomicU64,
 }
 
 impl ServeMetrics {
@@ -126,6 +132,11 @@ impl ServeMetrics {
         self.sweep_pairs_total.fetch_add(c.pairs_total, Ordering::Relaxed);
         self.sweep_pairs_visited.fetch_add(c.pairs_visited, Ordering::Relaxed);
         self.sweep_pairs_skipped.fetch_add(c.pairs_skipped, Ordering::Relaxed);
+    }
+
+    pub(crate) fn add_partition(&self, blocks: u64, boundary: u64) {
+        self.blocks_formed.fetch_add(blocks, Ordering::Relaxed);
+        self.boundary_pairs.fetch_add(boundary, Ordering::Relaxed);
     }
 }
 
@@ -484,10 +495,15 @@ fn metrics_frame(id: Option<&str>, shared: &Shared) -> String {
         m.sweep_pairs_visited.load(Ordering::Relaxed),
         m.sweep_pairs_skipped.load(Ordering::Relaxed),
     );
+    let partition = format!(
+        "{{\"blocks_formed\":{},\"boundary_pairs\":{}}}",
+        m.blocks_formed.load(Ordering::Relaxed),
+        m.boundary_pairs.load(Ordering::Relaxed),
+    );
     let body = format!(
         "\"event\":\"metrics\",\"workers\":{},\"uptime_ms\":{},\"queue_depth\":{},\
          \"in_flight\":{},\"busy_ms_total\":{},\"jobs\":{jobs},\"cache\":{cache},\
-         \"sweep\":{sweep}",
+         \"sweep\":{sweep},\"partition\":{partition}",
         shared.worker_count,
         shared.started.elapsed().as_millis(),
         shared.queue.depth(),

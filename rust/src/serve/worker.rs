@@ -14,6 +14,10 @@
 //! stateless shim and the device-resident XLA session — run one session
 //! per job instead; the XLA engine itself (device thread + compile
 //! cache) is shared server-wide and built lazily on first use.
+//! `partition[:B]` requests are not session-backed at all: they run
+//! through the plan layer ([`DirectLingam::fit_plan`] with a
+//! [`PartitionedPlan`]), booking blocks-formed and boundary-pair
+//! counters into the server metrics alongside the sweep counters.
 //!
 //! Every job honors its request's `exact`/`pruned` strategy and worker
 //! count through [`EngineChoice`] (auto counts are divided across the
@@ -25,12 +29,14 @@
 use super::cache::Fnv128;
 use super::protocol::{self, JobKind, JobSpec, PanelSource};
 use super::Shared;
-use crate::coordinator::{bootstrap_direct_observed, BootstrapOpts, EngineChoice};
+use crate::coordinator::{
+    bootstrap_direct_observed, bootstrap_partition_observed, BootstrapOpts, EngineChoice,
+};
 use crate::linalg::Mat;
 use crate::lingam::direct::validate_panel;
 use crate::lingam::{
-    DirectLingam, IncrementalSession, LingamFit, OrderingEngine, OrderingSession,
-    SequentialEngine, SweepStrategy, VarLingam,
+    DirectLingam, IncrementalSession, LingamFit, OrderingEngine, OrderingSession, PartitionSpec,
+    PartitionedPlan, SequentialEngine, SweepStrategy, VarLingam,
 };
 use crate::util::{Error, Result};
 use std::collections::HashMap;
@@ -129,7 +135,15 @@ fn execute(shared: &Shared, pool: &mut SessionPool, job: &Job) -> Result<(Arc<St
         return Ok((hit, true));
     }
     let payload = match &job.spec.kind {
-        JobKind::Fit => run_fit(shared, pool, job, panel, choice)?,
+        // partition is an ordering plan, not a session engine: dispatch
+        // it before the session-backed paths (`run_fit`'s non-pooled arm
+        // falls through to XLA, and `build_engine` rejects partition)
+        JobKind::Fit => match choice {
+            EngineChoice::Partition { blocks } => {
+                run_partition_fit(shared, job, panel, choice, blocks)?
+            }
+            _ => run_fit(shared, pool, job, panel, choice)?,
+        },
         JobKind::Bootstrap { resamples, seed, threshold, workers } => {
             let opts = BootstrapOpts {
                 resamples: *resamples,
@@ -137,7 +151,12 @@ fn execute(shared: &Shared, pool: &mut SessionPool, job: &Job) -> Result<(Arc<St
                 seed: *seed,
                 ..Default::default()
             };
-            run_bootstrap(shared, job, panel, choice, &opts, *threshold)?
+            match choice {
+                EngineChoice::Partition { blocks } => {
+                    run_partition_bootstrap(shared, job, panel, blocks, &opts, *threshold)?
+                }
+                _ => run_bootstrap(shared, job, panel, choice, &opts, *threshold)?,
+            }
         }
         JobKind::Var { lags } => run_var(shared, job, panel, choice, *lags)?,
     };
@@ -184,7 +203,7 @@ fn incremental_params(choice: EngineChoice) -> Option<(usize, SweepStrategy)> {
         EngineChoice::Vectorized => Some((1, SweepStrategy::Exact)),
         EngineChoice::Parallel { workers } => Some((workers.max(1), SweepStrategy::Exact)),
         EngineChoice::Pruned { workers } => Some((workers.max(1), SweepStrategy::Pruned)),
-        EngineChoice::Sequential | EngineChoice::Xla => None,
+        EngineChoice::Sequential | EngineChoice::Partition { .. } | EngineChoice::Xla => None,
     }
 }
 
@@ -259,6 +278,61 @@ fn drive_fit(session: &mut dyn OrderingSession, panel: &Mat, job: &Job) -> Resul
         (job.sink)(&protocol::frame_progress(&job.spec.id, "ordering", step, total));
         Ok(())
     })
+}
+
+/// Partitioned fit: route through [`DirectLingam::fit_plan`] with a
+/// [`PartitionedPlan`] (exact merge — the serve path never trades
+/// accuracy silently). The plan owns its block decomposition and merge,
+/// so the parked workspace pool does not apply; the plan runs
+/// monolithically, so progress is coarse (one `ordering` stage frame on
+/// each side) and cancellation is checked up front only.
+fn run_partition_fit(
+    shared: &Shared,
+    job: &Job,
+    panel: &Mat,
+    choice: EngineChoice,
+    blocks: usize,
+) -> Result<String> {
+    if job.cancel.load(Ordering::Relaxed) {
+        return Err(Error::Canceled("partition fit canceled before start".into()));
+    }
+    (job.sink)(&protocol::frame_progress(&job.spec.id, "ordering", 0, 1));
+    let plan =
+        PartitionedPlan::with_blocks(blocks, EngineChoice::per_job_workers(shared.worker_count));
+    let pf = DirectLingam::new().fit_plan(panel, &plan)?;
+    (job.sink)(&protocol::frame_progress(&job.spec.id, "ordering", 1, 1));
+    shared.metrics.add_sweep(&pf.counters);
+    shared.metrics.add_partition(pf.blocks_formed, pf.boundary_pairs);
+    Ok(protocol::fit_data(&choice.spec(), &pf.fit.order, &pf.fit.adjacency, &pf.counters))
+}
+
+/// Partitioned bootstrap: same resample/pool/aggregate loop as
+/// [`run_bootstrap`], but the pooled workspaces are
+/// [`PartitionWorkspace`](crate::lingam::PartitionWorkspace)s
+/// (`build_engine` rejects partition, so the engine-backed path cannot
+/// serve it).
+fn run_partition_bootstrap(
+    shared: &Shared,
+    job: &Job,
+    panel: &Mat,
+    blocks: usize,
+    opts: &BootstrapOpts,
+    threshold: f64,
+) -> Result<String> {
+    let spec = PartitionSpec {
+        max_blocks: blocks,
+        workers: EngineChoice::per_job_workers(shared.worker_count),
+        ..PartitionSpec::default()
+    };
+    let (id, sink) = (&job.spec.id, &job.sink);
+    let result = bootstrap_partition_observed(
+        panel,
+        &spec,
+        opts,
+        Some(&*job.cancel),
+        |done, total| sink(&protocol::frame_progress(id, "bootstrap", done, total)),
+    )?;
+    Ok(protocol::bootstrap_data(&EngineChoice::Partition { blocks }.spec(), &result, threshold))
 }
 
 fn run_bootstrap(
@@ -352,6 +426,10 @@ mod tests {
             Some((2, SweepStrategy::Pruned))
         );
         assert_eq!(incremental_params(EngineChoice::Sequential), None);
+        // partition is dispatched to the plan layer before run_fit ever
+        // sees it; routing it to a pooled session here would be a bug
+        assert_eq!(incremental_params(EngineChoice::Partition { blocks: 0 }), None);
+        assert_eq!(incremental_params(EngineChoice::Partition { blocks: 4 }), None);
         assert_eq!(incremental_params(EngineChoice::Xla), None);
     }
 }

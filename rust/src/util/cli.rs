@@ -144,7 +144,7 @@ pub fn opt(name: &'static str, help: &'static str, default: Option<&str>) -> Opt
 pub fn engine_opt() -> OptSpec {
     opt(
         "engine",
-        "ordering engine: sequential|vectorized|parallel[:N]|pruned[:N]|xla",
+        "ordering engine: sequential|vectorized|parallel[:N]|pruned[:N]|partition[:B]|xla",
         Some("parallel"),
     )
 }

@@ -1,0 +1,244 @@
+//! Partition-exactness suite: the exact merge tier of the partitioned
+//! plan (`lingam::partition`) must reproduce the unpartitioned
+//! `DirectLingam::fit` — identical order, identical step scores
+//! (bitwise), identical adjacency — on random panels, block-diagonal
+//! panels, and degenerate panels, while the partition instrumentation
+//! (blocks formed, boundary pairs) reports the work a lossy
+//! decomposition would have skipped. The approx tier is held to the
+//! honest-but-weaker contract the module essay states: a valid
+//! permutation, truth-consistent recovery on separable panels, and a
+//! boundary-pair count from its tournament merge.
+//!
+//! Why the exact tier can be pinned bitwise: it drives one global
+//! session over the whole panel — the same session type, same serial
+//! worker configuration, same step loop as the reference fit — so there
+//! is no float reassociation anywhere on the path (the same argument
+//! `pruning_exactness.rs` leans on, here by construction rather than by
+//! bound).
+
+use alingam::graph::chain_dag;
+use alingam::lingam::{
+    DirectLingam, MergeMode, PartitionSpec, PartitionedPlan, VectorizedEngine,
+};
+use alingam::linalg::Mat;
+use alingam::metrics::{adjacency_max_diff, graph_metrics};
+use alingam::sim::{sample_from_dag, simulate_sem, Noise, SemSpec};
+use alingam::util::rng::Pcg64;
+
+fn layered_panel(n: usize, d: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    simulate_sem(&SemSpec::layered(d, 2, 0.5), n, &mut rng).data
+}
+
+/// Two independent chain SEMs side by side: columns `0..d1` form one
+/// chain, `d1..d1+d2` the other, with no true edges across the halves —
+/// the canonical separable panel. Returns the panel and the
+/// block-diagonal ground-truth adjacency.
+fn block_diagonal_panel(n: usize, d1: usize, d2: usize, seed: u64) -> (Mat, Mat) {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let dag_a = chain_dag(d1, 1.0);
+    let dag_b = chain_dag(d2, 1.0);
+    let xa = sample_from_dag(&dag_a, Noise::Uniform01, n, &mut rng);
+    let xb = sample_from_dag(&dag_b, Noise::Uniform01, n, &mut rng);
+    let d = d1 + d2;
+    let mut x = Mat::zeros(n, d);
+    for r in 0..n {
+        for c in 0..d1 {
+            x[(r, c)] = xa[(r, c)];
+        }
+        for c in 0..d2 {
+            x[(r, d1 + c)] = xb[(r, c)];
+        }
+    }
+    let mut truth = Mat::zeros(d, d);
+    for i in 0..d1 {
+        for j in 0..d1 {
+            truth[(i, j)] = dag_a.adj[(i, j)];
+        }
+    }
+    for i in 0..d2 {
+        for j in 0..d2 {
+            truth[(d1 + i, d1 + j)] = dag_b.adj[(i, j)];
+        }
+    }
+    (x, truth)
+}
+
+/// Serial exact-merge spec: workers=1 matches the serial reference
+/// session's float accumulation order, making bitwise pins legitimate.
+fn exact_spec() -> PartitionSpec {
+    PartitionSpec { workers: 1, ..PartitionSpec::default() }
+}
+
+/// The acceptance criterion: exact merge provably agrees with the
+/// unpartitioned fit — order, adjacency, and per-step scores identical.
+fn assert_exact_merge_matches_direct(x: &Mat, spec: &PartitionSpec, label: &str) {
+    let direct = DirectLingam::new().fit(x, &VectorizedEngine).unwrap();
+    let pf = DirectLingam::new().fit_plan(x, &PartitionedPlan::new(*spec)).unwrap();
+    assert_eq!(pf.fit.order, direct.order, "{label}: exact merge changed the order");
+    assert_eq!(
+        pf.fit.step_scores, direct.step_scores,
+        "{label}: step scores not bitwise-identical"
+    );
+    assert_eq!(
+        adjacency_max_diff(&pf.fit.adjacency, &direct.adjacency),
+        0.0,
+        "{label}: identical orders must give identical regressions"
+    );
+}
+
+#[test]
+fn exact_merge_is_the_unpartitioned_fit_on_layered_panels() {
+    for seed in [41, 42, 43] {
+        let x = layered_panel(1_500, 10, seed);
+        assert_exact_merge_matches_direct(&x, &exact_spec(), "layered");
+    }
+}
+
+#[test]
+fn exact_merge_matches_on_block_diagonal_and_counts_boundary_pairs() {
+    // threshold 0.2: within each chain adjacent |ρ| ≈ 0.7 keeps the
+    // block connected, while cross-half sample correlations are
+    // O(n^{-1/2}) ≈ 0.016 at n=4000 — the halves reliably separate
+    let (x, _truth) = block_diagonal_panel(4_000, 4, 4, 44);
+    let spec = PartitionSpec { threshold: 0.2, ..exact_spec() };
+    assert_exact_merge_matches_direct(&x, &spec, "block-diagonal");
+    let pf = DirectLingam::new().fit_plan(&x, &PartitionedPlan::new(spec)).unwrap();
+    assert_eq!(pf.blocks_formed, 2, "two independent chains must form two blocks");
+    assert!(
+        pf.boundary_pairs > 0,
+        "exact tier must report the cross-block work it did not skip"
+    );
+    // first step: all 8 variables active, 4 per block → 16 of the 28
+    // pairs straddle; later steps only shrink that, so the total is
+    // bounded by step count × 16
+    assert!(pf.boundary_pairs <= 7 * 16);
+    // the whole-panel sweep visits everything: counters must say so
+    assert_eq!(pf.counters.pairs_visited, pf.counters.pairs_total);
+}
+
+#[test]
+fn exact_merge_survives_degenerate_panels_like_the_direct_fit() {
+    // duplicated column: fit and fit_plan must agree on usability, and
+    // on the fit itself when both succeed
+    let mut dup = layered_panel(600, 6, 45);
+    let col = dup.col(1);
+    dup.set_col(4, &col);
+    let direct = DirectLingam::new().fit(&dup, &VectorizedEngine);
+    let planned = DirectLingam::new().fit_plan(&dup, &PartitionedPlan::new(exact_spec()));
+    match (direct, planned) {
+        (Ok(d), Ok(p)) => {
+            assert_eq!(p.fit.order, d.order, "duplicated column: orders diverged");
+            assert_eq!(adjacency_max_diff(&p.fit.adjacency, &d.adjacency), 0.0);
+        }
+        (Err(_), Err(_)) => {} // both reject the panel: fine
+        (d, p) => panic!(
+            "duplicated column: fit and fit_plan disagreed on usability: {:?} vs {:?}",
+            d.map(|f| f.order),
+            p.map(|f| f.fit.order)
+        ),
+    }
+
+    // a connected panel is one block, zero boundary pairs — and still
+    // the identical fit
+    let mut rng = Pcg64::seed_from_u64(46);
+    let chain = sample_from_dag(&chain_dag(6, 1.0), Noise::Uniform01, 2_000, &mut rng);
+    let spec = PartitionSpec { threshold: 0.2, ..exact_spec() };
+    assert_exact_merge_matches_direct(&chain, &spec, "connected chain");
+    let pf = DirectLingam::new().fit_plan(&chain, &PartitionedPlan::new(spec)).unwrap();
+    assert_eq!(pf.blocks_formed, 1, "a connected correlation graph is one block");
+    assert_eq!(pf.boundary_pairs, 0, "one block has no boundary");
+}
+
+#[test]
+fn partition_rejects_exactly_what_the_direct_fit_rejects() {
+    // the hoisted-validation satellite: fit_plan runs the same panel
+    // validation as fit, before the plan ever sees the data — identical
+    // error strings, not merely identical error-ness
+    let nan = {
+        let mut m = layered_panel(300, 5, 47);
+        m[(7, 2)] = f64::NAN;
+        m
+    };
+    let constant = {
+        let mut m = layered_panel(300, 5, 48);
+        let c = vec![0.1; 300];
+        m.set_col(2, &c);
+        m
+    };
+    let single_col = Mat::from_fn(100, 1, |r, _| r as f64);
+    let short = Mat::from_fn(4, 3, |r, c| (r * 3 + c) as f64);
+    for (label, x) in
+        [("NaN entry", nan), ("constant column", constant), ("d=1", single_col), ("n<8", short)]
+    {
+        let direct = DirectLingam::new().fit(&x, &VectorizedEngine);
+        let planned = DirectLingam::new().fit_plan(&x, &PartitionedPlan::new(exact_spec()));
+        let de = direct.err().unwrap_or_else(|| panic!("{label}: direct fit accepted the panel"));
+        let pe = planned.err().unwrap_or_else(|| panic!("{label}: fit_plan accepted the panel"));
+        assert_eq!(de.to_string(), pe.to_string(), "{label}: rejection messages diverged");
+    }
+}
+
+#[test]
+fn approx_merge_recovers_block_diagonal_structure() {
+    let (x, truth) = block_diagonal_panel(4_000, 4, 4, 49);
+    let spec = PartitionSpec {
+        threshold: 0.2,
+        merge: MergeMode::Approx,
+        workers: 1,
+        ..PartitionSpec::default()
+    };
+    let pf = DirectLingam::new().fit_plan(&x, &PartitionedPlan::new(spec)).unwrap();
+    let mut sorted = pf.fit.order.clone();
+    sorted.sort_unstable();
+    assert_eq!(sorted, (0..8).collect::<Vec<_>>(), "approx order must be a permutation");
+    assert_eq!(pf.blocks_formed, 2);
+    assert!(pf.boundary_pairs > 0, "tournament merge must visit boundary pairs");
+    assert!(
+        pf.fit.step_scores.is_empty(),
+        "block-local scores are not globally comparable; approx must not report them"
+    );
+    // on a truly separable panel the blockwise fit is two clean chain
+    // fits: the merged order must be consistent with the truth and the
+    // adjacency must recover the chains
+    assert!(
+        alingam::graph::order_consistent(&truth, &pf.fit.order),
+        "approx order {:?} inconsistent with block-diagonal truth",
+        pf.fit.order
+    );
+    let m = graph_metrics(&truth, &pf.fit.adjacency, 0.1);
+    assert!(m.f1 >= 0.75, "approx F1 too low on a separable panel: {m:?}");
+}
+
+#[test]
+fn approx_merge_on_one_block_is_the_blockwise_serial_fit() {
+    // connected panel → one block → the approx tier is a single serial
+    // whole-panel session with no tournament at all: exactly the direct
+    // fit, with zero boundary pairs
+    let mut rng = Pcg64::seed_from_u64(50);
+    let x = sample_from_dag(&chain_dag(6, 1.0), Noise::Uniform01, 2_000, &mut rng);
+    let spec = PartitionSpec {
+        threshold: 0.2,
+        merge: MergeMode::Approx,
+        workers: 1,
+        ..PartitionSpec::default()
+    };
+    let direct = DirectLingam::new().fit(&x, &VectorizedEngine).unwrap();
+    let pf = DirectLingam::new().fit_plan(&x, &PartitionedPlan::new(spec)).unwrap();
+    assert_eq!(pf.fit.order, direct.order, "single-block approx diverged from direct");
+    assert_eq!(adjacency_max_diff(&pf.fit.adjacency, &direct.adjacency), 0.0);
+    assert_eq!(pf.blocks_formed, 1);
+    assert_eq!(pf.boundary_pairs, 0);
+}
+
+#[test]
+fn block_cap_still_merges_exactly() {
+    // partition:1 degenerates to the whole panel — the cap must not
+    // change the exact tier's output, only its instrumentation
+    let (x, _truth) = block_diagonal_panel(2_000, 3, 3, 51);
+    let spec = PartitionSpec { max_blocks: 1, threshold: 0.2, ..exact_spec() };
+    assert_exact_merge_matches_direct(&x, &spec, "capped");
+    let pf = DirectLingam::new().fit_plan(&x, &PartitionedPlan::new(spec)).unwrap();
+    assert_eq!(pf.blocks_formed, 1, "cap of 1 must merge everything");
+    assert_eq!(pf.boundary_pairs, 0);
+}

@@ -382,6 +382,53 @@ fn malformed_frames_error_without_killing_the_connection() {
     server.shutdown();
 }
 
+/// Partition-engine requests route through the plan layer server-side:
+/// the exact merge tier must return the same fit as a direct fit of the
+/// same panel, and the blocks-formed / boundary-pair instrumentation
+/// must surface in the metrics frame.
+#[test]
+fn partition_engine_requests_match_direct_and_report_block_metrics() {
+    let server = start(1, 4, 0);
+    // two independent chains side by side: at n=12_000 the cross-half
+    // sample correlations (O(n^{-1/2}) ≈ 0.009) sit far below the 0.05
+    // partition threshold, so the halves reliably form two blocks
+    let half_a = chain_panel(12_000, 4, 23);
+    let half_b = chain_panel(12_000, 4, 24);
+    let panel = Mat::from_fn(12_000, 8, |r, c| {
+        if c < 4 {
+            half_a[(r, c)]
+        } else {
+            half_b[(r, c - 4)]
+        }
+    });
+    let direct = DirectLingam::new().fit(&panel, &VectorizedEngine).unwrap();
+    let mut c = Client::connect(server.local_addr());
+    c.send(&protocol::fit_request("pt1", "partition", &panel));
+    let (ev, frame) = c.recv_terminal("pt1");
+    assert_eq!(ev, "result", "partition fit failed: {}", frame.render());
+    assert_eq!(order_of(&frame), direct.order, "partitioned serve order diverged from direct");
+    let engine = frame.get("data").and_then(|d| d.get("engine")).and_then(Json::as_str);
+    assert_eq!(engine, Some("partition:0"), "result must echo the canonical engine spec");
+    let adj = frame.get("data").and_then(|d| d.get("adjacency")).expect("adjacency");
+    let adj = protocol::parse_mat(adj).unwrap();
+    assert!(
+        alingam::metrics::adjacency_max_diff(&adj, &direct.adjacency) < 1e-12,
+        "partitioned serve adjacency must match the direct fit"
+    );
+    c.send(&protocol::control_request("metrics"));
+    let m = c.recv_event("metrics");
+    let partition = m.get("partition").expect("metrics frame must carry partition counters");
+    assert_eq!(
+        partition.get("blocks_formed").and_then(Json::as_u64),
+        Some(2),
+        "two independent chains must book two blocks: {}",
+        m.render()
+    );
+    let boundary = partition.get("boundary_pairs").and_then(Json::as_u64).unwrap();
+    assert!(boundary > 0, "exact merge must book the boundary pairs it visited");
+    server.shutdown();
+}
+
 /// Pruned-engine requests run the bound-pruned sweep server-side and
 /// report its counters, while matching the exact engine's order.
 #[test]
