@@ -14,9 +14,17 @@ Emits one artifact per (computation, shape-bucket):
     artifacts/session_update_n{N}_d{D}.hlo.txt
     artifacts/var_fit_t{T}_d{D}.hlo.txt
 
+plus the batched session kinds (``jax.vmap`` over a leading batch
+axis, for the serve layer's fusion window):
+
+    artifacts/session_init_batch_n{N}_d{D}_b{B}.hlo.txt
+    artifacts/session_scores_batch_n{N}_d{D}_b{B}.hlo.txt
+    artifacts/session_update_batch_n{N}_d{D}_b{B}.hlo.txt
+
 plus ``artifacts/manifest.txt`` (one line per artifact:
-``kind n d path``) that the Rust ArtifactRegistry reads to pick the
-smallest bucket covering a request.
+``kind n d path``, with a fifth ``b`` field before the path for the
+batched kinds: ``kind n d b path``) that the Rust ArtifactRegistry
+reads to pick the smallest bucket covering a request.
 
 The stateless kinds are lowered with ``return_tuple=True`` (the loader
 downloads and decomposes the tuple on the host). The ``session_*``
@@ -58,6 +66,14 @@ ORDER_BUCKETS_FULL = ORDER_BUCKETS + [
 VAR_BUCKETS = [(512, 16), (2048, 32), (4096, 64)]
 VAR_BUCKETS_FULL = VAR_BUCKETS + [(4096, 128)]
 
+# Batched session buckets: (n, d) panels fused b at a time. A small,
+# deliberate set — every extra (n, d, b) cell is three more HLO
+# artifacts, and the runtime rounds a fusion group up to the nearest
+# covering (n, d, b) anyway (short groups pad with copies of panel 0).
+BATCH_BUCKETS = [(256, 8), (1024, 16)]
+BATCH_BUCKETS_FULL = BATCH_BUCKETS + [(4096, 32)]
+BATCH_SIZES = [4, 8]
+
 DTYPE = jnp.float32
 
 
@@ -76,11 +92,13 @@ def to_hlo_text(fn, *specs, return_tuple=True):
     return comp.as_hlo_text()
 
 
-def emit(out_dir, name, text, manifest, kind, n, d):
+def emit(out_dir, name, text, manifest, kind, n, d, b=None):
     path = os.path.join(out_dir, name)
     with open(path, "w") as f:
         f.write(text)
-    manifest.append(f"{kind} {n} {d} {name}")
+    # batched kinds carry the batch size as a fifth manifest field
+    fields = f"{kind} {n} {d} {name}" if b is None else f"{kind} {n} {d} {b} {name}"
+    manifest.append(fields)
     print(f"  wrote {name}  ({len(text) / 1024:.0f} KiB)")
 
 
@@ -91,7 +109,7 @@ def main():
     ap.add_argument(
         "--only",
         default=None,
-        help="emit a single kind (order_scores|order_step|session|var_fit)",
+        help="emit a single kind (order_scores|order_step|session|session_batch|var_fit)",
     )
     args = ap.parse_args()
     os.makedirs(args.out_dir, exist_ok=True)
@@ -142,6 +160,32 @@ def main():
                     n,
                     d,
                 )
+
+    batch_buckets = BATCH_BUCKETS_FULL if args.full else BATCH_BUCKETS
+    for n, d in batch_buckets:
+        if args.only in (None, "session_batch"):
+            for b in BATCH_SIZES:
+                xb = jax.ShapeDtypeStruct((b, n, d), DTYPE)
+                rmb = jax.ShapeDtypeStruct((b, n), DTYPE)
+                cmb = jax.ShapeDtypeStruct((b, d), DTYPE)
+                state = jax.ShapeDtypeStruct(
+                    (b,) + session_kernels.state_shape(n, d), DTYPE
+                )
+                for kind, fn, specs in [
+                    ("session_init_batch", model.session_init_batch, (xb, rmb, cmb)),
+                    ("session_scores_batch", model.session_scores_batch, (state,)),
+                    ("session_update_batch", model.session_update_batch, (state, cmb)),
+                ]:
+                    emit(
+                        args.out_dir,
+                        f"{kind}_n{n}_d{d}_b{b}.hlo.txt",
+                        to_hlo_text(fn, *specs, return_tuple=False),
+                        manifest,
+                        kind,
+                        n,
+                        d,
+                        b=b,
+                    )
 
     for t, d in var_buckets:
         if args.only in (None, "var_fit"):

@@ -190,6 +190,32 @@ def session_update(state, m_onehot):
     return pack_state(xs2, rho2, keep, n_valid)
 
 
+def session_init_batch(x, row_mask, col_mask):
+    """Batched ``session_init``: B same-shape panels in one upload.
+
+    x: [B, N, D]; row_mask: [B, N]; col_mask: [B, D]. Returns
+    state [B, N + D + 2, D]. ``jax.vmap`` lowers the per-panel
+    computation unchanged (the Pallas sweeps gain a leading batch
+    axis), so each slice is bitwise the solo artifact's output —
+    ``python/tests/test_session.py`` pins that parity. The serve
+    layer's fusion window drives these through ``XlaBatchSession``:
+    one upload and one score fetch per lock step for the whole group.
+    """
+    return jax.vmap(session_init)(x, row_mask, col_mask)
+
+
+def session_scores_batch(state):
+    """Batched ``session_scores``: [B, N + D + 2, D] -> [B, D]."""
+    return jax.vmap(session_scores)(state)
+
+
+def session_update_batch(state, m_onehot):
+    """Batched ``session_update``; a per-panel all-zero one-hot is a
+    safe no-op (keep == col_mask, cache and rho untouched), which is how
+    finished or dropped lanes ride along in a live batch."""
+    return jax.vmap(session_update)(state, m_onehot)
+
+
 def session_step_host(state):
     """Host-mirror of one full device-session step (tests + the Rust
     host-mirror fallback's reference): scores -> NaN-safe argmax ->

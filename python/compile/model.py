@@ -32,6 +32,20 @@ PJRT (python never runs on the request path):
     **non-tuple root** (single packed array out) so the Rust runtime
     can hold the output as one resident PJRT buffer.
 
+- ``session_init_batch(x, row_mask, col_mask) -> state``
+  ``session_scores_batch(state) -> k_lists``
+  ``session_update_batch(state, m_onehots) -> state``
+    ``jax.vmap`` of the session kinds over a leading batch axis: B
+    same-shape panels uploaded in one ``session_init_batch`` call and
+    stepped in lock step — one [B, D] score fetch and one [B, D]
+    one-hot upload per step for the whole group, with per-panel argmax
+    still on the host. Each batch slice is bitwise the solo artifact's
+    output (pinned by python/tests/test_session.py), which is what lets
+    the serve layer's fusion window route same-shape jobs through one
+    ``XlaBatchSession`` without changing any result. Artifact names:
+    ``session_{init,scores,update}_batch_n{N}_d{D}_b{B}.hlo.txt``
+    (manifest lines grow a 5th field for B).
+
 - ``var_fit(series, row_mask) -> (m1, resid)``
     Masked VAR(1) least squares for VarLiNGAM (normal equations; the
     SPD inverse is a Newton-Schulz iteration so the artifact stays free
@@ -44,8 +58,11 @@ import jax.numpy as jnp
 from compile.kernels import causal_order, residualize, ref
 from compile.kernels.session import (  # noqa: F401  (AOT entry points)
     session_init,
+    session_init_batch,
     session_scores,
+    session_scores_batch,
     session_update,
+    session_update_batch,
 )
 
 

@@ -14,6 +14,17 @@ REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)
 ART = os.path.join(REPO, "artifacts")
 
 
+def parse_row(fields):
+    """A manifest row: ``kind n d name`` or ``kind n d b name`` for the
+    batched kinds (the same 4-or-5-field grammar the Rust registry
+    parses). Returns (kind, n, d, b_or_None, name)."""
+    if len(fields) == 4:
+        kind, n, d, name = fields
+        return kind, int(n), int(d), None, name
+    kind, n, d, b, name = fields
+    return kind, int(n), int(d), int(b), name
+
+
 @pytest.fixture(scope="module")
 def artifacts():
     manifest = os.path.join(ART, "manifest.txt")
@@ -24,21 +35,26 @@ def artifacts():
             check=True,
         )
     with open(manifest) as f:
-        lines = [l.split() for l in f.read().splitlines() if l.strip()]
+        lines = [parse_row(l.split()) for l in f.read().splitlines() if l.strip()]
     return lines
 
 
 TUPLE_KINDS = {"order_scores", "order_step", "var_fit"}
 SESSION_KINDS = {"session_init", "session_scores", "session_update"}
+BATCH_KINDS = {"session_init_batch", "session_scores_batch", "session_update_batch"}
 
 
 def test_manifest_entries_exist_and_unique(artifacts):
     assert len(artifacts) >= 10
-    names = [row[3] for row in artifacts]
+    names = [row[4] for row in artifacts]
     assert len(set(names)) == len(names), "duplicate artifact names"
-    for kind, n, d, name in artifacts:
-        assert kind in TUPLE_KINDS | SESSION_KINDS
-        assert int(n) > 0 and int(d) > 0
+    for kind, n, d, b, name in artifacts:
+        assert kind in TUPLE_KINDS | SESSION_KINDS | BATCH_KINDS
+        assert n > 0 and d > 0
+        # the fifth field is present exactly for the batched kinds
+        assert (b is not None) == (kind in BATCH_KINDS), f"{name}: field count"
+        if b is not None:
+            assert b > 1
         path = os.path.join(ART, name)
         assert os.path.exists(path), f"missing {name}"
         assert os.path.getsize(path) > 1_000, f"{name} suspiciously small"
@@ -47,14 +63,28 @@ def test_manifest_entries_exist_and_unique(artifacts):
 def test_session_kinds_cover_every_order_bucket(artifacts):
     """The device-resident session needs all three kinds at one shape;
     the Rust XlaSession refuses a bucket where any of them is missing."""
-    order = {(n, d) for kind, n, d, _ in artifacts if kind == "order_step"}
+    order = {(n, d) for kind, n, d, _, _ in artifacts if kind == "order_step"}
     for kind in SESSION_KINDS:
-        have = {(n, d) for k, n, d, _ in artifacts if k == kind}
+        have = {(n, d) for k, n, d, _, _ in artifacts if k == kind}
         assert have == order, f"{kind} buckets {have} != order buckets {order}"
 
 
+def test_batch_kinds_cover_the_same_cells(artifacts):
+    """All three batched kinds must exist at every (n, d, b) cell — the
+    Rust XlaBatchSession needs the full triple, same as the solo
+    session — and each batch bucket's (n, d) must also exist solo (the
+    singleton fallback path)."""
+    cells = {(n, d, b) for k, n, d, b, _ in artifacts if k == "session_init_batch"}
+    assert cells, "no batched session buckets emitted"
+    for kind in BATCH_KINDS:
+        have = {(n, d, b) for k, n, d, b, _ in artifacts if k == kind}
+        assert have == cells, f"{kind} cells {have} != init cells {cells}"
+    solo = {(n, d) for k, n, d, _, _ in artifacts if k == "session_init"}
+    assert {(n, d) for n, d, _ in cells} <= solo
+
+
 def test_hlo_text_is_parsable_shape(artifacts):
-    for kind, n, d, name in artifacts:
+    for kind, n, d, b, name in artifacts:
         text = open(os.path.join(ART, name)).read()
         assert "ENTRY" in text, f"{name}: no ENTRY computation"
         # the entry output signature lives in entry_computation_layout on
@@ -76,36 +106,50 @@ def test_hlo_text_is_parsable_shape(artifacts):
         if kind in ("order_scores", "order_step", "session_init"):
             assert f"f32[{n},{d}]" in text, f"{name}: missing panel param shape"
             assert f"f32[{n}]" in text and f"f32[{d}]" in text, f"{name}: missing masks"
+        if kind == "session_init_batch":
+            assert f"f32[{b},{n},{d}]" in text, f"{name}: missing panel batch shape"
+            assert f"f32[{b},{n}]" in text and f"f32[{b},{d}]" in text, (
+                f"{name}: missing batched masks"
+            )
         if kind in SESSION_KINDS:
-            nd = int(n) + int(d) + 2  # packed state rows (session.META_ROWS)
+            nd = n + d + 2  # packed state rows (session.META_ROWS)
             assert f"f32[{nd},{d}]" in text, f"{name}: missing packed state shape"
+        if kind in BATCH_KINDS:
+            nd = n + d + 2
+            assert f"f32[{b},{nd},{d}]" in text, (
+                f"{name}: missing batched packed state shape"
+            )
 
 
 def test_no_custom_calls(artifacts):
     """xla_extension 0.5.1 cannot run typed-FFI custom-calls (LAPACK etc.);
     every artifact must lower to plain HLO (the Newton-Schulz / pallas-
     interpret design constraint)."""
-    for _, _, _, name in artifacts:
+    for _, _, _, _, name in artifacts:
         text = open(os.path.join(ART, name)).read()
         assert "custom-call" not in text, f"{name} contains a custom-call"
 
 
 def test_filename_matches_manifest_row(artifacts):
-    for kind, n, d, name in artifacts:
+    for kind, n, d, b, name in artifacts:
         if kind == "var_fit":
             assert name == f"var_fit_t{n}_d{d}.hlo.txt"
+        elif kind in BATCH_KINDS:
+            assert name == f"{kind}_n{n}_d{d}_b{b}.hlo.txt"
         else:
             assert name == f"{kind}_n{n}_d{d}.hlo.txt"
 
 
 def test_session_init_output_is_packed_state_shape(artifacts):
     """entry_computation_layout pins the init output to [N+D+2, D] —
-    the packed layout the Rust XlaSession threads between steps."""
-    for kind, n, d, name in artifacts:
-        if kind != "session_init":
+    the packed layout the Rust XlaSession threads between steps
+    ([B, N+D+2, D] for the batched variant)."""
+    for kind, n, d, b, name in artifacts:
+        if kind not in ("session_init", "session_init_batch"):
             continue
         first = open(os.path.join(ART, name)).readline()
-        nd = int(n) + int(d) + 2
-        assert f"->f32[{nd},{d}]" in first.replace(" ", ""), (
+        nd = n + d + 2
+        want = f"->f32[{nd},{d}]" if b is None else f"->f32[{b},{nd},{d}]"
+        assert want in first.replace(" ", ""), (
             f"{name}: init output is not the packed state: {first.strip()}"
         )

@@ -128,6 +128,53 @@ def test_degenerate_duplicated_column_stays_finite():
         assert np.all(np.isfinite(np.asarray(state))), f"step {step}: state inf"
 
 
+def test_batched_kinds_are_bitwise_the_solo_kinds():
+    # the fusion-window contract: every slice of the vmapped batch
+    # artifacts equals the solo artifact's output bit for bit, through a
+    # full multi-step drive with per-panel choices diverging
+    n, d, b = 128, 6, 4
+    panels = [make_panel(n, d, 100 - 7 * i, 20 + i) for i in range(b)]
+    xb = jnp.stack([p[0] for p in panels])
+    rmb = jnp.stack([p[1] for p in panels])
+    cmb = jnp.stack([p[2] for p in panels])
+    state_b = session.session_init_batch(xb, rmb, cmb)
+    states = [session.session_init(*p) for p in panels]
+    for i in range(b):
+        np.testing.assert_array_equal(np.asarray(state_b[i]), np.asarray(states[i]))
+    for step in range(d - 1):
+        k_b = session.session_scores_batch(state_b)
+        onehots = []
+        for i in range(b):
+            k_solo = session.session_scores(states[i])
+            np.testing.assert_array_equal(
+                np.asarray(k_b[i]), np.asarray(k_solo), err_msg=f"step {step} panel {i}"
+            )
+            m = ref.safe_argmax(k_solo)
+            oh = jnp.zeros((d,), jnp.float32).at[m].set(1.0)
+            onehots.append(oh)
+            states[i] = session.session_update(states[i], oh)
+        state_b = session.session_update_batch(state_b, jnp.stack(onehots))
+        for i in range(b):
+            np.testing.assert_array_equal(
+                np.asarray(state_b[i]),
+                np.asarray(states[i]),
+                err_msg=f"step {step} panel {i}",
+            )
+
+
+def test_batched_all_zero_onehot_is_a_lane_noop():
+    # dropped/finished lanes ride along as all-zero one-hots: the lane's
+    # masks are untouched and its cache/correlations stay bitwise fixed
+    x, rm, cm = make_panel(96, 5, 80, 31)
+    state = session.session_init_batch(x[None], rm[None], cm[None])
+    stepped = session.session_update_batch(state, jnp.zeros((1, 5), jnp.float32))
+    before = session.unpack_state(state[0])
+    after = session.unpack_state(stepped[0])
+    np.testing.assert_array_equal(np.asarray(after[0]), np.asarray(before[0]))
+    np.testing.assert_array_equal(np.asarray(after[2]), np.asarray(before[2]))
+    assert float(after[3]) == float(before[3])
+
+
 def test_inactive_columns_score_inactive():
     x, rm, cm = make_panel(64, 6, 50, 6)
     cm = cm.at[2].set(0.0)

@@ -1,0 +1,148 @@
+//! Queue-aware batched scoring: throughput of one lock-step
+//! [`BatchedSession`] over B same-shape panels against B independent
+//! `fit_session` runs with the same worker budget — the serve tier's
+//! fusion window in isolation. Reported per cell: total wall-clock for
+//! the B jobs both ways, the fused speed-up, fused jobs/sec, and the
+//! per-lock-step kernel time. Under `--features xla` an extra cell
+//! drives the device-resident `XlaBatchSession` (one upload, two
+//! dispatches per step for the whole group) at the largest batched
+//! artifact bucket.
+
+mod common;
+
+use alingam::lingam::prune::PruneMethod;
+use alingam::lingam::{BatchedSession, DirectLingam, IncrementalSession, SweepStrategy};
+use alingam::linalg::Mat;
+use alingam::sim::{simulate_sem, SemSpec};
+use alingam::util::rng::Pcg64;
+use alingam::util::table::{f, secs, Table};
+
+fn panels(b: usize, n: usize, d: usize, seed: u64) -> Vec<Mat> {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    (0..b).map(|_| simulate_sem(&SemSpec::layered(d, 2, 0.5), n, &mut rng).data).collect()
+}
+
+/// The serve fallback path: B jobs run one after another, each through
+/// its own incremental session with the full worker budget.
+fn solo_fits(group: &[Mat], workers: usize) -> f64 {
+    let (_, dt) = common::time(|| {
+        for p in group {
+            let mut s =
+                IncrementalSession::with_strategy(p, workers, false, SweepStrategy::Exact).unwrap();
+            let _ = DirectLingam::new().fit_session(p, &mut s).unwrap();
+        }
+    });
+    dt
+}
+
+fn main() {
+    common::header(
+        "Batched scoring — lock-step multi-panel sessions vs independent fits",
+        "fusing B same-shape jobs into one batched session turns idle-core \
+         time into cross-panel work without moving a bit of any result",
+    );
+    let workers = alingam::lingam::parallel::default_workers();
+    println!("machine reports {workers} available cores\n");
+
+    // CI smoke: the d=32 cell with a short B grid; full scale adds the
+    // d=128 column the ISSUE acceptance table records
+    let dims: Vec<usize> = if common::full_scale() { vec![32, 128] } else { vec![32] };
+    let batches: &[usize] = if common::smoke() { &[1, 2, 4, 8] } else { &[1, 2, 4, 8, 16] };
+    let n = 1_000;
+
+    let mut tables: Vec<Table> = Vec::new();
+    for &d in &dims {
+        let mut t = Table::new(
+            &format!("d={d}, n={n} — B independent fits vs one batched session"),
+            &["B", "solo", "batched", "speedup ×", "jobs/s", "step ms"],
+        );
+        let steps = (d - 1) as f64;
+        for &b in batches {
+            let group = panels(b, n, d, 11 + b as u64);
+            // warm-up: populate thread pools and page in the panels
+            let _ = BatchedSession::fit_batch(
+                &group[..1],
+                workers,
+                false,
+                SweepStrategy::Exact,
+                PruneMethod::default(),
+            )
+            .unwrap();
+            let t_solo = solo_fits(&group, workers);
+            let (outs, t_batch) = common::time(|| {
+                BatchedSession::fit_batch(
+                    &group,
+                    workers,
+                    false,
+                    SweepStrategy::Exact,
+                    PruneMethod::default(),
+                )
+                .unwrap()
+            });
+            assert!(outs.iter().all(|o| o.result.is_ok()), "bench fit failed");
+            t.row(&[
+                b.to_string(),
+                secs(t_solo),
+                secs(t_batch),
+                f(t_solo / t_batch, 2),
+                f(b as f64 / t_batch, 1),
+                f(t_batch / steps * 1e3, 3),
+            ]);
+        }
+        t.print();
+        tables.push(t);
+    }
+
+    #[cfg(feature = "xla")]
+    xla_cell(&mut tables, n);
+
+    let refs: Vec<&Table> = tables.iter().collect();
+    common::emit_json("batched_scoring", &refs);
+    println!(
+        "\nshape check: small B pays the lock-step bookkeeping (~1×); the\n\
+         speed-up should grow with B while per-step time grows sublinearly\n\
+         in B — the pair sweeps of all live lanes share one worker pool\n\
+         instead of leaving cores idle between jobs."
+    );
+}
+
+/// Device-resident batched cell: one `session_init` upload for the whole
+/// group, then two dispatches per lock step regardless of B. Degrades to
+/// a printed note when no device or no batched artifacts are available.
+#[cfg(feature = "xla")]
+fn xla_cell(tables: &mut Vec<Table>, n: usize) {
+    use alingam::lingam::XlaBatchSession;
+    use alingam::runtime::XlaEngine;
+    let engine = match XlaEngine::from_default_artifacts() {
+        Ok(e) => e,
+        Err(e) => {
+            println!("\n(xla cell skipped: {e})");
+            return;
+        }
+    };
+    let d = 16; // the largest batched-artifact bucket (n=1024, d=16)
+    let steps = (d - 1) as f64;
+    let mut t = Table::new(
+        &format!("xla batched session — d={d}, n={n}"),
+        &["B", "total", "jobs/s", "step ms"],
+    );
+    for &b in &[1usize, 4, 8] {
+        let group = panels(b, n, d, 29 + b as u64);
+        let run = || -> alingam::util::Result<()> {
+            let mut s = XlaBatchSession::new(engine.executor().clone(), engine.registry(), &group)?;
+            while !s.finished() {
+                s.step_live()?;
+            }
+            Ok(())
+        };
+        if let Err(e) = run() {
+            println!("(xla B={b} skipped: {e})");
+            continue;
+        }
+        let (res, dt) = common::time(run);
+        res.expect("warmed xla cell");
+        t.row(&[b.to_string(), secs(dt), f(b as f64 / dt, 1), f(dt / steps * 1e3, 3)]);
+    }
+    t.print();
+    tables.push(t);
+}

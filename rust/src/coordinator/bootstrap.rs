@@ -12,15 +12,34 @@
 //! bootstrap parks engine sessions, the partitioned bootstrap parks
 //! [`PartitionWorkspace`]s (whose reset also re-partitions against the
 //! resample's correlation graph) — one shared core drives both.
+//!
+//! Engines that publish an incremental workspace configuration
+//! ([`OrderingEngine::incremental_config`]) skip the pool entirely:
+//! their resamples share one [`BatchedSession`] per group of
+//! [`BOOTSTRAP_BATCH`] seeds, paying one standardize pass and one sweep
+//! dispatch per lock step for the whole group. The batched session is
+//! bitwise-parity-pinned against solo fits, so the aggregates are the
+//! same either way (pinned by a test below) — only the per-step
+//! arithmetic intensity changes.
 
 use super::sweep::parallel_map;
 use crate::lingam::partition::{PartitionSpec, PartitionWorkspace};
-use crate::lingam::{DirectLingam, LingamFit, OrderingEngine, OrderingSession};
+use crate::lingam::prune::PruneMethod;
+use crate::lingam::{
+    BatchedSession, DirectLingam, LingamFit, OrderingEngine, OrderingSession, SweepStrategy,
+};
 use crate::linalg::Mat;
+use crate::util::pool::parallel_indexed;
 use crate::util::rng::Pcg64;
 use crate::util::{Error, Result};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+/// Resamples fused into one [`BatchedSession`] by the batched bootstrap
+/// path. Eight panels keep the lock-step arithmetic dense without
+/// making the group cancel boundary (a whole group finishes before the
+/// flag is honored) noticeably coarser than the solo per-resample one.
+const BOOTSTRAP_BATCH: usize = 8;
 
 /// Bootstrap configuration.
 #[derive(Clone, Debug)]
@@ -95,7 +114,69 @@ pub fn bootstrap_direct_observed<'e>(
     cancel: Option<&AtomicBool>,
     on_resample: impl Fn(usize, usize) + Sync,
 ) -> Result<BootstrapResult> {
+    if let Some(config) = engine.incremental_config() {
+        return bootstrap_batched(data, config, opts, cancel, on_resample);
+    }
     bootstrap_with_sessions(data, opts, cancel, on_resample, |sample| engine.session(sample))
+}
+
+/// The batched bootstrap core: resamples grouped [`BOOTSTRAP_BATCH`] at
+/// a time, each group refit in lock step by one [`BatchedSession`]
+/// configured exactly as the engine's own incremental workspace would
+/// be — per-resample seeding, row sampling and fit bits identical to
+/// the session-pool core, only the group cancel boundary is coarser.
+fn bootstrap_batched(
+    data: &Mat,
+    (workers, force_parallel, strategy): (usize, bool, SweepStrategy),
+    opts: &BootstrapOpts,
+    cancel: Option<&AtomicBool>,
+    on_resample: impl Fn(usize, usize) + Sync,
+) -> Result<BootstrapResult> {
+    let n = data.rows();
+    if opts.resamples == 0 {
+        return Err(Error::InvalidArgument("resamples must be ≥ 1".into()));
+    }
+    let seeds: Vec<u64> = (0..opts.resamples as u64).map(|k| opts.seed ^ (k + 1)).collect();
+    let groups: Vec<&[u64]> = seeds.chunks(BOOTSTRAP_BATCH).collect();
+    let completed = AtomicUsize::new(0);
+    let group_fits = parallel_indexed(groups.len(), opts.workers, |g| -> Vec<Result<LingamFit>> {
+        let group = groups[g];
+        if cancel.is_some_and(|c| c.load(Ordering::Relaxed)) {
+            let skipped = |_: &u64| Err(Error::Canceled("bootstrap resample skipped".into()));
+            return group.iter().map(skipped).collect();
+        }
+        let samples: Vec<Mat> = group
+            .iter()
+            .map(|&seed| {
+                let mut rng = Pcg64::seed_from_u64(seed);
+                let rows: Vec<usize> = (0..n).map(|_| rng.below(n)).collect();
+                data.select_rows(&rows)
+            })
+            .collect();
+        let prune = PruneMethod::default();
+        let fits: Vec<Result<LingamFit>> =
+            match BatchedSession::fit_batch(&samples, workers, force_parallel, strategy, prune) {
+                Ok(outs) => outs.into_iter().map(|o| o.result).collect(),
+                // batch-level precondition failure (unreachable for
+                // same-shape resamples of a validatable panel): charge
+                // every member of the group with it
+                Err(e) => {
+                    let msg = e.to_string();
+                    group.iter().map(|_| Err(Error::Numerical(msg.clone()))).collect()
+                }
+            };
+        for fit in &fits {
+            if fit.is_ok() {
+                let done = completed.fetch_add(1, Ordering::Relaxed) + 1;
+                on_resample(done, opts.resamples);
+            }
+        }
+        fits
+    });
+    if cancel.is_some_and(|c| c.load(Ordering::Relaxed)) {
+        return Err(Error::Canceled("bootstrap canceled".into()));
+    }
+    aggregate_fits(group_fits.into_iter().flatten(), data.cols(), opts)
 }
 
 /// Bootstrap through the partitioned plan's exact tier: every resample
@@ -180,7 +261,17 @@ fn bootstrap_with_sessions<'e>(
     if cancel.is_some_and(|c| c.load(Ordering::Relaxed)) {
         return Err(Error::Canceled("bootstrap canceled".into()));
     }
+    aggregate_fits(fits, d, opts)
+}
 
+/// Fold per-resample fits into the bootstrap aggregates — written once
+/// for the session-pool and batched cores (failed refits are skipped,
+/// all-failed runs error).
+fn aggregate_fits(
+    fits: impl IntoIterator<Item = Result<LingamFit>>,
+    d: usize,
+    opts: &BootstrapOpts,
+) -> Result<BootstrapResult> {
     let mut edge_probs = Mat::zeros(d, d);
     let mut weight_sums = Mat::zeros(d, d);
     let mut precedence = Mat::zeros(d, d);
@@ -331,6 +422,38 @@ mod tests {
             |_, _| panic!("canceled run must not report progress"),
         );
         assert!(matches!(err, Err(Error::Canceled(_))), "expected Canceled, got {err:?}");
+    }
+
+    #[test]
+    fn batched_routing_matches_the_session_pool_core() {
+        // engines with an incremental workspace route through
+        // BatchedSession groups; the batched fits are bitwise the solo
+        // fits, so every aggregate must equal the session-pool core's
+        let mut rng = Pcg64::seed_from_u64(17);
+        let ds = simulate_sem(&SemSpec::layered(5, 2, 0.7), 800, &mut rng);
+        // 10 resamples = one full group of BOOTSTRAP_BATCH plus a stub
+        let opts = BootstrapOpts { resamples: 10, workers: 2, ..Default::default() };
+        let engine = VectorizedEngine;
+        let batched = bootstrap_direct(&ds.data, &engine, &opts).unwrap();
+        let pooled =
+            bootstrap_with_sessions(&ds.data, &opts, None, |_, _| {}, |s| engine.session(s))
+                .unwrap();
+        assert_eq!(batched.edge_probs, pooled.edge_probs);
+        assert_eq!(batched.mean_weights, pooled.mean_weights);
+        assert_eq!(batched.precedence, pooled.precedence);
+        assert_eq!(batched.resamples, pooled.resamples);
+        // the multi-worker pruned engine routes batched too and stays
+        // deterministic across coordinator worker counts
+        let pruned = crate::lingam::ParallelEngine::new(1).with_pruning();
+        let a = bootstrap_direct(&ds.data, &pruned, &opts).unwrap();
+        let b = bootstrap_direct(
+            &ds.data,
+            &pruned,
+            &BootstrapOpts { workers: 3, ..opts.clone() },
+        )
+        .unwrap();
+        assert_eq!(a.edge_probs, b.edge_probs);
+        assert_eq!(a.resamples, b.resamples);
     }
 
     #[test]

@@ -100,6 +100,26 @@
 //! bootstrap pools [`lingam::PartitionWorkspace`]s across resamples like
 //! any other session workspace.
 //!
+//! ## Batched scoring: one session, B panels
+//!
+//! The session lifecycle also scales *across* panels:
+//! [`lingam::BatchedSession`] drives B same-shape panels in lock-step —
+//! one shared worker pool sweeps every live lane at each step, with
+//! per-panel roots, counters and failures (a degenerate or canceled
+//! lane dies alone; its peers never notice). The batch replicates the
+//! solo session's pool-vs-serial decision per lock step, so every lane
+//! is **bitwise** the fit `fit_session` would have produced — orders,
+//! step scores, adjacency and pruned-sweep counters alike
+//! (`tests/batch_agreement.rs` property-pins this). Two callers ride
+//! it: the serve tier's fusion window (below) and the bootstrap, which
+//! refits resample groups through one batched session instead of one
+//! session per resample. On the accelerated path
+//! [`lingam::XlaBatchSession`] is the same lock-step over
+//! `session_{init,scores,update}_batch_n{N}_d{D}_b{B}.hlo.txt`
+//! artifacts (`jax.vmap` over the solo kernels, bitwise per lane): one
+//! `session_init` upload for the whole group, then per step one `[B, d]`
+//! scores fetch and one `[B, d]` one-hot dispatch regardless of B.
+//!
 //! ## The serving layer
 //!
 //! [`serve`] makes the repo a long-lived process instead of a batch
@@ -110,7 +130,12 @@
 //! panel-hash LRU result cache answering byte-identical requests
 //! without recomputation, streamed per-step/per-resample progress over
 //! the session lifecycle, cooperative cancellation, and graceful drain
-//! on shutdown. The protocol and the CLI `--json` mode share one
+//! on shutdown. With `--fuse-wait-ms`/`--max-batch` set, a worker that
+//! pops a batchable fit opens a **fusion window**: it gathers queued
+//! same-shape peers (prefix-only per client, so FIFO survives) and
+//! drives the group through one [`lingam::BatchedSession`], with the
+//! `batch` object of the metrics frame booking batches dispatched, jobs
+//! fused, mean occupancy and window wait. The protocol and the CLI `--json` mode share one
 //! serialization surface (`serve::protocol` over the same escaping
 //! primitives as `util::table::Table::to_json`), so every JSON the repo
 //! emits — bench artifacts, CLI results, service frames — parses the

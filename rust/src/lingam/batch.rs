@@ -1,0 +1,842 @@
+//! Batched lock-step ordering sessions: one workspace driving B
+//! same-shape panels through DirectLiNGAM's search loop together.
+//!
+//! The serve tier scores one panel per worker: concurrent fits on
+//! same-shape panels each pay their own standardize pass, their own
+//! entropy sweeps and their own pair-kernel dispatches. ParaLiNGAM
+//! parallelizes *within* one panel; [`BatchedSession`] parallelizes
+//! *across* panels — the ROADMAP's queue-aware batched scoring tier.
+//! B standardized column caches and B correlation matrices are held
+//! contiguously (panel-major: column `j` of panel `p` starts at
+//! `(p·d + j)·n`), and every lock step advances all live panels through
+//! score → choose → residualize together, while each panel keeps its
+//! **own** independently-chosen root (per-panel
+//! [`argmax_active`], per-panel pruning schedule, per-panel
+//! [`SweepCounters`]).
+//!
+//! Bitwise parity with the solo
+//! [`IncrementalSession`](super::IncrementalSession) is a hard contract
+//! (pinned by `tests/batch_agreement.rs`): fusing B jobs must never
+//! change any job's answer. The only scheduling decision that can move
+//! bits is the *pair-sweep* pooling choice — the tiled sweep merges row
+//! contributions in a different summation association than the serial
+//! sweep, and the parallel pruned sweep's losing partial scores depend
+//! on thread interleaving — so each lock step replicates the solo
+//! session's `use_pool(pair_work(m, n))` decision exactly (every live
+//! lane shares the same active count `m`, so one decision covers the
+//! batch) and then picks one of two modes:
+//!
+//! - **pair-pooled** (big panels): lanes step *sequentially*, each
+//!   lane's entropy refresh / pair sweep / cache residualization tiled
+//!   across the worker pool exactly as the solo session tiles them;
+//! - **cross-panel** (small panels, where the solo pair sweep is
+//!   serial): the pool distributes whole lanes instead, every lane
+//!   running the identical serial kernels. Per-column entropy and
+//!   residual updates are element-independent, so threading across
+//!   panels is value-neutral exactly where threading across pairs is
+//!   not.
+//!
+//! Panels that fail [`validate_panel`] enter the batch as dead lanes —
+//! their error is reported alone, with the same message a solo fit
+//! would produce — and a lane whose argmax degenerates mid-fit, or that
+//! the serve worker cancels via [`BatchedSession::drop_lane`], drops
+//! out at a step boundary without stalling the rest of the batch.
+
+use super::direct::{validate_panel, LingamFit};
+use super::engine::{accumulate_pair_diffs, argmax_active, scatter_scores};
+use super::parallel::tiled_pair_sweep;
+use super::prune::{estimate_adjacency, PruneMethod};
+use super::sweep::{
+    dot, entropy_fused_kernel, pair_diff_with_rho_kernel, pair_work, pruned_sweep,
+    pruned_sweep_parallel, SweepCounters, SweepStrategy,
+};
+use crate::linalg::Mat;
+use crate::stats;
+use crate::util::pool::{parallel_chunks_mut, parallel_indexed};
+use crate::util::timer::StageProfile;
+use crate::util::{Error, Result};
+
+/// Same small-problem cutoffs as the solo session — the pair-sweep
+/// pooling decision must replicate `IncrementalSession`'s bit for bit.
+const MIN_PARALLEL_PAIR_WORK: usize = 1 << 18;
+/// Column-elements threshold below which per-column sweeps stay serial.
+const MIN_PARALLEL_COL_WORK: usize = 1 << 16;
+
+/// Per-panel state: everything the solo session keeps per fit except
+/// the column cache and correlation matrix, which live panel-major in
+/// the batch so kernels stream across panels without re-tiling.
+struct Lane {
+    /// Still stepping. False means failed validation, degenerated
+    /// mid-fit, or dropped by the caller — `error` records which.
+    live: bool,
+    active: Vec<bool>,
+    /// Per-column entropy cache, refreshed once per lock step.
+    h: Vec<f64>,
+    /// Packed active indices, rebuilt per step into the same buffer.
+    idx: Vec<usize>,
+    /// Previous step's scores: the pruned sweep's candidate schedule.
+    prev_scores: Vec<f64>,
+    /// First-step schedule seed (pruned strategy only): per-column
+    /// |excess kurtosis| of the standardized cache.
+    seed_scores: Vec<f64>,
+    counters: SweepCounters,
+    /// Roots chosen so far, in step order (the final forced variable is
+    /// appended by `into_fits`).
+    order: Vec<usize>,
+    step_scores: Vec<Vec<f64>>,
+    error: Option<Error>,
+    /// Chosen-column copy for the in-place residualization. The solo
+    /// session `mem::take`s the column instead; copying is bitwise
+    /// identical and keeps the panel-major storage contiguous.
+    scratch: Vec<f64>,
+}
+
+impl Lane {
+    fn new(n: usize, d: usize) -> Lane {
+        Lane {
+            live: true,
+            active: vec![true; d],
+            h: vec![0.0; d],
+            idx: Vec::with_capacity(d),
+            prev_scores: Vec::new(),
+            seed_scores: Vec::new(),
+            counters: SweepCounters::default(),
+            order: Vec::with_capacity(d),
+            step_scores: Vec::with_capacity(d.saturating_sub(1)),
+            error: None,
+            scratch: vec![0.0; n],
+        }
+    }
+
+    fn dead(n: usize, d: usize, error: Error) -> Lane {
+        Lane { live: false, error: Some(error), ..Lane::new(n, d) }
+    }
+}
+
+/// One lane's outcome from [`BatchedSession::into_fits`]: the fit (or
+/// the lane's own failure) plus its sweep instrumentation — available
+/// even for failed lanes, mirroring the solo serve path, which books
+/// counters before surfacing the fit error.
+#[derive(Debug)]
+pub struct BatchOutcome {
+    /// The fit, or this panel's own error (validation, degenerate
+    /// argmax, cancellation) — batch peers are unaffected.
+    pub result: Result<LingamFit>,
+    /// Sweep work this lane performed before finishing or failing.
+    pub counters: SweepCounters,
+}
+
+/// Per-step scheduling context shared by every lane of one lock step.
+#[derive(Clone, Copy)]
+struct StepCtx {
+    n: usize,
+    d: usize,
+    /// Pool size for *within-lane* kernels: the batch's workers in
+    /// pair-pooled mode, 1 in cross-panel mode (serial kernels).
+    inner_workers: usize,
+    force_parallel: bool,
+    /// The solo session's pair-sweep pooling decision for this step's
+    /// active count — identical for every live lane.
+    pair_pooled: bool,
+    strategy: SweepStrategy,
+    fast: bool,
+}
+
+/// A multi-panel ordering workspace stepping B same-shape panels in
+/// lock-step (see module docs). Build with
+/// [`with_strategy`](BatchedSession::with_strategy), drive with
+/// [`step_live`](BatchedSession::step_live) until
+/// [`finished`](BatchedSession::finished), then consume with
+/// [`into_fits`](BatchedSession::into_fits) — or use the one-call
+/// [`fit_batch`](BatchedSession::fit_batch).
+pub struct BatchedSession {
+    n: usize,
+    d: usize,
+    workers: usize,
+    force_parallel: bool,
+    strategy: SweepStrategy,
+    /// Route the transcendental pass through the `fastmath` polynomial
+    /// `exp` (only settable when that feature is compiled in).
+    fast_kernel: bool,
+    /// B standardized panels, panel-major: column `j` of panel `p`
+    /// occupies `[(p·d + j)·n, (p·d + j + 1)·n)`.
+    cols: Vec<f64>,
+    /// B correlation matrices, panel-major row-major: entry `(j, k)` of
+    /// panel `p` at `p·d² + j·d + k`.
+    corr: Vec<f64>,
+    lanes: Vec<Lane>,
+    steps_done: usize,
+}
+
+impl BatchedSession {
+    /// Build a batch with exact sweeps. `workers == 1` keeps everything
+    /// serial; `force_parallel` disables the small-problem serial
+    /// fallback (tests and scaling benches), exactly like the solo
+    /// session's flags.
+    pub fn new(panels: &[Mat], workers: usize, force_parallel: bool) -> Result<BatchedSession> {
+        BatchedSession::with_strategy(panels, workers, force_parallel, SweepStrategy::Exact)
+    }
+
+    /// [`new`](BatchedSession::new) with an explicit sweep strategy.
+    ///
+    /// Batch-level preconditions (empty batch, mixed shapes, degenerate
+    /// shape) fail the whole construction; per-panel
+    /// [`validate_panel`] failures only kill that panel's lane, whose
+    /// [`BatchOutcome`] carries the same error a solo fit would return.
+    pub fn with_strategy(
+        panels: &[Mat],
+        workers: usize,
+        force_parallel: bool,
+        strategy: SweepStrategy,
+    ) -> Result<BatchedSession> {
+        let b = panels.len();
+        if b == 0 {
+            return Err(Error::InvalidArgument("batched session needs ≥ 1 panel".into()));
+        }
+        let (n, d) = (panels[0].rows(), panels[0].cols());
+        for (p, panel) in panels.iter().enumerate() {
+            if (panel.rows(), panel.cols()) != (n, d) {
+                return Err(Error::Shape(format!(
+                    "batched session needs same-shape panels: panel 0 is {n}x{d}, \
+                     panel {p} is {}x{}",
+                    panel.rows(),
+                    panel.cols()
+                )));
+            }
+        }
+        if d < 1 || n < 2 {
+            return Err(Error::InvalidArgument(format!(
+                "ordering session needs n ≥ 2 and d ≥ 1, got {n}x{d}"
+            )));
+        }
+        let mut s = BatchedSession {
+            n,
+            d,
+            workers: workers.max(1),
+            force_parallel,
+            strategy,
+            fast_kernel: false,
+            cols: vec![0.0; b * d * n],
+            corr: vec![0.0; b * d * d],
+            lanes: Vec::with_capacity(b),
+            steps_done: 0,
+        };
+        for panel in panels {
+            s.lanes.push(match validate_panel(panel) {
+                Ok(()) => Lane::new(n, d),
+                Err(e) => Lane::dead(n, d, e),
+            });
+        }
+        s.rebuild(panels);
+        Ok(s)
+    }
+
+    /// Swap the transcendental pass to the accuracy-bounded polynomial
+    /// `exp` of [`super::sweep::fastmath`]. Never on by default: the
+    /// agreement suites pin the precise kernel bitwise.
+    #[cfg(feature = "fastmath")]
+    pub fn with_fast_kernel(mut self) -> BatchedSession {
+        self.fast_kernel = true;
+        self
+    }
+
+    /// Number of panels in the batch (live or not).
+    pub fn batch(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Sample count of every panel in the batch.
+    pub fn rows(&self) -> usize {
+        self.n
+    }
+
+    /// Variable count of every panel in the batch.
+    pub fn dims(&self) -> usize {
+        self.d
+    }
+
+    /// Lock steps completed so far.
+    pub fn steps_done(&self) -> usize {
+        self.steps_done
+    }
+
+    /// Search steps a full fit needs (d − 1; the last root is forced).
+    pub fn steps_total(&self) -> usize {
+        self.d.saturating_sub(1)
+    }
+
+    /// True once no further lock step can do work: every search step
+    /// ran, or every lane is dead.
+    pub fn finished(&self) -> bool {
+        self.steps_done >= self.steps_total() || self.lanes.iter().all(|l| !l.live)
+    }
+
+    /// Whether panel `p` is still stepping.
+    pub fn live(&self, p: usize) -> bool {
+        self.lanes[p].live
+    }
+
+    /// Number of still-stepping lanes.
+    pub fn live_count(&self) -> usize {
+        self.lanes.iter().filter(|l| l.live).count()
+    }
+
+    /// Panel `p`'s accumulated sweep instrumentation.
+    pub fn lane_counters(&self, p: usize) -> SweepCounters {
+        self.lanes[p].counters
+    }
+
+    /// Roots panel `p` has chosen so far, in step order.
+    pub fn lane_order(&self, p: usize) -> &[usize] {
+        &self.lanes[p].order
+    }
+
+    /// Kill lane `p` with `reason` (e.g. per-job cancellation at a step
+    /// boundary). No-op on an already-dead lane, so the original
+    /// failure is never overwritten; the rest of the batch is
+    /// unaffected.
+    pub fn drop_lane(&mut self, p: usize, reason: Error) {
+        let lane = &mut self.lanes[p];
+        if lane.live {
+            lane.live = false;
+            lane.error = Some(reason);
+        }
+    }
+
+    /// One lock step for every live lane: score → per-lane argmax →
+    /// residualize+update → deactivate. A lane whose scores degenerate
+    /// fails alone (its error is kept for
+    /// [`into_fits`](BatchedSession::into_fits)); the rest keep
+    /// stepping. Returns the number of lanes still live afterwards.
+    pub fn step_live(&mut self) -> usize {
+        if self.finished() {
+            return self.live_count();
+        }
+        // every live lane has stepped in lock-step since construction,
+        // so they all share the same active count — one solo-identical
+        // pooling decision covers the batch
+        let m = self.d - self.steps_done;
+        let pair_pooled = m >= 2
+            && use_pool(
+                self.workers,
+                self.force_parallel,
+                pair_work(m, self.n),
+                MIN_PARALLEL_PAIR_WORK,
+            );
+        let ctx = StepCtx {
+            n: self.n,
+            d: self.d,
+            inner_workers: if pair_pooled { self.workers } else { 1 },
+            force_parallel: self.force_parallel,
+            pair_pooled,
+            strategy: self.strategy,
+            fast: self.fast_kernel,
+        };
+        let (n, d) = (self.n, self.d);
+        let mut work: Vec<(&mut Lane, &mut [f64], &mut [f64])> = Vec::new();
+        let (mut cols_rest, mut corr_rest) =
+            (self.cols.as_mut_slice(), self.corr.as_mut_slice());
+        for lane in self.lanes.iter_mut() {
+            let (c, cols_tail) = cols_rest.split_at_mut(d * n);
+            let (q, corr_tail) = corr_rest.split_at_mut(d * d);
+            cols_rest = cols_tail;
+            corr_rest = corr_tail;
+            if lane.live {
+                work.push((lane, c, q));
+            }
+        }
+        if !pair_pooled && self.workers > 1 && work.len() > 1 {
+            // cross-panel mode: distribute whole lanes, serial kernels
+            parallel_chunks_mut(&mut work, self.workers, |_, chunk| {
+                for (lane, cols, corr) in chunk.iter_mut() {
+                    lane_step(lane, cols, corr, ctx);
+                }
+            });
+        } else {
+            // pair-pooled mode (or a single worker): lanes run
+            // sequentially, inner kernels pooling exactly like solo
+            for (lane, cols, corr) in work.iter_mut() {
+                lane_step(lane, cols, corr, ctx);
+            }
+        }
+        self.steps_done += 1;
+        self.live_count()
+    }
+
+    /// Consume the batch into per-panel outcomes. `panels` must be the
+    /// slice the batch was built from (same contract as
+    /// `DirectLingam::fit_session`: the adjacency is regressed on the
+    /// original un-residualized data). Completed lanes append the final
+    /// forced variable and run the shared regression stage; dead lanes
+    /// return their recorded error. Counters are reported either way.
+    pub fn into_fits(self, panels: &[Mat], prune: PruneMethod) -> Vec<BatchOutcome> {
+        assert_eq!(
+            panels.len(),
+            self.lanes.len(),
+            "into_fits needs the panels the batch was built from"
+        );
+        let (done, total) = (self.steps_done, self.d.saturating_sub(1));
+        self.lanes
+            .into_iter()
+            .zip(panels)
+            .map(|(lane, panel)| {
+                let counters = lane.counters;
+                let result = finish_lane(lane, panel, prune, done, total);
+                BatchOutcome { result, counters }
+            })
+            .collect()
+    }
+
+    /// Build, drive to completion and finish a whole batch — the
+    /// one-call path the bootstrap's resample groups use. Batch-level
+    /// failures (empty batch, mixed shapes) fail every panel at once;
+    /// per-panel failures come back in each panel's own outcome.
+    pub fn fit_batch(
+        panels: &[Mat],
+        workers: usize,
+        force_parallel: bool,
+        strategy: SweepStrategy,
+        prune: PruneMethod,
+    ) -> Result<Vec<BatchOutcome>> {
+        let mut s = BatchedSession::with_strategy(panels, workers, force_parallel, strategy)?;
+        while !s.finished() {
+            s.step_live();
+        }
+        Ok(s.into_fits(panels, prune))
+    }
+
+    /// Standardize every live panel into the panel-major cache and
+    /// build its correlation matrix — the solo `rebuild`, fanned across
+    /// lanes. Per-column and per-dot work only, so cross-panel
+    /// threading is bitwise value-neutral.
+    fn rebuild(&mut self, panels: &[Mat]) {
+        let (n, d) = (self.n, self.d);
+        let strategy = self.strategy;
+        let mut work: Vec<(&mut Lane, &mut [f64], &mut [f64], &Mat)> = Vec::new();
+        let (mut cols_rest, mut corr_rest) =
+            (self.cols.as_mut_slice(), self.corr.as_mut_slice());
+        for (lane, panel) in self.lanes.iter_mut().zip(panels) {
+            let (c, cols_tail) = cols_rest.split_at_mut(d * n);
+            let (q, corr_tail) = corr_rest.split_at_mut(d * d);
+            cols_rest = cols_tail;
+            corr_rest = corr_tail;
+            if lane.live {
+                work.push((lane, c, q, panel));
+            }
+        }
+        if self.workers > 1 && work.len() > 1 {
+            parallel_chunks_mut(&mut work, self.workers, |_, chunk| {
+                for (lane, cols, corr, panel) in chunk.iter_mut() {
+                    rebuild_lane(lane, cols, corr, panel, n, strategy);
+                }
+            });
+        } else {
+            for (lane, cols, corr, panel) in work.iter_mut() {
+                rebuild_lane(lane, cols, corr, panel, n, strategy);
+            }
+        }
+    }
+}
+
+/// Column `j` of a panel-major column slice.
+fn col(cols: &[f64], n: usize, j: usize) -> &[f64] {
+    &cols[j * n..(j + 1) * n]
+}
+
+/// The solo session's pooling predicate, parameterized so cross-panel
+/// mode can pass `workers == 1` and force every inner kernel serial.
+fn use_pool(workers: usize, force_parallel: bool, work: usize, cutoff: usize) -> bool {
+    workers > 1 && (force_parallel || work >= cutoff)
+}
+
+/// The solo `rebuild` for one lane: standardize every column into the
+/// cache, recompute the correlation matrix (`dot / n`, exactly as the
+/// solo session divides), seed the pruned schedule.
+fn rebuild_lane(
+    lane: &mut Lane,
+    cols: &mut [f64],
+    corr: &mut [f64],
+    panel: &Mat,
+    n: usize,
+    strategy: SweepStrategy,
+) {
+    let d = panel.cols();
+    for (c, column) in cols.chunks_exact_mut(n).enumerate() {
+        for (r, v) in column.iter_mut().enumerate() {
+            *v = panel[(r, c)];
+        }
+        stats::standardize(column);
+    }
+    for a in 0..d {
+        corr[a * d + a] = 1.0;
+        for b in (a + 1)..d {
+            let v = dot(col(cols, n, a), col(cols, n, b)) / n as f64;
+            corr[a * d + b] = v;
+            corr[b * d + a] = v;
+        }
+    }
+    lane.active.fill(true);
+    lane.prev_scores.clear();
+    lane.counters = SweepCounters::default();
+    lane.seed_scores.clear();
+    if strategy == SweepStrategy::Pruned {
+        let inv_n = 1.0 / n as f64;
+        lane.seed_scores.extend(cols.chunks_exact(n).map(|column| {
+            let m4 = column.iter().map(|&v| (v * v) * (v * v)).sum::<f64>() * inv_n;
+            (m4 - 3.0).abs()
+        }));
+    }
+}
+
+/// One solo-session step for one lane against its panel-major slices:
+/// the `IncrementalSession::scores` body, the argmax, and
+/// `residualize_and_update`, with the lane's own schedule and counters.
+fn lane_step(lane: &mut Lane, cols: &mut [f64], corr: &mut [f64], ctx: StepCtx) {
+    let (n, d) = (ctx.n, ctx.d);
+    lane.idx.clear();
+    let active = &lane.active;
+    lane.idx.extend((0..d).filter(|&i| active[i]));
+    let m = lane.idx.len();
+    debug_assert!(m >= 2, "stepping an exhausted lane");
+    let fast = ctx.fast;
+    // entropy refresh: per-column independent, so pooled vs serial is
+    // bitwise value-neutral — pool it exactly when solo would
+    if use_pool(
+        ctx.inner_workers,
+        ctx.force_parallel,
+        m.saturating_mul(n),
+        MIN_PARALLEL_COL_WORK,
+    ) {
+        let (cols_ro, idx) = (&*cols, &lane.idx);
+        let hs = parallel_indexed(m, ctx.inner_workers.min(m), |t| {
+            entropy_fused_kernel(fast, col(cols_ro, n, idx[t]))
+        });
+        for (t, hv) in hs.into_iter().enumerate() {
+            lane.h[lane.idx[t]] = hv;
+        }
+    } else {
+        for t in 0..m {
+            let i = lane.idx[t];
+            lane.h[i] = entropy_fused_kernel(fast, col(cols, n, i));
+        }
+    }
+    // pruned-sweep schedule: previous step's scores, else the kurtosis
+    // seed, else unscheduled — the solo priority chain
+    let priority: Option<Vec<f64>> = if ctx.strategy == SweepStrategy::Pruned {
+        if lane.prev_scores.len() == d {
+            Some(lane.idx.iter().map(|&i| lane.prev_scores[i]).collect())
+        } else if lane.seed_scores.len() == d {
+            Some(lane.idx.iter().map(|&i| lane.seed_scores[i]).collect())
+        } else {
+            None
+        }
+    } else {
+        None
+    };
+    let mut call = SweepCounters::default();
+    let k = {
+        let (cols_ro, corr_ro, h, idx) = (&*cols, &*corr, &lane.h, &lane.idx);
+        let diff = |a: usize, b: usize| {
+            let (ia, ib) = (idx[a], idx[b]);
+            pair_diff_with_rho_kernel(
+                fast,
+                col(cols_ro, n, ia),
+                col(cols_ro, n, ib),
+                corr_ro[ia * d + ib],
+                h[ia],
+                h[ib],
+            )
+        };
+        match ctx.strategy {
+            SweepStrategy::Exact => {
+                call.record_exact(m, n);
+                if ctx.pair_pooled {
+                    tiled_pair_sweep(m, ctx.inner_workers, &diff)
+                } else {
+                    accumulate_pair_diffs(m, &diff)
+                }
+            }
+            SweepStrategy::Pruned => {
+                if ctx.pair_pooled {
+                    pruned_sweep_parallel(
+                        m,
+                        ctx.inner_workers,
+                        &diff,
+                        priority.as_deref(),
+                        n,
+                        &mut call,
+                    )
+                } else {
+                    pruned_sweep(m, &diff, priority.as_deref(), n, &mut call)
+                }
+            }
+        }
+    };
+    lane.counters.merge(&call);
+    let scores = scatter_scores(d, &lane.idx, &k);
+    if ctx.strategy == SweepStrategy::Pruned {
+        lane.prev_scores.clear();
+        lane.prev_scores.extend_from_slice(&scores);
+    }
+    let chosen = match argmax_active(&scores, &lane.active) {
+        Ok(c) => c,
+        Err(e) => {
+            // this lane's panel degenerated (all NaN/−∞ scores): it
+            // fails alone, with the same error a solo fit raises
+            lane.error = Some(e);
+            lane.live = false;
+            return;
+        }
+    };
+    residualize_lane(lane, cols, corr, chosen, ctx);
+    lane.active[chosen] = false;
+    lane.order.push(chosen);
+    lane.step_scores.push(scores);
+}
+
+/// The solo `residualize_and_update` against panel-major slices: one
+/// fused pass per remaining column (`(c_j − ρ_jm·c_m)/√(1−ρ_jm²)`, same
+/// ρ²-clamp), then the closed-form O(d²) correlation update.
+fn residualize_lane(lane: &mut Lane, cols: &mut [f64], corr: &mut [f64], m: usize, ctx: StepCtx) {
+    let (n, d) = (ctx.n, ctx.d);
+    let targets: Vec<usize> = (0..d).filter(|&j| j != m && lane.active[j]).collect();
+    if targets.is_empty() {
+        return;
+    }
+    let dinv: Vec<f64> = targets
+        .iter()
+        .map(|&j| {
+            let r = corr[j * d + m];
+            1.0 / (1.0 - (r * r).min(1.0)).sqrt().max(1e-12)
+        })
+        .collect();
+    lane.scratch.copy_from_slice(col(cols, n, m));
+    let cm = &lane.scratch;
+    if use_pool(
+        ctx.inner_workers,
+        ctx.force_parallel,
+        targets.len().saturating_mul(n),
+        MIN_PARALLEL_COL_WORK,
+    ) {
+        // the panel-major layout hands out disjoint column views, so
+        // workers update their chunk in place (the solo session takes
+        // columns out of its Vec-of-Vecs instead; same math, same bits)
+        let corr_ro = &*corr;
+        let mut views: Vec<(usize, &mut [f64])> = cols
+            .chunks_exact_mut(n)
+            .enumerate()
+            .filter(|(j, _)| targets.binary_search(j).is_ok())
+            .collect();
+        parallel_chunks_mut(&mut views, ctx.inner_workers, |start, chunk| {
+            for (off, (j, column)) in chunk.iter_mut().enumerate() {
+                let r = corr_ro[*j * d + m];
+                let s = dinv[start + off];
+                for (v, &cmv) in column.iter_mut().zip(cm) {
+                    *v = (*v - r * cmv) * s;
+                }
+            }
+        });
+    } else {
+        for (t, &j) in targets.iter().enumerate() {
+            let r = corr[j * d + m];
+            let s = dinv[t];
+            let column = &mut cols[j * n..(j + 1) * n];
+            for (v, &cmv) in column.iter_mut().zip(cm) {
+                *v = (*v - r * cmv) * s;
+            }
+        }
+    }
+    for (ta, &ja) in targets.iter().enumerate() {
+        let ra = corr[ja * d + m];
+        for (tb, &jb) in targets.iter().enumerate().skip(ta + 1) {
+            let rb = corr[jb * d + m];
+            let v = ((corr[ja * d + jb] - ra * rb) * dinv[ta] * dinv[tb]).clamp(-1.0, 1.0);
+            corr[ja * d + jb] = v;
+            corr[jb * d + ja] = v;
+        }
+    }
+}
+
+/// Turn one finished (or failed) lane into its outcome: append the
+/// final forced variable and run the shared regression stage, exactly
+/// like `DirectLingam::drive` finishing a solo session.
+fn finish_lane(
+    lane: Lane,
+    panel: &Mat,
+    prune: PruneMethod,
+    steps_done: usize,
+    steps_total: usize,
+) -> Result<LingamFit> {
+    if let Some(e) = lane.error {
+        return Err(e);
+    }
+    if steps_done < steps_total {
+        return Err(Error::InvalidArgument(format!(
+            "batched fit consumed before completion: {steps_done}/{steps_total} steps"
+        )));
+    }
+    let mut order = lane.order;
+    let last = lane.active.iter().position(|&a| a).expect("exactly one variable remains");
+    order.push(last);
+    let mut profile = StageProfile::new();
+    let adjacency = profile.time("regression", || estimate_adjacency(panel, &order, prune))?;
+    Ok(LingamFit { order, adjacency, step_scores: lane.step_scores, profile })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lingam::{DirectLingam, IncrementalSession, OrderingSession};
+    use crate::sim::{simulate_sem, SemSpec};
+    use crate::util::rng::Pcg64;
+
+    fn toy_panel(n: usize, d: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        simulate_sem(&SemSpec::layered(d, 2, 0.6), n, &mut rng).data
+    }
+
+    fn solo_fit(
+        panel: &Mat,
+        workers: usize,
+        force_parallel: bool,
+        strategy: SweepStrategy,
+    ) -> (LingamFit, SweepCounters) {
+        let mut session =
+            IncrementalSession::with_strategy(panel, workers, force_parallel, strategy).unwrap();
+        let fit = DirectLingam::new().fit_session(panel, &mut session).unwrap();
+        (fit, session.sweep_counters())
+    }
+
+    #[test]
+    fn batched_serial_exact_matches_solo_bitwise() {
+        let panels: Vec<Mat> = (0..4).map(|s| toy_panel(300, 6, 40 + s)).collect();
+        let outcomes = BatchedSession::fit_batch(
+            &panels,
+            1,
+            false,
+            SweepStrategy::Exact,
+            PruneMethod::default(),
+        )
+        .unwrap();
+        for (panel, out) in panels.iter().zip(&outcomes) {
+            let (solo, counters) = solo_fit(panel, 1, false, SweepStrategy::Exact);
+            let fit = out.result.as_ref().expect("batched fit failed");
+            assert_eq!(fit.order, solo.order);
+            assert_eq!(fit.step_scores, solo.step_scores, "step scores must be bitwise equal");
+            assert_eq!(fit.adjacency, solo.adjacency, "adjacency must be bitwise equal");
+            assert_eq!(out.counters, counters);
+        }
+    }
+
+    #[test]
+    fn degenerate_panel_fails_alone() {
+        let good = toy_panel(200, 5, 50);
+        let mut bad = toy_panel(200, 5, 51);
+        let constant = vec![0.25; 200];
+        bad.set_col(2, &constant);
+        let panels = vec![good.clone(), bad, toy_panel(200, 5, 52)];
+        let outcomes = BatchedSession::fit_batch(
+            &panels,
+            1,
+            false,
+            SweepStrategy::Exact,
+            PruneMethod::default(),
+        )
+        .unwrap();
+        let msg = outcomes[1].result.as_ref().unwrap_err().to_string();
+        assert!(msg.contains("constant"), "unexpected error: {msg}");
+        let (solo, _) = solo_fit(&good, 1, false, SweepStrategy::Exact);
+        assert_eq!(outcomes[0].result.as_ref().unwrap().order, solo.order);
+        assert!(outcomes[2].result.is_ok());
+    }
+
+    #[test]
+    fn mixed_shapes_are_a_batch_level_error() {
+        let panels = vec![toy_panel(200, 5, 1), toy_panel(200, 4, 2)];
+        assert!(BatchedSession::new(&panels, 1, false).is_err());
+        assert!(BatchedSession::new(&[], 1, false).is_err());
+    }
+
+    #[test]
+    fn dropped_lane_reports_its_reason_and_peers_finish() {
+        let panels: Vec<Mat> = (0..3).map(|s| toy_panel(200, 5, 60 + s)).collect();
+        let mut s = BatchedSession::new(&panels, 1, false).unwrap();
+        s.step_live();
+        s.drop_lane(1, Error::Canceled("fit canceled at step 1/4".into()));
+        assert_eq!(s.live_count(), 2);
+        while !s.finished() {
+            s.step_live();
+        }
+        let outcomes = s.into_fits(&panels, PruneMethod::default());
+        assert!(matches!(outcomes[1].result, Err(Error::Canceled(_))));
+        let (solo, _) = solo_fit(&panels[0], 1, false, SweepStrategy::Exact);
+        assert_eq!(outcomes[0].result.as_ref().unwrap().order, solo.order);
+        assert!(outcomes[2].result.is_ok());
+    }
+
+    #[test]
+    fn pooled_exact_batch_matches_pooled_solo_bitwise() {
+        // force_parallel drives both the solo session and the batch
+        // through the tiled pair sweep, whose summation association is
+        // scheduling-independent — bitwise comparable
+        let panels: Vec<Mat> = (0..3).map(|s| toy_panel(400, 6, 70 + s)).collect();
+        let outcomes = BatchedSession::fit_batch(
+            &panels,
+            3,
+            true,
+            SweepStrategy::Exact,
+            PruneMethod::default(),
+        )
+        .unwrap();
+        for (panel, out) in panels.iter().zip(&outcomes) {
+            let (solo, counters) = solo_fit(panel, 3, true, SweepStrategy::Exact);
+            let fit = out.result.as_ref().expect("batched fit failed");
+            assert_eq!(fit.order, solo.order);
+            assert_eq!(fit.step_scores, solo.step_scores);
+            assert_eq!(fit.adjacency, solo.adjacency);
+            assert_eq!(out.counters, counters);
+        }
+    }
+
+    #[test]
+    fn serial_pruned_batch_matches_solo_with_counters() {
+        let panels: Vec<Mat> = (0..3).map(|s| toy_panel(350, 7, 80 + s)).collect();
+        let outcomes = BatchedSession::fit_batch(
+            &panels,
+            1,
+            false,
+            SweepStrategy::Pruned,
+            PruneMethod::default(),
+        )
+        .unwrap();
+        for (panel, out) in panels.iter().zip(&outcomes) {
+            let (solo, counters) = solo_fit(panel, 1, false, SweepStrategy::Pruned);
+            let fit = out.result.as_ref().expect("batched fit failed");
+            assert_eq!(fit.order, solo.order);
+            assert_eq!(fit.step_scores, solo.step_scores);
+            assert_eq!(out.counters, counters, "pruned counters must match the solo sweep");
+        }
+    }
+
+    #[test]
+    fn cross_panel_threading_is_bitwise_neutral() {
+        // small panels keep the solo pair sweep serial, so the batch
+        // distributes lanes instead — still bitwise equal to solo
+        let panels: Vec<Mat> = (0..5).map(|s| toy_panel(250, 5, 90 + s)).collect();
+        let outcomes = BatchedSession::fit_batch(
+            &panels,
+            4,
+            false,
+            SweepStrategy::Exact,
+            PruneMethod::default(),
+        )
+        .unwrap();
+        for (panel, out) in panels.iter().zip(&outcomes) {
+            let (solo, _) = solo_fit(panel, 4, false, SweepStrategy::Exact);
+            let fit = out.result.as_ref().expect("batched fit failed");
+            assert_eq!(fit.order, solo.order);
+            assert_eq!(fit.step_scores, solo.step_scores);
+            assert_eq!(fit.adjacency, solo.adjacency);
+        }
+    }
+}

@@ -105,6 +105,19 @@ pub trait OrderingEngine: Send + Sync {
     fn sweep_strategy(&self) -> SweepStrategy {
         SweepStrategy::Exact
     }
+
+    /// The `(workers, force_parallel, strategy)` an incremental CPU
+    /// workspace for this engine would run with, or `None` if the engine
+    /// has no such workspace (the sequential baseline, the XLA engine).
+    ///
+    /// `Some` is the batching contract: it promises that
+    /// [`super::batch::BatchedSession::with_strategy`] built from these
+    /// parameters produces bitwise the same fit as this engine's solo
+    /// session, so the serve fusion window and the bootstrap's resample
+    /// groups may batch same-shape fits for this engine.
+    fn incremental_config(&self) -> Option<(usize, bool, SweepStrategy)> {
+        None
+    }
 }
 
 /// Argmax of scores over active entries (ties → lowest index, matching
@@ -248,6 +261,11 @@ impl OrderingEngine for VectorizedEngine {
     /// restructured path plus cross-step reuse.
     fn session<'a>(&'a self, data: &Mat) -> Result<Box<dyn OrderingSession + 'a>> {
         Ok(Box::new(IncrementalSession::new(data, 1, false)?))
+    }
+
+    /// Serial exact workspace — batchable.
+    fn incremental_config(&self) -> Option<(usize, bool, SweepStrategy)> {
+        Some((1, false, SweepStrategy::Exact))
     }
 }
 

@@ -28,6 +28,11 @@
 //!   kernel tiled across a work-stealing worker pool (ParaLiNGAM-style);
 //!   the default CPU engine for the apps. Its sessions tile the shared
 //!   workspace sweeps across the same pool.
+//! - [`batch`] — the cross-panel counterpart: one [`BatchedSession`]
+//!   drives B same-shape panels in lock-step (panel-major caches,
+//!   per-panel roots/counters, bitwise solo parity), the workspace the
+//!   serve tier's fusion window and the bootstrap's resample groups
+//!   share.
 //! - [`direct`] — DirectLiNGAM (Shimizu et al. 2011): iterative exogenous
 //!   search + residualization, then adjacency estimation over the order.
 //!   Also the [`OrderingPlan`] seam, which generalizes the fit driver
@@ -44,6 +49,7 @@
 //! - [`fastica`] / [`ica`] — ICA-LiNGAM (Shimizu et al. 2006), the
 //!   original estimator (§2.2), as an independent cross-check.
 
+pub mod batch;
 pub mod entropy;
 pub mod engine;
 pub mod session;
@@ -57,6 +63,7 @@ pub mod partition;
 pub mod prune;
 pub mod var;
 
+pub use batch::{BatchOutcome, BatchedSession};
 pub use direct::{DirectLingam, LingamFit, OrderingPlan, PlanFit, PlanOrdering};
 pub use partition::{
     partition_columns, MergeMode, PartitionSpec, PartitionWorkspace, PartitionedPlan,
@@ -66,6 +73,6 @@ pub use engine::{OrderingEngine, SequentialEngine, VectorizedEngine};
 pub use parallel::ParallelEngine;
 pub use session::{IncrementalSession, OrderingSession, StatelessSession};
 pub use sweep::{SweepCounters, SweepStrategy};
-pub use xla_session::XlaSession;
+pub use xla_session::{XlaBatchSession, XlaSession};
 pub use ica::{IcaLingam, IcaLingamFit};
 pub use var::{VarLingam, VarLingamFit};

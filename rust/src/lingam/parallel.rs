@@ -191,6 +191,12 @@ impl OrderingEngine for ParallelEngine {
     fn sweep_strategy(&self) -> SweepStrategy {
         self.strategy
     }
+
+    /// Pooled incremental workspace — batchable with this exact pool
+    /// configuration and sweep strategy.
+    fn incremental_config(&self) -> Option<(usize, bool, SweepStrategy)> {
+        Some((self.workers, self.force_parallel, self.strategy))
+    }
 }
 
 /// The stateless pair sweep: row-tiled [`pair_diff`] over freshly

@@ -206,6 +206,247 @@ impl Drop for XlaSession {
     }
 }
 
+/// Resolve the batched artifact triple for `b` panels of `(n, d)`:
+/// `best_batch` buckets the init request, then the scores/update kinds
+/// must exist at exactly that `(n, d, b)` cell (the packed
+/// `[B, N+D+2, D]` state threads between them).
+pub(crate) fn resolve_batch_buckets(
+    registry: &ArtifactRegistry,
+    n: usize,
+    d: usize,
+    b: usize,
+) -> Result<(Bucket, Bucket, Bucket)> {
+    let init = registry.best_batch(ArtifactKind::SessionInitBatch, n, d, b)?.clone();
+    let scores = registry
+        .exact_batch(ArtifactKind::SessionScoresBatch, init.n, init.d, init.b)?
+        .clone();
+    let update = registry
+        .exact_batch(ArtifactKind::SessionUpdateBatch, init.n, init.d, init.b)?
+        .clone();
+    Ok((init, scores, update))
+}
+
+/// The device-resident **multi-panel** ordering session — the XLA
+/// analogue of [`BatchedSession`](super::batch::BatchedSession): B
+/// same-shape panels uploaded in **one** `session_init_batch` call and
+/// stepped in lock step, one `[B, D]` score fetch down and one
+/// `[B, D]` one-hot block up per step for the whole group.
+///
+/// Per-panel semantics are untouched: each lane's argmax runs on the
+/// host with the CPU engines' NaN-skip / lowest-index tie-break, a lane
+/// whose scores degenerate dies alone (its one-hot row stays all-zero —
+/// a device-side no-op — while peers keep stepping), and every batch
+/// slice of the vmapped artifacts is bitwise the solo artifact's
+/// output. Fusion groups shorter than the bucket's batch capacity pad
+/// the trailing slots with copies of panel 0; padded lanes are stepped
+/// but never read back.
+pub struct XlaBatchSession {
+    executor: Arc<DeviceExecutor>,
+    scores_path: PathBuf,
+    update_path: PathBuf,
+    /// Bucket (padded) capacities.
+    nb: usize,
+    db: usize,
+    bb: usize,
+    /// True panel extents and batch size.
+    n: usize,
+    d: usize,
+    b: usize,
+    /// Per-lane active masks, orders, and terminal errors.
+    active: Vec<Vec<bool>>,
+    orders: Vec<Vec<usize>>,
+    errors: Vec<Option<Error>>,
+    steps_done: usize,
+    state: Option<BufferId>,
+}
+
+impl XlaBatchSession {
+    /// Open a batched session: resolve the `(n, d, b)` artifact triple
+    /// and perform the group's **single** panel upload.
+    pub fn new(
+        executor: Arc<DeviceExecutor>,
+        registry: &ArtifactRegistry,
+        panels: &[Mat],
+    ) -> Result<XlaBatchSession> {
+        let b = panels.len();
+        if b == 0 {
+            return Err(Error::InvalidArgument("batched session needs ≥ 1 panel".into()));
+        }
+        let (n, d) = (panels[0].rows(), panels[0].cols());
+        for (p, panel) in panels.iter().enumerate().skip(1) {
+            if (panel.rows(), panel.cols()) != (n, d) {
+                return Err(Error::Shape(format!(
+                    "batched session needs same-shape panels: panel 0 is {n}x{d}, \
+                     panel {p} is {}x{}",
+                    panel.rows(),
+                    panel.cols()
+                )));
+            }
+        }
+        let (init, scores, update) = resolve_batch_buckets(registry, n, d, b)?;
+        let (nb, db, bb) = (init.n, init.d, init.b);
+        let mut session = XlaBatchSession {
+            executor,
+            scores_path: scores.path,
+            update_path: update.path,
+            nb,
+            db,
+            bb,
+            n,
+            d,
+            b,
+            active: vec![vec![true; d]; b],
+            orders: vec![Vec::with_capacity(d); b],
+            errors: (0..b).map(|_| None).collect(),
+            steps_done: 0,
+            state: None,
+        };
+        session.upload_panels(&init.path, panels)?;
+        Ok(session)
+    }
+
+    /// The one host→device transfer of the whole group: every panel
+    /// padded into its `[nb, db]` slot of a flattened `[bb, nb, db]`
+    /// block (trailing slots copy panel 0), one `session_init_batch`
+    /// call, packed state kept resident.
+    fn upload_panels(&mut self, init_path: &std::path::Path, panels: &[Mat]) -> Result<()> {
+        let slot = self.nb * self.db;
+        let mut x_pad = vec![0.0f32; self.bb * slot];
+        for p in 0..self.bb {
+            let panel = &panels[if p < self.b { p } else { 0 }];
+            for r in 0..self.n {
+                let src = panel.row(r);
+                let base = p * slot + r * self.db;
+                for (c, out) in x_pad[base..base + self.d].iter_mut().enumerate() {
+                    *out = src[c] as f32;
+                }
+            }
+        }
+        let mut row_mask = vec![0.0f32; self.bb * self.nb];
+        let mut col_mask = vec![0.0f32; self.bb * self.db];
+        for p in 0..self.bb {
+            for v in row_mask[p * self.nb..p * self.nb + self.n].iter_mut() {
+                *v = 1.0;
+            }
+            for v in col_mask[p * self.db..p * self.db + self.d].iter_mut() {
+                *v = 1.0;
+            }
+        }
+        let args = vec![
+            ArgValue::Host(HostArray::new(
+                vec![self.bb as i64, self.nb as i64, self.db as i64],
+                x_pad,
+            )),
+            ArgValue::Host(HostArray::new(vec![self.bb as i64, self.nb as i64], row_mask)),
+            ArgValue::Host(HostArray::new(vec![self.bb as i64, self.db as i64], col_mask)),
+        ];
+        let fresh = self.executor.run_resident(init_path.to_path_buf(), args)?;
+        if let Some(old) = self.state.take() {
+            self.executor.free_buffer(old);
+        }
+        self.state = Some(fresh);
+        Ok(())
+    }
+
+    /// True batch size (lanes, not the padded bucket capacity).
+    pub fn batch(&self) -> usize {
+        self.b
+    }
+
+    /// Lock steps completed; a full drive takes `d − 1`.
+    pub fn steps_done(&self) -> usize {
+        self.steps_done
+    }
+
+    /// Whether lane `p` is still stepping.
+    pub fn live(&self, p: usize) -> bool {
+        self.errors[p].is_none()
+    }
+
+    /// Lane `p`'s causal order so far (complete after the final step).
+    pub fn lane_order(&self, p: usize) -> &[usize] {
+        &self.orders[p]
+    }
+
+    /// Lane `p`'s terminal error, if it died.
+    pub fn lane_error(&self, p: usize) -> Option<&Error> {
+        self.errors[p].as_ref()
+    }
+
+    /// All `d − 1` steps done (or every lane dead).
+    pub fn finished(&self) -> bool {
+        self.steps_done >= self.d.saturating_sub(1) || self.errors.iter().all(|e| e.is_some())
+    }
+
+    /// One lock step for the whole group: one `[bb, db]` score fetch,
+    /// per-lane host argmax, one `[bb, db]` one-hot upload. Lanes whose
+    /// argmax fails die alone (all-zero one-hot row = device no-op).
+    /// The final step appends each surviving lane's last variable.
+    pub fn step_live(&mut self) -> Result<()> {
+        let state = self
+            .state
+            .ok_or_else(|| Error::Runtime("session has no device state".into()))?;
+        let out = self
+            .executor
+            .run_fetch(self.scores_path.clone(), vec![ArgValue::Device(state)])?;
+        let padded = out.f32s()?;
+        if padded.len() < self.bb * self.db {
+            return Err(Error::Runtime(format!(
+                "session_scores_batch returned {} entries for b={} d={}",
+                padded.len(),
+                self.bb,
+                self.db
+            )));
+        }
+        let mut onehot = vec![0.0f32; self.bb * self.db];
+        for p in 0..self.b {
+            if self.errors[p].is_some() {
+                continue;
+            }
+            let row = &padded[p * self.db..p * self.db + self.d];
+            let scores: Vec<f64> = (0..self.d)
+                .map(|i| if self.active[p][i] { row[i] as f64 } else { INACTIVE_SCORE })
+                .collect();
+            match argmax_active(&scores, &self.active[p]) {
+                Ok(chosen) => {
+                    onehot[p * self.db + chosen] = 1.0;
+                    self.active[p][chosen] = false;
+                    self.orders[p].push(chosen);
+                }
+                Err(e) => self.errors[p] = Some(e),
+            }
+        }
+        let args = vec![
+            ArgValue::Device(state),
+            ArgValue::Host(HostArray::new(vec![self.bb as i64, self.db as i64], onehot)),
+        ];
+        let next = self.executor.run_resident(self.update_path.clone(), args)?;
+        self.executor.free_buffer(state);
+        self.state = Some(next);
+        self.steps_done += 1;
+        if self.steps_done >= self.d.saturating_sub(1) {
+            for p in 0..self.b {
+                if self.errors[p].is_none() {
+                    let last = self.active[p]
+                        .iter()
+                        .position(|&a| a)
+                        .expect("exactly one variable remains");
+                    self.orders[p].push(last);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for XlaBatchSession {
+    fn drop(&mut self) {
+        if let Some(id) = self.state.take() {
+            self.executor.free_buffer(id);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -242,5 +483,32 @@ session_scores 4096 32 session_scores_n4096_d32.hlo.txt
         let empty = ArtifactRegistry::parse("", Path::new("/a")).unwrap();
         let e = resolve_session_buckets(&empty, 100, 8).unwrap_err();
         assert!(matches!(e, Error::NoArtifact { .. }), "{e}");
+    }
+
+    fn batch_reg() -> ArtifactRegistry {
+        let text = "\
+session_init_batch 256 8 4 session_init_batch_n256_d8_b4.hlo.txt
+session_scores_batch 256 8 4 session_scores_batch_n256_d8_b4.hlo.txt
+session_update_batch 256 8 4 session_update_batch_n256_d8_b4.hlo.txt
+session_init_batch 256 8 8 session_init_batch_n256_d8_b8.hlo.txt
+session_scores_batch 256 8 8 session_scores_batch_n256_d8_b8.hlo.txt
+";
+        ArtifactRegistry::parse(text, Path::new("/a")).unwrap()
+    }
+
+    #[test]
+    fn batch_triple_resolves_at_one_cell() {
+        // a 3-panel group rounds up to the b=4 cell, all three kinds
+        let (init, scores, update) = resolve_batch_buckets(&batch_reg(), 200, 8, 3).unwrap();
+        assert_eq!((init.n, init.d, init.b), (256, 8, 4));
+        assert_eq!((scores.n, scores.d, scores.b), (256, 8, 4));
+        assert_eq!((update.n, update.d, update.b), (256, 8, 4));
+    }
+
+    #[test]
+    fn incomplete_batch_triple_is_rejected() {
+        // the b=8 cell lacks session_update_batch: the triple must fail
+        // rather than mix cells
+        assert!(resolve_batch_buckets(&batch_reg(), 200, 8, 6).is_err());
     }
 }

@@ -368,6 +368,8 @@ fn serve_cmd(args: &Args) -> alingam::util::Result<()> {
         workers: args.usize("serve-workers"),
         queue_capacity: args.usize("queue-cap"),
         cache_entries: args.usize("cache-entries"),
+        fuse_wait_ms: args.usize("fuse-wait-ms") as u64,
+        max_batch: args.usize("max-batch"),
     };
     let server = alingam::serve::Server::start(cfg)?;
     // flushed eagerly so scripted callers (the CI smoke) can read the

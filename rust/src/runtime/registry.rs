@@ -25,6 +25,19 @@ pub enum ArtifactKind {
     /// `session_update(state, m_onehot) -> state` — commit the host's
     /// choice; the one-hot is the only per-step upload.
     SessionUpdate,
+    /// `session_init_batch(x, row_mask, col_mask) -> state` — the
+    /// batched session kinds: `jax.vmap` of the solo kinds over a
+    /// leading `[B]` axis, bitwise the solo outputs slice for slice.
+    /// One upload seeds B same-shape panels (short fusion groups pad
+    /// with copies of panel 0).
+    SessionInitBatch,
+    /// `session_scores_batch(state) -> k_lists` — the per-step
+    /// `[B, D]` score block, the only per-step download of a batch.
+    SessionScoresBatch,
+    /// `session_update_batch(state, m_onehots) -> state` — commit every
+    /// lane's host-side choice at once; an all-zero one-hot row is a
+    /// lane no-op (how finished/dropped lanes ride along).
+    SessionUpdateBatch,
     /// `var_fit(series, row_mask) -> (m1, resid)`
     VarFit,
 }
@@ -37,8 +50,22 @@ impl ArtifactKind {
             ArtifactKind::SessionInit => "session_init",
             ArtifactKind::SessionScores => "session_scores",
             ArtifactKind::SessionUpdate => "session_update",
+            ArtifactKind::SessionInitBatch => "session_init_batch",
+            ArtifactKind::SessionScoresBatch => "session_scores_batch",
+            ArtifactKind::SessionUpdateBatch => "session_update_batch",
             ArtifactKind::VarFit => "var_fit",
         }
+    }
+
+    /// Whether this kind carries a batch capacity (a 5-field manifest
+    /// line) in addition to the `(n, d)` shape bucket.
+    pub fn batched(self) -> bool {
+        matches!(
+            self,
+            ArtifactKind::SessionInitBatch
+                | ArtifactKind::SessionScoresBatch
+                | ArtifactKind::SessionUpdateBatch
+        )
     }
 
     fn parse(s: &str) -> Option<ArtifactKind> {
@@ -48,6 +75,9 @@ impl ArtifactKind {
             "session_init" => Some(ArtifactKind::SessionInit),
             "session_scores" => Some(ArtifactKind::SessionScores),
             "session_update" => Some(ArtifactKind::SessionUpdate),
+            "session_init_batch" => Some(ArtifactKind::SessionInitBatch),
+            "session_scores_batch" => Some(ArtifactKind::SessionScoresBatch),
+            "session_update_batch" => Some(ArtifactKind::SessionUpdateBatch),
             "var_fit" => Some(ArtifactKind::VarFit),
             _ => None,
         }
@@ -62,6 +92,9 @@ pub struct Bucket {
     pub n: usize,
     /// Variable-count capacity.
     pub d: usize,
+    /// Batch capacity — how many panels the artifact drives at once.
+    /// Always 1 for the unbatched kinds.
+    pub b: usize,
     /// HLO text file.
     pub path: PathBuf,
 }
@@ -74,7 +107,8 @@ pub struct ArtifactRegistry {
 
 impl ArtifactRegistry {
     /// Load `manifest.txt` from an artifact directory. Lines:
-    /// `kind n d filename`.
+    /// `kind n d filename`, or `kind n d b filename` for the batched
+    /// session kinds.
     pub fn load(dir: &Path) -> Result<ArtifactRegistry> {
         let manifest = dir.join("manifest.txt");
         let text = std::fs::read_to_string(&manifest).map_err(|e| {
@@ -95,14 +129,27 @@ impl ArtifactRegistry {
                 continue;
             }
             let parts: Vec<&str> = line.split_whitespace().collect();
-            if parts.len() != 4 {
+            if parts.len() != 4 && parts.len() != 5 {
                 return Err(Error::Parse(format!("manifest line {}: {line:?}", lineno + 1)));
             }
             let kind = ArtifactKind::parse(parts[0])
                 .ok_or_else(|| Error::Parse(format!("unknown artifact kind {:?}", parts[0])))?;
+            // the 5th (batch) field is present exactly for batched kinds
+            if kind.batched() != (parts.len() == 5) {
+                return Err(Error::Parse(format!(
+                    "manifest line {}: {line:?} has the wrong field count for {:?}",
+                    lineno + 1,
+                    parts[0]
+                )));
+            }
             let n: usize = parts[1].parse().map_err(|_| Error::Parse(line.into()))?;
             let d: usize = parts[2].parse().map_err(|_| Error::Parse(line.into()))?;
-            buckets.push(Bucket { kind, n, d, path: dir.join(parts[3]) });
+            let b: usize = if parts.len() == 5 {
+                parts[3].parse().map_err(|_| Error::Parse(line.into()))?
+            } else {
+                1
+            };
+            buckets.push(Bucket { kind, n, d, b, path: dir.join(parts[parts.len() - 1]) });
         }
         Ok(ArtifactRegistry { buckets })
     }
@@ -119,16 +166,7 @@ impl ArtifactRegistry {
             .iter()
             .filter(|b| b.kind == kind && b.n >= n && b.d >= d)
             .min_by_key(|b| (b.n * b.d, b.n))
-            .ok_or_else(|| Error::NoArtifact {
-                n,
-                d,
-                available: self
-                    .of_kind(kind)
-                    .iter()
-                    .map(|b| format!("{}x{}", b.n, b.d))
-                    .collect::<Vec<_>>()
-                    .join(","),
-            })
+            .ok_or_else(|| Error::NoArtifact { n, d, available: self.inventory(kind) })
     }
 
     /// The bucket of `kind` at exactly `(n, d)`. The three session kinds
@@ -139,16 +177,45 @@ impl ArtifactRegistry {
         self.buckets
             .iter()
             .find(|b| b.kind == kind && b.n == n && b.d == d)
-            .ok_or_else(|| Error::NoArtifact {
-                n,
-                d,
-                available: self
-                    .of_kind(kind)
-                    .iter()
-                    .map(|b| format!("{}x{}", b.n, b.d))
-                    .collect::<Vec<_>>()
-                    .join(","),
+            .ok_or_else(|| Error::NoArtifact { n, d, available: self.inventory(kind) })
+    }
+
+    /// Cheapest batched bucket covering `b` panels of `(n, d)`: minimal
+    /// padded volume `n_b · d_b · b_b`, ties broken toward smaller
+    /// `n_b`. Short groups pad the batch axis with copies of panel 0,
+    /// so any `b_b ≥ b` serves.
+    pub fn best_batch(&self, kind: ArtifactKind, n: usize, d: usize, b: usize) -> Result<&Bucket> {
+        self.buckets
+            .iter()
+            .filter(|k| k.kind == kind && k.n >= n && k.d >= d && k.b >= b)
+            .min_by_key(|k| (k.n * k.d * k.b, k.n))
+            .ok_or_else(|| Error::NoArtifact { n, d, available: self.inventory(kind) })
+    }
+
+    /// The batched bucket of `kind` at exactly `(n, d, b)` — like
+    /// [`exact`](Self::exact), the scores/update companions of a
+    /// [`best_batch`](Self::best_batch)-chosen init bucket must resolve
+    /// at the identical cell (the packed `[B, N+D+2, D]` state threads
+    /// between them).
+    pub fn exact_batch(&self, kind: ArtifactKind, n: usize, d: usize, b: usize) -> Result<&Bucket> {
+        self.buckets
+            .iter()
+            .find(|k| k.kind == kind && k.n == n && k.d == d && k.b == b)
+            .ok_or_else(|| Error::NoArtifact { n, d, available: self.inventory(kind) })
+    }
+
+    fn inventory(&self, kind: ArtifactKind) -> String {
+        self.of_kind(kind)
+            .iter()
+            .map(|k| {
+                if kind.batched() {
+                    format!("{}x{}b{}", k.n, k.d, k.b)
+                } else {
+                    format!("{}x{}", k.n, k.d)
+                }
             })
+            .collect::<Vec<_>>()
+            .join(",")
     }
 
     pub fn len(&self) -> usize {
@@ -228,6 +295,40 @@ var_fit 512 16 var_fit_t512_d16.hlo.txt
         assert!(r.exact(ArtifactKind::SessionUpdate, b.n, b.d).is_ok());
         // exact() does not re-bucket: a shape with no exact artifact errs
         assert!(r.exact(ArtifactKind::SessionScores, 800, 10).is_err());
+    }
+
+    #[test]
+    fn batch_lines_parse_and_resolve() {
+        let text = "\
+session_init 256 8 session_init_n256_d8.hlo.txt
+session_init_batch 256 8 4 session_init_batch_n256_d8_b4.hlo.txt
+session_init_batch 256 8 8 session_init_batch_n256_d8_b8.hlo.txt
+session_init_batch 1024 16 4 session_init_batch_n1024_d16_b4.hlo.txt
+session_scores_batch 256 8 4 session_scores_batch_n256_d8_b4.hlo.txt
+session_update_batch 256 8 4 session_update_batch_n256_d8_b4.hlo.txt
+";
+        let r = ArtifactRegistry::parse(text, Path::new("/a")).unwrap();
+        // unbatched kinds default the batch capacity to 1
+        assert_eq!(r.best(ArtifactKind::SessionInit, 200, 8).unwrap().b, 1);
+        // tightest covering cell by padded volume n·d·b
+        let b = r.best_batch(ArtifactKind::SessionInitBatch, 200, 8, 3).unwrap();
+        assert_eq!((b.n, b.d, b.b), (256, 8, 4));
+        let b = r.best_batch(ArtifactKind::SessionInitBatch, 200, 8, 6).unwrap();
+        assert_eq!((b.n, b.d, b.b), (256, 8, 8));
+        let b = r.best_batch(ArtifactKind::SessionInitBatch, 200, 12, 4).unwrap();
+        assert_eq!((b.n, b.d, b.b), (1024, 16, 4));
+        assert!(r.best_batch(ArtifactKind::SessionInitBatch, 200, 8, 9).is_err());
+        // companion kinds resolve at the exact chosen cell, never re-bucketed
+        assert!(r.exact_batch(ArtifactKind::SessionScoresBatch, 256, 8, 4).is_ok());
+        assert!(r.exact_batch(ArtifactKind::SessionUpdateBatch, 256, 8, 8).is_err());
+    }
+
+    #[test]
+    fn batch_field_count_is_enforced() {
+        // a batched kind needs its 5th field…
+        assert!(ArtifactRegistry::parse("session_init_batch 1 2 f", Path::new("/")).is_err());
+        // …and an unbatched kind must not carry one
+        assert!(ArtifactRegistry::parse("session_init 1 2 4 f", Path::new("/")).is_err());
     }
 
     #[test]

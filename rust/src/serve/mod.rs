@@ -30,14 +30,28 @@
 //! - [`queue`] — the bounded job queue: producers block at capacity
 //!   (real backpressure down the TCP connection), consumers round-robin
 //!   per-client lanes, each client's jobs run strictly FIFO, shutdown
-//!   drains.
+//!   drains. Its `take_group` is the **fusion window**: a worker that
+//!   pops a batchable fit may gather same-shape peers (prefix-only per
+//!   lane, so fusion can never reorder a client's results) for up to
+//!   [`ServeConfig::fuse_wait_ms`] or until
+//!   [`ServeConfig::max_batch`] jobs are in hand.
 //! - [`worker`] — worker threads owning parked [`IncrementalSession`]
 //!   workspaces keyed by shape + engine config, honoring per-request
 //!   `exact`/`pruned` strategy and worker counts, streaming per-step
 //!   ordering and per-resample bootstrap progress, checking cancel flags
 //!   at step boundaries. `partition[:B]` requests are routed through the
 //!   plan layer ([`crate::lingam::partition`]) with blocks-formed /
-//!   boundary-pair counters booked into [`ServeMetrics`].
+//!   boundary-pair counters booked into [`ServeMetrics`]. Fused groups
+//!   of same-shape fits run through one
+//!   [`BatchedSession`](crate::lingam::BatchedSession) — one
+//!   standardize pass and one sweep dispatch per step for the whole
+//!   group, bitwise the results each job would get alone, cancel still
+//!   honored per job at step boundaries, singletons on the existing
+//!   per-job path. Members answered by the submit-time cache while
+//!   their peers wait in the window leave no ghost slot: the group is
+//!   re-filled before dispatch. Fusion rates are observable as the
+//!   `batch` object of the `metrics` frame (`batches_dispatched`,
+//!   `jobs_fused`, mean occupancy, window wait).
 //! - [`cache`] — the panel-hash LRU: 128-bit FNV over panel bits +
 //!   canonical engine spec + options, hit/miss/eviction counters.
 //!
@@ -90,6 +104,14 @@ pub struct ServeConfig {
     pub queue_capacity: usize,
     /// Result-cache capacity in entries (0 disables caching).
     pub cache_entries: usize,
+    /// Fusion window: how long a batchable fit may wait for same-shape
+    /// peers before running, in milliseconds. 0 keeps fusion
+    /// opportunistic — only jobs already queued when the leader pops are
+    /// fused, and no latency is ever added.
+    pub fuse_wait_ms: u64,
+    /// Most jobs one batched session may drive (≥ 2 enables fusion; the
+    /// leader counts toward the limit).
+    pub max_batch: usize,
 }
 
 impl Default for ServeConfig {
@@ -99,6 +121,8 @@ impl Default for ServeConfig {
             workers: 2,
             queue_capacity: 64,
             cache_entries: 32,
+            fuse_wait_ms: 0,
+            max_batch: 8,
         }
     }
 }
@@ -125,6 +149,13 @@ pub struct ServeMetrics {
     pub(crate) blocks_formed: AtomicU64,
     /// Cross-block boundary pairs partitioned fits visited.
     pub(crate) boundary_pairs: AtomicU64,
+    /// Fused groups (≥ 2 jobs) driven through one batched session.
+    pub(crate) batches_dispatched: AtomicU64,
+    /// Jobs that ran inside a fused group (the per-batch occupancy is
+    /// `jobs_fused / batches_dispatched`).
+    pub(crate) jobs_fused: AtomicU64,
+    /// Total milliseconds batch leaders spent in the fusion window.
+    pub(crate) fuse_wait_ms_total: AtomicU64,
 }
 
 impl ServeMetrics {
@@ -137,6 +168,12 @@ impl ServeMetrics {
     pub(crate) fn add_partition(&self, blocks: u64, boundary: u64) {
         self.blocks_formed.fetch_add(blocks, Ordering::Relaxed);
         self.boundary_pairs.fetch_add(boundary, Ordering::Relaxed);
+    }
+
+    pub(crate) fn add_batch(&self, jobs: u64, wait_ms: u64) {
+        self.batches_dispatched.fetch_add(1, Ordering::Relaxed);
+        self.jobs_fused.fetch_add(jobs, Ordering::Relaxed);
+        self.fuse_wait_ms_total.fetch_add(wait_ms, Ordering::Relaxed);
     }
 }
 
@@ -194,6 +231,10 @@ pub(crate) struct Shared {
     pub(crate) metrics: ServeMetrics,
     pub(crate) cancels: CancelRegistry,
     pub(crate) worker_count: usize,
+    /// Fusion-window wait bound, ms (see [`ServeConfig::fuse_wait_ms`]).
+    pub(crate) fuse_wait_ms: u64,
+    /// Fused-group size bound; ≤ 1 disables fusion entirely.
+    pub(crate) max_batch: usize,
     /// Lazily built, shared XLA engine (a device thread + compile cache
     /// is far too expensive to stand up per request).
     xla: Mutex<Option<Arc<XlaEngine>>>,
@@ -255,6 +296,8 @@ impl Server {
             metrics: ServeMetrics::default(),
             cancels: CancelRegistry::default(),
             worker_count,
+            fuse_wait_ms: cfg.fuse_wait_ms,
+            max_batch: cfg.max_batch.max(1),
             xla: Mutex::new(None),
             started: Instant::now(),
             shutdown: AtomicBool::new(false),
@@ -500,10 +543,19 @@ fn metrics_frame(id: Option<&str>, shared: &Shared) -> String {
         m.blocks_formed.load(Ordering::Relaxed),
         m.boundary_pairs.load(Ordering::Relaxed),
     );
+    let dispatched = m.batches_dispatched.load(Ordering::Relaxed);
+    let fused = m.jobs_fused.load(Ordering::Relaxed);
+    let occupancy = if dispatched == 0 { 0.0 } else { fused as f64 / dispatched as f64 };
+    let batch = format!(
+        "{{\"batches_dispatched\":{dispatched},\"jobs_fused\":{fused},\
+         \"mean_occupancy\":{},\"fuse_wait_ms_total\":{}}}",
+        json_f64(occupancy),
+        m.fuse_wait_ms_total.load(Ordering::Relaxed),
+    );
     let body = format!(
         "\"event\":\"metrics\",\"workers\":{},\"uptime_ms\":{},\"queue_depth\":{},\
          \"in_flight\":{},\"busy_ms_total\":{},\"jobs\":{jobs},\"cache\":{cache},\
-         \"sweep\":{sweep},\"partition\":{partition}",
+         \"sweep\":{sweep},\"partition\":{partition},\"batch\":{batch}",
         shared.worker_count,
         shared.started.elapsed().as_millis(),
         shared.queue.depth(),

@@ -15,10 +15,24 @@
 //! unboundedly. [`JobQueue::close`] stops accepting new work but lets
 //! consumers drain everything already queued; once empty, every
 //! [`JobQueue::pop`] returns `None` and the workers exit.
+//!
+//! [`JobQueue::take_group`] is the **fusion window**: after popping a
+//! leader job, a worker may gather peer jobs that match a predicate
+//! (same shape / engine / options, decided by the worker) to drive
+//! through one batched session. Collection is *prefix-only* per lane —
+//! a lane's head must match for anything to be taken from it, and takes
+//! stop at the first non-matching job — so a client's results can never
+//! be reordered by fusion: every fused job precedes every left-behind
+//! job of its lane. Tapped lanes are marked in flight exactly like a
+//! popped lane (the worker owes one [`JobQueue::done`] per distinct
+//! client in the group), and the window waits at most until its
+//! deadline for stragglers, returning early once `want` jobs are in
+//! hand.
 
 use crate::util::{Error, Result};
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
+use std::time::Instant;
 
 /// One client's pending jobs.
 struct Lane<T> {
@@ -82,7 +96,10 @@ impl<T> JobQueue<T> {
             }),
         }
         s.len += 1;
-        self.not_empty.notify_one();
+        // notify_all: a popper and a fusion-window collector may both be
+        // waiting, and waking only one could strand the other while an
+        // eligible job sits queued
+        self.not_empty.notify_all();
         Ok(())
     }
 
@@ -111,6 +128,67 @@ impl<T> JobQueue<T> {
                 return None;
             }
             s = self.not_empty.wait(s).expect("job queue");
+        }
+    }
+
+    /// Gather up to `want` additional jobs to fuse with an already-popped
+    /// leader job (see module docs). Takes matching jobs from the head of
+    /// the leader's own lane and from the head of any lane with no job in
+    /// flight — never past the first non-matching job of a lane, so
+    /// per-client result order is preserved by construction. Waits until
+    /// `deadline` for the group to fill, returning early once `want`
+    /// jobs are collected or the queue closes. Every lane taken from is
+    /// marked in flight; the caller owes one [`done`](JobQueue::done)
+    /// per distinct client across the leader and the returned peers.
+    pub fn take_group<F: Fn(&T) -> bool>(
+        &self,
+        leader: u64,
+        want: usize,
+        deadline: Instant,
+        matches: F,
+    ) -> Vec<(u64, T)> {
+        let mut got: Vec<(u64, T)> = Vec::new();
+        if want == 0 {
+            return got;
+        }
+        let mut s = self.state.lock().expect("job queue");
+        loop {
+            for li in 0..s.lanes.len() {
+                if got.len() >= want {
+                    break;
+                }
+                let lane = &mut s.lanes[li];
+                // the leader's own lane is in flight *for this worker*;
+                // any other in-flight lane belongs to a different worker
+                // and must not be tapped
+                if lane.client != leader && lane.in_flight {
+                    continue;
+                }
+                let mut took = 0usize;
+                while got.len() < want && lane.jobs.front().is_some_and(&matches) {
+                    got.push((lane.client, lane.jobs.pop_front().expect("matched head")));
+                    took += 1;
+                }
+                if took > 0 {
+                    lane.in_flight = true;
+                    s.len -= took;
+                    for _ in 0..took {
+                        self.not_full.notify_one();
+                    }
+                }
+            }
+            if got.len() >= want || !s.open {
+                return got;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return got;
+            }
+            let (guard, _) = self
+                .not_empty
+                .wait_timeout(s, deadline - now)
+                .expect("job queue");
+            s = guard;
         }
     }
 
@@ -260,6 +338,77 @@ mod tests {
         std::thread::sleep(Duration::from_millis(30));
         q.close();
         assert_eq!(handle.join().unwrap(), None);
+    }
+
+    #[test]
+    fn take_group_is_prefix_only_per_lane() {
+        let q = JobQueue::new(16);
+        // own lane: fusable, fusable, NOT fusable, fusable — the window
+        // must stop at the first non-match and leave the tail queued
+        for j in [10, 11, 99, 12] {
+            q.push(1, j).unwrap();
+        }
+        let (c, j) = q.pop().unwrap();
+        assert_eq!((c, j), (1, 10));
+        let got = q.take_group(1, 4, Instant::now(), |&j| j < 50);
+        assert_eq!(got, vec![(1, 11)], "must stop at the non-matching head");
+        assert_eq!(q.depth(), 2, "99 and 12 stay queued in order");
+        q.done(1);
+        let (_, j) = q.pop().unwrap();
+        assert_eq!(j, 99, "lane order preserved after fusion");
+    }
+
+    #[test]
+    fn take_group_taps_peer_lanes_and_marks_them_in_flight() {
+        let q = JobQueue::new(16);
+        q.push(1, 10).unwrap();
+        q.push(2, 20).unwrap();
+        q.push(2, 21).unwrap();
+        q.push(3, 99).unwrap(); // does not match
+        let (c, _) = q.pop().unwrap();
+        assert_eq!(c, 1);
+        let got = q.take_group(1, 8, Instant::now(), |&j| j < 50);
+        assert_eq!(got, vec![(2, 20), (2, 21)]);
+        // client 2's lane is now in flight: the next pop must serve 3
+        let (c, j) = q.pop().unwrap();
+        assert_eq!((c, j), (3, 99));
+        q.done(1);
+        q.done(2);
+        q.done(3);
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn take_group_waits_for_stragglers_until_deadline() {
+        let q = Arc::new(JobQueue::new(8));
+        q.push(1, 10).unwrap();
+        let (c, _) = q.pop().unwrap();
+        assert_eq!(c, 1);
+        let pusher = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(40));
+                q.push(2, 20).unwrap();
+            })
+        };
+        let got = q.take_group(1, 2, Instant::now() + Duration::from_millis(400), |&j| j < 50);
+        pusher.join().unwrap();
+        assert_eq!(got, vec![(2, 20)], "a straggler inside the window must be fused");
+        q.done(1);
+        q.done(2);
+    }
+
+    #[test]
+    fn take_group_returns_partial_group_at_deadline() {
+        let q = JobQueue::<u32>::new(8);
+        q.push(1, 10).unwrap();
+        let (c, _) = q.pop().unwrap();
+        assert_eq!(c, 1);
+        let t0 = Instant::now();
+        let got = q.take_group(1, 4, t0 + Duration::from_millis(30), |_| true);
+        assert!(got.is_empty(), "no peers arrived: empty group");
+        assert!(t0.elapsed() >= Duration::from_millis(30), "must wait out the window");
+        q.done(1);
     }
 
     #[test]

@@ -25,6 +25,25 @@
 //! cancel flag at step/resample boundaries, and books its session's
 //! [`SweepCounters`](crate::lingam::SweepCounters) into the server
 //! metrics.
+//!
+//! # The fusion window
+//!
+//! A popped fit whose engine has an incremental workspace (a
+//! [`FuseKey`]) opens the queue's fusion window
+//! ([`JobQueue::take_group`](super::queue::JobQueue::take_group)):
+//! same-shape, same-engine-config peers gathered for up to
+//! `fuse_wait_ms` — or until `max_batch` members — run through **one**
+//! [`BatchedSession`], paying one standardize pass and one sweep
+//! dispatch per lock step for the whole group instead of per job.
+//! Fusion is strictly an execution optimization: the batched session is
+//! bitwise-parity-pinned against solo fits, each member streams its own
+//! progress, honors its own cancel flag at step boundaries (a canceled
+//! member drops out of the batch without stalling peers), fills its own
+//! cache entry and gets its own terminal frame. Members answered by the
+//! result cache (or already canceled) while the window is open leave
+//! the group immediately and their slots are refilled — no ghost slots
+//! dispatching a batch below `max_batch`. Groups that close with the
+//! leader alone fall back to the per-job path above.
 
 use super::cache::Fnv128;
 use super::protocol::{self, JobKind, JobSpec, PanelSource};
@@ -34,15 +53,16 @@ use crate::coordinator::{
 };
 use crate::linalg::Mat;
 use crate::lingam::direct::validate_panel;
+use crate::lingam::prune::PruneMethod;
 use crate::lingam::{
-    DirectLingam, IncrementalSession, LingamFit, OrderingEngine, OrderingSession, PartitionSpec,
-    PartitionedPlan, SequentialEngine, SweepStrategy, VarLingam,
+    BatchedSession, DirectLingam, IncrementalSession, LingamFit, OrderingEngine, OrderingSession,
+    PartitionSpec, PartitionedPlan, SequentialEngine, SweepStrategy, VarLingam,
 };
 use crate::util::{Error, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Where a job's response frames go: a connection-owned line writer
 /// (tests substitute a collecting closure). Must tolerate a vanished
@@ -76,15 +96,213 @@ type SessionPool = HashMap<PoolKey, IncrementalSession>;
 const MAX_PARKED_SESSIONS: usize = 8;
 
 /// One worker thread: drain the queue until close-and-empty, keeping
-/// per-shape parked sessions across jobs.
+/// per-shape parked sessions across jobs. Batchable fits route through
+/// the fusion window; everything else runs the per-job path.
 pub(super) fn worker_loop(shared: &Shared) {
     let mut pool: SessionPool = HashMap::new();
     while let Some((client, job)) = shared.queue.pop() {
-        shared.metrics.in_flight.fetch_add(1, Ordering::Relaxed);
-        run_job(shared, &mut pool, &job);
-        shared.metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
+        match fuse_key(shared.worker_count, &job) {
+            Some(key) if shared.max_batch > 1 => run_fused(shared, &mut pool, client, job, key),
+            _ => {
+                shared.metrics.in_flight.fetch_add(1, Ordering::Relaxed);
+                run_job(shared, &mut pool, &job);
+                shared.metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
+                shared.cancels.unregister(&job.spec.id, &job.cancel);
+                shared.queue.done(client);
+            }
+        }
+    }
+}
+
+/// The fusion identity of a batchable job: inline `fit` jobs with the
+/// same shape and the same resolved engine configuration may share one
+/// batched session. `None` for anything else (CSV panels, bootstrap /
+/// var jobs, engines without an incremental workspace).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct FuseKey {
+    n: usize,
+    d: usize,
+    choice: EngineChoice,
+}
+
+fn fuse_key(worker_count: usize, job: &Job) -> Option<FuseKey> {
+    if !matches!(job.spec.kind, JobKind::Fit) {
+        return None;
+    }
+    let PanelSource::Inline(panel) = &job.spec.panel else {
+        return None;
+    };
+    let choice = EngineChoice::parse(&job.spec.engine).ok()?.resolve_workers(worker_count);
+    incremental_params(choice)?;
+    Some(FuseKey { n: panel.rows(), d: panel.cols(), choice })
+}
+
+/// Worker-side cache re-check (the reader's submit-time short circuit
+/// can miss: an identical job may complete while this one sits in the
+/// queue or the fusion window). Answers and books the job on a hit.
+fn answer_from_cache(shared: &Shared, job: &Job) -> bool {
+    let PanelSource::Inline(panel) = &job.spec.panel else {
+        return false;
+    };
+    let Ok(choice) = EngineChoice::parse(&job.spec.engine) else {
+        return false;
+    };
+    let choice = choice.resolve_workers(shared.worker_count);
+    match shared.cache.get(cache_key(panel, choice, &job.spec.kind)) {
+        Some(hit) => {
+            shared.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+            (job.sink)(&protocol::frame_result(Some(job.spec.id.as_str()), true, 0.0, &hit));
+            true
+        }
+        None => false,
+    }
+}
+
+/// Drive a batchable leader job through the fusion window: gather
+/// same-key peers (bounded by `max_batch` / `fuse_wait_ms`), prune
+/// members answered by the cache or already canceled — their freed
+/// slots refill from the queue — then dispatch the group through one
+/// [`BatchedSession`], or fall back to the per-job path when the window
+/// closes with the leader alone. The worker owes the queue one `done`
+/// per distinct client it took jobs from, batched or pruned alike.
+fn run_fused(shared: &Shared, pool: &mut SessionPool, leader: u64, job: Job, key: FuseKey) {
+    let t0 = Instant::now();
+    let deadline = t0 + Duration::from_millis(shared.fuse_wait_ms);
+    if job.cancel.load(Ordering::Relaxed) {
+        shared.metrics.jobs_canceled.fetch_add(1, Ordering::Relaxed);
+        (job.sink)(&protocol::frame_canceled(&job.spec.id));
         shared.cancels.unregister(&job.spec.id, &job.cancel);
-        shared.queue.done(client);
+        shared.queue.done(leader);
+        return;
+    }
+    if answer_from_cache(shared, &job) {
+        shared.cancels.unregister(&job.spec.id, &job.cancel);
+        shared.queue.done(leader);
+        return;
+    }
+    let mut owed = vec![leader];
+    let mut members: Vec<Job> = vec![job];
+    loop {
+        let want = shared.max_batch.saturating_sub(members.len());
+        if want == 0 {
+            break;
+        }
+        let peers = shared.queue.take_group(leader, want, deadline, |j| {
+            fuse_key(shared.worker_count, j) == Some(key)
+        });
+        if peers.is_empty() {
+            break;
+        }
+        for (c, j) in peers {
+            if !owed.contains(&c) {
+                owed.push(c);
+            }
+            // ghost-slot fix: members answered before dispatch leave the
+            // group immediately, so the next round refills their slots
+            // instead of dispatching a batch below `max_batch`
+            if j.cancel.load(Ordering::Relaxed) {
+                shared.metrics.jobs_canceled.fetch_add(1, Ordering::Relaxed);
+                (j.sink)(&protocol::frame_canceled(&j.spec.id));
+                shared.cancels.unregister(&j.spec.id, &j.cancel);
+            } else if answer_from_cache(shared, &j) {
+                shared.cancels.unregister(&j.spec.id, &j.cancel);
+            } else {
+                members.push(j);
+            }
+        }
+    }
+    shared.metrics.in_flight.fetch_add(members.len() as u64, Ordering::Relaxed);
+    if members.len() == 1 {
+        run_job(shared, pool, &members[0]);
+    } else {
+        shared.metrics.add_batch(members.len() as u64, t0.elapsed().as_millis() as u64);
+        run_batch(shared, &members, key.choice);
+    }
+    shared.metrics.in_flight.fetch_sub(members.len() as u64, Ordering::Relaxed);
+    for j in &members {
+        shared.cancels.unregister(&j.spec.id, &j.cancel);
+    }
+    for c in owed {
+        shared.queue.done(c);
+    }
+}
+
+/// Dispatch a fused group through one [`BatchedSession`]: one
+/// standardize pass and one sweep per lock step for the whole group,
+/// per-member progress and cancel at step boundaries, per-member
+/// terminal frames, cache fills and metrics — bitwise the results each
+/// member would have produced alone (`tests/batch_agreement.rs` pins
+/// the session, the serve integration suite pins this path end to end).
+fn run_batch(shared: &Shared, members: &[Job], choice: EngineChoice) {
+    let t0 = Instant::now();
+    let (workers, strategy) = incremental_params(choice).expect("fusable engine choice");
+    let panels: Vec<Mat> = members
+        .iter()
+        .map(|j| match &j.spec.panel {
+            PanelSource::Inline(m) => m.clone(),
+            PanelSource::Csv(_) => unreachable!("fusion groups are inline-only"),
+        })
+        .collect();
+    let mut session = match BatchedSession::with_strategy(&panels, workers, false, strategy) {
+        Ok(s) => s,
+        Err(e) => {
+            // batch-level precondition failure: same-shape fusable groups
+            // cannot actually hit this, but never panic a worker — fail
+            // every member with the same error instead
+            shared.metrics.jobs_failed.fetch_add(members.len() as u64, Ordering::Relaxed);
+            let msg = e.to_string();
+            for j in members {
+                (j.sink)(&protocol::frame_error(Some(j.spec.id.as_str()), &msg));
+            }
+            return;
+        }
+    };
+    let total = session.steps_total();
+    while !session.finished() {
+        session.step_live();
+        let step = session.steps_done();
+        for (p, j) in members.iter().enumerate() {
+            if !session.live(p) {
+                continue;
+            }
+            if j.cancel.load(Ordering::Relaxed) {
+                let reason = Error::Canceled(format!("fit canceled at step {step}/{total}"));
+                session.drop_lane(p, reason);
+            } else {
+                (j.sink)(&protocol::frame_progress(&j.spec.id, "ordering", step, total));
+            }
+        }
+    }
+    let spec = choice.spec();
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    for (j, out) in members.iter().zip(session.into_fits(&panels, PruneMethod::default())) {
+        // book the sweep work before the terminal frame, failed and
+        // canceled lanes included (the solo path books the same way)
+        shared.metrics.add_sweep(&out.counters);
+        match out.result {
+            Ok(fit) => {
+                let payload = Arc::new(protocol::fit_data(
+                    &spec,
+                    &fit.order,
+                    &fit.adjacency,
+                    &out.counters,
+                ));
+                if let PanelSource::Inline(panel) = &j.spec.panel {
+                    shared.cache.put(cache_key(panel, choice, &JobKind::Fit), payload.clone());
+                }
+                shared.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                shared.metrics.busy_ms_total.fetch_add(ms.round() as u64, Ordering::Relaxed);
+                (j.sink)(&protocol::frame_result(Some(j.spec.id.as_str()), false, ms, &payload));
+            }
+            Err(Error::Canceled(_)) => {
+                shared.metrics.jobs_canceled.fetch_add(1, Ordering::Relaxed);
+                (j.sink)(&protocol::frame_canceled(&j.spec.id));
+            }
+            Err(e) => {
+                shared.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                (j.sink)(&protocol::frame_error(Some(j.spec.id.as_str()), &e.to_string()));
+            }
+        }
     }
 }
 
@@ -431,5 +649,42 @@ mod tests {
         assert_eq!(incremental_params(EngineChoice::Partition { blocks: 0 }), None);
         assert_eq!(incremental_params(EngineChoice::Partition { blocks: 4 }), None);
         assert_eq!(incremental_params(EngineChoice::Xla), None);
+    }
+
+    fn job(engine: &str, panel: PanelSource, kind: JobKind) -> Job {
+        Job {
+            spec: JobSpec { id: "j".into(), panel, engine: engine.into(), kind },
+            cancel: Arc::new(AtomicBool::new(false)),
+            sink: Arc::new(|_| {}),
+        }
+    }
+
+    #[test]
+    fn fuse_key_routes_only_inline_incremental_fits() {
+        let inline = || PanelSource::Inline(panel());
+        // incremental engines on inline fits are fusable, keyed by shape
+        // and the *resolved* engine configuration
+        let key = fuse_key(4, &job("vectorized", inline(), JobKind::Fit)).expect("fusable");
+        assert_eq!(key, FuseKey { n: 3, d: 2, choice: EngineChoice::Vectorized });
+        assert_eq!(
+            fuse_key(4, &job("pruned:2", inline(), JobKind::Fit)).map(|k| k.choice),
+            Some(EngineChoice::Pruned { workers: 2 })
+        );
+        // auto worker counts resolve before keying, so an auto spec and
+        // its resolved form land in the same fusion group
+        let auto = fuse_key(4, &job("parallel", inline(), JobKind::Fit)).expect("fusable");
+        assert!(!matches!(auto.choice, EngineChoice::Parallel { workers: 0 }));
+        let pinned = format!("parallel:{}", EngineChoice::per_job_workers(4));
+        assert_eq!(Some(auto), fuse_key(4, &job(&pinned, inline(), JobKind::Fit)));
+        // everything else runs the per-job path
+        assert_eq!(fuse_key(4, &job("sequential", inline(), JobKind::Fit)), None);
+        assert_eq!(fuse_key(4, &job("partition", inline(), JobKind::Fit)), None);
+        assert_eq!(fuse_key(4, &job("xla", inline(), JobKind::Fit)), None);
+        assert_eq!(fuse_key(4, &job("no-such-engine", inline(), JobKind::Fit)), None);
+        let csv = PanelSource::Csv("/tmp/panel.csv".into());
+        assert_eq!(fuse_key(4, &job("vectorized", csv, JobKind::Fit)), None);
+        let boot = JobKind::Bootstrap { resamples: 4, seed: 0, threshold: 0.5, workers: 1 };
+        assert_eq!(fuse_key(4, &job("vectorized", inline(), boot)), None);
+        assert_eq!(fuse_key(4, &job("vectorized", inline(), JobKind::Var { lags: 1 })), None);
     }
 }

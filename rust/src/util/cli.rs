@@ -160,6 +160,8 @@ pub fn serve_opts() -> Vec<OptSpec> {
         opt("serve-workers", "serve: worker threads (0 = per-core, capped at 4)", Some("2")),
         opt("queue-cap", "serve: job-queue capacity (backpressure past it)", Some("64")),
         opt("cache-entries", "serve: result-cache capacity (0 disables)", Some("32")),
+        opt("fuse-wait-ms", "serve: fusion-window wait for same-shape peers (0 = none)", Some("0")),
+        opt("max-batch", "serve: most fits one batched session may fuse (1 disables)", Some("8")),
         opt("job-id", "client: job id echoed on response frames", Some("job-1")),
         opt("csv", "client: server-side CSV path instead of an inline panel", None),
         opt("threshold", "client bootstrap: stable-edge probability cutoff", Some("0.5")),
@@ -210,6 +212,8 @@ mod tests {
         assert_eq!(a.usize("serve-workers"), 2);
         assert_eq!(a.usize("queue-cap"), 64);
         assert_eq!(a.usize("cache-entries"), 32);
+        assert_eq!(a.usize("fuse-wait-ms"), 0);
+        assert_eq!(a.usize("max-batch"), 8);
         assert_eq!(a.get("csv"), None);
     }
 

@@ -1,0 +1,252 @@
+//! The batched-session parity contract, property-tested end to end:
+//! a B-panel [`BatchedSession`] fit is **bitwise** identical — causal
+//! orders, per-step score rows, adjacency matrices, and pruned-sweep
+//! counters — to B independent [`IncrementalSession`] fits with the
+//! same pool configuration, across randomized panels, shapes, sweep
+//! strategies, and worker counts. Uses the hand-rolled `util::prop`
+//! mini-framework (proptest is not in the offline crate set); failures
+//! print a replay seed (`ALINGAM_PROP_SEED=...`).
+//!
+//! The one deliberate exception: multi-worker **pruned** sweeps
+//! partition candidate rows across threads, so loser scores and skip
+//! counters are execution-order-dependent even solo-vs-solo. For that
+//! configuration the pinned surface is what the algorithm guarantees —
+//! the chosen order and the adjacency regressed from it.
+
+use alingam::lingam::prune::PruneMethod;
+use alingam::lingam::{
+    BatchedSession, DirectLingam, IncrementalSession, LingamFit, OrderingSession, SweepCounters,
+    SweepStrategy,
+};
+use alingam::linalg::Mat;
+use alingam::sim::{simulate_sem, SemSpec};
+use alingam::util::prop::{props, Gen};
+use alingam::util::rng::Pcg64;
+use alingam::util::Error;
+
+/// One solo reference fit with an explicit pool configuration.
+fn solo(
+    panel: &Mat,
+    workers: usize,
+    force: bool,
+    strategy: SweepStrategy,
+) -> (LingamFit, SweepCounters) {
+    let mut session = IncrementalSession::with_strategy(panel, workers, force, strategy).unwrap();
+    let fit = DirectLingam::new().fit_session(panel, &mut session).unwrap();
+    let counters = session.sweep_counters();
+    (fit, counters)
+}
+
+/// A random batch of same-shape SEM panels.
+fn random_panels(g: &mut Gen, b: usize) -> Vec<Mat> {
+    let d = g.usize_in(3, 7);
+    let n = g.usize_in(60, 160);
+    let p_edge = g.f64_in(0.4, 0.9);
+    (0..b)
+        .map(|_| simulate_sem(&SemSpec::layered(d, 2, p_edge), n, g.rng()).data)
+        .collect()
+}
+
+/// Assert full bitwise parity of one batch outcome against its solo fit.
+fn assert_bitwise(
+    label: &str,
+    p: usize,
+    out: &alingam::lingam::BatchOutcome,
+    fit: &LingamFit,
+    counters: &SweepCounters,
+) {
+    let batch_fit = out.result.as_ref().unwrap();
+    assert_eq!(batch_fit.order, fit.order, "{label}: panel {p} order");
+    assert_eq!(batch_fit.step_scores, fit.step_scores, "{label}: panel {p} step scores");
+    assert_eq!(batch_fit.adjacency, fit.adjacency, "{label}: panel {p} adjacency");
+    assert_eq!(out.counters, *counters, "{label}: panel {p} sweep counters");
+}
+
+#[test]
+fn prop_serial_exact_batch_is_bitwise_solo() {
+    props("serial exact batch parity", 25, |g: &mut Gen| {
+        let b = g.usize_in(2, 5);
+        let panels = random_panels(g, b);
+        let outs = BatchedSession::fit_batch(
+            &panels,
+            1,
+            false,
+            SweepStrategy::Exact,
+            PruneMethod::default(),
+        )
+        .unwrap();
+        for (p, out) in outs.iter().enumerate() {
+            let (fit, counters) = solo(&panels[p], 1, false, SweepStrategy::Exact);
+            assert_bitwise("serial exact", p, out, &fit, &counters);
+        }
+    });
+}
+
+#[test]
+fn prop_serial_pruned_batch_is_bitwise_solo_with_counters() {
+    props("serial pruned batch parity", 25, |g: &mut Gen| {
+        let b = g.usize_in(2, 4);
+        let panels = random_panels(g, b);
+        let outs = BatchedSession::fit_batch(
+            &panels,
+            1,
+            false,
+            SweepStrategy::Pruned,
+            PruneMethod::default(),
+        )
+        .unwrap();
+        for (p, out) in outs.iter().enumerate() {
+            // the bound-pruned sweep's skip/visit counters are part of
+            // the contract: batching must not change which comparisons
+            // the bound eliminates
+            let (fit, counters) = solo(&panels[p], 1, false, SweepStrategy::Pruned);
+            assert_bitwise("serial pruned", p, out, &fit, &counters);
+        }
+    });
+}
+
+#[test]
+fn prop_pair_pooled_exact_batch_is_bitwise_solo() {
+    // force_parallel drives the tiled pair sweep regardless of panel
+    // size; the batch must make the identical pool-vs-serial decision
+    // at every lock step and reuse the identical tiled kernel
+    props("pair-pooled exact batch parity", 15, |g: &mut Gen| {
+        let b = g.usize_in(2, 4);
+        let workers = g.usize_in(2, 4);
+        let panels = random_panels(g, b);
+        let outs = BatchedSession::fit_batch(
+            &panels,
+            workers,
+            true,
+            SweepStrategy::Exact,
+            PruneMethod::default(),
+        )
+        .unwrap();
+        for (p, out) in outs.iter().enumerate() {
+            let (fit, counters) = solo(&panels[p], workers, true, SweepStrategy::Exact);
+            assert_bitwise("pooled exact", p, out, &fit, &counters);
+        }
+    });
+}
+
+#[test]
+fn prop_pooled_pruned_batch_matches_orders_and_adjacency() {
+    // multi-worker pruned sweeps are execution-order-dependent in loser
+    // scores and counters (solo runs differ from each other too), so
+    // the pinned surface is the order and the adjacency it implies
+    props("pooled pruned batch order parity", 15, |g: &mut Gen| {
+        let b = g.usize_in(2, 4);
+        let workers = g.usize_in(2, 4);
+        let panels = random_panels(g, b);
+        let outs = BatchedSession::fit_batch(
+            &panels,
+            workers,
+            true,
+            SweepStrategy::Pruned,
+            PruneMethod::default(),
+        )
+        .unwrap();
+        for (p, out) in outs.iter().enumerate() {
+            let (fit, _) = solo(&panels[p], workers, true, SweepStrategy::Pruned);
+            let batch_fit = out.result.as_ref().unwrap();
+            assert_eq!(batch_fit.order, fit.order, "panel {p} order");
+            assert_eq!(batch_fit.adjacency, fit.adjacency, "panel {p} adjacency");
+        }
+    });
+}
+
+#[test]
+fn prop_degenerate_panel_fails_alone() {
+    // a constant-column panel dies with the solo path's validation
+    // error while its batch peers stay bitwise-solo
+    props("degenerate lane isolation", 15, |g: &mut Gen| {
+        let mut panels = random_panels(g, 3);
+        let bad = g.usize_in(0, 2);
+        let col = g.usize_in(0, panels[bad].cols() - 1);
+        for r in 0..panels[bad].rows() {
+            panels[bad][(r, col)] = 4.25;
+        }
+        let outs = BatchedSession::fit_batch(
+            &panels,
+            1,
+            false,
+            SweepStrategy::Exact,
+            PruneMethod::default(),
+        )
+        .unwrap();
+        for (p, out) in outs.iter().enumerate() {
+            if p == bad {
+                let err = out.result.as_ref().unwrap_err();
+                assert!(err.to_string().contains("constant"), "panel {p}: {err}");
+            } else {
+                let (fit, counters) = solo(&panels[p], 1, false, SweepStrategy::Exact);
+                assert_bitwise("degenerate peer", p, out, &fit, &counters);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_dropped_lane_leaves_peers_bitwise_solo() {
+    // cancel semantics: a lane dropped at a step boundary (the serve
+    // worker's per-job cancel) reports its reason; peers are unaffected
+    props("dropped lane isolation", 15, |g: &mut Gen| {
+        let panels = random_panels(g, 3);
+        let drop_at = g.usize_in(0, panels[0].cols() - 2);
+        let dropped = g.usize_in(0, 2);
+        let mut session =
+            BatchedSession::with_strategy(&panels, 1, false, SweepStrategy::Exact).unwrap();
+        while !session.finished() {
+            if session.steps_done() == drop_at && session.live(dropped) {
+                session.drop_lane(dropped, Error::Canceled("fit canceled".into()));
+            }
+            session.step_live();
+        }
+        let outs = session.into_fits(&panels, PruneMethod::default());
+        for (p, out) in outs.iter().enumerate() {
+            if p == dropped {
+                assert!(
+                    matches!(out.result, Err(Error::Canceled(_))),
+                    "panel {p}: {:?}",
+                    out.result
+                );
+            } else {
+                let (fit, counters) = solo(&panels[p], 1, false, SweepStrategy::Exact);
+                assert_bitwise("dropped-lane peer", p, out, &fit, &counters);
+            }
+        }
+    });
+}
+
+#[test]
+fn cross_panel_threading_is_bitwise_neutral() {
+    // small panels route whole lanes across the pool (serial inner
+    // kernels): scheduling must not move a single bit vs the serial walk
+    let mut rng = Pcg64::seed_from_u64(404);
+    let panels: Vec<Mat> = (0..4)
+        .map(|_| simulate_sem(&SemSpec::layered(5, 2, 0.6), 90, &mut rng).data)
+        .collect();
+    let serial = BatchedSession::fit_batch(
+        &panels,
+        1,
+        false,
+        SweepStrategy::Exact,
+        PruneMethod::default(),
+    )
+    .unwrap();
+    let threaded = BatchedSession::fit_batch(
+        &panels,
+        4,
+        false,
+        SweepStrategy::Exact,
+        PruneMethod::default(),
+    )
+    .unwrap();
+    for (p, (a, b)) in serial.iter().zip(&threaded).enumerate() {
+        let (fa, fb) = (a.result.as_ref().unwrap(), b.result.as_ref().unwrap());
+        assert_eq!(fa.order, fb.order, "panel {p} order");
+        assert_eq!(fa.step_scores, fb.step_scores, "panel {p} step scores");
+        assert_eq!(fa.adjacency, fb.adjacency, "panel {p} adjacency");
+        assert_eq!(a.counters, b.counters, "panel {p} counters");
+    }
+}

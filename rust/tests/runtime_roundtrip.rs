@@ -47,6 +47,39 @@ fn manifest_session_triples_complete() {
     }
 }
 
+#[test]
+fn manifest_batch_triples_complete() {
+    // every batched cell must carry all three batched kinds at the same
+    // (n, d, b), and its (n, d) must also exist solo (the singleton
+    // fallback when a fusion group collapses to one job)
+    let reg = ArtifactRegistry::load(&artifact_dir()).expect("run `make artifacts`");
+    let inits = reg.of_kind(ArtifactKind::SessionInitBatch);
+    assert!(!inits.is_empty(), "no session_init_batch artifacts in manifest");
+    for b in inits {
+        assert!(b.b > 1, "batch bucket with b={}", b.b);
+        assert!(
+            reg.exact_batch(ArtifactKind::SessionScoresBatch, b.n, b.d, b.b).is_ok(),
+            "no session_scores_batch at {}x{}b{}",
+            b.n,
+            b.d,
+            b.b
+        );
+        assert!(
+            reg.exact_batch(ArtifactKind::SessionUpdateBatch, b.n, b.d, b.b).is_ok(),
+            "no session_update_batch at {}x{}b{}",
+            b.n,
+            b.d,
+            b.b
+        );
+        assert!(
+            reg.exact(ArtifactKind::SessionInit, b.n, b.d).is_ok(),
+            "batch cell {}x{} has no solo session_init",
+            b.n,
+            b.d
+        );
+    }
+}
+
 #[cfg(feature = "xla")]
 mod with_device {
     use alingam::lingam::var::var1_fit;
@@ -251,6 +284,60 @@ mod with_device {
         // downloads: one [db] score row per step — the residualized
         // panel never comes back to the host
         assert_eq!(down, steps * 4 * db as u64, "download bytes");
+    }
+
+    #[test]
+    fn batched_session_uploads_once_and_steps_the_whole_group() {
+        use alingam::lingam::XlaBatchSession;
+        // the fusion acceptance assertion: B same-shape panels pay ONE
+        // session_init upload and ONE scores dispatch per lock step for
+        // the whole batch — counted byte-exactly — and every lane's
+        // order is the solo XLA fit's order
+        let engine = XlaEngine::from_default_artifacts().expect("run `make artifacts`");
+        let mut rng = Pcg64::seed_from_u64(47);
+        let (n, d) = (200usize, 6usize);
+        let panels: Vec<_> = (0..3)
+            .map(|_| simulate_sem(&SemSpec::layered(d, 2, 0.5), n, &mut rng).data)
+            .collect();
+        let solo_orders: Vec<_> = panels
+            .iter()
+            .map(|p| DirectLingam::new().fit(p, &engine).unwrap().order)
+            .collect();
+        let bucket = engine
+            .registry()
+            .best_batch(ArtifactKind::SessionInitBatch, n, d, panels.len())
+            .expect("batch bucket")
+            .clone();
+        let (nb, db, bb) = (bucket.n, bucket.d, bucket.b);
+
+        let before = engine.executor().stats.snapshot();
+        let mut session =
+            XlaBatchSession::new(engine.executor().clone(), engine.registry(), &panels).unwrap();
+        while !session.finished() {
+            session.step_live().unwrap();
+        }
+        let after = engine.executor().stats.snapshot();
+
+        for (p, solo) in solo_orders.iter().enumerate() {
+            assert!(session.live(p), "lane {p} died: {:?}", session.lane_error(p));
+            assert_eq!(session.lane_order(p), &solo[..], "lane {p} diverged from solo");
+        }
+        let steps = (d - 1) as u64;
+        let calls = after.0 - before.0;
+        let up = after.1 - before.1;
+        let down = after.2 - before.2;
+        // one batched init + (scores, update) per lock step — NOT per job
+        assert_eq!(calls, 1 + 2 * steps, "unexpected device call count");
+        // uploads: the flattened [bb, nb, db] panel block + masks once,
+        // then one [bb, db] one-hot block per step
+        let init_bytes = 4 * (bb * nb * db + bb * nb + bb * db) as u64;
+        assert_eq!(up, init_bytes + steps * 4 * (bb * db) as u64, "upload bytes");
+        // downloads: one [bb, db] score block per step
+        assert_eq!(down, steps * 4 * (bb * db) as u64, "download bytes");
+        // buffer hygiene: the resident state is swapped, never duplicated
+        drop(session);
+        let _ = engine.executor().platform().unwrap();
+        assert_eq!(engine.executor().stats.live_buffers(), 0, "batched state leaked");
     }
 
     #[test]

@@ -3,8 +3,11 @@
 //! short-circuit and worker-side CSV path), streamed per-step and
 //! per-resample progress, ≥ 4 concurrent clients with per-client FIFO
 //! completion, cooperative cancellation, error recovery on one
-//! connection, and graceful drain on shutdown — the acceptance criteria
-//! of the serve subsystem.
+//! connection, graceful drain on shutdown, and the fusion window —
+//! concurrent same-shape fits batched through one session with the
+//! metrics to prove it, and the worker-side cache short-circuit that
+//! answers a tapped twin without leaving a ghost batch slot — the
+//! acceptance criteria of the serve subsystem.
 
 use alingam::lingam::{DirectLingam, VectorizedEngine};
 use alingam::linalg::Mat;
@@ -16,11 +19,20 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
 
 fn start(workers: usize, queue: usize, cache: usize) -> Server {
+    // max_batch 1 disables the fusion window: these tests pin the
+    // original one-job-per-session behavior
+    start_fused(workers, queue, cache, 0, 1)
+}
+
+/// Like [`start`] but with the fusion window enabled.
+fn start_fused(workers: usize, queue: usize, cache: usize, wait: u64, batch: usize) -> Server {
     Server::start(ServeConfig {
         addr: "127.0.0.1:0".to_string(),
         workers,
         queue_capacity: queue,
         cache_entries: cache,
+        fuse_wait_ms: wait,
+        max_batch: batch,
     })
     .expect("server start")
 }
@@ -104,6 +116,14 @@ fn jobs_counter(frame: &Json, key: &str) -> u64 {
         .and_then(|j| j.get(key))
         .and_then(Json::as_u64)
         .unwrap_or_else(|| panic!("metrics frame missing jobs.{key}"))
+}
+
+fn batch_counter(frame: &Json, key: &str) -> u64 {
+    frame
+        .get("batch")
+        .and_then(|b| b.get(key))
+        .and_then(Json::as_u64)
+        .unwrap_or_else(|| panic!("metrics frame missing batch.{key}"))
 }
 
 /// The acceptance criterion: a d=32 chain fit over the socket returns
@@ -445,5 +465,121 @@ fn pruned_engine_requests_match_exact_and_report_sweep_savings() {
     let total = sweep.get("pairs_total").and_then(Json::as_u64).unwrap();
     let visited = sweep.get("pairs_visited").and_then(Json::as_u64).unwrap();
     assert!(visited < total, "pruned sweep saved no kernel calls: {}", frame.render());
+    server.shutdown();
+}
+
+/// The fusion window: two same-shape fits from different clients
+/// arriving within the window run through one batched session — the
+/// metrics frame books exactly one batch of two — while returning the
+/// same orders as direct fits, streaming per-step progress, and never
+/// reordering a client's own results.
+#[test]
+fn concurrent_same_shape_fits_fuse_into_one_batched_session() {
+    let server = start_fused(1, 16, 0, 500, 4);
+    let addr = server.local_addr();
+    let p1 = layered_panel(300, 6, 70);
+    let p2 = layered_panel(300, 6, 71);
+    let p3 = layered_panel(250, 5, 72); // different shape: never fuses
+    let d1 = DirectLingam::new().fit(&p1, &VectorizedEngine).unwrap();
+    let d2 = DirectLingam::new().fit(&p2, &VectorizedEngine).unwrap();
+    let d3 = DirectLingam::new().fit(&p3, &VectorizedEngine).unwrap();
+    let mut c1 = Client::connect(addr);
+    let mut c2 = Client::connect(addr);
+    c1.send(&protocol::fit_request("f1", "vectorized", &p1));
+    let _ = c1.recv_event("accepted");
+    // the single worker holds f1 in its fusion window for up to 500 ms;
+    // f2 lands well inside it, f3 (a different shape) must run alone
+    c2.send(&protocol::fit_request("f2", "vectorized", &p2));
+    c1.send(&protocol::fit_request("f3", "vectorized", &p3));
+
+    // collect c1's terminal frames in arrival order: per-client FIFO
+    // must survive fusion
+    let mut order1 = Vec::new();
+    let mut frames1 = Vec::new();
+    let mut progress_f1 = 0usize;
+    while frames1.len() < 2 {
+        let f = c1.recv();
+        match f.get("event").and_then(Json::as_str) {
+            Some("result") => {
+                order1.push(f.get("id").and_then(Json::as_str).unwrap().to_string());
+                frames1.push(f);
+            }
+            Some("error" | "canceled") => panic!("job failed: {}", f.render()),
+            Some("progress") if f.get("id").and_then(Json::as_str) == Some("f1") => {
+                assert_eq!(f.get("stage").and_then(Json::as_str), Some("ordering"));
+                progress_f1 += 1;
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(order1, ["f1", "f3"], "fusion reordered a client's results");
+    assert_eq!(progress_f1, 5, "fused fits must stream one progress frame per step");
+    assert_eq!(order_of(&frames1[0]), d1.order, "fused fit diverged from the direct fit");
+    assert_eq!(frames1[0].get("cached").and_then(Json::as_bool), Some(false));
+    assert_eq!(order_of(&frames1[1]), d3.order);
+    let (ev2, f2) = c2.recv_terminal("f2");
+    assert_eq!(ev2, "result");
+    assert_eq!(order_of(&f2), d2.order, "fused fit diverged from the direct fit");
+
+    c1.send(&protocol::control_request("metrics"));
+    let m = c1.recv_event("metrics");
+    assert_eq!(batch_counter(&m, "batches_dispatched"), 1, "{}", m.render());
+    assert_eq!(batch_counter(&m, "jobs_fused"), 2, "{}", m.render());
+    let occupancy = m.get("batch").and_then(|b| b.get("mean_occupancy")).and_then(Json::as_f64);
+    assert_eq!(occupancy, Some(2.0), "{}", m.render());
+    let _ = batch_counter(&m, "fuse_wait_ms_total"); // the window wait is booked
+    assert_eq!(jobs_counter(&m, "completed"), 3);
+    server.shutdown();
+}
+
+/// The worker-side cache short-circuit inside the fusion window: a
+/// queued twin of a just-cached fit is answered from the cache the
+/// moment the window taps it and leaves no ghost slot behind — the
+/// leader proceeds alone and no batch is booked.
+#[test]
+fn cache_hit_peer_is_answered_in_the_window_without_a_ghost_slot() {
+    let server = start_fused(1, 16, 8, 300, 2);
+    let addr = server.local_addr();
+    let px = chain_panel(4_000, 32, 80);
+    let pz = chain_panel(4_000, 32, 81);
+    let direct_x = DirectLingam::new().fit(&px, &VectorizedEngine).unwrap();
+    let direct_z = DirectLingam::new().fit(&pz, &VectorizedEngine).unwrap();
+    let mut c1 = Client::connect(addr);
+    let mut c2 = Client::connect(addr);
+    c1.send(&protocol::fit_request("warm", "vectorized", &px));
+    // wait until the warmup is *executing* (first ordering step done):
+    // nothing is cached yet, so the twin below must pass the submit-time
+    // cache check and reach the queue
+    loop {
+        let f = c1.recv();
+        if f.get("event").and_then(Json::as_str) == Some("progress") {
+            break;
+        }
+    }
+    // one lane, two jobs: the fresh leader first, its cached twin behind
+    c2.send(&protocol::fit_request("lead", "vectorized", &pz));
+    c2.send(&protocol::fit_request("twin", "vectorized", &px));
+    let (ev_w, _) = c1.recv_terminal("warm");
+    assert_eq!(ev_w, "result");
+    // px is cached now; the worker pops `lead`, opens its window, taps
+    // `twin`, and must answer it from the cache immediately instead of
+    // letting it occupy a batch slot
+    let (ev_t, twin) = c2.recv_terminal("twin");
+    assert_eq!(ev_t, "result");
+    assert_eq!(twin.get("cached").and_then(Json::as_bool), Some(true), "{}", twin.render());
+    assert_eq!(order_of(&twin), direct_x.order);
+    let (ev_l, lead) = c2.recv_terminal("lead");
+    assert_eq!(ev_l, "result");
+    assert_eq!(lead.get("cached").and_then(Json::as_bool), Some(false));
+    assert_eq!(order_of(&lead), direct_z.order);
+    c2.send(&protocol::control_request("metrics"));
+    let m = c2.recv_event("metrics");
+    // the twin reached the worker (no submit-time short-circuit), was
+    // answered mid-window, and the leader ran alone: no batch booked
+    assert_eq!(jobs_counter(&m, "cache_short_circuits"), 0, "{}", m.render());
+    assert_eq!(jobs_counter(&m, "completed"), 3);
+    assert_eq!(batch_counter(&m, "batches_dispatched"), 0, "{}", m.render());
+    assert_eq!(batch_counter(&m, "jobs_fused"), 0);
+    assert!(server.cache_stats().hits >= 1, "{:?}", server.cache_stats());
     server.shutdown();
 }
