@@ -141,6 +141,21 @@
 //! emits — bench artifacts, CLI results, service frames — parses the
 //! same way.
 //!
+//! The production tier stacks three pieces on that core. An HTTP/1.1
+//! front (`--http-addr`, [`serve::http`]) maps `POST /fit`,
+//! `POST /bootstrap`, `GET /status` and `GET /metrics` onto the same
+//! queue and streams job frames as Server-Sent Events — the SSE `data:`
+//! payloads are byte-identical to the TCP lines because both fronts
+//! share the protocol's frame builders. A shard supervisor
+//! (`--shards N`, [`serve::shard`]) turns one process into a fleet: N
+//! child servers on loopback ports, jobs routed by panel hash, crashed
+//! shards restarted with backoff (only their in-flight jobs fail), and
+//! fleet-wide `shards_live`/`shard_restarts`/per-shard metrics. A
+//! disk-persistent result cache (`--cache-dir`, [`serve::cache`])
+//! appends fsynced, checksummed records to a segment file and replays
+//! the intact prefix on boot, so a byte-identical re-fit survives a
+//! full restart — or a crash mid-append — without executing a job.
+//!
 //! ## Quick example
 //!
 //! ```no_run

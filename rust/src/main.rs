@@ -8,7 +8,10 @@
 //!   agree      the Figure-3 parallel-vs-sequential agreement sweep
 //!   bootstrap  bootstrap edge-confidence estimation
 //!   ica        ICA-LiNGAM (the original estimator) on simulated data
-//!   serve      resident JSON-lines-over-TCP discovery service
+//!   serve      resident JSON-lines-over-TCP discovery service, with an
+//!              optional HTTP/1.1 + SSE front (--http-addr), a sharded
+//!              multi-process fleet (--shards N), and a disk-persistent
+//!              result cache (--cache-dir)
 //!   client     drive a running server (fit|bootstrap|varlingam|status|
 //!              metrics|cancel|shutdown as the second positional)
 //!   info       runtime/artifact inventory
@@ -360,7 +363,9 @@ fn ica_cmd(args: &Args) -> alingam::util::Result<()> {
 }
 
 /// Run the resident discovery service until some client sends a
-/// `shutdown` frame, then drain and exit.
+/// `shutdown` frame, then drain (bounded) and exit. `--shards N` (N ≥ 2)
+/// runs the multi-process fleet supervisor instead of an in-process
+/// server; `--http-addr` adds the HTTP/1.1 + SSE front to either.
 fn serve_cmd(args: &Args) -> alingam::util::Result<()> {
     use std::io::Write;
     let cfg = alingam::serve::ServeConfig {
@@ -370,16 +375,78 @@ fn serve_cmd(args: &Args) -> alingam::util::Result<()> {
         cache_entries: args.usize("cache-entries"),
         fuse_wait_ms: args.usize("fuse-wait-ms") as u64,
         max_batch: args.usize("max-batch"),
+        http_addr: args.get("http-addr"),
+        cache_dir: args.get("cache-dir").map(std::path::PathBuf::from),
     };
+    let shards: usize = args.get_as("shards").unwrap_or(0);
+    // a wedged worker must not hang the process forever on exit: past
+    // this the drain is abandoned and the exit code says so
+    let drain_limit = std::time::Duration::from_secs(120);
+    if shards >= 2 {
+        let sup = alingam::serve::shard::Supervisor::start(cfg, shards, None)?;
+        println!("serving on {}", sup.local_addr());
+        if let Some(h) = sup.http_local_addr() {
+            println!("http on {h}");
+        }
+        println!("{}", alingam::serve::shard::shard_banner(&sup.shard_table()));
+        ready_signal(args)?;
+        // flushed eagerly so scripted callers (the CI smoke) can read
+        // the bound addresses even through a pipe
+        std::io::stdout().flush()?;
+        sup.wait_for_shutdown_request();
+        println!("shutdown requested; draining shards");
+        std::io::stdout().flush()?;
+        if sup.shutdown_within(drain_limit) {
+            println!("drained cleanly");
+        } else {
+            println!("drain timed out; exiting unclean");
+            std::process::exit(3);
+        }
+        return Ok(());
+    }
     let server = alingam::serve::Server::start(cfg)?;
-    // flushed eagerly so scripted callers (the CI smoke) can read the
-    // bound address even through a pipe
     println!("serving on {}", server.local_addr());
+    if let Some(h) = server.http_local_addr() {
+        println!("http on {h}");
+    }
+    ready_signal(args)?;
     std::io::stdout().flush()?;
     server.wait_for_shutdown_request();
     println!("shutdown requested; draining queued jobs");
-    server.shutdown();
-    println!("drained cleanly");
+    std::io::stdout().flush()?;
+    if server.shutdown_within(drain_limit) {
+        println!("drained cleanly");
+    } else {
+        println!("drain timed out; exiting unclean");
+        std::process::exit(3);
+    }
+    Ok(())
+}
+
+/// `--ready-fd N`: write `ready\n` to inherited fd N once every
+/// listener is bound, then close it. Unlike scraping stdout for the
+/// "serving on" line, this cannot race the bind — the fd write happens
+/// strictly after every `bind()` returned (unix only; ignored
+/// elsewhere).
+fn ready_signal(args: &Args) -> alingam::util::Result<()> {
+    let Some(fd) = args.get("ready-fd") else {
+        return Ok(());
+    };
+    let fd: i32 = fd.parse().map_err(|_| {
+        alingam::util::Error::InvalidArgument(format!("--ready-fd {fd:?} is not a descriptor"))
+    })?;
+    #[cfg(unix)]
+    {
+        use std::io::Write;
+        use std::os::unix::io::FromRawFd;
+        // SAFETY: the caller passed this inherited descriptor
+        // explicitly; the File takes ownership and closing it on drop
+        // gives the other end a clean EOF after the ready byte
+        let mut f = unsafe { std::fs::File::from_raw_fd(fd) };
+        let _ = f.write_all(b"ready\n");
+    }
+    #[cfg(not(unix))]
+    let _ = fd;
     Ok(())
 }
 

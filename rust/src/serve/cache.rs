@@ -16,9 +16,32 @@
 //! panels larger; the win is in skipping recomputation, not in hoarding
 //! thousands of entries), with hit/miss/eviction counters feeding
 //! [`ServeMetrics`](super::ServeMetrics).
+//!
+//! # Disk persistence
+//!
+//! With [`ResultCache::with_dir`] the cache spills to an append-only
+//! segment file (`results.seg`) so byte-identical repeat traffic
+//! survives a server restart: every [`ResultCache::put`] appends one
+//! checksummed record and `fsync`s it (`sync_data` — a result that was
+//! acknowledged cached is never lost to a crash), and opening replays
+//! the log with later records winning. Recovery is crash-tolerant: a
+//! torn tail — a record cut short by a crash mid-append, or bytes whose
+//! checksum does not match — drops exactly the partial record and
+//! everything after it, never panicking and never discarding the intact
+//! prefix. Each open also compacts: the surviving records (deduped,
+//! capped at capacity) are rewritten through a temp file renamed into
+//! place, so the log cannot grow without bound across restarts and the
+//! corrupt tail is physically truncated away. Entries revived from disk
+//! are flagged, so the `disk_hits` / `recovered` counters (and the
+//! cumulative `eviction_age_ms_total`, the age-at-eviction metric) make
+//! restart traffic observable in the `metrics` frame.
 
+use std::fs::{self, File, OpenOptions};
+use std::io::Write as _;
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// Streaming 128-bit FNV-1a hasher.
 pub struct Fnv128 {
@@ -75,6 +98,16 @@ pub struct CacheStats {
     pub evictions: u64,
     pub entries: usize,
     pub capacity: usize,
+    /// Hits answered by an entry recovered from the disk segment (a
+    /// subset of `hits`).
+    pub disk_hits: u64,
+    /// Entries replayed from the segment file at open.
+    pub recovered: u64,
+    /// Cumulative in-memory age, in milliseconds, of every evicted
+    /// entry at the moment it was evicted — monotonically
+    /// non-decreasing, so eviction churn (young entries being pushed
+    /// out) is visible as a low age-per-eviction ratio.
+    pub eviction_age_ms_total: u64,
 }
 
 impl CacheStats {
@@ -89,20 +122,119 @@ impl CacheStats {
     }
 }
 
+/// One cached result and its bookkeeping.
+struct Entry {
+    key: u128,
+    value: Arc<String>,
+    /// When this entry (last) entered the in-memory store — the basis
+    /// of the age-at-eviction metric.
+    inserted: Instant,
+    /// Revived from the disk segment at open (hits on it count as
+    /// `disk_hits`).
+    from_disk: bool,
+}
+
+/// The on-disk segment format: an 8-byte magic header, then records of
+/// `key (16 LE) · payload length (8 LE) · payload · digest (16 LE)`
+/// where the digest is FNV-128 over key, length and payload. Anything
+/// that fails these checks ends replay at that offset.
+const SEG_MAGIC: &[u8; 8] = b"ALNGSEG1";
+/// Segment file name inside the `--cache-dir` directory.
+pub const SEG_FILE: &str = "results.seg";
+
+fn record_digest(key: u128, payload: &[u8]) -> u128 {
+    let mut h = Fnv128::new();
+    h.write(&key.to_le_bytes());
+    h.write_u64(payload.len() as u64);
+    h.write(payload);
+    h.finish()
+}
+
+fn write_record(f: &mut File, key: u128, payload: &[u8]) -> std::io::Result<()> {
+    f.write_all(&key.to_le_bytes())?;
+    f.write_all(&(payload.len() as u64).to_le_bytes())?;
+    f.write_all(payload)?;
+    f.write_all(&record_digest(key, payload).to_le_bytes())
+}
+
+/// Replay a segment image: every intact record in append order,
+/// stopping (without error) at the first truncated or corrupt one — the
+/// crash-tolerant torn-tail recovery.
+fn read_segment(bytes: &[u8]) -> Vec<(u128, String)> {
+    let mut out = Vec::new();
+    if bytes.len() < SEG_MAGIC.len() || &bytes[..SEG_MAGIC.len()] != SEG_MAGIC {
+        return out;
+    }
+    let mut i = SEG_MAGIC.len();
+    while i < bytes.len() {
+        if bytes.len() - i < 24 {
+            break;
+        }
+        let key = u128::from_le_bytes(bytes[i..i + 16].try_into().expect("16-byte key"));
+        let len = u64::from_le_bytes(bytes[i + 16..i + 24].try_into().expect("8-byte len"));
+        // the length is attacker/corruption-controlled: bounds-check it
+        // against what is actually on disk before any slicing
+        let Ok(len) = usize::try_from(len) else { break };
+        let after_header = i + 24;
+        if bytes.len() - after_header < len.saturating_add(16) {
+            break;
+        }
+        let payload = &bytes[after_header..after_header + len];
+        let digest_at = after_header + len;
+        let digest =
+            u128::from_le_bytes(bytes[digest_at..digest_at + 16].try_into().expect("digest"));
+        if digest != record_digest(key, payload) {
+            break;
+        }
+        let Ok(text) = std::str::from_utf8(payload) else { break };
+        out.push((key, text.to_string()));
+        i = digest_at + 16;
+    }
+    out
+}
+
+/// Rewrite the segment with exactly `records` (oldest first), via a
+/// temp file renamed into place so a crash mid-compaction leaves either
+/// the old or the new segment, never a half-written one. Returns the
+/// open handle, positioned at end for appends.
+fn write_segment(path: &Path, records: &[(u128, String)]) -> std::io::Result<File> {
+    let tmp = path.with_extension("seg.tmp");
+    let mut f = OpenOptions::new().write(true).create(true).truncate(true).open(&tmp)?;
+    f.write_all(SEG_MAGIC)?;
+    for (key, payload) in records {
+        write_record(&mut f, *key, payload.as_bytes())?;
+    }
+    f.sync_data()?;
+    fs::rename(&tmp, path)?;
+    Ok(f)
+}
+
 /// LRU result cache keyed by [`Fnv128`] digests, storing the serialized
 /// `data` payload of a result frame (shared via `Arc` so a hit costs a
 /// pointer clone, not a payload copy). `capacity == 0` disables caching
-/// entirely (every lookup is a miss, nothing is stored).
+/// entirely (every lookup is a miss, nothing is stored). With
+/// [`ResultCache::with_dir`] the store is backed by an fsynced
+/// append-only segment file and survives restarts (see the module
+/// docs).
 pub struct ResultCache {
     /// MRU-first: index 0 is the most recently used entry.
-    entries: Mutex<Vec<(u128, Arc<String>)>>,
+    entries: Mutex<Vec<Entry>>,
     capacity: usize,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    disk_hits: AtomicU64,
+    eviction_age_ms_total: AtomicU64,
+    /// Entries replayed at open (fixed for the cache's lifetime).
+    recovered: u64,
+    /// Append handle on the segment file; `None` for memory-only
+    /// caches. Held on its own mutex so an fsyncing put never blocks
+    /// concurrent lookups.
+    disk: Option<Mutex<File>>,
 }
 
 impl ResultCache {
+    /// Memory-only cache (no persistence).
     pub fn new(capacity: usize) -> ResultCache {
         ResultCache {
             entries: Mutex::new(Vec::new()),
@@ -110,16 +242,73 @@ impl ResultCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
+            eviction_age_ms_total: AtomicU64::new(0),
+            recovered: 0,
+            disk: None,
         }
+    }
+
+    /// Disk-backed cache: replay `dir/results.seg` (later records win,
+    /// torn tail dropped), compact it, and append every future put with
+    /// an fsync. `capacity == 0` still disables caching entirely — the
+    /// disk is not touched.
+    pub fn with_dir(capacity: usize, dir: &Path) -> crate::util::Result<ResultCache> {
+        if capacity == 0 {
+            return Ok(ResultCache::new(0));
+        }
+        fs::create_dir_all(dir)?;
+        let path = dir.join(SEG_FILE);
+        let bytes = fs::read(&path).unwrap_or_default();
+        // later records win: a key re-put with a fresh payload is live
+        // under its newest bytes, exactly like the in-memory refresh
+        let mut live: Vec<(u128, String)> = Vec::new();
+        for (key, payload) in read_segment(&bytes) {
+            if let Some(pos) = live.iter().position(|(k, _)| *k == key) {
+                live.remove(pos);
+            }
+            live.push((key, payload));
+        }
+        // keep the most recent `capacity` (append order is recency
+        // order after the dedup above)
+        let drop_n = live.len().saturating_sub(capacity);
+        let live = live.split_off(drop_n);
+        let file = write_segment(&path, &live)?;
+        let now = Instant::now();
+        let recovered = live.len() as u64;
+        let entries: Vec<Entry> = live
+            .into_iter()
+            .rev() // newest first ⇒ MRU order
+            .map(|(key, payload)| Entry {
+                key,
+                value: Arc::new(payload),
+                inserted: now,
+                from_disk: true,
+            })
+            .collect();
+        Ok(ResultCache {
+            entries: Mutex::new(entries),
+            capacity,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
+            eviction_age_ms_total: AtomicU64::new(0),
+            recovered,
+            disk: Some(Mutex::new(file)),
+        })
     }
 
     /// Look a key up, promoting it to most-recently-used on a hit.
     pub fn get(&self, key: u128) -> Option<Arc<String>> {
         let mut entries = self.entries.lock().expect("result cache");
-        match entries.iter().position(|(k, _)| *k == key) {
+        match entries.iter().position(|e| e.key == key) {
             Some(pos) => {
                 let entry = entries.remove(pos);
-                let value = entry.1.clone();
+                let value = entry.value.clone();
+                if entry.from_disk {
+                    self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                }
                 entries.insert(0, entry);
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 Some(value)
@@ -132,19 +321,36 @@ impl ResultCache {
     }
 
     /// Insert (or refresh) a key, evicting from the LRU end past
-    /// capacity.
+    /// capacity. Disk-backed caches append the record (fsynced) after
+    /// the in-memory store is updated; a failing disk degrades to
+    /// memory-only behavior rather than failing the job that computed
+    /// the result.
     pub fn put(&self, key: u128, value: Arc<String>) {
         if self.capacity == 0 {
             return;
         }
         let mut entries = self.entries.lock().expect("result cache");
-        if let Some(pos) = entries.iter().position(|(k, _)| *k == key) {
+        if let Some(pos) = entries.iter().position(|e| e.key == key) {
             entries.remove(pos);
         }
-        entries.insert(0, (key, value));
+        entries.insert(
+            0,
+            Entry { key, value: value.clone(), inserted: Instant::now(), from_disk: false },
+        );
         while entries.len() > self.capacity {
-            entries.pop();
+            if let Some(evicted) = entries.pop() {
+                let age = evicted.inserted.elapsed().as_millis() as u64;
+                self.eviction_age_ms_total.fetch_add(age, Ordering::Relaxed);
+            }
             self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        // release the entries lock before touching the disk: lookups
+        // never wait on an fsync
+        drop(entries);
+        if let Some(disk) = &self.disk {
+            if let Ok(mut f) = disk.lock() {
+                let _ = write_record(&mut f, key, value.as_bytes()).and_then(|()| f.sync_data());
+            }
         }
     }
 
@@ -155,6 +361,9 @@ impl ResultCache {
             evictions: self.evictions.load(Ordering::Relaxed),
             entries: self.entries.lock().expect("result cache").len(),
             capacity: self.capacity,
+            disk_hits: self.disk_hits.load(Ordering::Relaxed),
+            recovered: self.recovered,
+            eviction_age_ms_total: self.eviction_age_ms_total.load(Ordering::Relaxed),
         }
     }
 }

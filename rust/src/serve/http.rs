@@ -1,0 +1,391 @@
+//! `http` — the std-only HTTP/1.1 + SSE front on the serve core.
+//!
+//! One listener (enabled with `--http-addr`) maps a small fixed route
+//! table onto the exact machinery behind the TCP front:
+//!
+//! | route             | behavior                                        |
+//! |-------------------|-------------------------------------------------|
+//! | `POST /fit`       | submit a fit job; stream frames as SSE          |
+//! | `POST /bootstrap` | submit a bootstrap job; stream frames as SSE    |
+//! | `POST /varlingam` | submit a VAR-LiNGAM job (alias `POST /var`)     |
+//! | `GET  /status`    | one `status` frame as `application/json`        |
+//! | `GET  /metrics`   | one `metrics` frame as `application/json`       |
+//! | `POST /cancel`    | flip cancel flags; ack as `application/json`    |
+//! | `POST /shutdown`  | request shutdown; ack as `application/json`     |
+//!
+//! The request body of a job `POST` is the TCP request frame minus its
+//! `cmd` field (implied by the path); both fronts build requests through
+//! [`protocol::request_from_parts`], so payloads are byte-identical —
+//! see the equivalence section in the [`protocol`] docs. Job responses
+//! stream as Server-Sent Events: each protocol frame (a single line of
+//! JSON) becomes one `data: <frame>\n\n` event, flushed as it happens,
+//! ending with the terminal `result`/`error`/`canceled` event, after
+//! which the connection closes (`Connection: close`; one request per
+//! connection keeps the parser trivial and is what SSE clients expect).
+//!
+//! # Parser bounds — never panic, never balloon
+//!
+//! The request parser is total and bounded: request/header lines are
+//! capped at [`MAX_LINE_BYTES`] (431 past that), at most
+//! [`MAX_HEADERS`] headers are read, bodies require `Content-Length`
+//! (`Transfer-Encoding` is rejected with 501) and are capped at
+//! [`MAX_BODY_BYTES`] (413 past that). `Expect: 100-continue` is
+//! honored — the interim `100 Continue` goes out before the body read —
+//! because `curl` sends it for bodies over 1 KiB and would otherwise
+//! stall. Anything malformed gets a real HTTP error status with a
+//! protocol `error` frame as the body; nothing in this module can panic
+//! on wire input.
+
+use super::protocol::{self, Json};
+use super::{worker, Backend};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Longest accepted request or header line, bytes (431 past this).
+pub const MAX_LINE_BYTES: usize = 8 * 1024;
+/// Most headers read before the request is rejected with 431.
+pub const MAX_HEADERS: usize = 64;
+/// Largest accepted `Content-Length` (413 past this). Generous: inline
+/// panels are the payload, and 64 MiB is ~8M f64 cells as JSON text.
+pub const MAX_BODY_BYTES: usize = 64 * 1024 * 1024;
+
+/// How long a job stream may run before the front gives up waiting for
+/// its terminal frame and closes the connection (defense in depth — the
+/// backend guarantees a terminal frame on every submit path).
+const JOB_DEADLINE: Duration = Duration::from_secs(600);
+
+/// A parsed request: method + path (query string stripped), lowercased
+/// header names, and the full body.
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: String,
+}
+
+/// Why a request could not be served: a status to answer with, or a
+/// connection that died mid-request (nothing to say to it).
+enum Reject {
+    Status(u16, &'static str, String),
+    Gone,
+}
+
+fn reject(code: u16, reason: &'static str, msg: &str) -> Reject {
+    Reject::Status(code, reason, protocol::frame_error(None, msg))
+}
+
+/// Serve exactly one HTTP request on `stream` against `backend`.
+pub(crate) fn handle_http(stream: TcpStream, backend: Arc<dyn Backend>) {
+    // bound the header/body read so a stalled client cannot pin this
+    // thread, and writes so a non-reading client drops frames instead
+    // of wedging the drain
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let mut reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut out = stream;
+    let req = match read_request(&mut reader, &mut out) {
+        Ok(req) => req,
+        Err(Reject::Status(code, reason, body)) => {
+            write_simple(&mut out, code, reason, "application/json", &(body + "\n"));
+            return;
+        }
+        Err(Reject::Gone) => return,
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/status") => {
+            let frame = backend.status_frame(None);
+            write_simple(&mut out, 200, "OK", "application/json", &(frame + "\n"));
+        }
+        ("GET", "/metrics") => {
+            let frame = backend.metrics_frame(None);
+            write_simple(&mut out, 200, "OK", "application/json", &(frame + "\n"));
+        }
+        ("POST", "/fit") => run_job(out, &backend, "fit", &req.body),
+        ("POST", "/bootstrap") => run_job(out, &backend, "bootstrap", &req.body),
+        ("POST", "/varlingam") | ("POST", "/var") => run_job(out, &backend, "varlingam", &req.body),
+        ("POST", "/cancel") => run_control(&mut out, &backend, "cancel", &req.body),
+        ("POST", "/shutdown") => run_control(&mut out, &backend, "shutdown", &req.body),
+        (
+            _,
+            "/status" | "/metrics" | "/fit" | "/bootstrap" | "/varlingam" | "/var" | "/cancel"
+            | "/shutdown",
+        ) => {
+            let body = protocol::frame_error(None, &format!("method not allowed on {}", req.path));
+            write_simple(&mut out, 405, "Method Not Allowed", "application/json", &(body + "\n"));
+        }
+        _ => {
+            let body = protocol::frame_error(None, &format!("no such route: {}", req.path));
+            write_simple(&mut out, 404, "Not Found", "application/json", &(body + "\n"));
+        }
+    }
+}
+
+/// Read one bounded CRLF/LF-terminated line. `Ok(None)` means the line
+/// exceeded [`MAX_LINE_BYTES`]; `Err` wraps io failure or clean EOF.
+fn read_line(reader: &mut BufReader<TcpStream>) -> std::result::Result<Option<String>, Reject> {
+    let mut buf = Vec::new();
+    // +1 so a line of exactly MAX_LINE_BYTES (newline included) passes
+    // and the overflow case is detectable as "limit hit, no newline"
+    let got = (&mut *reader)
+        .take(MAX_LINE_BYTES as u64 + 1)
+        .read_until(b'\n', &mut buf)
+        .map_err(|_| Reject::Gone)?;
+    if got == 0 {
+        return Err(Reject::Gone);
+    }
+    if buf.last() != Some(&b'\n') {
+        return Ok(None);
+    }
+    while matches!(buf.last(), Some(b'\n' | b'\r')) {
+        buf.pop();
+    }
+    match String::from_utf8(buf) {
+        Ok(s) => Ok(Some(s)),
+        Err(_) => Err(reject(400, "Bad Request", "request line is not UTF-8")),
+    }
+}
+
+/// Parse the request line, headers and body. Writes the interim
+/// `100 Continue` to `out` when the client asked for it.
+fn read_request(
+    reader: &mut BufReader<TcpStream>,
+    out: &mut TcpStream,
+) -> std::result::Result<HttpRequest, Reject> {
+    let line = read_line(reader)?
+        .ok_or_else(|| reject(431, "Request Header Fields Too Large", "request line too long"))?;
+    let mut parts = line.split_whitespace();
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v), None) => (m.to_string(), t.to_string(), v),
+        _ => return Err(reject(400, "Bad Request", "malformed request line")),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(reject(505, "HTTP Version Not Supported", "only HTTP/1.x is served"));
+    }
+    let path = target.split('?').next().unwrap_or("").to_string();
+    let mut content_length: usize = 0;
+    let mut expect_continue = false;
+    let mut count = 0usize;
+    loop {
+        let line = read_line(reader)?
+            .ok_or_else(|| reject(431, "Request Header Fields Too Large", "header line too long"))?;
+        if line.is_empty() {
+            break;
+        }
+        count += 1;
+        if count > MAX_HEADERS {
+            return Err(reject(431, "Request Header Fields Too Large", "too many headers"));
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(reject(400, "Bad Request", "malformed header line"));
+        };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        match name.as_str() {
+            "content-length" => {
+                content_length = value
+                    .parse::<usize>()
+                    .map_err(|_| reject(400, "Bad Request", "unparseable Content-Length"))?;
+            }
+            "transfer-encoding" => {
+                return Err(reject(
+                    501,
+                    "Not Implemented",
+                    "Transfer-Encoding is not supported; send Content-Length",
+                ));
+            }
+            "expect" => {
+                if value.eq_ignore_ascii_case("100-continue") {
+                    expect_continue = true;
+                }
+            }
+            _ => {}
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err(reject(413, "Payload Too Large", "request body exceeds the size limit"));
+    }
+    if expect_continue && content_length > 0 {
+        // curl sends Expect: 100-continue for >1 KiB bodies and waits
+        // ~1 s for this interim response before giving up and sending
+        // the body anyway — answer it so large panels upload promptly
+        let _ = out.write_all(b"HTTP/1.1 100 Continue\r\n\r\n");
+        let _ = out.flush();
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).map_err(|_| Reject::Gone)?;
+    let body = String::from_utf8(body)
+        .map_err(|_| reject(400, "Bad Request", "request body is not UTF-8"))?;
+    Ok(HttpRequest { method, path, body })
+}
+
+/// Write a complete non-streaming response.
+fn write_simple(out: &mut TcpStream, code: u16, reason: &str, content_type: &str, body: &str) {
+    let _ = write!(
+        out,
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len(),
+    );
+    let _ = out.flush();
+}
+
+/// Parse a (possibly empty) request body as one JSON object.
+fn parse_body(body: &str) -> std::result::Result<Json, Reject> {
+    if body.trim().is_empty() {
+        return Ok(Json::Obj(Vec::new()));
+    }
+    protocol::parse_json(body).map_err(|e| reject(400, "Bad Request", &e.to_string()))
+}
+
+/// The single-line TCP frame equivalent of this HTTP request: the body
+/// object with `"cmd"` (from the URL path) prepended — what a relay
+/// tier ([`super::shard`]) forwards to a child server verbatim.
+fn raw_frame(cmd: &str, body: &Json) -> String {
+    let mut kvs: Vec<(String, Json)> = match body {
+        Json::Obj(kvs) => kvs.iter().filter(|(k, _)| k != "cmd").cloned().collect(),
+        _ => Vec::new(),
+    };
+    kvs.insert(0, ("cmd".to_string(), Json::Str(cmd.to_string())));
+    Json::Obj(kvs).render()
+}
+
+/// Is this frame the last one a job will emit?
+fn is_terminal(line: &str) -> bool {
+    matches!(
+        protocol::parse_json(line).ok().as_ref().and_then(|j| j.get("event")).and_then(Json::as_str),
+        Some("result" | "error" | "canceled")
+    )
+}
+
+/// Submit one job and stream its frames as SSE until the terminal one.
+fn run_job(out: TcpStream, backend: &Arc<dyn Backend>, cmd: &str, body_text: &str) {
+    let mut out = out;
+    let body = match parse_body(body_text) {
+        Ok(b) => b,
+        Err(Reject::Status(code, reason, frame)) => {
+            write_simple(&mut out, code, reason, "application/json", &(frame + "\n"));
+            return;
+        }
+        Err(Reject::Gone) => return,
+    };
+    let spec = match protocol::request_from_parts(cmd, &body) {
+        Ok(protocol::Request::Job(spec)) => spec,
+        Ok(_) | Err(_) => {
+            let msg = match protocol::request_from_parts(cmd, &body) {
+                Err(e) => e.to_string(),
+                Ok(_) => format!("{cmd:?} did not build a job request"),
+            };
+            let frame = protocol::frame_error(None, &msg);
+            write_simple(&mut out, 400, "Bad Request", "application/json", &(frame + "\n"));
+            return;
+        }
+    };
+    let raw = raw_frame(cmd, &body);
+    let client = backend.attach(&out);
+    let _ = out.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+          Cache-Control: no-cache\r\nConnection: close\r\n\r\n",
+    );
+    let _ = out.flush();
+    let done = Arc::new((Mutex::new(false), Condvar::new()));
+    let done_tx = done.clone();
+    let shared_out = Mutex::new(out);
+    let sink: worker::Sink = Arc::new(move |line: &str| {
+        if let Ok(mut s) = shared_out.lock() {
+            let _ = s.write_all(b"data: ");
+            let _ = s.write_all(line.as_bytes());
+            let _ = s.write_all(b"\n\n");
+            let _ = s.flush();
+        }
+        if is_terminal(line) {
+            let (flag, cv) = &*done_tx;
+            if let Ok(mut f) = flag.lock() {
+                *f = true;
+            }
+            cv.notify_all();
+        }
+    });
+    backend.submit(client, &raw, spec, &sink);
+    // every submit path ends in a terminal frame (result, error or
+    // canceled — including queue-closed and relay-lost errors), so this
+    // wait terminates; the deadline is pure defense in depth
+    let (flag, cv) = &*done;
+    let deadline = std::time::Instant::now() + JOB_DEADLINE;
+    let mut finished = flag.lock().expect("http job flag");
+    while !*finished {
+        let now = std::time::Instant::now();
+        if now >= deadline {
+            break;
+        }
+        let (guard, _timeout) =
+            cv.wait_timeout(finished, deadline - now).expect("http job flag");
+        finished = guard;
+    }
+    drop(finished);
+    backend.detach(client);
+}
+
+/// Answer a `cancel`/`shutdown` request with its single ack frame.
+fn run_control(out: &mut TcpStream, backend: &Arc<dyn Backend>, cmd: &str, body_text: &str) {
+    let body = match parse_body(body_text) {
+        Ok(b) => b,
+        Err(Reject::Status(code, reason, frame)) => {
+            write_simple(out, code, reason, "application/json", &(frame + "\n"));
+            return;
+        }
+        Err(Reject::Gone) => return,
+    };
+    match protocol::request_from_parts(cmd, &body) {
+        Ok(protocol::Request::Cancel { id, target }) => {
+            let known = backend.cancel(&target);
+            let frame = protocol::frame_ack(id.as_deref(), "cancel", known);
+            write_simple(out, 200, "OK", "application/json", &(frame + "\n"));
+        }
+        Ok(protocol::Request::Shutdown { id }) => {
+            let frame = protocol::frame_ack(id.as_deref(), "shutdown", true);
+            // ack first: request_shutdown may begin tearing the
+            // listeners down immediately
+            write_simple(out, 200, "OK", "application/json", &(frame + "\n"));
+            backend.request_shutdown();
+        }
+        Ok(_) => {
+            let frame = protocol::frame_error(None, &format!("{cmd:?} is not a control request"));
+            write_simple(out, 400, "Bad Request", "application/json", &(frame + "\n"));
+        }
+        Err(e) => {
+            let frame = protocol::frame_error(None, &e.to_string());
+            write_simple(out, 400, "Bad Request", "application/json", &(frame + "\n"));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_frame_prepends_cmd_and_drops_an_embedded_one() {
+        let body = protocol::parse_json(
+            "{\"id\":\"a\",\"cmd\":\"status\",\"engine\":\"vectorized\"}",
+        )
+        .expect("parse");
+        let raw = raw_frame("fit", &body);
+        assert_eq!(raw, "{\"cmd\":\"fit\",\"id\":\"a\",\"engine\":\"vectorized\"}");
+        // non-object bodies degrade to a bare command frame
+        assert_eq!(raw_frame("fit", &Json::Null), "{\"cmd\":\"fit\"}");
+    }
+
+    #[test]
+    fn terminal_frame_detection_matches_the_three_terminal_events() {
+        assert!(is_terminal(&protocol::frame_result(Some("a"), false, 1.0, "{\"k\":1}")));
+        assert!(is_terminal(&protocol::frame_error(Some("a"), "boom")));
+        assert!(is_terminal(&protocol::frame_canceled("a")));
+        assert!(!is_terminal(&protocol::frame_accepted("a", 0)));
+        assert!(!is_terminal(&protocol::frame_progress("a", "ordering", 1, 3)));
+        assert!(!is_terminal("not json at all"));
+    }
+}

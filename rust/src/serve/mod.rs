@@ -13,14 +13,34 @@
 //! allocation/build for repeated shapes) and a content-addressed result
 //! cache (repeated panels answered without any computation at all).
 //!
-//! # Architecture
+//! # Architecture — three tiers
+//!
+//! The service is one job core behind three interchangeable fronts:
 //!
 //! ```text
-//! client --TCP--> connection reader --> bounded JobQueue --> N workers
-//!                  | parse frames         (per-client lanes,  | parked
-//!                  | cache short-circuit   backpressure)      | sessions
-//!                  <---------------- shared line sink <-------+
+//!            TCP front (JSON lines)      HTTP front (http.rs)
+//! client ------------+                 client --POST /fit--+
+//!                    |                     (SSE progress)  |
+//!                    v                                     v
+//!              +-----------------[ Backend ]----------------+
+//!              |  connection reader --> bounded JobQueue --> N workers
+//!              |   | parse frames         (per-client lanes,  | parked
+//!              |   | cache short-circuit   backpressure)      | sessions
+//!              |   <---------------- shared line sink <-------+
+//!              |                 ResultCache (+ disk segment, cache.rs)
+//!              +--------------------------------------------+
+//!                                    ^
+//!      shard supervisor (shard.rs):  | loopback TCP, frames relayed
+//!      front listener --> routes by panel hash --> N child *processes*
+//!                         (crash isolation; restart with backoff)
 //! ```
+//!
+//! Every front normalizes onto the [`Backend`] trait, and every child
+//! process in a sharded fleet is just this same server again — so the
+//! protocol, queue, cache and workers are written once. The tiers
+//! compose: a supervisor's shards each persist their slice of the
+//! result cache when `--cache-dir` is set, and the supervisor's own
+//! front can be TCP, HTTP, or both.
 //!
 //! - [`protocol`] — the newline-delimited JSON frames (requests: `fit`,
 //!   `bootstrap`, `varlingam`, `status`, `metrics`, `cancel`,
@@ -68,8 +88,10 @@
 //! [`IncrementalSession`]: crate::lingam::IncrementalSession
 
 pub mod cache;
+pub mod http;
 pub mod protocol;
 pub mod queue;
+pub mod shard;
 pub mod worker;
 
 pub use self::cache::{CacheStats, ResultCache};
@@ -83,10 +105,11 @@ use crate::util::Result;
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::{self, JoinHandle};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -112,6 +135,12 @@ pub struct ServeConfig {
     /// Most jobs one batched session may drive (≥ 2 enables fusion; the
     /// leader counts toward the limit).
     pub max_batch: usize,
+    /// Optional second listener speaking HTTP/1.1 + SSE (see
+    /// [`http`]); `None` disables the HTTP front.
+    pub http_addr: Option<String>,
+    /// Optional directory for the disk-persistent result cache (see
+    /// [`cache`]); `None` keeps the cache memory-only.
+    pub cache_dir: Option<PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -123,6 +152,8 @@ impl Default for ServeConfig {
             cache_entries: 32,
             fuse_wait_ms: 0,
             max_batch: 8,
+            http_addr: None,
+            cache_dir: None,
         }
     }
 }
@@ -247,6 +278,10 @@ pub(crate) struct Shared {
     /// away.
     conns: Mutex<Vec<(u64, TcpStream)>>,
     next_client: AtomicU64,
+    /// Worker threads that have not yet exited — lets
+    /// [`Server::shutdown_within`] bound the drain wait instead of
+    /// joining (possibly forever) on a wedged worker.
+    workers_live: AtomicUsize,
 }
 
 impl Shared {
@@ -270,29 +305,127 @@ impl Shared {
     }
 }
 
-/// A running service: acceptor thread + worker threads around a
+/// What every front (TCP reader, HTTP handler) needs from whatever sits
+/// behind it. Two implementations: [`Shared`] executes jobs in-process;
+/// [`shard::Fleet`] relays them to child server processes. The fronts
+/// are written once against this trait, which is what makes their
+/// payloads byte-identical regardless of the tier behind them.
+pub(crate) trait Backend: Send + Sync {
+    /// Render a `status` frame.
+    fn status_frame(&self, id: Option<&str>) -> String;
+    /// Render a `metrics` frame.
+    fn metrics_frame(&self, id: Option<&str>) -> String;
+    /// Flip cancel flags for `target`; `true` if any job was known.
+    fn cancel(&self, target: &str) -> bool;
+    /// A client asked the whole service to shut down.
+    fn request_shutdown(&self);
+    /// Submit a job. `raw` is the single-line JSON frame for the job
+    /// (relay tiers forward it verbatim); in-process tiers use `spec`.
+    /// Every response — `accepted` through the terminal frame — goes to
+    /// `sink`.
+    fn submit(&self, client: u64, raw: &str, spec: protocol::JobSpec, sink: &worker::Sink);
+    /// Register a connection for shutdown severing; returns a client id.
+    fn attach(&self, stream: &TcpStream) -> u64;
+    /// Remove a finished connection (and any per-client relay state).
+    fn detach(&self, client: u64);
+    fn shutting_down(&self) -> bool;
+}
+
+impl Backend for Shared {
+    fn status_frame(&self, id: Option<&str>) -> String {
+        status_frame(id, self)
+    }
+
+    fn metrics_frame(&self, id: Option<&str>) -> String {
+        metrics_frame(id, self)
+    }
+
+    fn cancel(&self, target: &str) -> bool {
+        self.cancels.cancel(target)
+    }
+
+    fn request_shutdown(&self) {
+        let mut stop = self.stop_flag.lock().expect("stop flag");
+        *stop = true;
+        self.stop_cv.notify_all();
+    }
+
+    fn submit(&self, client: u64, _raw: &str, spec: protocol::JobSpec, sink: &worker::Sink) {
+        self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        if short_circuit(self, &spec, sink) {
+            return;
+        }
+        let id = spec.id.clone();
+        let cancel = Arc::new(AtomicBool::new(false));
+        self.cancels.register(&id, cancel.clone());
+        // `accepted` goes out before the push: the sink mutex then
+        // guarantees it precedes any frame the job itself emits,
+        // whatever worker timing does
+        sink(&protocol::frame_accepted(&id, self.queue.depth()));
+        let job = worker::Job { spec, cancel: cancel.clone(), sink: sink.clone() };
+        // push blocks at capacity: backpressure reaches the client
+        // through its stalled connection
+        if let Err(e) = self.queue.push(client, job) {
+            self.cancels.unregister(&id, &cancel);
+            sink(&protocol::frame_error(Some(id.as_str()), &e.to_string()));
+        }
+    }
+
+    fn attach(&self, stream: &TcpStream) -> u64 {
+        let client = self.next_client.fetch_add(1, Ordering::Relaxed);
+        if let Ok(clone) = stream.try_clone() {
+            self.conns.lock().expect("conn list").push((client, clone));
+        }
+        client
+    }
+
+    fn detach(&self, client: u64) {
+        self.conns.lock().expect("conn list").retain(|(c, _)| *c != client);
+    }
+
+    fn shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+}
+
+/// A running service: acceptor thread(s) + worker threads around a
 /// [`Shared`] core. Create with [`Server::start`], stop with
-/// [`Server::shutdown`] (graceful: queued jobs drain first).
+/// [`Server::shutdown`] (graceful: queued jobs drain first) or
+/// [`Server::shutdown_within`] (same, but with a bounded wait).
 pub struct Server {
     addr: SocketAddr,
+    http_addr: Option<SocketAddr>,
     shared: Arc<Shared>,
     accept: Option<JoinHandle<()>>,
+    http_accept: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl Server {
-    /// Bind, spawn the workers and the acceptor, return immediately.
+    /// Bind, spawn the workers and the acceptor(s), return immediately.
     pub fn start(cfg: ServeConfig) -> Result<Server> {
         let listener = TcpListener::bind(&cfg.addr)?;
         let addr = listener.local_addr()?;
+        let http_listener = match &cfg.http_addr {
+            Some(a) => Some(TcpListener::bind(a)?),
+            None => None,
+        };
+        let http_addr = match &http_listener {
+            Some(l) => Some(l.local_addr()?),
+            None => None,
+        };
         let worker_count = if cfg.workers == 0 {
             crate::lingam::parallel::default_workers().min(4)
         } else {
             cfg.workers
         };
+        let cache = match &cfg.cache_dir {
+            Some(dir) => ResultCache::with_dir(cfg.cache_entries, dir)?,
+            None => ResultCache::new(cfg.cache_entries),
+        };
         let shared = Arc::new(Shared {
             queue: JobQueue::new(cfg.queue_capacity.max(1)),
-            cache: ResultCache::new(cfg.cache_entries),
+            cache,
             metrics: ServeMetrics::default(),
             cancels: CancelRegistry::default(),
             worker_count,
@@ -305,29 +438,45 @@ impl Server {
             stop_cv: Condvar::new(),
             conns: Mutex::new(Vec::new()),
             next_client: AtomicU64::new(1),
+            workers_live: AtomicUsize::new(worker_count),
         });
         let workers = (0..worker_count)
             .map(|k| {
                 let sh = shared.clone();
                 thread::Builder::new()
                     .name(format!("serve-worker-{k}"))
-                    .spawn(move || worker::worker_loop(&sh))
+                    .spawn(move || {
+                        worker::worker_loop(&sh);
+                        sh.workers_live.fetch_sub(1, Ordering::SeqCst);
+                    })
                     .expect("spawn serve worker")
             })
             .collect();
         let accept = {
-            let sh = shared.clone();
+            let backend: Arc<dyn Backend> = shared.clone();
             thread::Builder::new()
                 .name("serve-accept".to_string())
-                .spawn(move || accept_loop(listener, sh))
+                .spawn(move || accept_loop(listener, backend, false))
                 .expect("spawn serve acceptor")
         };
-        Ok(Server { addr, shared, accept: Some(accept), workers })
+        let http_accept = http_listener.map(|l| {
+            let backend: Arc<dyn Backend> = shared.clone();
+            thread::Builder::new()
+                .name("serve-http-accept".to_string())
+                .spawn(move || accept_loop(l, backend, true))
+                .expect("spawn serve http acceptor")
+        });
+        Ok(Server { addr, http_addr, shared, accept: Some(accept), http_accept, workers })
     }
 
     /// The bound address (resolves port 0).
     pub fn local_addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The bound HTTP address, when the HTTP front is enabled.
+    pub fn http_local_addr(&self) -> Option<SocketAddr> {
+        self.http_addr
     }
 
     /// Jobs queued and not yet running.
@@ -351,44 +500,78 @@ impl Server {
 
     /// Graceful shutdown: stop accepting connections and jobs, let the
     /// workers drain everything already queued (results still stream to
-    /// their clients), then sever remaining connections.
-    pub fn shutdown(mut self) {
+    /// their clients), then sever remaining connections. A worker that
+    /// never finishes would wedge this forever — the CLI path uses
+    /// [`Server::shutdown_within`] instead.
+    pub fn shutdown(self) {
+        let _ = self.shutdown_within(Duration::from_secs(600));
+    }
+
+    /// [`Server::shutdown`] with a bound on the drain: waits up to
+    /// `limit` for the workers to finish the queued jobs, then severs
+    /// connections regardless. Returns `true` when the drain completed
+    /// cleanly within the limit; on `false` the worker threads are
+    /// leaked (they hold no lock anyone else needs) rather than joined,
+    /// so the caller can still exit.
+    pub fn shutdown_within(mut self, limit: Duration) -> bool {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.shared.queue.close();
-        // the acceptor blocks in accept(): poke it awake
+        // the acceptors block in accept(): poke them awake
         let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.http_addr {
+            let _ = TcpStream::connect(a);
+        }
         if let Some(handle) = self.accept.take() {
             let _ = handle.join();
         }
-        for handle in self.workers.drain(..) {
+        if let Some(handle) = self.http_accept.take() {
             let _ = handle.join();
         }
-        // workers are done and every result is written; now unblock the
-        // connection readers so their threads exit
+        let deadline = Instant::now() + limit;
+        let clean = loop {
+            if self.shared.workers_live.load(Ordering::SeqCst) == 0 {
+                break true;
+            }
+            if Instant::now() >= deadline {
+                break false;
+            }
+            thread::sleep(Duration::from_millis(10));
+        };
+        if clean {
+            for handle in self.workers.drain(..) {
+                let _ = handle.join();
+            }
+        }
+        // every drained result is written; now unblock the connection
+        // readers so their threads exit
         for (_client, conn) in self.shared.conns.lock().expect("conn list").drain(..) {
             let _ = conn.shutdown(std::net::Shutdown::Both);
         }
+        clean
     }
 }
 
-fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+/// Accept connections for one listener, handing each to the TCP
+/// (JSON-lines) or HTTP front against the same [`Backend`].
+pub(crate) fn accept_loop(listener: TcpListener, backend: Arc<dyn Backend>, is_http: bool) {
     loop {
         match listener.accept() {
             Ok((stream, _peer)) => {
-                if shared.shutdown.load(Ordering::SeqCst) {
+                if backend.shutting_down() {
                     break;
                 }
-                let client = shared.next_client.fetch_add(1, Ordering::Relaxed);
-                if let Ok(clone) = stream.try_clone() {
-                    shared.conns.lock().expect("conn list").push((client, clone));
-                }
-                let sh = shared.clone();
-                let _ = thread::Builder::new()
-                    .name("serve-conn".to_string())
-                    .spawn(move || handle_connection(stream, sh, client));
+                let b = backend.clone();
+                let name = if is_http { "serve-http-conn" } else { "serve-conn" };
+                let _ = thread::Builder::new().name(name.to_string()).spawn(move || {
+                    if is_http {
+                        http::handle_http(stream, b);
+                    } else {
+                        handle_connection(stream, b);
+                    }
+                });
             }
             Err(_) => {
-                if shared.shutdown.load(Ordering::SeqCst) {
+                if backend.shutting_down() {
                     break;
                 }
             }
@@ -396,19 +579,24 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
     }
 }
 
-/// One connection: read frames line by line, answer control requests
-/// inline, queue jobs. `cancel` targets are looked up in the
-/// server-wide [`CancelRegistry`], so a second connection (the one-shot
-/// `alingam client cancel`) can cancel a job submitted on another.
-fn handle_connection(stream: TcpStream, shared: Arc<Shared>, client: u64) {
+/// One JSON-lines connection: read frames line by line, answer control
+/// requests inline, submit jobs to the backend. `cancel` targets are
+/// looked up server-wide (through the backend), so a second connection
+/// (the one-shot `alingam client cancel`) can cancel a job submitted on
+/// another.
+pub(crate) fn handle_connection(stream: TcpStream, backend: Arc<dyn Backend>) {
     use protocol::Request;
     // bound how long a worker can stall writing results to a client
     // that stopped reading: past this, frames to that client are dropped
     // instead of wedging the worker (and the graceful drain) forever
-    let _ = stream.set_write_timeout(Some(std::time::Duration::from_secs(30)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let client = backend.attach(&stream);
     let reader = match stream.try_clone() {
         Ok(s) => BufReader::new(s),
-        Err(_) => return,
+        Err(_) => {
+            backend.detach(client);
+            return;
+        }
     };
     let out = Mutex::new(stream);
     let sink: worker::Sink = Arc::new(move |line: &str| {
@@ -427,43 +615,22 @@ fn handle_connection(stream: TcpStream, shared: Arc<Shared>, client: u64) {
         }
         match protocol::parse_request(&line) {
             Err(e) => sink(&protocol::frame_error(None, &e.to_string())),
-            Ok(Request::Status { id }) => sink(&status_frame(id.as_deref(), &shared)),
-            Ok(Request::Metrics { id }) => sink(&metrics_frame(id.as_deref(), &shared)),
+            Ok(Request::Status { id }) => sink(&backend.status_frame(id.as_deref())),
+            Ok(Request::Metrics { id }) => sink(&backend.metrics_frame(id.as_deref())),
             Ok(Request::Cancel { id, target }) => {
-                let known = shared.cancels.cancel(&target);
+                let known = backend.cancel(&target);
                 sink(&protocol::frame_ack(id.as_deref(), "cancel", known));
             }
             Ok(Request::Shutdown { id }) => {
                 sink(&protocol::frame_ack(id.as_deref(), "shutdown", true));
-                let mut stop = shared.stop_flag.lock().expect("stop flag");
-                *stop = true;
-                shared.stop_cv.notify_all();
+                backend.request_shutdown();
             }
-            Ok(Request::Job(spec)) => {
-                shared.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
-                if short_circuit(&shared, &spec, &sink) {
-                    continue;
-                }
-                let id = spec.id.clone();
-                let cancel = Arc::new(AtomicBool::new(false));
-                shared.cancels.register(&id, cancel.clone());
-                // `accepted` goes out before the push: the sink mutex
-                // then guarantees it precedes any frame the job itself
-                // emits, whatever worker timing does
-                sink(&protocol::frame_accepted(&id, shared.queue.depth()));
-                let job = worker::Job { spec, cancel: cancel.clone(), sink: sink.clone() };
-                // push blocks at capacity: backpressure reaches the
-                // client through its stalled connection
-                if let Err(e) = shared.queue.push(client, job) {
-                    shared.cancels.unregister(&id, &cancel);
-                    sink(&protocol::frame_error(Some(id.as_str()), &e.to_string()));
-                }
-            }
+            Ok(Request::Job(spec)) => backend.submit(client, &line, spec, &sink),
         }
     }
     // this connection is gone: drop its tracked clone so a long-lived
     // server does not leak one fd per client ever served
-    shared.conns.lock().expect("conn list").retain(|(c, _)| *c != client);
+    backend.detach(client);
 }
 
 /// Submit-time cache short-circuit: a byte-identical inline request
@@ -524,13 +691,16 @@ fn metrics_frame(id: Option<&str>, shared: &Shared) -> String {
     );
     let cache = format!(
         "{{\"hits\":{},\"misses\":{},\"evictions\":{},\"entries\":{},\"capacity\":{},\
-         \"hit_rate\":{}}}",
+         \"hit_rate\":{},\"disk_hits\":{},\"recovered\":{},\"eviction_age_ms_total\":{}}}",
         c.hits,
         c.misses,
         c.evictions,
         c.entries,
         c.capacity,
         json_f64(c.hit_rate()),
+        c.disk_hits,
+        c.recovered,
+        c.eviction_age_ms_total,
     );
     let sweep = format!(
         "{{\"pairs_total\":{},\"pairs_visited\":{},\"pairs_skipped\":{}}}",

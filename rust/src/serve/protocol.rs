@@ -43,6 +43,24 @@
 //! limited recursive descent returning [`Error::Parse`]) and the
 //! connection answers with an `error` frame, then resynchronizes at the
 //! next newline.
+//!
+//! # HTTP ↔ JSON-lines payload equivalence
+//!
+//! The HTTP front ([`super::http`]) speaks the *same* protocol with the
+//! command moved out of band: `POST /fit` (or `/bootstrap`,
+//! `/varlingam`, `/cancel`, `/shutdown`) carries as its request body
+//! exactly the JSON object a TCP request frame would be, minus the
+//! `cmd` field, which is implied by the URL path. Both fronts funnel
+//! through one builder — [`parse_request`] reads `cmd` out of the frame
+//! and [`request_from_parts`] takes it from the path — so they accept
+//! the same field grammar, apply the same defaults and validation, and
+//! build identical [`JobSpec`]s. Responses reuse these frame builders
+//! verbatim on both fronts: over TCP a frame is one line, over HTTP the
+//! same line is one SSE event (`data: <frame>\n\n`) for job streams or
+//! the whole `application/json` body for control requests — so the
+//! `result` payload a client parses is byte-identical regardless of
+//! which front carried it (integration-pinned by
+//! `tests/serve_http.rs`).
 
 use crate::coordinator::BootstrapResult;
 use crate::linalg::Mat;
@@ -412,6 +430,17 @@ pub fn parse_request(line: &str) -> Result<Request> {
         .and_then(Json::as_str)
         .ok_or_else(|| Error::Parse("frame missing string \"cmd\"".into()))?
         .to_string();
+    request_from_parts(&cmd, &j)
+}
+
+/// Build a request from a command name plus its JSON body — the one
+/// builder behind both wire fronts. The TCP front reads `cmd` out of
+/// the frame itself ([`parse_request`]); the HTTP front derives it from
+/// the URL path (`POST /fit` ⇒ `"fit"`) and passes the request body
+/// unchanged, so the two fronts accept the same field grammar and build
+/// identical [`JobSpec`]s (see the module docs on payload equivalence).
+/// A `cmd` field inside `j` is ignored in favor of the argument.
+pub fn request_from_parts(cmd: &str, j: &Json) -> Result<Request> {
     let id = j.get("id").and_then(Json::as_str).map(str::to_string);
     let job = |kind: JobKind| -> Result<Request> {
         let id = id
@@ -419,7 +448,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
             .ok_or_else(|| Error::Parse(format!("{cmd:?} frame missing string \"id\"")))?;
         Ok(Request::Job(JobSpec {
             id,
-            panel: parse_panel_source(&j)?,
+            panel: parse_panel_source(j)?,
             engine: j
                 .get("engine")
                 .and_then(Json::as_str)
@@ -428,10 +457,10 @@ pub fn parse_request(line: &str) -> Result<Request> {
             kind,
         }))
     };
-    match cmd.as_str() {
+    match cmd {
         "fit" => job(JobKind::Fit),
         "bootstrap" => {
-            let resamples = field_usize(&j, "resamples", 50)?;
+            let resamples = field_usize(j, "resamples", 50)?;
             if resamples == 0 {
                 return Err(Error::Parse("\"resamples\" must be ≥ 1".into()));
             }
@@ -445,11 +474,11 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 .map(|v| v.as_f64().ok_or_else(|| bad_field("threshold")))
                 .transpose()?
                 .unwrap_or(0.05);
-            let workers = field_usize(&j, "workers", 1)?;
+            let workers = field_usize(j, "workers", 1)?;
             job(JobKind::Bootstrap { resamples, seed, threshold, workers })
         }
         "varlingam" | "var" => {
-            let lags = field_usize(&j, "lags", 1)?;
+            let lags = field_usize(j, "lags", 1)?;
             if lags == 0 {
                 return Err(Error::Parse("\"lags\" must be ≥ 1".into()));
             }
@@ -890,6 +919,45 @@ mod tests {
         let sweep = data.get("sweep").unwrap();
         assert_eq!(sweep.get("pairs_total").and_then(Json::as_u64), Some(3));
         assert_eq!(sweep.get("elements_touched").and_then(Json::as_u64), Some(300));
+    }
+
+    #[test]
+    fn http_body_and_tcp_frame_build_identical_jobspecs() {
+        // the equivalence contract: a TCP frame parsed whole and the
+        // same object handed to request_from_parts with the cmd taken
+        // from a URL path must build the same JobSpec (the body's own
+        // cmd field, when present, is ignored in favor of the path)
+        let m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let line = bootstrap_request("j1", "pruned:2", &m, 20, 7, 0.25);
+        let body = parse_json(&line).unwrap();
+        let (tcp, http) = match (
+            parse_request(&line).unwrap(),
+            request_from_parts("bootstrap", &body).unwrap(),
+        ) {
+            (Request::Job(a), Request::Job(b)) => (a, b),
+            other => panic!("unexpected requests {other:?}"),
+        };
+        assert_eq!(tcp.id, http.id);
+        assert_eq!(tcp.engine, http.engine);
+        match (&tcp.kind, &http.kind) {
+            (
+                JobKind::Bootstrap { resamples: ra, seed: sa, threshold: ta, workers: wa },
+                JobKind::Bootstrap { resamples: rb, seed: sb, threshold: tb, workers: wb },
+            ) => {
+                assert_eq!((ra, sa, wa), (rb, sb, wb));
+                assert_eq!(ta.to_bits(), tb.to_bits());
+            }
+            other => panic!("unexpected kinds {other:?}"),
+        }
+        match (&tcp.panel, &http.panel) {
+            (PanelSource::Inline(a), PanelSource::Inline(b)) => assert_eq!(a, b),
+            other => panic!("unexpected panels {other:?}"),
+        }
+        // and the path-derived cmd wins over a conflicting body cmd
+        match request_from_parts("fit", &body).unwrap() {
+            Request::Job(spec) => assert!(matches!(spec.kind, JobKind::Fit)),
+            other => panic!("unexpected request {other:?}"),
+        }
     }
 
     #[test]

@@ -1,0 +1,765 @@
+//! `shard` — the multi-process fleet supervisor: one front listener,
+//! N child server *processes* on loopback ports, jobs routed by panel
+//! hash, crashed shards restarted with backoff.
+//!
+//! # Why processes, not threads
+//!
+//! The single server already parallelizes across worker threads; what
+//! it cannot do is survive an engine crash (a panicking fit takes the
+//! process down, and every queued job with it) or outgrow one address
+//! space on thousand-dimensional panels. The supervisor lifts both
+//! limits with the cheapest possible mechanism: each shard is this same
+//! binary running `serve` on `127.0.0.1:0`, spoken to over the existing
+//! JSON-lines protocol — the client half of which is already a library
+//! ([`protocol`]'s request builders and frame grammar). No new wire
+//! format, no shared memory, and a shard that dies loses only its own
+//! in-flight jobs.
+//!
+//! # Routing and relay
+//!
+//! Jobs hash their panel (inline bytes or CSV path) and route to
+//! `hash % N`, so byte-identical repeat traffic always lands on the
+//! same shard and its result cache — the panel-hash LRU (and its disk
+//! segment under `--cache-dir/shard-K`) stays as effective as in the
+//! single-process tier. A dead preferred shard fails over to the next
+//! live one. Every frame a shard emits is relayed to the client
+//! **verbatim** — the supervisor never re-renders payloads, so results
+//! through the fleet are byte-identical to results from a solo server.
+//!
+//! # Supervision
+//!
+//! A monitor thread per slot polls the child; on an unexpected exit it
+//! books a restart, fails the jobs in flight on that shard's relay
+//! links (each gets a terminal `error` frame — clients never hang), and
+//! respawns with exponential backoff (100 ms doubling to 2 s). The
+//! fleet-level `metrics` frame aggregates every live shard:
+//! `shards_live`, `shard_restarts`, summed job counters, and a
+//! `per_shard` array with each shard's queue depth.
+
+use super::protocol::{self, Json};
+use super::worker::Sink;
+use super::{Backend, ServeConfig};
+use crate::serve::cache::Fnv128;
+use crate::util::{Error, Result};
+use std::collections::{HashMap, HashSet};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+/// How often a monitor polls its child for exit.
+const MONITOR_POLL: Duration = Duration::from_millis(100);
+/// Restart backoff: first delay, and the cap it doubles toward.
+const BACKOFF_START: Duration = Duration::from_millis(100);
+const BACKOFF_CAP: Duration = Duration::from_secs(2);
+/// Timeout for one-shot status/metrics/cancel queries to a shard.
+const QUERY_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// One shard slot: the live child (if any) and where it listens.
+#[derive(Default)]
+struct Slot {
+    addr: Option<SocketAddr>,
+    pid: Option<u32>,
+    child: Option<Child>,
+}
+
+/// A relay connection from one front client to one shard: jobs written
+/// on `writer`, every response line pumped back verbatim by a reader
+/// thread, `pending` tracking job ids that have not reached a terminal
+/// frame (so a shard crash can fail exactly those).
+#[derive(Clone)]
+struct Link {
+    writer: Arc<Mutex<TcpStream>>,
+    pending: Arc<Mutex<HashSet<String>>>,
+    dead: Arc<AtomicBool>,
+}
+
+/// Fleet state shared by the front accept loops, the relay readers and
+/// the monitors — the multi-process implementation of [`Backend`].
+pub(crate) struct Fleet {
+    slots: Vec<Mutex<Slot>>,
+    restarts: AtomicU64,
+    shutdown: AtomicBool,
+    stop_flag: Mutex<bool>,
+    stop_cv: Condvar,
+    conns: Mutex<Vec<(u64, TcpStream)>>,
+    next_client: AtomicU64,
+    started: Instant,
+    /// Live relay links, keyed by (front client, shard index).
+    links: Mutex<HashMap<(u64, usize), Link>>,
+    exe: PathBuf,
+    /// Serve settings forwarded to every child verbatim.
+    child_args: Vec<String>,
+    cache_dir: Option<PathBuf>,
+}
+
+impl Fleet {
+    fn slot_addr(&self, k: usize) -> Option<SocketAddr> {
+        self.slots[k].lock().expect("shard slot").addr
+    }
+
+    /// Get (or rebuild) the relay link from `client` to shard `k`.
+    fn link_for(&self, client: u64, k: usize, addr: SocketAddr, sink: &Sink) -> Option<Link> {
+        let mut links = self.links.lock().expect("shard links");
+        if let Some(link) = links.get(&(client, k)) {
+            if !link.dead.load(Ordering::SeqCst) {
+                return Some(link.clone());
+            }
+            links.remove(&(client, k));
+        }
+        let stream = TcpStream::connect_timeout(&addr, QUERY_TIMEOUT).ok()?;
+        let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+        let reader = stream.try_clone().ok()?;
+        let link = Link {
+            writer: Arc::new(Mutex::new(stream)),
+            pending: Arc::new(Mutex::new(HashSet::new())),
+            dead: Arc::new(AtomicBool::new(false)),
+        };
+        let relay = link.clone();
+        let relay_sink = sink.clone();
+        let _ = thread::Builder::new().name(format!("shard-relay-{k}")).spawn(move || {
+            relay_loop(reader, relay, relay_sink);
+        });
+        links.insert((client, k), link.clone());
+        Some(link)
+    }
+}
+
+/// Pump one shard connection back to the front client, verbatim. On
+/// EOF (shard died or closed), fail every job still pending on this
+/// link with a terminal `error` frame so no client waits forever.
+fn relay_loop(reader: TcpStream, link: Link, sink: Sink) {
+    for line in BufReader::new(reader).lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.is_empty() {
+            continue;
+        }
+        // relayed verbatim: payload bytes through the fleet are the
+        // payload bytes the shard produced
+        sink(&line);
+        if let Some(id) = terminal_id(&line) {
+            link.pending.lock().expect("link pending").remove(&id);
+        }
+    }
+    link.dead.store(true, Ordering::SeqCst);
+    let orphans: Vec<String> =
+        link.pending.lock().expect("link pending").drain().collect();
+    for id in orphans {
+        sink(&protocol::frame_error(
+            Some(&id),
+            "shard connection lost before the job finished",
+        ));
+    }
+}
+
+/// If `line` is a terminal frame (`result`/`error`/`canceled`), its id.
+fn terminal_id(line: &str) -> Option<String> {
+    let j = protocol::parse_json(line).ok()?;
+    match j.get("event").and_then(Json::as_str) {
+        Some("result" | "error" | "canceled") => {
+            Some(j.get("id").and_then(Json::as_str).unwrap_or("").to_string())
+        }
+        _ => None,
+    }
+}
+
+/// Panel-affinity hash: byte-identical panels (or identical CSV paths)
+/// always route to the same shard, keeping its result cache hot.
+fn route_hash(spec: &protocol::JobSpec) -> u64 {
+    let mut h = Fnv128::new();
+    match &spec.panel {
+        protocol::PanelSource::Inline(m) => {
+            h.write_u64(m.rows() as u64);
+            h.write_u64(m.cols() as u64);
+            for &v in m.as_slice() {
+                h.write_f64_bits(v);
+            }
+        }
+        protocol::PanelSource::Csv(path) => h.write_str(path),
+    }
+    h.finish() as u64
+}
+
+/// One-shot control exchange with a shard: connect, send one frame,
+/// read one reply line.
+fn one_shot(addr: SocketAddr, line: &str) -> Option<Json> {
+    let mut stream = TcpStream::connect_timeout(&addr, QUERY_TIMEOUT).ok()?;
+    let _ = stream.set_read_timeout(Some(QUERY_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(QUERY_TIMEOUT));
+    stream.write_all(line.as_bytes()).ok()?;
+    stream.write_all(b"\n").ok()?;
+    let mut reader = BufReader::new(stream);
+    let mut reply = String::new();
+    reader.read_line(&mut reply).ok()?;
+    protocol::parse_json(reply.trim_end()).ok()
+}
+
+fn get_u64(j: &Json, path: &[&str]) -> u64 {
+    let mut cur = j;
+    for key in path {
+        match cur.get(key) {
+            Some(v) => cur = v,
+            None => return 0,
+        }
+    }
+    cur.as_u64().unwrap_or(0)
+}
+
+impl Backend for Fleet {
+    fn status_frame(&self, id: Option<&str>) -> String {
+        let mut queue_depth = 0u64;
+        let mut in_flight = 0u64;
+        let mut workers = 0u64;
+        let mut live = 0usize;
+        for k in 0..self.slots.len() {
+            let Some(addr) = self.slot_addr(k) else { continue };
+            let Some(j) = one_shot(addr, &protocol::control_request("status")) else { continue };
+            live += 1;
+            queue_depth += get_u64(&j, &["queue_depth"]);
+            in_flight += get_u64(&j, &["in_flight"]);
+            workers += get_u64(&j, &["workers"]);
+        }
+        let body = format!(
+            "\"event\":\"status\",\"queue_depth\":{queue_depth},\"in_flight\":{in_flight},\
+             \"workers\":{workers},\"uptime_ms\":{},\"accepting\":{},\"shards\":{},\
+             \"shards_live\":{live}",
+            self.started.elapsed().as_millis(),
+            !self.shutdown.load(Ordering::SeqCst),
+            self.slots.len(),
+        );
+        super::with_id(id, &body)
+    }
+
+    fn metrics_frame(&self, id: Option<&str>) -> String {
+        let mut submitted = 0u64;
+        let mut completed = 0u64;
+        let mut failed = 0u64;
+        let mut canceled = 0u64;
+        let mut short_circuits = 0u64;
+        let mut live = 0usize;
+        let mut per_shard = Vec::with_capacity(self.slots.len());
+        for k in 0..self.slots.len() {
+            let (addr, pid) = {
+                let slot = self.slots[k].lock().expect("shard slot");
+                (slot.addr, slot.pid)
+            };
+            let reply = addr.and_then(|a| one_shot(a, &protocol::control_request("metrics")));
+            match reply {
+                Some(j) => {
+                    live += 1;
+                    submitted += get_u64(&j, &["jobs", "submitted"]);
+                    completed += get_u64(&j, &["jobs", "completed"]);
+                    failed += get_u64(&j, &["jobs", "failed"]);
+                    canceled += get_u64(&j, &["jobs", "canceled"]);
+                    short_circuits += get_u64(&j, &["jobs", "cache_short_circuits"]);
+                    per_shard.push(format!(
+                        "{{\"shard\":{k},\"alive\":true,\"pid\":{},\"queue_depth\":{},\
+                         \"in_flight\":{},\"cache_hits\":{}}}",
+                        pid.unwrap_or(0),
+                        get_u64(&j, &["queue_depth"]),
+                        get_u64(&j, &["in_flight"]),
+                        get_u64(&j, &["cache", "hits"]),
+                    ));
+                }
+                None => per_shard.push(format!("{{\"shard\":{k},\"alive\":false}}")),
+            }
+        }
+        let jobs = format!(
+            "{{\"submitted\":{submitted},\"completed\":{completed},\"failed\":{failed},\
+             \"canceled\":{canceled},\"cache_short_circuits\":{short_circuits}}}"
+        );
+        let body = format!(
+            "\"event\":\"metrics\",\"shards\":{},\"shards_live\":{live},\
+             \"shard_restarts\":{},\"uptime_ms\":{},\"jobs\":{jobs},\"per_shard\":[{}]",
+            self.slots.len(),
+            self.restarts.load(Ordering::SeqCst),
+            self.started.elapsed().as_millis(),
+            per_shard.join(","),
+        );
+        super::with_id(id, &body)
+    }
+
+    fn cancel(&self, target: &str) -> bool {
+        let mut known = false;
+        for k in 0..self.slots.len() {
+            let Some(addr) = self.slot_addr(k) else { continue };
+            if let Some(j) = one_shot(addr, &protocol::cancel_request(target)) {
+                known |= j.get("ok").and_then(Json::as_bool).unwrap_or(false);
+            }
+        }
+        known
+    }
+
+    fn request_shutdown(&self) {
+        let mut stop = self.stop_flag.lock().expect("stop flag");
+        *stop = true;
+        self.stop_cv.notify_all();
+    }
+
+    fn submit(&self, client: u64, raw: &str, spec: protocol::JobSpec, sink: &Sink) {
+        let n = self.slots.len();
+        let preferred = (route_hash(&spec) % n as u64) as usize;
+        // preferred shard first (cache affinity), then fail over across
+        // the rest of the ring
+        for off in 0..n {
+            let k = (preferred + off) % n;
+            let Some(addr) = self.slot_addr(k) else { continue };
+            let Some(link) = self.link_for(client, k, addr, sink) else { continue };
+            link.pending.lock().expect("link pending").insert(spec.id.clone());
+            let wrote = match link.writer.lock() {
+                Ok(mut w) => {
+                    w.write_all(raw.as_bytes()).and_then(|()| w.write_all(b"\n")).is_ok()
+                }
+                Err(_) => false,
+            };
+            if wrote {
+                return;
+            }
+            // this link is broken; un-book the job (the relay reader
+            // must not double-fail it) and try the next shard
+            link.pending.lock().expect("link pending").remove(&spec.id);
+            link.dead.store(true, Ordering::SeqCst);
+        }
+        sink(&protocol::frame_error(
+            Some(&spec.id),
+            "no live shard available to run this job",
+        ));
+    }
+
+    fn attach(&self, stream: &TcpStream) -> u64 {
+        let client = self.next_client.fetch_add(1, Ordering::Relaxed);
+        if let Ok(clone) = stream.try_clone() {
+            self.conns.lock().expect("conn list").push((client, clone));
+        }
+        client
+    }
+
+    fn detach(&self, client: u64) {
+        self.conns.lock().expect("conn list").retain(|(c, _)| *c != client);
+        // sever this client's relay links so their reader threads exit
+        self.links.lock().expect("shard links").retain(|(c, _), link| {
+            if *c == client {
+                if let Ok(w) = link.writer.lock() {
+                    let _ = w.shutdown(Shutdown::Both);
+                }
+                false
+            } else {
+                true
+            }
+        });
+    }
+
+    fn shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+}
+
+/// Spawn one shard process and wait for its "serving on ADDR" readiness
+/// line. The rest of the child's stdout is drained to a sink thread so
+/// the pipe can never fill and block it.
+fn spawn_shard(fleet: &Fleet, k: usize) -> Result<(Child, SocketAddr, u32)> {
+    let mut cmd = Command::new(&fleet.exe);
+    cmd.arg("serve").arg("--addr").arg("127.0.0.1:0");
+    cmd.args(&fleet.child_args);
+    if let Some(dir) = &fleet.cache_dir {
+        cmd.arg("--cache-dir").arg(dir.join(format!("shard-{k}")));
+    }
+    cmd.stdin(Stdio::null()).stdout(Stdio::piped()).stderr(Stdio::null());
+    let mut child = cmd.spawn()?;
+    let pid = child.id();
+    let stdout = child.stdout.take().ok_or_else(|| {
+        Error::Runtime(format!("shard {k}: no stdout pipe from child process"))
+    })?;
+    let mut reader = BufReader::new(stdout);
+    let addr = loop {
+        let mut line = String::new();
+        let got = reader.read_line(&mut line)?;
+        if got == 0 {
+            let _ = child.kill();
+            let _ = child.wait();
+            return Err(Error::Runtime(format!(
+                "shard {k}: child exited before announcing its address"
+            )));
+        }
+        if let Some(rest) = line.trim().strip_prefix("serving on ") {
+            match rest.parse::<SocketAddr>() {
+                Ok(a) => break a,
+                Err(_) => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    return Err(Error::Runtime(format!(
+                        "shard {k}: unparseable announce line {rest:?}"
+                    )));
+                }
+            }
+        }
+    };
+    let _ = thread::Builder::new().name(format!("shard-drain-{k}")).spawn(move || {
+        let _ = std::io::copy(&mut reader, &mut std::io::sink());
+    });
+    Ok((child, addr, pid))
+}
+
+/// Watch one slot: when its child exits unexpectedly, book the restart,
+/// fail that shard's in-flight relay jobs, and respawn with backoff.
+fn monitor_loop(fleet: &Arc<Fleet>, k: usize) {
+    let mut backoff = BACKOFF_START;
+    loop {
+        if fleet.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let exited = {
+            let mut slot = fleet.slots[k].lock().expect("shard slot");
+            match slot.child.as_mut() {
+                Some(child) => match child.try_wait() {
+                    Ok(Some(_status)) => true,
+                    Ok(None) => false,
+                    Err(_) => true,
+                },
+                None => true,
+            }
+        };
+        if !exited {
+            backoff = BACKOFF_START;
+            thread::sleep(MONITOR_POLL);
+            continue;
+        }
+        // mark dead first so routing fails over immediately
+        {
+            let mut slot = fleet.slots[k].lock().expect("shard slot");
+            slot.addr = None;
+            slot.pid = None;
+            if let Some(mut child) = slot.child.take() {
+                let _ = child.wait();
+            }
+        }
+        // sever this shard's relay links: their reader threads see EOF
+        // and fail the pending jobs with terminal error frames
+        fleet.links.lock().expect("shard links").retain(|(_, shard), link| {
+            if *shard == k {
+                if let Ok(w) = link.writer.lock() {
+                    let _ = w.shutdown(Shutdown::Both);
+                }
+                false
+            } else {
+                true
+            }
+        });
+        // backoff in small increments so shutdown stays responsive
+        let mut waited = Duration::ZERO;
+        while waited < backoff {
+            if fleet.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            let step = MONITOR_POLL.min(backoff - waited);
+            thread::sleep(step);
+            waited += step;
+        }
+        if fleet.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match spawn_shard(fleet, k) {
+            Ok((child, addr, pid)) => {
+                let mut slot = fleet.slots[k].lock().expect("shard slot");
+                slot.addr = Some(addr);
+                slot.pid = Some(pid);
+                slot.child = Some(child);
+                drop(slot);
+                fleet.restarts.fetch_add(1, Ordering::SeqCst);
+                backoff = BACKOFF_START;
+            }
+            Err(_) => {
+                backoff = (backoff * 2).min(BACKOFF_CAP);
+            }
+        }
+    }
+}
+
+/// A running fleet: front listener(s) + shard children + monitors.
+/// Create with [`Supervisor::start`], stop with
+/// [`Supervisor::shutdown_within`].
+pub struct Supervisor {
+    addr: SocketAddr,
+    http_addr: Option<SocketAddr>,
+    fleet: Arc<Fleet>,
+    accept: Option<JoinHandle<()>>,
+    http_accept: Option<JoinHandle<()>>,
+    monitors: Vec<JoinHandle<()>>,
+}
+
+impl Supervisor {
+    /// Bind the front, spawn `shards` children of `exe` (defaults to
+    /// the current executable), wait for each to announce its address,
+    /// start the monitors and accept loops.
+    pub fn start(cfg: ServeConfig, shards: usize, exe: Option<PathBuf>) -> Result<Supervisor> {
+        if shards < 2 {
+            return Err(Error::InvalidArgument(format!(
+                "a sharded fleet needs at least 2 shards, got {shards}"
+            )));
+        }
+        let exe = match exe {
+            Some(p) => p,
+            None => std::env::current_exe()?,
+        };
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let http_listener = match &cfg.http_addr {
+            Some(a) => Some(TcpListener::bind(a)?),
+            None => None,
+        };
+        let http_addr = match &http_listener {
+            Some(l) => Some(l.local_addr()?),
+            None => None,
+        };
+        let child_args = vec![
+            "--serve-workers".to_string(),
+            cfg.workers.to_string(),
+            "--queue-cap".to_string(),
+            cfg.queue_capacity.to_string(),
+            "--cache-entries".to_string(),
+            cfg.cache_entries.to_string(),
+            "--fuse-wait-ms".to_string(),
+            cfg.fuse_wait_ms.to_string(),
+            "--max-batch".to_string(),
+            cfg.max_batch.to_string(),
+        ];
+        let fleet = Arc::new(Fleet {
+            slots: (0..shards).map(|_| Mutex::new(Slot::default())).collect(),
+            restarts: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+            stop_flag: Mutex::new(false),
+            stop_cv: Condvar::new(),
+            conns: Mutex::new(Vec::new()),
+            next_client: AtomicU64::new(1),
+            started: Instant::now(),
+            links: Mutex::new(HashMap::new()),
+            exe,
+            child_args,
+            cache_dir: cfg.cache_dir.clone(),
+        });
+        for k in 0..shards {
+            match spawn_shard(&fleet, k) {
+                Ok((child, shard_addr, pid)) => {
+                    let mut slot = fleet.slots[k].lock().expect("shard slot");
+                    slot.addr = Some(shard_addr);
+                    slot.pid = Some(pid);
+                    slot.child = Some(child);
+                }
+                Err(e) => {
+                    // roll back the shards already spawned
+                    for slot in &fleet.slots {
+                        let mut slot = slot.lock().expect("shard slot");
+                        if let Some(mut child) = slot.child.take() {
+                            let _ = child.kill();
+                            let _ = child.wait();
+                        }
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        let monitors = (0..shards)
+            .map(|k| {
+                let f = fleet.clone();
+                thread::Builder::new()
+                    .name(format!("shard-monitor-{k}"))
+                    .spawn(move || monitor_loop(&f, k))
+                    .expect("spawn shard monitor")
+            })
+            .collect();
+        let accept = {
+            let backend: Arc<dyn Backend> = fleet.clone();
+            thread::Builder::new()
+                .name("fleet-accept".to_string())
+                .spawn(move || super::accept_loop(listener, backend, false))
+                .expect("spawn fleet acceptor")
+        };
+        let http_accept = http_listener.map(|l| {
+            let backend: Arc<dyn Backend> = fleet.clone();
+            thread::Builder::new()
+                .name("fleet-http-accept".to_string())
+                .spawn(move || super::accept_loop(l, backend, true))
+                .expect("spawn fleet http acceptor")
+        });
+        Ok(Supervisor { addr, http_addr, fleet, accept: Some(accept), http_accept, monitors })
+    }
+
+    /// The front's bound TCP address.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The front's bound HTTP address, when enabled.
+    pub fn http_local_addr(&self) -> Option<SocketAddr> {
+        self.http_addr
+    }
+
+    /// Live shards as (index, pid, address) — the CLI prints these so
+    /// operators (and the CI smoke) can target a specific shard.
+    pub fn shard_table(&self) -> Vec<(usize, u32, SocketAddr)> {
+        let mut out = Vec::new();
+        for (k, slot) in self.fleet.slots.iter().enumerate() {
+            let slot = slot.lock().expect("shard slot");
+            if let (Some(pid), Some(addr)) = (slot.pid, slot.addr) {
+                out.push((k, pid, addr));
+            }
+        }
+        out
+    }
+
+    /// Restarts booked so far (tests; clients use the `metrics` frame).
+    pub fn restart_count(&self) -> u64 {
+        self.fleet.restarts.load(Ordering::SeqCst)
+    }
+
+    /// Block until some client sends a `shutdown` frame.
+    pub fn wait_for_shutdown_request(&self) {
+        let mut stop = self.fleet.stop_flag.lock().expect("stop flag");
+        while !*stop {
+            stop = self.fleet.stop_cv.wait(stop).expect("stop flag");
+        }
+    }
+
+    /// Stop the fleet: ask every shard to drain gracefully, wait up to
+    /// `limit` for the children to exit, kill whatever remains, then
+    /// sever front connections. Returns `true` when every child exited
+    /// by itself within the limit.
+    pub fn shutdown_within(mut self, limit: Duration) -> bool {
+        self.fleet.shutdown.store(true, Ordering::SeqCst);
+        // ask each live shard to drain and exit
+        for slot in &self.fleet.slots {
+            let addr = slot.lock().expect("shard slot").addr;
+            if let Some(addr) = addr {
+                let _ = one_shot(addr, &protocol::control_request("shutdown"));
+            }
+        }
+        // poke the acceptors awake and join them
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.http_addr {
+            let _ = TcpStream::connect(a);
+        }
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+        if let Some(handle) = self.http_accept.take() {
+            let _ = handle.join();
+        }
+        for handle in self.monitors.drain(..) {
+            let _ = handle.join();
+        }
+        // bounded wait for the children to drain and exit
+        let deadline = Instant::now() + limit;
+        let mut clean = true;
+        for slot in &self.fleet.slots {
+            let mut slot = slot.lock().expect("shard slot");
+            let Some(child) = slot.child.as_mut() else { continue };
+            loop {
+                match child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) => {
+                        if Instant::now() >= deadline {
+                            clean = false;
+                            let _ = child.kill();
+                            let _ = child.wait();
+                            break;
+                        }
+                        thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(_) => break,
+                }
+            }
+            slot.child = None;
+            slot.addr = None;
+            slot.pid = None;
+        }
+        // sever relay links and front connections
+        for (_, link) in self.fleet.links.lock().expect("shard links").drain() {
+            if let Ok(w) = link.writer.lock() {
+                let _ = w.shutdown(Shutdown::Both);
+            }
+        }
+        for (_client, conn) in self.fleet.conns.lock().expect("conn list").drain(..) {
+            let _ = conn.shutdown(Shutdown::Both);
+        }
+        clean
+    }
+
+    /// [`Supervisor::shutdown_within`] with a 10-minute bound.
+    pub fn shutdown(self) {
+        let _ = self.shutdown_within(Duration::from_secs(600));
+    }
+}
+
+/// Render the shard table as the human lines `serve` prints at boot
+/// (the CI smoke greps pids out of these).
+pub fn shard_banner(table: &[(usize, u32, SocketAddr)]) -> String {
+    table
+        .iter()
+        .map(|(k, pid, addr)| format!("shard {k} serving on {addr} (pid {pid})"))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn spec(panel: protocol::PanelSource) -> protocol::JobSpec {
+        protocol::JobSpec {
+            id: "t".to_string(),
+            panel,
+            engine: "vectorized".to_string(),
+            kind: protocol::JobKind::Fit,
+        }
+    }
+
+    #[test]
+    fn route_hash_is_stable_and_panel_sensitive() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 5.0]]);
+        let ha = route_hash(&spec(protocol::PanelSource::Inline(a.clone())));
+        assert_eq!(
+            ha,
+            route_hash(&spec(protocol::PanelSource::Inline(a))),
+            "identical panels route identically"
+        );
+        assert_ne!(
+            ha,
+            route_hash(&spec(protocol::PanelSource::Inline(b))),
+            "different panels should (overwhelmingly) route differently"
+        );
+        assert_ne!(
+            route_hash(&spec(protocol::PanelSource::Csv("/a.csv".into()))),
+            route_hash(&spec(protocol::PanelSource::Csv("/b.csv".into()))),
+        );
+    }
+
+    #[test]
+    fn terminal_id_extracts_ids_only_from_terminal_frames() {
+        assert_eq!(
+            terminal_id(&protocol::frame_result(Some("a"), false, 1.0, "{}")),
+            Some("a".to_string())
+        );
+        assert_eq!(terminal_id(&protocol::frame_canceled("b")), Some("b".to_string()));
+        assert_eq!(terminal_id(&protocol::frame_error(None, "x")), Some(String::new()));
+        assert_eq!(terminal_id(&protocol::frame_accepted("a", 0)), None);
+        assert_eq!(terminal_id("garbage"), None);
+    }
+
+    #[test]
+    fn shard_banner_lines_carry_index_pid_and_addr() {
+        let table =
+            vec![(0usize, 41u32, "127.0.0.1:5001".parse().unwrap()), (1, 42, "127.0.0.1:5002".parse().unwrap())];
+        let banner = shard_banner(&table);
+        assert!(banner.contains("shard 0 serving on 127.0.0.1:5001 (pid 41)"));
+        assert!(banner.contains("shard 1 serving on 127.0.0.1:5002 (pid 42)"));
+    }
+}

@@ -162,6 +162,10 @@ pub fn serve_opts() -> Vec<OptSpec> {
         opt("cache-entries", "serve: result-cache capacity (0 disables)", Some("32")),
         opt("fuse-wait-ms", "serve: fusion-window wait for same-shape peers (0 = none)", Some("0")),
         opt("max-batch", "serve: most fits one batched session may fuse (1 disables)", Some("8")),
+        opt("http-addr", "serve: optional HTTP/1.1 + SSE listener address", None),
+        opt("shards", "serve: child server processes routed by panel hash (0/1 = in-process)", Some("0")),
+        opt("cache-dir", "serve: directory for the disk-persistent result cache", None),
+        opt("ready-fd", "serve: write 'ready' to this fd once all listeners are bound (unix)", None),
         opt("job-id", "client: job id echoed on response frames", Some("job-1")),
         opt("csv", "client: server-side CSV path instead of an inline panel", None),
         opt("threshold", "client bootstrap: stable-edge probability cutoff", Some("0.5")),
@@ -214,6 +218,10 @@ mod tests {
         assert_eq!(a.usize("cache-entries"), 32);
         assert_eq!(a.usize("fuse-wait-ms"), 0);
         assert_eq!(a.usize("max-batch"), 8);
+        assert_eq!(a.usize("shards"), 0);
+        assert_eq!(a.get("http-addr"), None);
+        assert_eq!(a.get("cache-dir"), None);
+        assert_eq!(a.get("ready-fd"), None);
         assert_eq!(a.get("csv"), None);
     }
 

@@ -1,0 +1,209 @@
+//! Disk-persistent result cache integration: a byte-identical re-fit
+//! after a full server restart is answered from the recovered disk
+//! segment without executing a job; a torn segment tail is dropped
+//! cleanly (no panic, intact prefix recovered); and the eviction-age
+//! metric grows monotonically with real entry ages.
+
+use alingam::linalg::Mat;
+use alingam::serve::cache::{ResultCache, SEG_FILE};
+use alingam::serve::protocol::{self, Json};
+use alingam::serve::{ServeConfig, Server};
+use alingam::sim::{sample_from_dag, Noise};
+use alingam::util::rng::Pcg64;
+use std::io::{BufRead, BufReader, Write};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("alingam-cache-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    dir
+}
+
+fn start_with_dir(dir: &PathBuf) -> Server {
+    Server::start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 1,
+        queue_capacity: 16,
+        cache_entries: 8,
+        fuse_wait_ms: 0,
+        max_batch: 1,
+        http_addr: None,
+        cache_dir: Some(dir.clone()),
+    })
+    .expect("server start")
+}
+
+fn chain_panel(n: usize, d: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    sample_from_dag(&alingam::graph::chain_dag(d, 1.0), Noise::Uniform01, n, &mut rng)
+}
+
+/// Send one frame, read frames until the terminal one for `id`.
+fn roundtrip(server: &Server, line: &str, id: &str) -> Json {
+    let mut stream = std::net::TcpStream::connect(server.local_addr()).expect("connect");
+    stream.write_all(line.as_bytes()).expect("send");
+    stream.write_all(b"\n").expect("send");
+    let mut reader = BufReader::new(stream);
+    loop {
+        let mut buf = String::new();
+        assert!(reader.read_line(&mut buf).expect("recv") > 0, "closed mid-stream");
+        let f = protocol::parse_json(buf.trim_end()).expect("frame json");
+        if f.get("id").and_then(Json::as_str) != Some(id) {
+            continue;
+        }
+        if matches!(
+            f.get("event").and_then(Json::as_str),
+            Some("result" | "error" | "canceled")
+        ) {
+            return f;
+        }
+    }
+}
+
+fn one_frame(server: &Server, line: &str) -> Json {
+    let mut stream = std::net::TcpStream::connect(server.local_addr()).expect("connect");
+    stream.write_all(line.as_bytes()).expect("send");
+    stream.write_all(b"\n").expect("send");
+    let mut reader = BufReader::new(stream);
+    let mut buf = String::new();
+    assert!(reader.read_line(&mut buf).expect("recv") > 0);
+    protocol::parse_json(buf.trim_end()).expect("frame json")
+}
+
+/// The acceptance criterion: fit, restart the server on the same
+/// `--cache-dir`, and the byte-identical re-fit is a disk hit — no job
+/// executed, `cached:true`, and the recovery booked in metrics.
+#[test]
+fn byte_identical_refit_survives_a_server_restart() {
+    let dir = temp_dir("restart");
+    let panel = chain_panel(400, 6, 17);
+    let req = protocol::fit_request("p1", "vectorized", &panel);
+
+    let first = start_with_dir(&dir);
+    let frame = roundtrip(&first, &req, "p1");
+    assert_eq!(frame.get("event").and_then(Json::as_str), Some("result"));
+    assert_eq!(frame.get("cached").and_then(Json::as_bool), Some(false));
+    let data_before = frame.get("data").expect("data").render();
+    first.shutdown();
+    assert!(dir.join(SEG_FILE).exists(), "the segment file must be on disk after shutdown");
+
+    let second = start_with_dir(&dir);
+    let frame = roundtrip(&second, &req, "p1");
+    assert_eq!(frame.get("event").and_then(Json::as_str), Some("result"));
+    assert_eq!(
+        frame.get("cached").and_then(Json::as_bool),
+        Some(true),
+        "the re-fit must be answered from the recovered cache"
+    );
+    assert_eq!(
+        frame.get("data").expect("data").render(),
+        data_before,
+        "recovered payload must be byte-identical to the original"
+    );
+
+    let metrics = one_frame(&second, &protocol::control_request("metrics"));
+    let jobs = metrics.get("jobs").expect("jobs object");
+    assert_eq!(
+        jobs.get("completed").and_then(Json::as_u64),
+        Some(0),
+        "no job may execute for a disk-recovered hit"
+    );
+    assert_eq!(jobs.get("cache_short_circuits").and_then(Json::as_u64), Some(1));
+    let cache = metrics.get("cache").expect("cache object");
+    assert!(cache.get("recovered").and_then(Json::as_u64).unwrap_or(0) >= 1);
+    assert!(cache.get("disk_hits").and_then(Json::as_u64).unwrap_or(0) >= 1);
+    second.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Crash tolerance: a torn (truncated) final record is dropped at open
+/// — the intact prefix is recovered, nothing panics.
+#[test]
+fn truncated_segment_tail_recovers_the_intact_prefix() {
+    let dir = temp_dir("torn");
+    {
+        let cache = ResultCache::with_dir(8, &dir).expect("open cache");
+        cache.put(1, Arc::new("\"one\"".to_string()));
+        cache.put(2, Arc::new("\"two\"".to_string()));
+        cache.put(3, Arc::new("\"three\"".to_string()));
+    }
+    // simulate a crash mid-append: chop bytes off the last record
+    let path = dir.join(SEG_FILE);
+    let bytes = std::fs::read(&path).expect("read segment");
+    assert!(bytes.len() > 5);
+    std::fs::write(&path, &bytes[..bytes.len() - 5]).expect("truncate segment");
+
+    let cache = ResultCache::with_dir(8, &dir).expect("reopen survives a torn tail");
+    let stats = cache.stats();
+    assert_eq!(stats.recovered, 2, "the two intact records are recovered");
+    assert_eq!(cache.get(1).as_deref().map(String::as_str), Some("\"one\""));
+    assert_eq!(cache.get(2).as_deref().map(String::as_str), Some("\"two\""));
+    assert!(cache.get(3).is_none(), "the torn record is gone");
+    assert_eq!(cache.stats().disk_hits, 2, "recovered-entry hits count as disk hits");
+
+    // a fresh put after recovery persists alongside the compacted prefix
+    cache.put(4, Arc::new("\"four\"".to_string()));
+    drop(cache);
+    let cache = ResultCache::with_dir(8, &dir).expect("reopen after recovery append");
+    assert_eq!(cache.stats().recovered, 3);
+    assert_eq!(cache.get(4).as_deref().map(String::as_str), Some("\"four\""));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A corrupted byte inside the tail record (length intact, checksum
+/// wrong) is also dropped — the digest catches it.
+#[test]
+fn corrupt_tail_record_fails_its_checksum_and_is_dropped() {
+    let dir = temp_dir("corrupt");
+    {
+        let cache = ResultCache::with_dir(8, &dir).expect("open cache");
+        cache.put(10, Arc::new("\"aa\"".to_string()));
+        cache.put(11, Arc::new("\"bb\"".to_string()));
+    }
+    let path = dir.join(SEG_FILE);
+    let mut bytes = std::fs::read(&path).expect("read segment");
+    // flip a bit inside the final record's payload region
+    let n = bytes.len();
+    bytes[n - 20] ^= 0x40;
+    std::fs::write(&path, &bytes).expect("corrupt segment");
+
+    let cache = ResultCache::with_dir(8, &dir).expect("reopen survives corruption");
+    assert_eq!(cache.stats().recovered, 1, "only the intact record survives");
+    assert_eq!(cache.get(10).as_deref().map(String::as_str), Some("\"aa\""));
+    assert!(cache.get(11).is_none());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Eviction-age metric: grows monotonically, and by at least the time
+/// an evicted entry demonstrably lived.
+#[test]
+fn eviction_age_metric_is_monotone_and_reflects_entry_age() {
+    let cache = ResultCache::new(2);
+    cache.put(1, Arc::new("a".to_string()));
+    std::thread::sleep(Duration::from_millis(25));
+    cache.put(2, Arc::new("b".to_string()));
+    assert_eq!(cache.stats().eviction_age_ms_total, 0, "nothing evicted yet");
+
+    cache.put(3, Arc::new("c".to_string())); // evicts key 1, aged ≥ 25ms
+    let s1 = cache.stats();
+    assert_eq!(s1.evictions, 1);
+    assert!(
+        s1.eviction_age_ms_total >= 20,
+        "evicted entry lived ≥ 25ms, booked {}ms",
+        s1.eviction_age_ms_total
+    );
+
+    std::thread::sleep(Duration::from_millis(10));
+    cache.put(4, Arc::new("d".to_string())); // evicts key 2
+    let s2 = cache.stats();
+    assert_eq!(s2.evictions, 2);
+    assert!(
+        s2.eviction_age_ms_total >= s1.eviction_age_ms_total,
+        "age total must be monotone: {} then {}",
+        s1.eviction_age_ms_total,
+        s2.eviction_age_ms_total
+    );
+}

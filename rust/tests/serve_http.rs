@@ -1,0 +1,303 @@
+//! HTTP front + shard fleet integration over real sockets: `POST /fit`
+//! streams SSE frames whose `data` payload is byte-identical to the TCP
+//! fit path, a repeat fit is a cache hit, control routes answer JSON,
+//! malformed requests get real HTTP statuses, and a 2-shard fleet
+//! (child processes of the real `alingam` binary) keeps serving after
+//! one shard is killed — with the restart booked in `metrics`.
+
+use alingam::lingam::{DirectLingam, VectorizedEngine};
+use alingam::linalg::Mat;
+use alingam::serve::protocol::{self, Json};
+use alingam::serve::{ServeConfig, Server};
+use alingam::sim::{sample_from_dag, Noise};
+use alingam::util::rng::Pcg64;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+fn start_http(workers: usize) -> Server {
+    Server::start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers,
+        queue_capacity: 16,
+        cache_entries: 8,
+        fuse_wait_ms: 0,
+        max_batch: 1,
+        http_addr: Some("127.0.0.1:0".to_string()),
+        cache_dir: None,
+    })
+    .expect("server start")
+}
+
+fn chain_panel(n: usize, d: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    sample_from_dag(&alingam::graph::chain_dag(d, 1.0), Noise::Uniform01, n, &mut rng)
+}
+
+/// Send raw HTTP bytes, read the whole response (the server closes the
+/// connection after one request, so EOF delimits it).
+fn http_exchange(addr: SocketAddr, request: &str) -> String {
+    let mut stream = TcpStream::connect(addr).expect("connect http");
+    stream.write_all(request.as_bytes()).expect("send http request");
+    let mut response = String::new();
+    stream.read_to_string(&mut response).expect("read http response");
+    response
+}
+
+fn http_get(addr: SocketAddr, path: &str) -> String {
+    http_exchange(addr, &format!("GET {path} HTTP/1.1\r\nHost: test\r\n\r\n"))
+}
+
+fn http_post(addr: SocketAddr, path: &str, body: &str) -> String {
+    http_exchange(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nHost: test\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+fn status_line(response: &str) -> &str {
+    response.lines().next().unwrap_or("")
+}
+
+fn response_body(response: &str) -> &str {
+    response.split("\r\n\r\n").nth(1).unwrap_or("")
+}
+
+/// Every `data:` event in an SSE response, parsed.
+fn sse_frames(response: &str) -> Vec<Json> {
+    response_body(response)
+        .lines()
+        .filter_map(|l| l.strip_prefix("data: "))
+        .map(|l| protocol::parse_json(l).expect("sse events must be valid frames"))
+        .collect()
+}
+
+fn event_of(frame: &Json) -> &str {
+    frame.get("event").and_then(Json::as_str).unwrap_or("")
+}
+
+#[test]
+fn get_status_and_metrics_answer_protocol_frames_as_json() {
+    let server = start_http(1);
+    let http = server.http_local_addr().expect("http listener");
+
+    let resp = http_get(http, "/status");
+    assert!(status_line(&resp).starts_with("HTTP/1.1 200"), "got {}", status_line(&resp));
+    assert!(resp.contains("Content-Type: application/json"));
+    let frame = protocol::parse_json(response_body(&resp).trim()).expect("status json");
+    assert_eq!(event_of(&frame), "status");
+    assert_eq!(frame.get("accepting").and_then(Json::as_bool), Some(true));
+
+    let resp = http_get(http, "/metrics");
+    let frame = protocol::parse_json(response_body(&resp).trim()).expect("metrics json");
+    assert_eq!(event_of(&frame), "metrics");
+    assert!(frame.get("cache").and_then(|c| c.get("disk_hits")).is_some());
+    server.shutdown();
+}
+
+/// The tentpole acceptance criterion: the same panel fit over HTTP and
+/// over TCP produces byte-identical `data` payloads, and the HTTP
+/// stream carries the accepted → progress… → result frame sequence as
+/// SSE events.
+#[test]
+fn post_fit_streams_sse_with_payload_byte_identical_to_tcp() {
+    let panel = chain_panel(500, 8, 3);
+    let direct = DirectLingam::new().fit(&panel, &VectorizedEngine).expect("direct fit");
+    let body = protocol::fit_request("h1", "vectorized", &panel);
+
+    // two fresh servers so neither path can be answered from a cache
+    // warmed by the other
+    let tcp_server = start_http(1);
+    let http_server = start_http(1);
+
+    // TCP path
+    let mut stream = TcpStream::connect(tcp_server.local_addr()).expect("connect tcp");
+    stream.write_all(body.as_bytes()).expect("send");
+    stream.write_all(b"\n").expect("send");
+    let mut reader = BufReader::new(stream);
+    let tcp_frame = loop {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).expect("recv") > 0, "tcp closed early");
+        let f = protocol::parse_json(line.trim_end()).expect("tcp frame json");
+        if event_of(&f) == "result" {
+            break f;
+        }
+    };
+
+    // HTTP path (the body is the TCP frame verbatim; its embedded cmd
+    // is ignored in favor of the path)
+    let http = http_server.http_local_addr().expect("http listener");
+    let resp = http_post(http, "/fit", &body);
+    assert!(status_line(&resp).starts_with("HTTP/1.1 200"), "got {}", status_line(&resp));
+    assert!(resp.contains("Content-Type: text/event-stream"));
+    let frames = sse_frames(&resp);
+    assert!(frames.len() >= 3, "expected accepted + progress + result, got {}", frames.len());
+    assert_eq!(event_of(&frames[0]), "accepted");
+    assert!(frames.iter().any(|f| event_of(f) == "progress"), "progress must stream over SSE");
+    let http_frame = frames.last().expect("terminal frame");
+    assert_eq!(event_of(http_frame), "result");
+    assert_eq!(http_frame.get("cached").and_then(Json::as_bool), Some(false));
+
+    // payload equivalence, byte for byte (only timing fields differ
+    // between the whole frames)
+    let tcp_data = tcp_frame.get("data").expect("tcp data").render();
+    let http_data = http_frame.get("data").expect("http data").render();
+    assert_eq!(tcp_data, http_data, "HTTP and TCP result payloads must be byte-identical");
+
+    // and both match the direct fit
+    let order: Vec<usize> = http_frame
+        .get("data")
+        .and_then(|d| d.get("order"))
+        .and_then(Json::as_arr)
+        .expect("data.order")
+        .iter()
+        .map(|v| v.as_usize().expect("index"))
+        .collect();
+    assert_eq!(order, direct.order);
+
+    tcp_server.shutdown();
+    http_server.shutdown();
+}
+
+#[test]
+fn repeat_post_fit_is_answered_from_cache() {
+    let server = start_http(1);
+    let http = server.http_local_addr().expect("http listener");
+    let body = protocol::fit_request("c1", "vectorized", &chain_panel(400, 6, 9));
+
+    let first = sse_frames(&http_post(http, "/fit", &body));
+    assert_eq!(first.last().map(event_of), Some("result"));
+    assert_eq!(first.last().and_then(|f| f.get("cached")).and_then(Json::as_bool), Some(false));
+
+    let second = sse_frames(&http_post(http, "/fit", &body));
+    let last = second.last().expect("terminal frame");
+    assert_eq!(event_of(last), "result");
+    assert_eq!(
+        last.get("cached").and_then(Json::as_bool),
+        Some(true),
+        "byte-identical re-fit must be a cache hit"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn malformed_requests_get_real_http_statuses_and_error_frames() {
+    let server = start_http(1);
+    let http = server.http_local_addr().expect("http listener");
+
+    let resp = http_post(http, "/fit", "this is not json");
+    assert!(status_line(&resp).starts_with("HTTP/1.1 400"), "got {}", status_line(&resp));
+    let frame = protocol::parse_json(response_body(&resp).trim()).expect("error frame json");
+    assert_eq!(event_of(&frame), "error");
+
+    // fit body missing its panel: still 400, still an error frame
+    let resp = http_post(http, "/fit", "{\"id\":\"x\"}");
+    assert!(status_line(&resp).starts_with("HTTP/1.1 400"), "got {}", status_line(&resp));
+
+    let resp = http_get(http, "/no-such-route");
+    assert!(status_line(&resp).starts_with("HTTP/1.1 404"), "got {}", status_line(&resp));
+
+    let resp = http_get(http, "/fit");
+    assert!(status_line(&resp).starts_with("HTTP/1.1 405"), "got {}", status_line(&resp));
+    let resp = http_post(http, "/status", "");
+    assert!(status_line(&resp).starts_with("HTTP/1.1 405"), "got {}", status_line(&resp));
+    server.shutdown();
+}
+
+#[test]
+fn post_cancel_answers_an_ack_frame() {
+    let server = start_http(1);
+    let http = server.http_local_addr().expect("http listener");
+    let resp = http_post(http, "/cancel", "{\"target\":\"nope\"}");
+    assert!(status_line(&resp).starts_with("HTTP/1.1 200"), "got {}", status_line(&resp));
+    let frame = protocol::parse_json(response_body(&resp).trim()).expect("ack json");
+    assert_eq!(event_of(&frame), "ack");
+    assert_eq!(frame.get("ok").and_then(Json::as_bool), Some(false), "unknown job: ok=false");
+    server.shutdown();
+}
+
+/// The fleet acceptance criterion: 2 shards of the real binary, kill
+/// one with SIGKILL, the supervisor books the restart and traffic keeps
+/// flowing.
+#[cfg(unix)]
+#[test]
+fn two_shard_fleet_survives_a_kill_and_books_the_restart() {
+    use alingam::serve::shard::Supervisor;
+    use std::process::Command;
+
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 1,
+        queue_capacity: 16,
+        cache_entries: 8,
+        fuse_wait_ms: 0,
+        max_batch: 1,
+        http_addr: None,
+        cache_dir: None,
+    };
+    // the test harness binary is not `alingam`; point the supervisor at
+    // the real one Cargo built for this test run
+    let exe = std::path::PathBuf::from(env!("CARGO_BIN_EXE_alingam"));
+    let sup = Supervisor::start(cfg, 2, Some(exe)).expect("fleet start");
+    let table = sup.shard_table();
+    assert_eq!(table.len(), 2, "both shards announce an address");
+
+    let fit = |id: &str, seed: u64| -> (String, Json) {
+        let panel = chain_panel(400, 6, seed);
+        let mut stream = TcpStream::connect(sup.local_addr()).expect("connect fleet");
+        stream
+            .write_all(protocol::fit_request(id, "vectorized", &panel).as_bytes())
+            .expect("send");
+        stream.write_all(b"\n").expect("send");
+        let mut reader = BufReader::new(stream);
+        loop {
+            let mut line = String::new();
+            assert!(reader.read_line(&mut line).expect("recv") > 0, "fleet closed early");
+            let f = protocol::parse_json(line.trim_end()).expect("fleet frame json");
+            if let ev @ ("result" | "error" | "canceled") = event_of(&f) {
+                return (ev.to_string(), f);
+            }
+        }
+    };
+
+    let (ev, _) = fit("k1", 21);
+    assert_eq!(ev, "result", "fit through the fleet front succeeds");
+
+    // SIGKILL one shard — no drain, no goodbye
+    let (_, pid, _) = table[0];
+    let killed =
+        Command::new("kill").args(["-9", &pid.to_string()]).status().expect("spawn kill");
+    assert!(killed.success(), "kill -9 {pid}");
+
+    // the monitor books the restart and brings the fleet back to 2 live
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let mut stream = TcpStream::connect(sup.local_addr()).expect("connect fleet");
+        stream.write_all(protocol::control_request("metrics").as_bytes()).expect("send");
+        stream.write_all(b"\n").expect("send");
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).expect("recv") > 0);
+        let f = protocol::parse_json(line.trim_end()).expect("metrics json");
+        let restarts = f.get("shard_restarts").and_then(Json::as_u64).unwrap_or(0);
+        let live = f.get("shards_live").and_then(Json::as_u64).unwrap_or(0);
+        if restarts >= 1 && live == 2 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "restart not booked within 30s (restarts={restarts}, live={live})"
+        );
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    assert!(sup.restart_count() >= 1);
+
+    // traffic still flows after the kill
+    let (ev, _) = fit("k2", 22);
+    assert_eq!(ev, "result", "fleet keeps serving after a shard kill");
+    assert!(sup.shutdown_within(Duration::from_secs(60)), "fleet drains cleanly");
+}

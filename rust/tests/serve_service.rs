@@ -33,6 +33,7 @@ fn start_fused(workers: usize, queue: usize, cache: usize, wait: u64, batch: usi
         cache_entries: cache,
         fuse_wait_ms: wait,
         max_batch: batch,
+        ..ServeConfig::default()
     })
     .expect("server start")
 }
