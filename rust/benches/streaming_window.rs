@@ -1,0 +1,125 @@
+//! Streaming-window refit latency on the VAR simulator: per-frame cost
+//! of the held-order incremental path ([`StreamingLingam`] /
+//! [`StreamingVarLingam`] ingesting one sample under rank-1 moment
+//! update/downdate) against a from-scratch full refit of the identical
+//! window (seed session + complete ordering sweep). Reported per cell:
+//! the from-scratch frame cost, the incremental ms/frame, the speed-up,
+//! and the sustained frame rate — the numbers behind the serve tier's
+//! `watch` streams.
+
+mod common;
+
+use alingam::lingam::{StreamingConfig, StreamingLingam, StreamingVarLingam};
+use alingam::sim::{simulate_var, VarSpec};
+use alingam::util::rng::Pcg64;
+use alingam::util::table::{f, Table};
+
+fn no_resync() -> StreamingConfig {
+    StreamingConfig { resync_every: 0, drift_tol: f64::INFINITY }
+}
+
+/// One driver shape for both estimators (`lags = 0` is the plain
+/// instantaneous stream, `lags ≥ 1` the embedded VAR design).
+enum Driver {
+    Plain(StreamingLingam),
+    Var(StreamingVarLingam),
+}
+
+impl Driver {
+    fn new(d: usize, lags: usize, window: usize) -> Driver {
+        if lags == 0 {
+            Driver::Plain(StreamingLingam::new(d, window, no_resync()).expect("driver"))
+        } else {
+            Driver::Var(StreamingVarLingam::new(d, lags, window, no_resync()).expect("driver"))
+        }
+    }
+
+    fn warm(&mut self, row: &[f64]) {
+        match self {
+            Driver::Plain(s) => s.warm(row).expect("warm frame"),
+            Driver::Var(s) => s.warm(row).expect("warm frame"),
+        }
+    }
+
+    /// Ingest one sample; returns whether a frame was emitted.
+    fn ingest(&mut self, row: &[f64]) -> bool {
+        match self {
+            Driver::Plain(s) => s.ingest(row).expect("ingest").is_some(),
+            Driver::Var(s) => s.ingest(row).expect("ingest").is_some(),
+        }
+    }
+
+    fn refits_incremental(&self) -> u64 {
+        match self {
+            Driver::Plain(s) => s.refits_incremental(),
+            Driver::Var(s) => s.refits_incremental(),
+        }
+    }
+}
+
+fn main() {
+    common::header(
+        "Streaming window — held-order incremental refit vs from-scratch per frame",
+        "a live stream re-estimates B̂₀/B̂_τ per sample from maintained moments \
+         instead of re-running the ordering sweep, so per-frame latency drops by \
+         orders of magnitude",
+    );
+
+    let window = 512usize;
+    let dims: Vec<usize> = if common::full_scale() {
+        vec![16, 64, 128]
+    } else {
+        vec![64]
+    };
+    let frames: usize = if common::smoke() { 24 } else { 64 };
+
+    let mut t = Table::new(
+        &format!("window n={window}, {frames} streamed frames per cell"),
+        &["d", "lags", "scratch ms", "incr ms/frame", "speedup ×", "frames/s"],
+    );
+    for &d in &dims {
+        for lags in [0usize, 1] {
+            let mut rng = Pcg64::seed_from_u64(17 + d as u64 + lags as u64);
+            let t_len = window + lags + frames + 8;
+            let ds = simulate_var(&VarSpec { dim: d, ..VarSpec::default() }, t_len, &mut rng);
+
+            let mut driver = Driver::new(d, lags, window);
+            // fill all but the last warm-up row without fitting...
+            let fill = window + lags - 1;
+            for r in 0..fill {
+                driver.warm(ds.data.row(r));
+            }
+            // ...so this single ingest pays the full from-scratch refit:
+            // materialize the window, seed a session, run the sweep
+            let (emitted, t_scratch) = common::time(|| driver.ingest(ds.data.row(fill)));
+            assert!(emitted, "fill frame must emit");
+
+            // now every further frame takes the held-order moment path
+            let (_, t_incr) = common::time(|| {
+                for r in fill + 1..fill + 1 + frames {
+                    assert!(driver.ingest(ds.data.row(r)), "streamed frame must emit");
+                }
+            });
+            assert_eq!(driver.refits_incremental(), frames as u64);
+            let per_frame = t_incr / frames as f64;
+            t.row(&[
+                d.to_string(),
+                lags.to_string(),
+                f(t_scratch * 1e3, 3),
+                f(per_frame * 1e3, 4),
+                f(t_scratch / per_frame, 1),
+                f(1.0 / per_frame, 0),
+            ]);
+        }
+    }
+    t.print();
+
+    let refs: Vec<&Table> = vec![&t];
+    common::emit_json("streaming_window", &refs);
+    println!(
+        "\nshape check: the scratch column grows with the full ordering sweep\n\
+         (superlinear in d) while the incremental column is the O(d²) moment\n\
+         fold plus per-node OLS — the speed-up should widen with d and sit\n\
+         well past the 5× acceptance floor at d=64."
+    );
+}

@@ -42,6 +42,12 @@
 //!   boundary-pair reconciliation merge, with an exact tier (provably
 //!   the unpartitioned fit, instrumented) and a measured approx tier —
 //!   the d≈1000+ scaling path.
+//! - [`streaming`] — online discovery over a sliding window: rank-1
+//!   update/downdate of the window's moments (Welford-style, with a
+//!   drift-bounded resync policy), seeded sessions for the full refits,
+//!   and held-order moment-space coefficient re-estimation for the
+//!   per-frame fast path — both the plain and the lag-k VAR drivers.
+//!   The workspace behind the serve tier's `watch` streams.
 //! - [`prune`] — adjacency estimation: OLS over predecessors + adaptive
 //!   lasso pruning.
 //! - [`var`] — VarLiNGAM (Hyvärinen et al. 2010): VAR(k) fit, DirectLiNGAM
@@ -61,6 +67,7 @@ pub mod ica;
 pub mod parallel;
 pub mod partition;
 pub mod prune;
+pub mod streaming;
 pub mod var;
 
 pub use batch::{BatchOutcome, BatchedSession};
@@ -72,6 +79,10 @@ pub use partition::{
 pub use engine::{OrderingEngine, SequentialEngine, VectorizedEngine};
 pub use parallel::ParallelEngine;
 pub use session::{IncrementalSession, OrderingSession, StatelessSession};
+pub use streaming::{
+    ols_from_cov, FrameOutcome, RefitKind, StreamingConfig, StreamingLingam, StreamingVarLingam,
+    StreamingWindow, VarFrameOutcome,
+};
 pub use sweep::{SweepCounters, SweepStrategy};
 pub use xla_session::{XlaBatchSession, XlaSession};
 pub use ica::{IcaLingam, IcaLingamFit};

@@ -264,6 +264,85 @@ impl IncrementalSession {
         Ok(s)
     }
 
+    /// Seed the workspace directly from a precomputed standardized
+    /// column cache and its correlation matrix, skipping
+    /// [`rebuild`](IncrementalSession::with_strategy)'s O(n·d²)
+    /// standardize-and-correlate pass entirely — the entry point of the
+    /// streaming window ([`super::streaming`]), which maintains exactly
+    /// these statistics under rank-1 update/downdate as samples enter
+    /// and leave, so each frame's ordering starts from the
+    /// already-current statistics in O(n·d) (materializing the cache)
+    /// instead of O(n·d²).
+    ///
+    /// The caller's contract: `cols` are the panel's columns
+    /// standardized to zero mean / unit population std (the
+    /// [`stats::standardize`] convention, including its 1e-12 std
+    /// floor) and `corr[(a,b)] = dot(cols[a], cols[b]) / n` — what
+    /// `rebuild` would have computed. Shapes are checked here; the
+    /// statistical contract cannot be and is pinned instead by
+    /// `tests/streaming_agreement.rs` against from-scratch fits.
+    pub fn from_statistics(
+        cols: Vec<Vec<f64>>,
+        corr: Mat,
+        workers: usize,
+        strategy: SweepStrategy,
+    ) -> Result<IncrementalSession> {
+        let d = cols.len();
+        let n = cols.first().map_or(0, Vec::len);
+        if d < 1 || n < 2 {
+            return Err(Error::InvalidArgument(format!(
+                "ordering session needs n ≥ 2 and d ≥ 1, got {n}x{d}"
+            )));
+        }
+        if cols.iter().any(|c| c.len() != n) {
+            return Err(Error::Shape(
+                "seeded session: column cache is ragged (columns differ in length)".into(),
+            ));
+        }
+        if (corr.rows(), corr.cols()) != (d, d) {
+            return Err(Error::Shape(format!(
+                "seeded session: correlation is {}x{}, cache is {n}x{d}",
+                corr.rows(),
+                corr.cols()
+            )));
+        }
+        let mut s = IncrementalSession {
+            n,
+            d,
+            active: vec![true; d],
+            cols,
+            corr,
+            h: vec![0.0; d],
+            idx: Vec::with_capacity(d),
+            workers: workers.max(1),
+            force_parallel: false,
+            strategy,
+            prev_scores: Vec::new(),
+            seed_scores: Vec::new(),
+            counters: SweepCounters::default(),
+            fast_kernel: false,
+        };
+        // replicate `rebuild`'s fresh-fit tail: pruned mode seeds the
+        // first-step schedule from the cache's |excess kurtosis|
+        if s.strategy == SweepStrategy::Pruned {
+            let inv_n = 1.0 / s.n as f64;
+            s.seed_scores.extend(s.cols.iter().map(|col| {
+                let m4 = col.iter().map(|&v| (v * v) * (v * v)).sum::<f64>() * inv_n;
+                (m4 - 3.0).abs()
+            }));
+        }
+        Ok(s)
+    }
+
+    /// Take the workspace's large buffers back (column cache +
+    /// correlation matrix) so a per-frame caller can refill them instead
+    /// of reallocating — the streaming window's churn-avoidance loop:
+    /// seed → fit → reclaim → refill → seed. The contents are stale
+    /// (residualized in place by the fit); only the allocations matter.
+    pub fn into_workspace(self) -> (Vec<Vec<f64>>, Mat) {
+        (self.cols, self.corr)
+    }
+
     /// Resolved worker count of the session's sweeps.
     pub fn workers(&self) -> usize {
         self.workers
@@ -697,6 +776,80 @@ mod tests {
             "uniform column must rank first: {seeds:?}"
         );
         assert!((seeds[0] - 1.2).abs() < 0.2, "uniform |kurtosis| ≈ 1.2, got {}", seeds[0]);
+    }
+
+    #[test]
+    fn seeded_session_is_bitwise_the_rebuilt_session() {
+        // from_statistics with the exact statistics rebuild() would have
+        // computed must reproduce the whole fit bitwise — step choices
+        // AND step scores — in both sweep strategies
+        let x = toy_panel(500, 6, 9);
+        let (n, d) = (x.rows(), x.cols());
+        for strategy in [SweepStrategy::Exact, SweepStrategy::Pruned] {
+            let cols: Vec<Vec<f64>> = (0..d)
+                .map(|c| {
+                    let mut col = x.col(c);
+                    stats::standardize(&mut col);
+                    col
+                })
+                .collect();
+            let mut corr = Mat::zeros(d, d);
+            for a in 0..d {
+                corr[(a, a)] = 1.0;
+                for b in (a + 1)..d {
+                    let v = dot(&cols[a], &cols[b]) / n as f64;
+                    corr[(a, b)] = v;
+                    corr[(b, a)] = v;
+                }
+            }
+            let mut seeded =
+                IncrementalSession::from_statistics(cols, corr, 1, strategy).unwrap();
+            let mut scratch =
+                IncrementalSession::with_strategy(&x, 1, false, strategy).unwrap();
+            assert_eq!(seeded.seed_scores(), scratch.seed_scores());
+            for _ in 0..(d - 1) {
+                let a = scratch.step().unwrap();
+                let b = seeded.step().unwrap();
+                assert_eq!(a.chosen, b.chosen);
+                assert_eq!(a.scores, b.scores, "seeded session diverged ({strategy:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn from_statistics_rejects_bad_shapes() {
+        let cols = vec![vec![0.0; 16], vec![0.0; 16]];
+        // correlation shape must match the cache
+        assert!(IncrementalSession::from_statistics(
+            cols.clone(),
+            Mat::zeros(3, 3),
+            1,
+            SweepStrategy::Exact
+        )
+        .is_err());
+        // ragged cache
+        assert!(IncrementalSession::from_statistics(
+            vec![vec![0.0; 16], vec![0.0; 8]],
+            Mat::zeros(2, 2),
+            1,
+            SweepStrategy::Exact
+        )
+        .is_err());
+        // empty / too-short
+        assert!(IncrementalSession::from_statistics(
+            Vec::new(),
+            Mat::zeros(0, 0),
+            1,
+            SweepStrategy::Exact
+        )
+        .is_err());
+        assert!(IncrementalSession::from_statistics(
+            vec![vec![0.0; 1]],
+            Mat::zeros(1, 1),
+            1,
+            SweepStrategy::Exact
+        )
+        .is_err());
     }
 
     #[test]

@@ -13,7 +13,13 @@
 //!              multi-process fleet (--shards N), and a disk-persistent
 //!              result cache (--cache-dir)
 //!   client     drive a running server (fit|bootstrap|varlingam|status|
-//!              metrics|cancel|shutdown as the second positional)
+//!              metrics|cancel|shutdown as the second positional);
+//!              --timeout-ms bounds connect and every read/write
+//!   watch      streaming discovery over stdin CSV rows: sliding-window
+//!              moments, one `adjacency` frame per full-window sample,
+//!              terminal summary frame (--lags 0 for plain DirectLiNGAM,
+//!              k >= 1 for VAR; an explicit --addr relays the rows to a
+//!              running server's live watch protocol instead)
 //!   info       runtime/artifact inventory
 //!
 //! The fit paths (`discover`, `var`, `bootstrap`) accept a bare `--json`
@@ -23,7 +29,10 @@
 
 use alingam::apps::{genes, simbench, stocks};
 use alingam::coordinator::{Engine, EngineChoice};
-use alingam::lingam::{DirectLingam, PartitionSpec, PartitionedPlan, SweepCounters, VarLingam};
+use alingam::lingam::{
+    DirectLingam, PartitionSpec, PartitionedPlan, StreamingConfig, StreamingLingam,
+    StreamingVarLingam, SweepCounters, SweepStrategy, VarLingam,
+};
 use alingam::metrics::graph_metrics;
 use alingam::prelude::*;
 use alingam::runtime::{ArtifactKind, ArtifactRegistry};
@@ -74,11 +83,12 @@ fn dispatch(cmd: &str, args: &Args) -> alingam::util::Result<()> {
         "ica" => ica_cmd(args),
         "serve" => serve_cmd(args),
         "client" => client_cmd(args),
+        "watch" => watch_cmd(args),
         "info" => info(),
         other => {
             eprintln!(
                 "unknown command {other:?} \
-                 (discover|var|genes|stocks|agree|bootstrap|ica|serve|client|info)"
+                 (discover|var|genes|stocks|agree|bootstrap|ica|serve|client|watch|info)"
             );
             std::process::exit(2);
         }
@@ -455,11 +465,10 @@ fn ready_signal(args: &Args) -> alingam::util::Result<()> {
 fn client_cmd(args: &Args) -> alingam::util::Result<()> {
     use alingam::serve::protocol::Json;
     use std::io::{BufRead, BufReader, Write};
-    use std::net::TcpStream;
 
     let action = args.positional(1).unwrap_or("fit").to_string();
     let addr = args.req("addr");
-    let mut stream = TcpStream::connect(&addr)?;
+    let mut stream = connect_with_deadline(&addr, args.usize("timeout-ms") as u64)?;
     let reader = BufReader::new(stream.try_clone()?);
     let engine = args.req("engine");
     let id = args.req("job-id");
@@ -537,6 +546,234 @@ fn client_cmd(args: &Args) -> alingam::util::Result<()> {
     Err(alingam::util::Error::Runtime(
         "connection closed before a terminal frame arrived".into(),
     ))
+}
+
+/// Connect with the `--timeout-ms` deadline: bounds the TCP connect per
+/// resolved address and every subsequent read/write on the socket (a
+/// stalled server surfaces as an io error instead of a hang). 0 keeps
+/// the unbounded behavior.
+fn connect_with_deadline(
+    addr: &str,
+    timeout_ms: u64,
+) -> alingam::util::Result<std::net::TcpStream> {
+    use std::net::{TcpStream, ToSocketAddrs};
+    if timeout_ms == 0 {
+        return Ok(TcpStream::connect(addr)?);
+    }
+    let limit = std::time::Duration::from_millis(timeout_ms);
+    let mut last: Option<std::io::Error> = None;
+    for sa in addr.to_socket_addrs()? {
+        match TcpStream::connect_timeout(&sa, limit) {
+            Ok(s) => {
+                s.set_read_timeout(Some(limit))?;
+                s.set_write_timeout(Some(limit))?;
+                return Ok(s);
+            }
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(match last {
+        Some(e) => e.into(),
+        None => alingam::util::Error::InvalidArgument(format!("{addr:?} resolved to no addresses")),
+    })
+}
+
+/// One CSV sample line → row of f64, `None` when any cell fails to
+/// parse (the caller treats the first such line as a header).
+fn parse_csv_row(line: &str) -> Option<Vec<f64>> {
+    line.split(',').map(|c| c.trim().parse::<f64>().ok()).collect()
+}
+
+/// `(workers, strategy)` for the sliding-window refits. Streaming holds
+/// its workspace in the window and re-seeds a session per full refit,
+/// so only engines with an incremental workspace apply — the serve
+/// worker enforces the identical rule on `watch` subscriptions.
+fn incremental_engine(args: &Args) -> alingam::util::Result<(usize, SweepStrategy)> {
+    let choice = EngineChoice::parse(&args.req("engine"))?.resolve_workers(1);
+    match choice {
+        EngineChoice::Vectorized => Ok((1, SweepStrategy::Exact)),
+        EngineChoice::Parallel { workers } => Ok((workers.max(1), SweepStrategy::Exact)),
+        EngineChoice::Pruned { workers } => Ok((workers.max(1), SweepStrategy::Pruned)),
+        other => Err(alingam::util::Error::InvalidArgument(format!(
+            "engine `{}` has no incremental workspace; watch needs \
+             vectorized, parallel or pruned",
+            other.spec()
+        ))),
+    }
+}
+
+/// The local streaming driver behind `watch`: `--lags 0` slides a plain
+/// DirectLiNGAM window, k ≥ 1 the VAR variant.
+enum StreamDriver {
+    Plain(StreamingLingam),
+    Var(StreamingVarLingam),
+}
+
+/// Streaming discovery over stdin: one CSV sample per line, one
+/// protocol `adjacency` frame per full-window sample on stdout, one
+/// terminal summary `result` frame at EOF — the offline twin of the
+/// serve tier's `watch` streams (same frames, same sliding-window
+/// engine). An explicit `--addr` switches to remote mode: the rows
+/// relay to a running server over the live watch protocol and the
+/// server's frames echo back.
+fn watch_cmd(args: &Args) -> alingam::util::Result<()> {
+    if args.provided("addr") {
+        return watch_remote(args);
+    }
+    use std::io::BufRead;
+    let lags = args.usize("lags");
+    let window = args.usize("window");
+    let cfg = StreamingConfig {
+        resync_every: args.usize("resync-every"),
+        drift_tol: args.f64("drift-tol"),
+    };
+    let threshold = args.f64("edge-threshold");
+    let (workers, strategy) = incremental_engine(args)?;
+    let engine_spec = EngineChoice::parse(&args.req("engine"))?.resolve_workers(1).spec();
+    let id = args.req("job-id");
+    let t_start = std::time::Instant::now();
+    let stdin = std::io::stdin();
+    let mut driver: Option<StreamDriver> = None;
+    let mut ingested = 0u64;
+    for line in stdin.lock().lines() {
+        let line = line?;
+        let text = line.trim();
+        if text.is_empty() {
+            continue;
+        }
+        let row = match parse_csv_row(text) {
+            Some(r) => r,
+            // the first unparseable line is a CSV header; later ones are
+            // corrupt samples and fail the stream
+            None if driver.is_none() => continue,
+            None => {
+                return Err(alingam::util::Error::Parse(format!(
+                    "unparseable CSV sample: {text:?}"
+                )))
+            }
+        };
+        if driver.is_none() {
+            // the first data row fixes the stream's dimensionality
+            let d = row.len();
+            driver = Some(if lags == 0 {
+                StreamDriver::Plain(StreamingLingam::with_options(
+                    d, window, cfg, workers, strategy, threshold,
+                )?)
+            } else {
+                StreamDriver::Var(StreamingVarLingam::with_options(
+                    d, lags, window, cfg, workers, strategy, threshold,
+                )?)
+            });
+        }
+        let drv = driver.as_mut().expect("driver installed above");
+        ingested += 1;
+        let t0 = std::time::Instant::now();
+        let frame = match drv {
+            StreamDriver::Plain(s) => s.ingest(&row)?.map(|o| {
+                let data = protocol::watch_update_data(&o.order, &o.b0, &[]);
+                (o.refit.as_str(), o.resynced, o.drift_bound, data)
+            }),
+            StreamDriver::Var(s) => s.ingest(&row)?.map(|o| {
+                let data = protocol::watch_update_data(&o.order, &o.b0, &o.b_tau);
+                (o.refit.as_str(), o.resynced, o.drift_bound, data)
+            }),
+        };
+        if let Some((refit, resynced, drift, data)) = frame {
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            println!(
+                "{}",
+                protocol::frame_adjacency(&id, ingested, refit, resynced, drift, ms, &data)
+            );
+        }
+    }
+    let (ri, rf, rs) = match &driver {
+        Some(StreamDriver::Plain(s)) => {
+            (s.refits_incremental(), s.refits_full(), s.window().resyncs())
+        }
+        Some(StreamDriver::Var(s)) => {
+            (s.refits_incremental(), s.refits_full(), s.window().resyncs())
+        }
+        None => (0, 0, 0),
+    };
+    let summary = protocol::watch_summary_data(&engine_spec, ingested, ri, rf, rs);
+    let ms = t_start.elapsed().as_secs_f64() * 1e3;
+    println!("{}", protocol::frame_result(Some(&id), false, ms, &summary));
+    Ok(())
+}
+
+/// Remote watch: subscribe on the server (dimensionality comes from the
+/// first stdin row), relay every row as a `frame` request, send `end`
+/// at EOF, and echo the server's frames until the terminal one.
+fn watch_remote(args: &Args) -> alingam::util::Result<()> {
+    use alingam::serve::protocol::Json;
+    use std::io::{BufRead, BufReader, Write};
+    let addr = args.req("addr");
+    let stream = connect_with_deadline(&addr, args.usize("timeout-ms") as u64)?;
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let id = args.req("job-id");
+    let echo = std::thread::spawn(move || -> alingam::util::Result<()> {
+        for line in reader.lines() {
+            let line = line?;
+            println!("{line}");
+            let event = protocol::parse_json(&line)
+                .ok()
+                .and_then(|j| j.get("event").and_then(Json::as_str).map(str::to_string));
+            if matches!(event.as_deref(), Some("result" | "error" | "canceled")) {
+                return Ok(());
+            }
+        }
+        Err(alingam::util::Error::Runtime(
+            "connection closed before a terminal frame arrived".into(),
+        ))
+    });
+    let mut subscribed = false;
+    let stdin = std::io::stdin();
+    for line in stdin.lock().lines() {
+        let line = line?;
+        let text = line.trim();
+        if text.is_empty() {
+            continue;
+        }
+        let row = match parse_csv_row(text) {
+            Some(r) => r,
+            None if !subscribed => continue,
+            None => {
+                return Err(alingam::util::Error::Parse(format!(
+                    "unparseable CSV sample: {text:?}"
+                )))
+            }
+        };
+        if !subscribed {
+            let sub = protocol::watch_request(
+                &id,
+                &args.req("engine"),
+                row.len(),
+                args.usize("window"),
+                args.usize("lags"),
+                args.usize("resync-every"),
+                args.f64("drift-tol"),
+                args.f64("edge-threshold"),
+            );
+            writer.write_all(sub.as_bytes())?;
+            writer.write_all(b"\n")?;
+            subscribed = true;
+        }
+        writer.write_all(protocol::watch_frame_request(&id, &row).as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    if !subscribed {
+        return Err(alingam::util::Error::InvalidArgument(
+            "no samples on stdin to stream".into(),
+        ));
+    }
+    writer.write_all(protocol::watch_end_request(&id).as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+    match echo.join() {
+        Ok(result) => result,
+        Err(_) => Err(alingam::util::Error::Runtime("frame reader thread panicked".into())),
+    }
 }
 
 fn info() -> alingam::util::Result<()> {

@@ -8,10 +8,23 @@
 //! | `POST /fit`       | submit a fit job; stream frames as SSE          |
 //! | `POST /bootstrap` | submit a bootstrap job; stream frames as SSE    |
 //! | `POST /varlingam` | submit a VAR-LiNGAM job (alias `POST /var`)     |
+//! | `POST /watch`     | replay a `"frames"` array through a watch       |
+//! |                   | stream; one SSE `adjacency` event per frame     |
 //! | `GET  /status`    | one `status` frame as `application/json`        |
 //! | `GET  /metrics`   | one `metrics` frame as `application/json`       |
+//! | `GET  /healthz`   | liveness: `{"ok":true}` without touching the    |
+//! |                   | backend (safe for load-balancer probes)         |
 //! | `POST /cancel`    | flip cancel flags; ack as `application/json`    |
 //! | `POST /shutdown`  | request shutdown; ack as `application/json`     |
+//!
+//! HTTP is request/response, so the interactive half of the watch
+//! protocol (trickling `frame` lines onto an open connection) belongs
+//! to the TCP front; `POST /watch` is the batch replay form — the body
+//! carries the subscription options plus a `"frames"` array of rows,
+//! the server feeds them through the stream in order and the SSE
+//! response carries every per-frame `adjacency` event plus the terminal
+//! summary `result`. Same sliding-window engine, same frames, one
+//! round trip.
 //!
 //! The request body of a job `POST` is the TCP request frame minus its
 //! `cmd` field (implied by the path); both fronts build requests through
@@ -37,7 +50,7 @@
 //! on wire input.
 
 use super::protocol::{self, Json};
-use super::{worker, Backend};
+use super::{worker, Backend, WatchInput};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::sync::{Arc, Condvar, Mutex};
@@ -104,15 +117,22 @@ pub(crate) fn handle_http(stream: TcpStream, backend: Arc<dyn Backend>) {
             let frame = backend.metrics_frame(None);
             write_simple(&mut out, 200, "OK", "application/json", &(frame + "\n"));
         }
+        // liveness, not readiness: answered from this front thread alone
+        // so a wedged backend (or a fleet mid-restart) never turns probe
+        // traffic into queued work or a hung health check
+        ("GET", "/healthz") => {
+            write_simple(&mut out, 200, "OK", "application/json", "{\"ok\":true}\n");
+        }
         ("POST", "/fit") => run_job(out, &backend, "fit", &req.body),
         ("POST", "/bootstrap") => run_job(out, &backend, "bootstrap", &req.body),
         ("POST", "/varlingam") | ("POST", "/var") => run_job(out, &backend, "varlingam", &req.body),
+        ("POST", "/watch") => run_watch_replay(out, &backend, &req.body),
         ("POST", "/cancel") => run_control(&mut out, &backend, "cancel", &req.body),
         ("POST", "/shutdown") => run_control(&mut out, &backend, "shutdown", &req.body),
         (
             _,
-            "/status" | "/metrics" | "/fit" | "/bootstrap" | "/varlingam" | "/var" | "/cancel"
-            | "/shutdown",
+            "/status" | "/metrics" | "/healthz" | "/fit" | "/bootstrap" | "/varlingam" | "/var"
+            | "/watch" | "/cancel" | "/shutdown",
         ) => {
             let body = protocol::frame_error(None, &format!("method not allowed on {}", req.path));
             write_simple(&mut out, 405, "Method Not Allowed", "application/json", &(body + "\n"));
@@ -329,6 +349,114 @@ fn run_job(out: TcpStream, backend: &Arc<dyn Backend>, cmd: &str, body_text: &st
     backend.detach(client);
 }
 
+/// The `"frames"` array of a `POST /watch` body: rows of numbers, in
+/// stream order.
+fn parse_watch_frames(body: &Json) -> std::result::Result<Vec<Vec<f64>>, Reject> {
+    let Some(frames) = body.get("frames") else {
+        return Ok(Vec::new());
+    };
+    let items = frames
+        .as_arr()
+        .ok_or_else(|| reject(400, "Bad Request", "\"frames\" must be an array of rows"))?;
+    let mut rows = Vec::with_capacity(items.len());
+    for item in items {
+        let cells = item
+            .as_arr()
+            .ok_or_else(|| reject(400, "Bad Request", "each watch frame must be a number array"))?;
+        let mut row = Vec::with_capacity(cells.len());
+        for cell in cells {
+            row.push(cell.as_f64().ok_or_else(|| {
+                reject(400, "Bad Request", "each watch frame must be a number array")
+            })?);
+        }
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+/// `POST /watch`: subscribe a watch stream, replay the body's
+/// `"frames"` rows through it in order, end it, and stream everything
+/// the job emits — `accepted`, per-frame `adjacency` events, the
+/// summary `result` — as SSE until the terminal frame.
+fn run_watch_replay(out: TcpStream, backend: &Arc<dyn Backend>, body_text: &str) {
+    let mut out = out;
+    let parsed = parse_body(body_text).and_then(|body| {
+        let rows = parse_watch_frames(&body)?;
+        Ok((body, rows))
+    });
+    let (body, rows) = match parsed {
+        Ok(pair) => pair,
+        Err(Reject::Status(code, reason, frame)) => {
+            write_simple(&mut out, code, reason, "application/json", &(frame + "\n"));
+            return;
+        }
+        Err(Reject::Gone) => return,
+    };
+    let spec = match protocol::request_from_parts("watch", &body) {
+        Ok(protocol::Request::Job(spec)) => spec,
+        Ok(_) => {
+            let frame = protocol::frame_error(None, "\"watch\" did not build a job request");
+            write_simple(&mut out, 400, "Bad Request", "application/json", &(frame + "\n"));
+            return;
+        }
+        Err(e) => {
+            let frame = protocol::frame_error(None, &e.to_string());
+            write_simple(&mut out, 400, "Bad Request", "application/json", &(frame + "\n"));
+            return;
+        }
+    };
+    let id = spec.id.clone();
+    let raw = raw_frame("watch", &body);
+    let client = backend.attach(&out);
+    let _ = out.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+          Cache-Control: no-cache\r\nConnection: close\r\n\r\n",
+    );
+    let _ = out.flush();
+    let done = Arc::new((Mutex::new(false), Condvar::new()));
+    let done_tx = done.clone();
+    let shared_out = Mutex::new(out);
+    let sink: worker::Sink = Arc::new(move |line: &str| {
+        if let Ok(mut s) = shared_out.lock() {
+            let _ = s.write_all(b"data: ");
+            let _ = s.write_all(line.as_bytes());
+            let _ = s.write_all(b"\n\n");
+            let _ = s.flush();
+        }
+        if is_terminal(line) {
+            let (flag, cv) = &*done_tx;
+            if let Ok(mut f) = flag.lock() {
+                *f = true;
+            }
+            cv.notify_all();
+        }
+    });
+    backend.submit(client, &raw, spec, &sink);
+    // replay the rows in order; a false feed means the stream already
+    // reached its terminal frame (rejected, failed or drained), so the
+    // remaining rows have nowhere to go
+    for row in rows {
+        if !backend.watch_feed(client, &id, WatchInput::Row(row)) {
+            break;
+        }
+    }
+    let _ = backend.watch_feed(client, &id, WatchInput::End);
+    let (flag, cv) = &*done;
+    let deadline = std::time::Instant::now() + JOB_DEADLINE;
+    let mut finished = flag.lock().expect("http watch flag");
+    while !*finished {
+        let now = std::time::Instant::now();
+        if now >= deadline {
+            break;
+        }
+        let (guard, _timeout) =
+            cv.wait_timeout(finished, deadline - now).expect("http watch flag");
+        finished = guard;
+    }
+    drop(finished);
+    backend.detach(client);
+}
+
 /// Answer a `cancel`/`shutdown` request with its single ack frame.
 fn run_control(out: &mut TcpStream, backend: &Arc<dyn Backend>, cmd: &str, body_text: &str) {
     let body = match parse_body(body_text) {
@@ -377,6 +505,20 @@ mod tests {
         assert_eq!(raw, "{\"cmd\":\"fit\",\"id\":\"a\",\"engine\":\"vectorized\"}");
         // non-object bodies degrade to a bare command frame
         assert_eq!(raw_frame("fit", &Json::Null), "{\"cmd\":\"fit\"}");
+    }
+
+    #[test]
+    fn watch_frames_parse_rows_and_reject_non_numeric() {
+        let body = protocol::parse_json("{\"frames\":[[1,2],[3.5,-4]]}").expect("parse");
+        assert_eq!(
+            parse_watch_frames(&body).expect("rows"),
+            vec![vec![1.0, 2.0], vec![3.5, -4.0]]
+        );
+        let none = protocol::parse_json("{\"id\":\"w\"}").expect("parse");
+        assert!(parse_watch_frames(&none).expect("rows").is_empty());
+        assert!(parse_watch_frames(&protocol::parse_json("{\"frames\":[[\"x\"]]}").unwrap())
+            .is_err());
+        assert!(parse_watch_frames(&protocol::parse_json("{\"frames\":42}").unwrap()).is_err());
     }
 
     #[test]

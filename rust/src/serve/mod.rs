@@ -43,8 +43,9 @@
 //! front can be TCP, HTTP, or both.
 //!
 //! - [`protocol`] — the newline-delimited JSON frames (requests: `fit`,
-//!   `bootstrap`, `varlingam`, `status`, `metrics`, `cancel`,
-//!   `shutdown`; responses: `accepted` → `progress`… → one terminal
+//!   `bootstrap`, `varlingam`, `watch`/`frame`/`end`, `status`,
+//!   `metrics`, `cancel`, `shutdown`; responses: `accepted` →
+//!   `progress`/`adjacency`… → one terminal
 //!   `result`/`error`/`canceled`), with the total, never-panicking
 //!   parser. See its docs for the frame grammar with examples.
 //! - [`queue`] — the bounded job queue: producers block at capacity
@@ -80,6 +81,40 @@
 //! lifecycle exposes every search step, so the serve driver is
 //! `DirectLingam::fit`'s loop with frames between steps — same math,
 //! same results (pinned by the integration suite against direct fits).
+//!
+//! # Watch streams — the long-lived job class
+//!
+//! A `watch` subscription ([`crate::lingam::streaming`]) breaks the
+//! one-request/one-result shape every other job has, so its routing is
+//! worth spelling out. The subscription itself travels the normal path:
+//! `submit` → `accepted` → queue → worker, which keeps admission
+//! control (backpressure, per-client FIFO, cancel registration) uniform.
+//! What differs is everything after the pop:
+//!
+//! - **Sample routing.** At submit time the connection registers an
+//!   in-process channel under `(client, id)` in the [`Shared`] watch
+//!   registry — *before* the queue push, so `frame` requests arriving
+//!   while the subscription still waits in the queue buffer instead of
+//!   erroring. The connection reader forwards each `frame`/`end`
+//!   request into that channel ([`Backend::watch_feed`]); the worker
+//!   drains it, ingests rows into the sliding window, and answers each
+//!   full-window frame with an `adjacency` frame on the job's sink.
+//! - **Lifetime.** The stream ends on `end` (terminal `result` carrying
+//!   the `watch_summary`), on `cancel` (terminal `canceled`), when the
+//!   client's connection drops (sender side of the channel is pruned;
+//!   the worker observes the disconnect and finishes silently), or on
+//!   server shutdown — the worker polls the queue's open flag and
+//!   drains gracefully with the same terminal summary, so `watch`
+//!   participates in the existing drain contract.
+//! - **Scheduling.** A live stream *occupies its worker and its
+//!   client's queue lane* until it ends — by design: the lane keeps a
+//!   client's frames strictly ordered, and a pinned worker keeps the
+//!   window's caches hot. Watch jobs are structurally excluded from the
+//!   `take_group` fusion window (fusion only ever matches plain `fit`
+//!   jobs) and from the result cache (a stream is stateful; there is
+//!   nothing cacheable). Size worker counts accordingly: streams are
+//!   cheap per frame but each holds one worker slot while live
+//!   (`watch_streams` in the metrics frame is the live-stream gauge).
 //!
 //! The `alingam serve` and `alingam client` subcommands wrap this module
 //! on the CLI; `Server::start` is the embeddable entry point the
@@ -187,6 +222,17 @@ pub struct ServeMetrics {
     pub(crate) jobs_fused: AtomicU64,
     /// Total milliseconds batch leaders spent in the fusion window.
     pub(crate) fuse_wait_ms_total: AtomicU64,
+    /// Live `watch` subscriptions (gauge: incremented when a stream
+    /// starts running, decremented at its terminal frame).
+    pub(crate) watch_streams: AtomicU64,
+    /// Samples ingested across all watch streams.
+    pub(crate) frames_ingested: AtomicU64,
+    /// Watch frames answered by the held-order moment-space fast path.
+    pub(crate) refits_incremental: AtomicU64,
+    /// Watch frames that re-ran the full ordering sweep.
+    pub(crate) refits_full: AtomicU64,
+    /// Sliding-window moment resyncs across all watch streams.
+    pub(crate) resyncs: AtomicU64,
 }
 
 impl ServeMetrics {
@@ -205,6 +251,65 @@ impl ServeMetrics {
         self.batches_dispatched.fetch_add(1, Ordering::Relaxed);
         self.jobs_fused.fetch_add(jobs, Ordering::Relaxed);
         self.fuse_wait_ms_total.fetch_add(wait_ms, Ordering::Relaxed);
+    }
+}
+
+/// One message routed from a connection reader into a live watch
+/// stream's worker.
+#[derive(Clone, Debug)]
+pub(crate) enum WatchInput {
+    /// A streamed sample (`frame` request).
+    Row(Vec<f64>),
+    /// Graceful end of stream (`end` request).
+    End,
+}
+
+/// Registry of live watch streams: `(client, id)` → the sender half of
+/// the worker's input channel. Registered at submit time (before the
+/// queue push, so early frames buffer), pruned when a send observes the
+/// worker gone or when the client detaches.
+#[derive(Default)]
+pub(crate) struct WatchRegistry {
+    inner: Mutex<HashMap<(u64, String), std::sync::mpsc::Sender<WatchInput>>>,
+}
+
+impl WatchRegistry {
+    pub(crate) fn register(
+        &self,
+        client: u64,
+        id: &str,
+        tx: std::sync::mpsc::Sender<WatchInput>,
+    ) {
+        self.inner.lock().expect("watch registry").insert((client, id.to_string()), tx);
+    }
+
+    /// Forward one input; `false` when no live stream matches (never
+    /// registered, already ended, or the worker hung up).
+    pub(crate) fn feed(&self, client: u64, id: &str, input: WatchInput) -> bool {
+        let mut inner = self.inner.lock().expect("watch registry");
+        let key = (client, id.to_string());
+        match inner.get(&key) {
+            None => false,
+            Some(tx) => {
+                if tx.send(input).is_ok() {
+                    true
+                } else {
+                    // the worker dropped its receiver: the stream ended
+                    inner.remove(&key);
+                    false
+                }
+            }
+        }
+    }
+
+    /// Drop every stream belonging to a detached client; the workers
+    /// observe the hangup on their next receive and finish silently.
+    pub(crate) fn drop_client(&self, client: u64) {
+        self.inner.lock().expect("watch registry").retain(|(c, _), _| *c != client);
+    }
+
+    pub(crate) fn remove(&self, client: u64, id: &str) {
+        self.inner.lock().expect("watch registry").remove(&(client, id.to_string()));
     }
 }
 
@@ -261,6 +366,7 @@ pub(crate) struct Shared {
     pub(crate) cache: ResultCache,
     pub(crate) metrics: ServeMetrics,
     pub(crate) cancels: CancelRegistry,
+    pub(crate) watches: WatchRegistry,
     pub(crate) worker_count: usize,
     /// Fusion-window wait bound, ms (see [`ServeConfig::fuse_wait_ms`]).
     pub(crate) fuse_wait_ms: u64,
@@ -329,6 +435,12 @@ pub(crate) trait Backend: Send + Sync {
     /// Remove a finished connection (and any per-client relay state).
     fn detach(&self, client: u64);
     fn shutting_down(&self) -> bool;
+    /// Route one `frame`/`end` request into the client's live watch
+    /// stream; `false` when no such stream exists. Tiers without
+    /// in-process streams (the shard relay) keep this default.
+    fn watch_feed(&self, _client: u64, _id: &str, _input: WatchInput) -> bool {
+        false
+    }
 }
 
 impl Backend for Shared {
@@ -352,21 +464,36 @@ impl Backend for Shared {
 
     fn submit(&self, client: u64, _raw: &str, spec: protocol::JobSpec, sink: &worker::Sink) {
         self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
-        if short_circuit(self, &spec, sink) {
+        let is_watch = matches!(spec.kind, protocol::JobKind::Watch { .. });
+        // a stream is stateful: never cache-answered, never cached
+        if !is_watch && short_circuit(self, &spec, sink) {
             return;
         }
         let id = spec.id.clone();
         let cancel = Arc::new(AtomicBool::new(false));
         self.cancels.register(&id, cancel.clone());
+        // watch subscriptions get their input channel *before* the queue
+        // push, so frames arriving while the job still waits in the
+        // queue buffer instead of erroring
+        let watch_rx = if is_watch {
+            let (tx, rx) = std::sync::mpsc::channel();
+            self.watches.register(client, &id, tx);
+            Some(rx)
+        } else {
+            None
+        };
         // `accepted` goes out before the push: the sink mutex then
         // guarantees it precedes any frame the job itself emits,
         // whatever worker timing does
         sink(&protocol::frame_accepted(&id, self.queue.depth()));
-        let job = worker::Job { spec, cancel: cancel.clone(), sink: sink.clone() };
+        let job = worker::Job { spec, cancel: cancel.clone(), sink: sink.clone(), watch_rx };
         // push blocks at capacity: backpressure reaches the client
         // through its stalled connection
         if let Err(e) = self.queue.push(client, job) {
             self.cancels.unregister(&id, &cancel);
+            if is_watch {
+                self.watches.remove(client, &id);
+            }
             sink(&protocol::frame_error(Some(id.as_str()), &e.to_string()));
         }
     }
@@ -381,10 +508,17 @@ impl Backend for Shared {
 
     fn detach(&self, client: u64) {
         self.conns.lock().expect("conn list").retain(|(c, _)| *c != client);
+        // hang up this client's live streams; their workers observe the
+        // disconnect and finish
+        self.watches.drop_client(client);
     }
 
     fn shutting_down(&self) -> bool {
         self.shutdown.load(Ordering::SeqCst)
+    }
+
+    fn watch_feed(&self, client: u64, id: &str, input: WatchInput) -> bool {
+        self.watches.feed(client, id, input)
     }
 }
 
@@ -428,6 +562,7 @@ impl Server {
             cache,
             metrics: ServeMetrics::default(),
             cancels: CancelRegistry::default(),
+            watches: WatchRegistry::default(),
             worker_count,
             fuse_wait_ms: cfg.fuse_wait_ms,
             max_batch: cfg.max_batch.max(1),
@@ -625,6 +760,22 @@ pub(crate) fn handle_connection(stream: TcpStream, backend: Arc<dyn Backend>) {
                 sink(&protocol::frame_ack(id.as_deref(), "shutdown", true));
                 backend.request_shutdown();
             }
+            Ok(Request::Frame { id, row }) => {
+                if !backend.watch_feed(client, &id, WatchInput::Row(row)) {
+                    sink(&protocol::frame_error(
+                        Some(&id),
+                        "no live watch stream with this id on this connection",
+                    ));
+                }
+            }
+            Ok(Request::End { id }) => {
+                if !backend.watch_feed(client, &id, WatchInput::End) {
+                    sink(&protocol::frame_error(
+                        Some(&id),
+                        "no live watch stream with this id on this connection",
+                    ));
+                }
+            }
             Ok(Request::Job(spec)) => backend.submit(client, &line, spec, &sink),
         }
     }
@@ -722,10 +873,19 @@ fn metrics_frame(id: Option<&str>, shared: &Shared) -> String {
         json_f64(occupancy),
         m.fuse_wait_ms_total.load(Ordering::Relaxed),
     );
+    let watch = format!(
+        "{{\"watch_streams\":{},\"frames_ingested\":{},\"refits_incremental\":{},\
+         \"refits_full\":{},\"resyncs\":{}}}",
+        m.watch_streams.load(Ordering::Relaxed),
+        m.frames_ingested.load(Ordering::Relaxed),
+        m.refits_incremental.load(Ordering::Relaxed),
+        m.refits_full.load(Ordering::Relaxed),
+        m.resyncs.load(Ordering::Relaxed),
+    );
     let body = format!(
         "\"event\":\"metrics\",\"workers\":{},\"uptime_ms\":{},\"queue_depth\":{},\
          \"in_flight\":{},\"busy_ms_total\":{},\"jobs\":{jobs},\"cache\":{cache},\
-         \"sweep\":{sweep},\"partition\":{partition},\"batch\":{batch}",
+         \"sweep\":{sweep},\"partition\":{partition},\"batch\":{batch},\"watch\":{watch}",
         shared.worker_count,
         shared.started.elapsed().as_millis(),
         shared.queue.depth(),

@@ -44,6 +44,42 @@
 //! connection answers with an `error` frame, then resynchronizes at the
 //! next newline.
 //!
+//! # The `watch` stream lifecycle
+//!
+//! `watch` opens a *long-lived* job: instead of one panel in / one
+//! result out, the client subscribes a sliding-window streaming fit
+//! (see [`crate::lingam::streaming`]) and then feeds it samples, one
+//! `frame` request per tick, all carrying the subscription's `id`:
+//!
+//! ```json
+//! {"cmd":"watch","id":"w1","dim":4,"window":256,"lags":1,"resync_every":64,"drift_tol":1e-8,"threshold":0.05,"engine":"parallel:2"}
+//! {"cmd":"frame","id":"w1","row":[0.12,-0.3,1.7,0.02]}
+//! {"cmd":"end","id":"w1"}
+//! ```
+//!
+//! `lags:0` (the default) streams plain DirectLiNGAM over the window;
+//! `lags ≥ 1` streams the lag-k VarLiNGAM re-estimate. An optional
+//! `panel`/`csv` warms the window with seed rows before the first live
+//! frame. The subscription is `accepted` like any job; each ingested
+//! frame that lands on a full window answers with one `adjacency`
+//! frame — the re-estimated model plus how it was produced
+//! (`refit: "incremental" | "full"`, whether a moment `resync` ran, and
+//! the window's current drift bound):
+//!
+//! ```json
+//! {"id":"w1","event":"adjacency","frame":257,"refit":"incremental","resynced":false,"drift":1.2e-13,"elapsed_ms":0.4,"data":{"kind":"watch","order":[2,0,1,3],"b0":{...},"b_tau":[{...}]}}
+//! ```
+//!
+//! The stream terminates with exactly one terminal frame, like every
+//! job: a `result` whose data is the `watch_summary` (on `end` or a
+//! graceful server drain), an `error` (bad frame mid-stream, dead
+//! backend), or `canceled` (a `cancel` naming the subscription id).
+//! Lifecycle: subscribe → `accepted` → {`frame` → `adjacency`}* →
+//! [`resync` noted on the next adjacency] → `end` → `result`. Watch
+//! jobs hold their client's queue lane while live and are excluded
+//! from the worker's same-shape fusion window; shutdown drains them
+//! gracefully (terminal summary, not an abrupt close).
+//!
 //! # HTTP ↔ JSON-lines payload equivalence
 //!
 //! The HTTP front ([`super::http`]) speaks the *same* protocol with the
@@ -396,6 +432,18 @@ pub enum JobKind {
     Bootstrap { resamples: usize, seed: u64, threshold: f64, workers: usize },
     /// VarLiNGAM on a time-series panel.
     Var { lags: usize },
+    /// A long-lived streaming subscription: sliding-window re-estimation
+    /// over frames fed by `frame` requests (`lags == 0` ⇒ plain
+    /// DirectLiNGAM, `lags ≥ 1` ⇒ lag-k VarLiNGAM). The job's panel, if
+    /// any, only warms the window.
+    Watch {
+        dim: usize,
+        window: usize,
+        lags: usize,
+        resync_every: usize,
+        drift_tol: f64,
+        threshold: f64,
+    },
 }
 
 /// A queued unit of work (the protocol half; the runtime half wraps it
@@ -414,6 +462,10 @@ pub struct JobSpec {
 #[derive(Clone, Debug)]
 pub enum Request {
     Job(JobSpec),
+    /// One streamed sample for a live `watch` subscription.
+    Frame { id: String, row: Vec<f64> },
+    /// Graceful end of a `watch` stream (flush the terminal summary).
+    End { id: String },
     Status { id: Option<String> },
     Metrics { id: Option<String> },
     Cancel { id: Option<String>, target: String },
@@ -484,6 +536,72 @@ pub fn request_from_parts(cmd: &str, j: &Json) -> Result<Request> {
             }
             job(JobKind::Var { lags })
         }
+        "watch" => {
+            let id = id
+                .clone()
+                .ok_or_else(|| Error::Parse("\"watch\" frame missing string \"id\"".into()))?;
+            let dim = field_usize(j, "dim", 0)?;
+            if dim < 2 {
+                return Err(Error::Parse("\"watch\" needs integer \"dim\" ≥ 2".into()));
+            }
+            let window = field_usize(j, "window", 256)?;
+            if window < 8 {
+                return Err(Error::Parse("\"window\" must be ≥ 8".into()));
+            }
+            let lags = field_usize(j, "lags", 0)?;
+            let resync_every = field_usize(j, "resync_every", 64)?;
+            let drift_tol = j
+                .get("drift_tol")
+                .map(|v| v.as_f64().ok_or_else(|| bad_field("drift_tol")))
+                .transpose()?
+                .unwrap_or(1e-8);
+            let threshold = j
+                .get("threshold")
+                .map(|v| v.as_f64().ok_or_else(|| bad_field("threshold")))
+                .transpose()?
+                .unwrap_or(0.05);
+            // the panel is optional here (it only warms the window);
+            // absent, an empty sentinel keeps JobSpec uniform
+            let panel = if j.get("panel").is_some() || j.get("csv").is_some() {
+                parse_panel_source(j)?
+            } else {
+                PanelSource::Inline(Mat::zeros(0, dim))
+            };
+            Ok(Request::Job(JobSpec {
+                id,
+                panel,
+                engine: j
+                    .get("engine")
+                    .and_then(Json::as_str)
+                    .unwrap_or("parallel")
+                    .to_string(),
+                kind: JobKind::Watch { dim, window, lags, resync_every, drift_tol, threshold },
+            }))
+        }
+        "frame" => {
+            let id = id
+                .clone()
+                .ok_or_else(|| Error::Parse("\"frame\" frame missing string \"id\"".into()))?;
+            let row = j
+                .get("row")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::Parse("\"frame\" needs number array \"row\"".into()))?
+                .iter()
+                .map(|v| {
+                    v.as_f64().ok_or_else(|| Error::Parse("\"row\" must be numbers".into()))
+                })
+                .collect::<Result<Vec<f64>>>()?;
+            if row.is_empty() {
+                return Err(Error::Parse("\"row\" must be non-empty".into()));
+            }
+            Ok(Request::Frame { id, row })
+        }
+        "end" => {
+            let id = id
+                .clone()
+                .ok_or_else(|| Error::Parse("\"end\" frame missing string \"id\"".into()))?;
+            Ok(Request::End { id })
+        }
         "status" => Ok(Request::Status { id }),
         "metrics" => Ok(Request::Metrics { id }),
         "cancel" => {
@@ -496,7 +614,8 @@ pub fn request_from_parts(cmd: &str, j: &Json) -> Result<Request> {
         }
         "shutdown" => Ok(Request::Shutdown { id }),
         other => Err(Error::Parse(format!(
-            "unknown cmd {other:?} (fit|bootstrap|varlingam|status|metrics|cancel|shutdown)"
+            "unknown cmd {other:?} \
+             (fit|bootstrap|varlingam|watch|frame|end|status|metrics|cancel|shutdown)"
         ))),
     }
 }
@@ -687,6 +806,90 @@ pub fn var_data(engine: &str, fit: &VarLingamFit) -> String {
     )
 }
 
+/// A `watch` stream's per-frame re-estimate: one `adjacency` event per
+/// ingested sample once the window is full. `refit` is
+/// [`RefitKind::as_str`](crate::lingam::streaming::RefitKind::as_str);
+/// `drift` is the window's relative drift bound after the frame.
+pub fn frame_adjacency(
+    id: &str,
+    frame: u64,
+    refit: &str,
+    resynced: bool,
+    drift: f64,
+    elapsed_ms: f64,
+    data: &str,
+) -> String {
+    format!(
+        "{{\"id\":\"{}\",\"event\":\"adjacency\",\"frame\":{frame},\"refit\":\"{}\",\
+         \"resynced\":{resynced},\"drift\":{},\"elapsed_ms\":{},\"data\":{data}}}",
+        json_escape(id),
+        json_escape(refit),
+        json_f64(drift),
+        json_f64(elapsed_ms)
+    )
+}
+
+/// The `data` payload of an `adjacency` frame: held order, B̂₀, and the
+/// lag matrices (empty for a plain `lags:0` stream).
+pub fn watch_update_data(order: &[usize], b0: &Mat, b_tau: &[Mat]) -> String {
+    let lags: Vec<String> = b_tau.iter().map(mat_json).collect();
+    format!(
+        "{{\"kind\":\"watch\",\"order\":{},\"b0\":{},\"b_tau\":[{}]}}",
+        usize_array(order),
+        mat_json(b0),
+        lags.join(",")
+    )
+}
+
+/// The `data` payload of a watch stream's terminal `result` frame.
+pub fn watch_summary_data(
+    engine: &str,
+    frames: u64,
+    refits_incremental: u64,
+    refits_full: u64,
+    resyncs: u64,
+) -> String {
+    format!(
+        "{{\"kind\":\"watch_summary\",\"engine\":\"{}\",\"frames\":{frames},\
+         \"refits_incremental\":{refits_incremental},\"refits_full\":{refits_full},\
+         \"resyncs\":{resyncs}}}",
+        json_escape(engine)
+    )
+}
+
+/// Client-side: subscribe a `watch` stream (`lags == 0` ⇒ plain
+/// DirectLiNGAM over the window).
+pub fn watch_request(
+    id: &str,
+    engine: &str,
+    dim: usize,
+    window: usize,
+    lags: usize,
+    resync_every: usize,
+    drift_tol: f64,
+    threshold: f64,
+) -> String {
+    format!(
+        "{{\"cmd\":\"watch\",\"id\":\"{}\",\"engine\":\"{}\",\"dim\":{dim},\"window\":{window},\
+         \"lags\":{lags},\"resync_every\":{resync_every},\"drift_tol\":{},\"threshold\":{}}}",
+        json_escape(id),
+        json_escape(engine),
+        json_f64(drift_tol),
+        json_f64(threshold)
+    )
+}
+
+/// Client-side: one streamed sample for a live watch subscription.
+pub fn watch_frame_request(id: &str, row: &[f64]) -> String {
+    let body: Vec<String> = row.iter().map(|v| json_f64(*v)).collect();
+    format!("{{\"cmd\":\"frame\",\"id\":\"{}\",\"row\":[{}]}}", json_escape(id), body.join(","))
+}
+
+/// Client-side: gracefully end a watch stream.
+pub fn watch_end_request(id: &str) -> String {
+    format!("{{\"cmd\":\"end\",\"id\":\"{}\"}}", json_escape(id))
+}
+
 /// Client-side: a `fit` request with an inline panel.
 pub fn fit_request(id: &str, engine: &str, panel: &Mat) -> String {
     format!(
@@ -872,6 +1075,96 @@ mod tests {
             }
             other => panic!("unexpected request {other:?}"),
         }
+    }
+
+    #[test]
+    fn watch_requests_parse() {
+        let sub = watch_request("w1", "parallel:2", 4, 128, 1, 32, 1e-9, 0.1);
+        match parse_request(&sub).unwrap() {
+            Request::Job(spec) => {
+                assert_eq!(spec.id, "w1");
+                assert_eq!(spec.engine, "parallel:2");
+                match spec.kind {
+                    JobKind::Watch { dim, window, lags, resync_every, drift_tol, threshold } => {
+                        assert_eq!((dim, window, lags, resync_every), (4, 128, 1, 32));
+                        assert!((drift_tol - 1e-9).abs() < 1e-24);
+                        assert!((threshold - 0.1).abs() < 1e-12);
+                    }
+                    other => panic!("unexpected kind {other:?}"),
+                }
+                // no seed panel ⇒ the empty sentinel
+                match spec.panel {
+                    PanelSource::Inline(p) => assert_eq!((p.rows(), p.cols()), (0, 4)),
+                    other => panic!("unexpected panel source {other:?}"),
+                }
+            }
+            other => panic!("unexpected request {other:?}"),
+        }
+        // defaults: plain stream, window 256, cadence 64
+        let bare = parse_request("{\"cmd\":\"watch\",\"id\":\"w\",\"dim\":3}").unwrap();
+        match bare {
+            Request::Job(spec) => match spec.kind {
+                JobKind::Watch { dim, window, lags, resync_every, .. } => {
+                    assert_eq!((dim, window, lags, resync_every), (3, 256, 0, 64));
+                }
+                other => panic!("unexpected kind {other:?}"),
+            },
+            other => panic!("unexpected request {other:?}"),
+        }
+        match parse_request(&watch_frame_request("w1", &[0.5, -1.25, 3.0])).unwrap() {
+            Request::Frame { id, row } => {
+                assert_eq!(id, "w1");
+                assert_eq!(row, vec![0.5, -1.25, 3.0]);
+            }
+            other => panic!("unexpected request {other:?}"),
+        }
+        match parse_request(&watch_end_request("w1")).unwrap() {
+            Request::End { id } => assert_eq!(id, "w1"),
+            other => panic!("unexpected request {other:?}"),
+        }
+        // validation: dim, window, row, missing ids
+        assert!(parse_request("{\"cmd\":\"watch\",\"id\":\"w\"}").is_err());
+        assert!(parse_request("{\"cmd\":\"watch\",\"id\":\"w\",\"dim\":1}").is_err());
+        assert!(
+            parse_request("{\"cmd\":\"watch\",\"id\":\"w\",\"dim\":3,\"window\":4}").is_err()
+        );
+        assert!(parse_request("{\"cmd\":\"watch\",\"dim\":3}").is_err());
+        assert!(parse_request("{\"cmd\":\"frame\",\"id\":\"w\"}").is_err());
+        assert!(parse_request("{\"cmd\":\"frame\",\"id\":\"w\",\"row\":[]}").is_err());
+        assert!(parse_request("{\"cmd\":\"frame\",\"id\":\"w\",\"row\":[1,\"x\"]}").is_err());
+        assert!(parse_request("{\"cmd\":\"end\"}").is_err());
+    }
+
+    #[test]
+    fn adjacency_and_summary_frames_roundtrip() {
+        let b0 = Mat::from_rows(&[&[0.0, 0.0], &[1.5, 0.0]]);
+        let b1 = Mat::from_rows(&[&[0.2, 0.0], &[0.0, -0.4]]);
+        let data = watch_update_data(&[0, 1], &b0, std::slice::from_ref(&b1));
+        let frame = frame_adjacency("w1", 257, "incremental", false, 1.2e-13, 0.4, &data);
+        assert!(!frame.contains('\n'));
+        let j = parse_json(&frame).unwrap();
+        assert_eq!(j.get("event").and_then(Json::as_str), Some("adjacency"));
+        assert_eq!(j.get("frame").and_then(Json::as_u64), Some(257));
+        assert_eq!(j.get("refit").and_then(Json::as_str), Some("incremental"));
+        assert_eq!(j.get("resynced").and_then(Json::as_bool), Some(false));
+        let d = j.get("data").unwrap();
+        assert_eq!(d.get("kind").and_then(Json::as_str), Some("watch"));
+        assert_eq!(parse_mat(d.get("b0").unwrap()).unwrap(), b0);
+        let taus = d.get("b_tau").and_then(Json::as_arr).unwrap();
+        assert_eq!(parse_mat(&taus[0]).unwrap(), b1);
+        let s = parse_json(&frame_result(
+            Some("w1"),
+            false,
+            9.0,
+            &watch_summary_data("parallel", 300, 290, 6, 5),
+        ))
+        .unwrap();
+        let sd = s.get("data").unwrap();
+        assert_eq!(sd.get("kind").and_then(Json::as_str), Some("watch_summary"));
+        assert_eq!(sd.get("frames").and_then(Json::as_u64), Some(300));
+        assert_eq!(sd.get("refits_incremental").and_then(Json::as_u64), Some(290));
+        assert_eq!(sd.get("refits_full").and_then(Json::as_u64), Some(6));
+        assert_eq!(sd.get("resyncs").and_then(Json::as_u64), Some(5));
     }
 
     #[test]

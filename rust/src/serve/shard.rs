@@ -25,6 +25,9 @@
 //! live one. Every frame a shard emits is relayed to the client
 //! **verbatim** — the supervisor never re-renders payloads, so results
 //! through the fleet are byte-identical to results from a solo server.
+//! One job class does not relay: `watch` subscriptions are rejected at
+//! the front (their follow-up `frame`/`end` traffic needs the
+//! in-process watch registry a relay tier does not host).
 //!
 //! # Supervision
 //!
@@ -304,6 +307,19 @@ impl Backend for Fleet {
     }
 
     fn submit(&self, client: u64, raw: &str, spec: protocol::JobSpec, sink: &Sink) {
+        // watch subscriptions are stateful streams: their follow-up
+        // `frame`/`end` requests route through the in-process watch
+        // registry, which a relay front does not host. Accepting the
+        // subscribe here would strand the client with a stream it can
+        // never feed — reject it up front instead.
+        if matches!(spec.kind, protocol::JobKind::Watch { .. }) {
+            sink(&protocol::frame_error(
+                Some(&spec.id),
+                "watch streams are not available through a sharded fleet; \
+                 connect to a shard directly",
+            ));
+            return;
+        }
         let n = self.slots.len();
         let preferred = (route_hash(&spec) % n as u64) as usize;
         // preferred shard first (cache affinity), then fail over across

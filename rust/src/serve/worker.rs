@@ -44,10 +44,27 @@
 //! the group immediately and their slots are refilled — no ghost slots
 //! dispatching a batch below `max_batch`. Groups that close with the
 //! leader alone fall back to the per-job path above.
+//!
+//! # Watch streams
+//!
+//! A `watch` job ([`JobKind::Watch`]) is the long-lived exception to
+//! everything above: it parks on this worker thread for its whole
+//! lifetime, pulling samples off the channel the reader registered at
+//! submit time and driving a [`StreamingLingam`] /
+//! [`StreamingVarLingam`] window — full ordering sweeps only on first
+//! fill and moment resyncs, held-order coefficient re-estimation per
+//! frame in between. Watch jobs are structurally outside the fusion
+//! window ([`fuse_key`] only matches fits) and never touch the result
+//! cache (a stream has no single answer to replay); they do book the
+//! streaming counters (`frames_ingested`, `refits_incremental`,
+//! `refits_full`, `resyncs`) and hold the `watch_streams` gauge while
+//! live. The loop polls the job's cancel flag and the queue's open
+//! state between samples, so `cancel` frames and server drain both
+//! terminate a stream promptly even when no samples arrive.
 
 use super::cache::Fnv128;
 use super::protocol::{self, JobKind, JobSpec, PanelSource};
-use super::Shared;
+use super::{Shared, WatchInput};
 use crate::coordinator::{
     bootstrap_direct_observed, bootstrap_partition_observed, BootstrapOpts, EngineChoice,
 };
@@ -56,11 +73,13 @@ use crate::lingam::direct::validate_panel;
 use crate::lingam::prune::PruneMethod;
 use crate::lingam::{
     BatchedSession, DirectLingam, IncrementalSession, LingamFit, OrderingEngine, OrderingSession,
-    PartitionSpec, PartitionedPlan, SequentialEngine, SweepStrategy, VarLingam,
+    PartitionSpec, PartitionedPlan, RefitKind, SequentialEngine, StreamingConfig, StreamingLingam,
+    StreamingVarLingam, SweepCounters, SweepStrategy, VarLingam,
 };
 use crate::util::{Error, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -76,6 +95,10 @@ pub struct Job {
     /// Cooperative cancel flag, checked at step/resample boundaries.
     pub cancel: Arc<AtomicBool>,
     pub sink: Sink,
+    /// Watch jobs only: the receiving end of the sample channel the
+    /// reader registered in the server's watch registry at submit time.
+    /// `None` for every one-shot job kind.
+    pub watch_rx: Option<Receiver<WatchInput>>,
 }
 
 /// Shape + engine configuration a parked workspace can be reused for.
@@ -316,6 +339,12 @@ fn run_job(shared: &Shared, pool: &mut SessionPool, job: &Job) {
         (job.sink)(&protocol::frame_canceled(id));
         return;
     }
+    if matches!(job.spec.kind, JobKind::Watch { .. }) {
+        // long-lived stream: its own driver loop, outside the
+        // execute/cache path (streams are never cached)
+        run_watch(shared, job);
+        return;
+    }
     match execute(shared, pool, job) {
         Ok((payload, cached)) => {
             let ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -377,6 +406,14 @@ fn execute(shared: &Shared, pool: &mut SessionPool, job: &Job) -> Result<(Arc<St
             }
         }
         JobKind::Var { lags } => run_var(shared, job, panel, choice, *lags)?,
+        // run_job dispatches watch jobs to `run_watch` before this path
+        // and the fusion window only admits fits, so a watch kind here
+        // is a routing bug — fail it cleanly rather than panic a worker
+        JobKind::Watch { .. } => {
+            return Err(Error::InvalidArgument(
+                "watch streams run outside the execute/cache path".into(),
+            ))
+        }
     };
     let payload = Arc::new(payload);
     shared.cache.put(key, payload.clone());
@@ -402,6 +439,17 @@ pub(super) fn cache_key(panel: &Mat, choice: EngineChoice, kind: &JobKind) -> u1
         JobKind::Var { lags } => {
             h.write_str("varlingam");
             h.write_u64(*lags as u64);
+        }
+        // watch streams are live and never cached; the arm keeps the
+        // hash total over the job kinds
+        JobKind::Watch { dim, window, lags, resync_every, drift_tol, threshold } => {
+            h.write_str("watch");
+            h.write_u64(*dim as u64);
+            h.write_u64(*window as u64);
+            h.write_u64(*lags as u64);
+            h.write_u64(*resync_every as u64);
+            h.write_f64_bits(*drift_tol);
+            h.write_f64_bits(*threshold);
         }
     }
     h.write_str(&choice.spec());
@@ -591,6 +639,269 @@ fn run_var(
     Ok(protocol::var_data(&choice.spec(), &fit))
 }
 
+/// How often a parked watch stream re-checks its cancel flag and the
+/// queue's open state while waiting for samples.
+const WATCH_POLL_MS: u64 = 50;
+
+/// The sliding-window driver behind one watch stream: `lags == 0` is
+/// plain DirectLiNGAM over the window, otherwise the lag-k VAR variant.
+enum WatchDriver {
+    Plain(StreamingLingam),
+    Var(StreamingVarLingam),
+}
+
+/// One emitted adjacency frame, driver-agnostic: the booking fields
+/// plus the already-rendered `watch` data payload.
+struct WatchFrame {
+    refit: RefitKind,
+    resynced: bool,
+    drift_bound: f64,
+    counters: SweepCounters,
+    data: String,
+}
+
+impl WatchDriver {
+    fn new(
+        dim: usize,
+        window: usize,
+        lags: usize,
+        cfg: StreamingConfig,
+        workers: usize,
+        strategy: SweepStrategy,
+        threshold: f64,
+    ) -> Result<WatchDriver> {
+        Ok(if lags == 0 {
+            WatchDriver::Plain(StreamingLingam::with_options(
+                dim, window, cfg, workers, strategy, threshold,
+            )?)
+        } else {
+            WatchDriver::Var(StreamingVarLingam::with_options(
+                dim, lags, window, cfg, workers, strategy, threshold,
+            )?)
+        })
+    }
+
+    fn warm(&mut self, row: &[f64]) -> Result<()> {
+        match self {
+            WatchDriver::Plain(s) => s.warm(row),
+            WatchDriver::Var(s) => s.warm(row),
+        }
+    }
+
+    /// Ingest one sample, turning a raised cancel flag into
+    /// [`Error::Canceled`] at full-refit step boundaries (incremental
+    /// frames are too short to need interior cancel points).
+    fn ingest(&mut self, row: &[f64], cancel: &AtomicBool) -> Result<Option<WatchFrame>> {
+        let mut observer = |step: usize, total: usize| {
+            if cancel.load(Ordering::Relaxed) {
+                return Err(Error::Canceled(format!(
+                    "watch canceled at refit step {step}/{total}"
+                )));
+            }
+            Ok(())
+        };
+        match self {
+            WatchDriver::Plain(s) => Ok(s.ingest_observed(row, &mut observer)?.map(|o| {
+                WatchFrame {
+                    refit: o.refit,
+                    resynced: o.resynced,
+                    drift_bound: o.drift_bound,
+                    counters: o.counters,
+                    data: protocol::watch_update_data(&o.order, &o.b0, &[]),
+                }
+            })),
+            WatchDriver::Var(s) => Ok(s.ingest_observed(row, &mut observer)?.map(|o| {
+                WatchFrame {
+                    refit: o.refit,
+                    resynced: o.resynced,
+                    drift_bound: o.drift_bound,
+                    // incremental VAR frames run no sweep; full refits
+                    // book through the plain driver inside the fit
+                    counters: SweepCounters::default(),
+                    data: protocol::watch_update_data(&o.order, &o.b0, &o.b_tau),
+                }
+            })),
+        }
+    }
+
+    fn refits_incremental(&self) -> u64 {
+        match self {
+            WatchDriver::Plain(s) => s.refits_incremental(),
+            WatchDriver::Var(s) => s.refits_incremental(),
+        }
+    }
+
+    fn refits_full(&self) -> u64 {
+        match self {
+            WatchDriver::Plain(s) => s.refits_full(),
+            WatchDriver::Var(s) => s.refits_full(),
+        }
+    }
+
+    fn resyncs(&self) -> u64 {
+        match self {
+            WatchDriver::Plain(s) => s.window().resyncs(),
+            WatchDriver::Var(s) => s.window().resyncs(),
+        }
+    }
+}
+
+/// Terminal disposition of a watch stream's sample loop.
+enum WatchEnd {
+    /// The client sent `end`: summary `result` frame.
+    Ended,
+    /// Server shutdown closed the queue: drained with the same summary
+    /// `result` frame (the stream completed, just on the server's clock).
+    Drained,
+    /// Cancel flag raised (a `cancel` frame or client detach).
+    Canceled,
+    /// The sample channel dropped without `end` — the connection
+    /// vanished, so the terminal frame has no reader anyway.
+    Disconnected,
+    /// A sample failed to ingest (wrong arity, non-finite values).
+    Failed(Error),
+}
+
+/// Drive one watch stream to completion: pull samples off the job's
+/// channel, feed the sliding-window driver, emit one `adjacency` frame
+/// per full-window sample and exactly one terminal frame. Holds this
+/// worker (and the client's queue lane) for the stream's lifetime —
+/// documented, deliberate: a stream is a standing computation, not a
+/// queued unit.
+fn run_watch(shared: &Shared, job: &Job) {
+    let id = &job.spec.id;
+    let JobKind::Watch { dim, window, lags, resync_every, drift_tol, threshold } = job.spec.kind
+    else {
+        unreachable!("run_watch routed a non-watch job");
+    };
+    let fail = |msg: &str| {
+        shared.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+        (job.sink)(&protocol::frame_error(Some(id.as_str()), msg));
+    };
+    let Some(rx) = job.watch_rx.as_ref() else {
+        fail("watch job carries no sample channel (relay tiers do not host streams)");
+        return;
+    };
+    let choice = match EngineChoice::parse(&job.spec.engine) {
+        Ok(c) => c.resolve_workers(shared.worker_count),
+        Err(e) => {
+            fail(&e.to_string());
+            return;
+        }
+    };
+    // streams re-seed a session per full refit from the maintained
+    // moments, so only engines with an incremental workspace apply
+    let Some((workers, strategy)) = incremental_params(choice) else {
+        fail(&format!(
+            "engine `{}` has no incremental workspace; watch streams need \
+             vectorized, parallel or pruned",
+            choice.spec()
+        ));
+        return;
+    };
+    let cfg = StreamingConfig { resync_every, drift_tol };
+    let mut driver = match WatchDriver::new(dim, window, lags, cfg, workers, strategy, threshold) {
+        Ok(d) => d,
+        Err(e) => {
+            fail(&e.to_string());
+            return;
+        }
+    };
+    // an inline seed panel pre-fills the window without emitting frames
+    match &job.spec.panel {
+        PanelSource::Inline(panel) => {
+            for r in 0..panel.rows() {
+                if let Err(e) = driver.warm(panel.row(r)) {
+                    fail(&e.to_string());
+                    return;
+                }
+            }
+        }
+        PanelSource::Csv(_) => {
+            fail("watch seed panels must be inline");
+            return;
+        }
+    }
+    shared.metrics.watch_streams.fetch_add(1, Ordering::Relaxed);
+    let t0 = Instant::now();
+    let mut ingested: u64 = 0;
+    let mut busy_ms = 0.0f64;
+    let end = loop {
+        if job.cancel.load(Ordering::Relaxed) {
+            break WatchEnd::Canceled;
+        }
+        if !shared.queue.is_open() {
+            break WatchEnd::Drained;
+        }
+        match rx.recv_timeout(Duration::from_millis(WATCH_POLL_MS)) {
+            Ok(WatchInput::Row(row)) => {
+                let f0 = Instant::now();
+                ingested += 1;
+                shared.metrics.frames_ingested.fetch_add(1, Ordering::Relaxed);
+                let fit = driver.ingest(&row, &job.cancel);
+                let ms = f0.elapsed().as_secs_f64() * 1e3;
+                busy_ms += ms;
+                match fit {
+                    // window still warming: no frame to emit yet
+                    Ok(None) => {}
+                    Ok(Some(frame)) => {
+                        shared.metrics.add_sweep(&frame.counters);
+                        match frame.refit {
+                            RefitKind::Incremental => {
+                                shared.metrics.refits_incremental.fetch_add(1, Ordering::Relaxed)
+                            }
+                            RefitKind::Full => {
+                                shared.metrics.refits_full.fetch_add(1, Ordering::Relaxed)
+                            }
+                        };
+                        if frame.resynced {
+                            shared.metrics.resyncs.fetch_add(1, Ordering::Relaxed);
+                        }
+                        (job.sink)(&protocol::frame_adjacency(
+                            id,
+                            ingested,
+                            frame.refit.as_str(),
+                            frame.resynced,
+                            frame.drift_bound,
+                            ms,
+                            &frame.data,
+                        ));
+                    }
+                    Err(Error::Canceled(_)) => break WatchEnd::Canceled,
+                    Err(e) => break WatchEnd::Failed(e),
+                }
+            }
+            Ok(WatchInput::End) => break WatchEnd::Ended,
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break WatchEnd::Disconnected,
+        }
+    };
+    shared.metrics.watch_streams.fetch_sub(1, Ordering::Relaxed);
+    match end {
+        WatchEnd::Ended | WatchEnd::Drained => {
+            shared.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+            shared.metrics.busy_ms_total.fetch_add(busy_ms.round() as u64, Ordering::Relaxed);
+            let data = protocol::watch_summary_data(
+                &choice.spec(),
+                ingested,
+                driver.refits_incremental(),
+                driver.refits_full(),
+                driver.resyncs(),
+            );
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            (job.sink)(&protocol::frame_result(Some(id.as_str()), false, ms, &data));
+        }
+        WatchEnd::Canceled | WatchEnd::Disconnected => {
+            shared.metrics.jobs_canceled.fetch_add(1, Ordering::Relaxed);
+            (job.sink)(&protocol::frame_canceled(id));
+        }
+        WatchEnd::Failed(e) => {
+            shared.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+            (job.sink)(&protocol::frame_error(Some(id.as_str()), &e.to_string()));
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -656,7 +967,46 @@ mod tests {
             spec: JobSpec { id: "j".into(), panel, engine: engine.into(), kind },
             cancel: Arc::new(AtomicBool::new(false)),
             sink: Arc::new(|_| {}),
+            watch_rx: None,
         }
+    }
+
+    fn watch_kind(window: usize) -> JobKind {
+        JobKind::Watch {
+            dim: 2,
+            window,
+            lags: 0,
+            resync_every: 64,
+            drift_tol: 1e-8,
+            threshold: 0.05,
+        }
+    }
+
+    #[test]
+    fn watch_jobs_are_structurally_excluded_from_fusion() {
+        // the fusion window only admits fits: a watch job can never fuse,
+        // whatever its engine, so long-lived streams cannot capture the
+        // batched lock-step path
+        let inline = || PanelSource::Inline(panel());
+        assert_eq!(fuse_key(4, &job("vectorized", inline(), watch_kind(64))), None);
+        assert_eq!(fuse_key(4, &job("parallel", inline(), watch_kind(64))), None);
+    }
+
+    #[test]
+    fn watch_cache_keys_are_distinct_per_configuration() {
+        let p = panel();
+        let base = cache_key(&p, EngineChoice::Vectorized, &watch_kind(64));
+        assert_ne!(base, cache_key(&p, EngineChoice::Vectorized, &JobKind::Fit));
+        assert_ne!(base, cache_key(&p, EngineChoice::Vectorized, &watch_kind(128)));
+        let var_watch = JobKind::Watch {
+            dim: 2,
+            window: 64,
+            lags: 2,
+            resync_every: 64,
+            drift_tol: 1e-8,
+            threshold: 0.05,
+        };
+        assert_ne!(base, cache_key(&p, EngineChoice::Vectorized, &var_watch));
     }
 
     #[test]

@@ -90,6 +90,14 @@ impl Args {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Was this option given explicitly on the command line (as opposed
+    /// to falling back to its spec default)? Lets a subcommand switch
+    /// behavior on an option that also has a default — e.g. `watch`
+    /// goes remote only when `--addr` was actually typed.
+    pub fn provided(&self, name: &str) -> bool {
+        self.opts.contains_key(name)
+    }
+
     /// String option (explicit or spec default).
     pub fn get(&self, name: &str) -> Option<String> {
         self.opts.get(name).cloned().or_else(|| {
@@ -169,6 +177,11 @@ pub fn serve_opts() -> Vec<OptSpec> {
         opt("job-id", "client: job id echoed on response frames", Some("job-1")),
         opt("csv", "client: server-side CSV path instead of an inline panel", None),
         opt("threshold", "client bootstrap: stable-edge probability cutoff", Some("0.5")),
+        opt("timeout-ms", "client/watch: connect and read deadline in ms (0 = none)", Some("0")),
+        opt("window", "watch: sliding-window size in frames", Some("256")),
+        opt("resync-every", "watch: full resync every K frames (0 = drift-only)", Some("64")),
+        opt("drift-tol", "watch: relative moment-drift bound that forces a resync", Some("1e-8")),
+        opt("edge-threshold", "watch: |beta| threshold for streamed adjacency edges", Some("0.05")),
     ]
 }
 
@@ -223,6 +236,26 @@ mod tests {
         assert_eq!(a.get("cache-dir"), None);
         assert_eq!(a.get("ready-fd"), None);
         assert_eq!(a.get("csv"), None);
+        assert_eq!(a.usize("timeout-ms"), 0);
+        assert_eq!(a.usize("window"), 256);
+        assert_eq!(a.usize("resync-every"), 64);
+        assert!((a.f64("drift-tol") - 1e-8).abs() < 1e-20);
+        assert!((a.f64("edge-threshold") - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn provided_distinguishes_explicit_options_from_defaults() {
+        let specs = serve_opts();
+        let a = Args::parse_from(
+            "test".into(),
+            vec!["--addr".into(), "127.0.0.1:7777".into()],
+            "t",
+            &specs,
+        );
+        assert!(a.provided("addr"));
+        assert!(!a.provided("window"));
+        // defaults still resolve through get() either way
+        assert_eq!(a.usize("window"), 256);
     }
 
     #[test]

@@ -301,3 +301,111 @@ fn two_shard_fleet_survives_a_kill_and_books_the_restart() {
     assert_eq!(ev, "result", "fleet keeps serving after a shard kill");
     assert!(sup.shutdown_within(Duration::from_secs(60)), "fleet drains cleanly");
 }
+
+/// Total fleet loss: with every shard SIGKILLed at once, a submit must
+/// come back as a prompt error frame (failover ring exhausted — not a
+/// hang), the supervisor's backoff must revive both shards, and traffic
+/// must flow again. Watch subscriptions are refused at the fleet front
+/// outright: their follow-up frames need an in-process stream registry
+/// a relay tier does not host.
+#[cfg(unix)]
+#[test]
+fn all_shards_dead_errors_promptly_then_supervisor_recovers() {
+    use alingam::serve::shard::Supervisor;
+    use std::process::Command;
+
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 1,
+        queue_capacity: 16,
+        cache_entries: 8,
+        fuse_wait_ms: 0,
+        max_batch: 1,
+        http_addr: None,
+        cache_dir: None,
+    };
+    let exe = std::path::PathBuf::from(env!("CARGO_BIN_EXE_alingam"));
+    let sup = Supervisor::start(cfg, 2, Some(exe)).expect("fleet start");
+
+    let terminal = |req: &str| -> (String, Json) {
+        let mut stream = TcpStream::connect(sup.local_addr()).expect("connect fleet");
+        stream.write_all(req.as_bytes()).expect("send");
+        stream.write_all(b"\n").expect("send");
+        let mut reader = BufReader::new(stream);
+        loop {
+            let mut line = String::new();
+            assert!(reader.read_line(&mut line).expect("recv") > 0, "fleet closed early");
+            let f = protocol::parse_json(line.trim_end()).expect("fleet frame json");
+            if let ev @ ("result" | "error" | "canceled") = event_of(&f) {
+                return (ev.to_string(), f);
+            }
+        }
+    };
+
+    let (ev, _) = terminal(&protocol::fit_request("d0", "vectorized", &chain_panel(400, 6, 31)));
+    assert_eq!(ev, "result", "healthy fleet serves");
+
+    // build the probe request *before* the kills so the submit races
+    // only the monitors' 100 ms poll, not panel simulation too
+    let probe = protocol::fit_request("d1", "vectorized", &chain_panel(400, 6, 32));
+
+    // SIGKILL the whole fleet at once
+    for (_, pid, _) in sup.shard_table() {
+        let killed =
+            Command::new("kill").args(["-9", &pid.to_string()]).status().expect("spawn kill");
+        assert!(killed.success(), "kill -9 {pid}");
+    }
+
+    // with every shard down the failover ring exhausts into an error
+    // frame — promptly, before the monitors can possibly respawn a child
+    let t0 = Instant::now();
+    let (ev, frame) = terminal(&probe);
+    assert_eq!(ev, "error", "dead fleet must error, got {}", frame.render());
+    let msg = frame.get("message").and_then(Json::as_str).unwrap_or_default();
+    assert!(
+        msg.contains("shard") || msg.contains("live"),
+        "error must name the shard outage: {msg:?}"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "error frame took {:?}: a dead fleet must fail fast, not hang",
+        t0.elapsed()
+    );
+
+    // the monitors' backoff revives both shards
+    let metrics = || -> Json {
+        let mut stream = TcpStream::connect(sup.local_addr()).expect("connect fleet");
+        stream.write_all(protocol::control_request("metrics").as_bytes()).expect("send");
+        stream.write_all(b"\n").expect("send");
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).expect("recv") > 0);
+        protocol::parse_json(line.trim_end()).expect("metrics json")
+    };
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let m = metrics();
+        let restarts = m.get("shard_restarts").and_then(Json::as_u64).unwrap_or(0);
+        let live = m.get("shards_live").and_then(Json::as_u64).unwrap_or(0);
+        if restarts >= 2 && live == 2 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "fleet not revived within 30s (restarts={restarts}, live={live})"
+        );
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    assert!(sup.restart_count() >= 2);
+    let (ev, _) = terminal(&protocol::fit_request("d2", "vectorized", &chain_panel(400, 6, 33)));
+    assert_eq!(ev, "result", "revived fleet serves again");
+
+    // watch streams never relay: rejected at the front with a clear error
+    let (ev, frame) =
+        terminal(&protocol::watch_request("dw", "vectorized", 3, 16, 0, 0, 1e-3, 0.05));
+    assert_eq!(ev, "error");
+    let msg = frame.get("message").and_then(Json::as_str).unwrap_or_default();
+    assert!(msg.contains("sharded fleet"), "unexpected rejection message {msg:?}");
+
+    assert!(sup.shutdown_within(Duration::from_secs(60)), "fleet drains cleanly");
+}

@@ -1,0 +1,369 @@
+//! Streaming-window acceptance: a full update/downdate slide of the
+//! window reproduces the from-scratch fit within tolerance and is
+//! bitwise identical immediately after a moment resync; the held-order
+//! incremental refit is ≥ 5× faster than a from-scratch fit of the
+//! identical window at d=64 / n=512; and a live `watch` stream over a
+//! real loopback socket turns frames into adjacency updates, cancels
+//! mid-stream, and books the streaming metrics counters.
+
+use alingam::lingam::prune::{estimate_adjacency, PruneMethod};
+use alingam::lingam::{
+    DirectLingam, IncrementalSession, RefitKind, StreamingConfig, StreamingLingam,
+};
+use alingam::linalg::Mat;
+use alingam::serve::protocol::{self, Json};
+use alingam::serve::{ServeConfig, Server};
+use alingam::sim::{simulate_sem, simulate_var, SemSpec, VarSpec};
+use alingam::stats;
+use alingam::util::rng::Pcg64;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Instant;
+
+fn no_resync() -> StreamingConfig {
+    StreamingConfig { resync_every: 0, drift_tol: f64::INFINITY }
+}
+
+fn sem_rows(d: usize, n: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let ds = simulate_sem(&SemSpec::layered(d, 2, 0.7), n, &mut rng);
+    (0..n).map(|r| ds.data.row(r).to_vec()).collect()
+}
+
+/// From-scratch reference on the identical window: a fresh session over
+/// the materialized panel, matching [`StreamingLingam::new`] settings
+/// (1 worker, exact sweep, OLS threshold 0.05).
+fn from_scratch(panel: &Mat) -> alingam::lingam::LingamFit {
+    let mut session = IncrementalSession::new(panel, 1, false).expect("reference session");
+    DirectLingam::with_prune(PruneMethod::OlsThreshold(0.05))
+        .fit_session(panel, &mut session)
+        .expect("reference fit")
+}
+
+/// Acceptance (a), tolerance half: slide the window through a FULL
+/// turnover — every seed sample enters and later leaves under rank-1
+/// update/downdate, with resync disabled — and the maintained moments
+/// and held-order adjacency must still match a from-scratch computation
+/// on the surviving rows.
+#[test]
+fn full_window_slide_reproduces_from_scratch_fit_within_tolerance() {
+    let (d, cap) = (8, 128);
+    let rows = sem_rows(d, 2 * cap + 1, 7);
+    let mut s = StreamingLingam::new(d, cap, no_resync()).unwrap();
+    let mut last = None;
+    for row in &rows {
+        if let Some(out) = s.ingest(row).unwrap() {
+            last = Some(out);
+        }
+    }
+    // every original sample was downdated back out, never resynced
+    assert_eq!(s.window().frames(), (2 * cap + 1) as u64);
+    assert_eq!(s.window().resyncs(), 0, "slide must stay on the update/downdate path");
+    let out = last.expect("full window produced no outcome");
+    assert_eq!(out.refit, RefitKind::Incremental);
+
+    // maintained moments vs direct computation on the surviving rows
+    let panel = s.window().panel();
+    for a in 0..d {
+        let col_a = panel.col(a);
+        assert!(
+            (s.window().mean_of(a) - stats::mean(&col_a)).abs() < 1e-8,
+            "mean[{a}] drifted after a full slide"
+        );
+        for b in 0..d {
+            let direct = stats::cov(&col_a, &panel.col(b));
+            assert!(
+                (s.window().cov(a, b) - direct).abs() < 1e-8,
+                "cov[{a},{b}]: maintained {} vs from-scratch {direct}",
+                s.window().cov(a, b)
+            );
+        }
+    }
+
+    // held-order adjacency vs a from-scratch OLS on the raw window
+    let reference =
+        estimate_adjacency(&panel, &out.order, PruneMethod::OlsThreshold(0.05)).unwrap();
+    let err = out.b0.sub(&reference).max_abs();
+    assert!(err < 1e-6, "moment-space B0 off from-scratch OLS by {err}");
+
+    // and when the from-scratch sweep lands on the same order, the full
+    // fits agree too (the held order may legitimately lag a flip)
+    let scratch = from_scratch(&panel);
+    if scratch.order == out.order {
+        let err = out.b0.sub(&scratch.adjacency).max_abs();
+        assert!(err < 1e-6, "B0 off from-scratch fit by {err}");
+    }
+}
+
+/// Acceptance (a), bitwise half: the frame on which the periodic resync
+/// fires re-materializes raw columns and re-runs the full sweep from a
+/// workspace bitwise identical to a fresh session's — so its fit must
+/// equal the from-scratch fit bit for bit, not just within tolerance.
+#[test]
+fn resynced_frame_is_bitwise_identical_to_from_scratch_fit() {
+    let (d, cap) = (6, 64);
+    let cfg = StreamingConfig { resync_every: 96, drift_tol: f64::INFINITY };
+    let rows = sem_rows(d, 100, 11);
+    let mut s = StreamingLingam::new(d, cap, cfg).unwrap();
+    let mut resynced = None;
+    for row in &rows {
+        if let Some(out) = s.ingest(row).unwrap() {
+            if out.resynced && resynced.is_none() {
+                resynced = Some(out);
+                break;
+            }
+        }
+    }
+    let out = resynced.expect("resync cadence never fired within 100 frames");
+    assert_eq!(out.refit, RefitKind::Full);
+    let panel = s.window().panel();
+    let scratch = from_scratch(&panel);
+    assert_eq!(out.order, scratch.order, "resynced order must equal the from-scratch order");
+    for i in 0..d {
+        for j in 0..d {
+            assert_eq!(
+                out.b0[(i, j)].to_bits(),
+                scratch.adjacency[(i, j)].to_bits(),
+                "B0[{i},{j}] not bitwise after resync: {} vs {}",
+                out.b0[(i, j)],
+                scratch.adjacency[(i, j)]
+            );
+        }
+    }
+}
+
+/// Acceptance (b): at d=64 over a 512-sample window, the held-order
+/// incremental per-frame refit must be ≥ 5× faster than re-fitting the
+/// identical window from scratch. (The real margin is orders of
+/// magnitude — the incremental path never touches the raw panel.)
+#[test]
+fn incremental_refit_is_5x_faster_than_from_scratch_at_d64_n512() {
+    let (d, cap) = (64, 512);
+    let frames = 8usize;
+    let rows = sem_rows(d, cap + frames, 13);
+    let mut s = StreamingLingam::new(d, cap, no_resync()).unwrap();
+    for row in rows.iter().take(cap) {
+        s.ingest(row).unwrap();
+    }
+    assert_eq!(s.refits_full(), 1, "window fill must run exactly one full sweep");
+
+    let t0 = Instant::now();
+    for row in rows.iter().skip(cap) {
+        let out = s.ingest(row).unwrap().expect("full window emits a frame");
+        assert_eq!(out.refit, RefitKind::Incremental);
+    }
+    let incremental_ms = t0.elapsed().as_secs_f64() * 1e3 / frames as f64;
+
+    let panel = s.window().panel();
+    let t1 = Instant::now();
+    let reps = 2usize;
+    for _ in 0..reps {
+        std::hint::black_box(from_scratch(&panel));
+    }
+    let scratch_ms = t1.elapsed().as_secs_f64() * 1e3 / reps as f64;
+
+    assert!(
+        scratch_ms >= 5.0 * incremental_ms,
+        "incremental refit not ≥5× faster: {incremental_ms:.3} ms/frame incremental \
+         vs {scratch_ms:.3} ms/frame from scratch"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Socket-level watch stream (acceptance c)
+// ---------------------------------------------------------------------
+
+fn start(workers: usize, queue: usize) -> Server {
+    Server::start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers,
+        queue_capacity: queue,
+        cache_entries: 0,
+        fuse_wait_ms: 0,
+        max_batch: 1,
+        ..ServeConfig::default()
+    })
+    .expect("server start")
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let writer = TcpStream::connect(addr).expect("connect");
+        let reader = BufReader::new(writer.try_clone().expect("clone stream"));
+        Client { reader, writer }
+    }
+
+    fn send(&mut self, line: &str) {
+        self.writer.write_all(line.as_bytes()).expect("send");
+        self.writer.write_all(b"\n").expect("send newline");
+    }
+
+    fn recv(&mut self) -> Json {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("recv");
+        assert!(n > 0, "connection closed mid-stream");
+        protocol::parse_json(line.trim_end()).expect("server frames must be valid json")
+    }
+
+    fn recv_event(&mut self, event: &str) -> Json {
+        loop {
+            let f = self.recv();
+            if f.get("event").and_then(Json::as_str) == Some(event) {
+                return f;
+            }
+        }
+    }
+
+    fn recv_terminal(&mut self, id: &str) -> (String, Json) {
+        loop {
+            let f = self.recv();
+            if f.get("id").and_then(Json::as_str) != Some(id) {
+                continue;
+            }
+            if let Some(ev @ ("result" | "error" | "canceled")) =
+                f.get("event").and_then(Json::as_str)
+            {
+                let ev = ev.to_string();
+                return (ev, f);
+            }
+        }
+    }
+}
+
+fn watch_counter(frame: &Json, key: &str) -> u64 {
+    frame
+        .get("watch")
+        .and_then(|w| w.get(key))
+        .and_then(Json::as_u64)
+        .unwrap_or_else(|| panic!("metrics frame missing watch.{key}"))
+}
+
+/// Acceptance (c): subscribe, stream 26 frames into a 16-sample window,
+/// read one adjacency frame per post-fill sample (the first a full
+/// sweep, the rest held-order incremental), end the stream gracefully,
+/// and find every streaming counter booked in `metrics`.
+#[test]
+fn watch_stream_turns_frames_into_adjacency_updates_over_the_socket() {
+    let server = start(1, 8);
+    let (d, window, total) = (3usize, 16usize, 26usize);
+    let rows = sem_rows(d, total, 31);
+    let mut c = Client::connect(server.local_addr());
+    c.send(&protocol::watch_request("w1", "vectorized", d, window, 0, 0, 1e-3, 0.05));
+    let _ = c.recv_event("accepted");
+    for row in &rows {
+        c.send(&protocol::watch_frame_request("w1", row));
+    }
+    // one adjacency frame per sample once the window filled
+    let mut refits = Vec::new();
+    for k in 0..=(total - window) {
+        let f = c.recv_event("adjacency");
+        assert_eq!(f.get("id").and_then(Json::as_str), Some("w1"));
+        assert_eq!(f.get("frame").and_then(Json::as_u64), Some((window + k) as u64));
+        assert_eq!(f.get("resynced").and_then(Json::as_bool), Some(false));
+        let data = f.get("data").expect("adjacency frame carries data");
+        assert_eq!(data.get("kind").and_then(Json::as_str), Some("watch"));
+        let order = data.get("order").and_then(Json::as_arr).expect("data.order");
+        assert_eq!(order.len(), d);
+        let b0 = data.get("b0").and_then(|m| protocol::parse_mat(m).ok()).expect("data.b0");
+        assert_eq!((b0.rows(), b0.cols()), (d, d));
+        assert_eq!(
+            data.get("b_tau").and_then(Json::as_arr).map(|a| a.len()),
+            Some(0),
+            "plain watch streams carry no lag matrices"
+        );
+        refits.push(f.get("refit").and_then(Json::as_str).unwrap_or("").to_string());
+    }
+    assert_eq!(refits[0], "full", "the fill frame must run the full sweep");
+    assert!(
+        refits[1..].iter().all(|r| r == "incremental"),
+        "post-fill frames must take the held-order fast path: {refits:?}"
+    );
+
+    c.send(&protocol::watch_end_request("w1"));
+    let (ev, frame) = c.recv_terminal("w1");
+    assert_eq!(ev, "result", "graceful end must summarize: {}", frame.render());
+    assert_eq!(frame.get("cached").and_then(Json::as_bool), Some(false));
+    let data = frame.get("data").expect("summary data");
+    assert_eq!(data.get("kind").and_then(Json::as_str), Some("watch_summary"));
+    assert_eq!(data.get("frames").and_then(Json::as_u64), Some(total as u64));
+    assert_eq!(data.get("refits_full").and_then(Json::as_u64), Some(1));
+    assert_eq!(
+        data.get("refits_incremental").and_then(Json::as_u64),
+        Some((total - window) as u64)
+    );
+
+    c.send(&protocol::control_request("metrics"));
+    let m = c.recv_event("metrics");
+    assert_eq!(watch_counter(&m, "watch_streams"), 0, "gauge must drop after the end");
+    assert_eq!(watch_counter(&m, "frames_ingested"), total as u64);
+    assert_eq!(watch_counter(&m, "refits_full"), 1);
+    assert_eq!(watch_counter(&m, "refits_incremental"), (total - window) as u64);
+    let completed = m.get("jobs").and_then(|j| j.get("completed")).and_then(Json::as_u64);
+    assert_eq!(completed, Some(1), "an ended stream books as completed");
+    server.shutdown();
+}
+
+/// Acceptance (c), cancel half: `cancel` lands mid-stream and the
+/// subscription answers `canceled` — booked as a canceled job, with the
+/// live-stream gauge back at zero.
+#[test]
+fn watch_stream_cancels_mid_stream() {
+    let server = start(1, 8);
+    let (d, window) = (3usize, 16usize);
+    let rows = sem_rows(d, 20, 37);
+    let mut c = Client::connect(server.local_addr());
+    c.send(&protocol::watch_request("w2", "vectorized", d, window, 0, 0, 1e-3, 0.05));
+    let _ = c.recv_event("accepted");
+    for row in &rows {
+        c.send(&protocol::watch_frame_request("w2", row));
+    }
+    // the stream is live (adjacency flowing) when the cancel lands
+    let _ = c.recv_event("adjacency");
+    c.send(&protocol::cancel_request("w2"));
+    let (ev, _) = c.recv_terminal("w2");
+    assert_eq!(ev, "canceled");
+    c.send(&protocol::control_request("metrics"));
+    let m = c.recv_event("metrics");
+    assert_eq!(watch_counter(&m, "watch_streams"), 0);
+    let canceled = m.get("jobs").and_then(|j| j.get("canceled")).and_then(Json::as_u64);
+    assert_eq!(canceled, Some(1), "a canceled stream books as canceled: {}", m.render());
+    server.shutdown();
+}
+
+/// A `lags ≥ 1` subscription runs the streaming VAR-LiNGAM estimator:
+/// adjacency frames carry one lag matrix per lag next to B̂₀.
+#[test]
+fn watch_stream_with_lags_streams_var_lag_matrices() {
+    let server = start(1, 8);
+    let (d, window, lags) = (2usize, 16usize, 1usize);
+    let mut rng = Pcg64::seed_from_u64(41);
+    let ds = simulate_var(&VarSpec { dim: d, ..VarSpec::default() }, 24, &mut rng);
+    let mut c = Client::connect(server.local_addr());
+    c.send(&protocol::watch_request("w3", "vectorized", d, window, lags, 0, 1e-3, 0.05));
+    let _ = c.recv_event("accepted");
+    for t in 0..24 {
+        c.send(&protocol::watch_frame_request("w3", ds.data.row(t)));
+    }
+    // first outcome needs `lags` history rows plus `window` embedded
+    let f = c.recv_event("adjacency");
+    assert_eq!(f.get("frame").and_then(Json::as_u64), Some((window + lags) as u64));
+    assert_eq!(f.get("refit").and_then(Json::as_str), Some("full"));
+    let data = f.get("data").expect("adjacency data");
+    let b_tau = data.get("b_tau").and_then(Json::as_arr).expect("data.b_tau");
+    assert_eq!(b_tau.len(), lags, "one lag matrix per lag");
+    let b1 = protocol::parse_mat(&b_tau[0]).expect("b_tau[0] parses");
+    assert_eq!((b1.rows(), b1.cols()), (d, d));
+    let next = c.recv_event("adjacency");
+    assert_eq!(next.get("refit").and_then(Json::as_str), Some("incremental"));
+    c.send(&protocol::watch_end_request("w3"));
+    let (ev, frame) = c.recv_terminal("w3");
+    assert_eq!(ev, "result");
+    let data = frame.get("data").expect("summary data");
+    assert_eq!(data.get("frames").and_then(Json::as_u64), Some(24));
+    server.shutdown();
+}
