@@ -156,6 +156,25 @@
 //! the intact prefix on boot, so a byte-identical re-fit survives a
 //! full restart — or a crash mid-append — without executing a job.
 //!
+//! ## Observability
+//!
+//! [`obs`] is the std-only telemetry substrate under the serve tier:
+//! lock-free log-bucketed latency histograms ([`obs::hist`],
+//! snapshot/merge-able across shard processes), per-job trace contexts
+//! ([`obs::trace`]) that record typed span events — queue wait, fusion
+//! wait, cache probe, session acquire, per-ordering-step, regression,
+//! frame flush — from submit to terminal frame, and a leveled key=value
+//! logger ([`obs::log`], `--log-level`/`--log-json`) whose records
+//! carry the trace id. Every terminal `result` frame embeds a compact
+//! `"timing"` breakdown, completed traces replay via the `trace`
+//! request / `GET /trace/<id>`, and `GET /metrics?format=prometheus`
+//! renders counters, gauges and latency quantiles in Prometheus text
+//! format — merged fleet-wide by the shard supervisor. On the ordering
+//! side, [`lingam::StepObserver`] is the seam sessions report per-step
+//! timing through; the serve workers install observers that feed the
+//! step histogram and the per-job traces. See [`serve`]'s module docs
+//! for the full metric-name table.
+//!
 //! ## Quick example
 //!
 //! ```no_run
@@ -180,6 +199,7 @@ pub mod sim;
 pub mod metrics;
 pub mod data;
 pub mod lingam;
+pub mod obs;
 pub mod runtime;
 pub mod coordinator;
 pub mod serve;

@@ -46,6 +46,7 @@ use super::direct::{validate_panel, LingamFit};
 use super::engine::{accumulate_pair_diffs, argmax_active, scatter_scores};
 use super::parallel::tiled_pair_sweep;
 use super::prune::{estimate_adjacency, PruneMethod};
+use super::session::StepObserver;
 use super::sweep::{
     dot, entropy_fused_kernel, pair_diff_with_rho_kernel, pair_work, pruned_sweep,
     pruned_sweep_parallel, SweepCounters, SweepStrategy,
@@ -361,6 +362,19 @@ impl BatchedSession {
         }
         self.steps_done += 1;
         self.live_count()
+    }
+
+    /// [`step_live`](BatchedSession::step_live) with a [`StepObserver`]:
+    /// the lock step is timed and reported as `step_done(steps_done,
+    /// steps_total, elapsed)` — one observation per *lock step*, not per
+    /// lane, since the lanes advance together and share the wall clock.
+    /// An observer `Err` aborts (the serve layer's cancellation seam);
+    /// the batch itself is left consistent and can keep stepping.
+    pub fn step_live_observed(&mut self, observer: &mut dyn StepObserver) -> Result<usize> {
+        let t0 = std::time::Instant::now();
+        let live = self.step_live();
+        observer.step_done(self.steps_done, self.steps_total(), t0.elapsed())?;
+        Ok(live)
     }
 
     /// Consume the batch into per-panel outcomes. `panels` must be the

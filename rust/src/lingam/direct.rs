@@ -23,7 +23,7 @@
 
 use super::engine::{OrderingEngine, OrderStep};
 use super::prune::{estimate_adjacency, PruneMethod};
-use super::session::{OrderingSession, StatelessSession};
+use super::session::{FnObserver, NullObserver, OrderingSession, StatelessSession, StepObserver};
 use super::sweep::SweepCounters;
 use crate::linalg::Mat;
 use crate::util::timer::StageProfile;
@@ -125,7 +125,7 @@ impl DirectLingam {
         self.validate(data)?;
         let mut profile = StageProfile::new();
         let mut session = profile.time("ordering", || engine.session(data))?;
-        self.drive(data, session.as_mut(), profile, &mut |_, _| Ok(()))
+        self.drive(data, session.as_mut(), profile, &mut NullObserver)
     }
 
     /// Fit by driving a caller-provided session that has already been
@@ -142,19 +142,36 @@ impl DirectLingam {
         data: &Mat,
         session: &mut dyn OrderingSession,
     ) -> Result<LingamFit> {
-        self.fit_session_observed(data, session, &mut |_, _| Ok(()))
+        self.fit_session_stepped(data, session, &mut NullObserver)
     }
 
     /// [`fit_session`](DirectLingam::fit_session) with a per-step
-    /// observer: `observer(completed, total)` runs after every search
-    /// step, and an `Err` aborts the fit — the seam the serve layer uses
-    /// to stream per-step progress and honor cancellation at step
-    /// boundaries without duplicating the drive loop.
+    /// observer closure: `observer(completed, total)` runs after every
+    /// search step, and an `Err` aborts the fit — kept as the ergonomic
+    /// closure form over [`fit_session_stepped`]
+    /// (DirectLingam::fit_session_stepped).
     pub fn fit_session_observed(
         &self,
         data: &Mat,
         session: &mut dyn OrderingSession,
         observer: &mut dyn FnMut(usize, usize) -> Result<()>,
+    ) -> Result<LingamFit> {
+        self.fit_session_stepped(data, session, &mut FnObserver(observer))
+    }
+
+    /// [`fit_session`](DirectLingam::fit_session) with a typed
+    /// [`StepObserver`]: `step_done(completed, total, elapsed)` runs
+    /// after every search step with that step's measured wall clock, and
+    /// an `Err` aborts the fit; `sweep_done` fires once after the last
+    /// step with the session's accumulated [`SweepCounters`]. The seam
+    /// the serve layer uses to stream per-step progress, honor
+    /// cancellation at step boundaries, and book per-step latency into
+    /// its histograms/traces without duplicating the drive loop.
+    pub fn fit_session_stepped(
+        &self,
+        data: &Mat,
+        session: &mut dyn OrderingSession,
+        observer: &mut dyn StepObserver,
     ) -> Result<LingamFit> {
         self.validate(data)?;
         if session.active().len() != data.cols()
@@ -182,7 +199,7 @@ impl DirectLingam {
         // panel clone (inside the shim) deliberately untimed, matching
         // the legacy loop's untimed `data.clone()`
         let mut shim = StatelessSession::new(engine, data);
-        self.drive(data, &mut shim, StageProfile::new(), &mut |_, _| Ok(()))
+        self.drive(data, &mut shim, StageProfile::new(), &mut NullObserver)
     }
 
     /// Fit by executing an [`OrderingPlan`] instead of driving one
@@ -217,26 +234,33 @@ impl DirectLingam {
     /// Drive a session through the d−1 search steps and estimate the
     /// adjacency over the original (un-residualized) data. The one copy
     /// of the step loop behind every fit entry point; `observer` runs
-    /// after each step (progress/cancellation hooks — see
-    /// [`fit_session_observed`](DirectLingam::fit_session_observed)).
+    /// after each step (progress/cancellation/timing hooks — see
+    /// [`fit_session_stepped`](DirectLingam::fit_session_stepped)).
     fn drive(
         &self,
         data: &Mat,
         session: &mut dyn OrderingSession,
         mut profile: StageProfile,
-        observer: &mut dyn FnMut(usize, usize) -> Result<()>,
+        observer: &mut dyn StepObserver,
     ) -> Result<LingamFit> {
         let d = data.cols();
         let steps = d - 1;
         let mut order = Vec::with_capacity(d);
         let mut step_scores = Vec::with_capacity(d);
-        // causal ordering: d−1 search steps; the last variable is forced
+        // causal ordering: d−1 search steps; the last variable is forced.
+        // Each step is timed individually so the observer sees per-step
+        // wall clock (the serve tier's step histogram) and the profile
+        // still books the same "ordering" total.
         for k in 0..steps {
-            let step: OrderStep = profile.time("ordering", || session.step())?;
+            let t0 = std::time::Instant::now();
+            let step: OrderStep = session.step()?;
+            let dt = t0.elapsed();
+            profile.add("ordering", dt);
             order.push(step.chosen);
             step_scores.push(step.scores);
-            observer(k + 1, steps)?;
+            observer.step_done(k + 1, steps, dt)?;
         }
+        observer.sweep_done(&session.sweep_counters());
         let last = session
             .active()
             .iter()

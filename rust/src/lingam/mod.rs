@@ -78,7 +78,9 @@ pub use partition::{
 };
 pub use engine::{OrderingEngine, SequentialEngine, VectorizedEngine};
 pub use parallel::ParallelEngine;
-pub use session::{IncrementalSession, OrderingSession, StatelessSession};
+pub use session::{
+    FnObserver, IncrementalSession, NullObserver, OrderingSession, StatelessSession, StepObserver,
+};
 pub use streaming::{
     ols_from_cov, FrameOutcome, RefitKind, StreamingConfig, StreamingLingam, StreamingVarLingam,
     StreamingWindow, VarFrameOutcome,

@@ -103,6 +103,52 @@ pub trait OrderingSession: Send {
 }
 
 // ---------------------------------------------------------------------
+// Per-step instrumentation.
+// ---------------------------------------------------------------------
+
+/// Per-step instrumentation seam: every step loop — the solo drive in
+/// [`DirectLingam`](super::direct::DirectLingam), the lock-step batch
+/// ([`BatchedSession::step_live_observed`](super::batch::BatchedSession::step_live_observed))
+/// and the streaming full refit
+/// ([`StreamingLingam::ingest_stepped`](super::streaming::StreamingLingam::ingest_stepped))
+/// — reports through this one trait, unifying what used to be ad-hoc
+/// `FnMut(step, total)` progress closures with the
+/// [`StageProfile`](crate::util::timer::StageProfile)/[`SweepCounters`]
+/// plumbing. The serve worker installs an implementation that books the
+/// step-time histogram, trace spans, progress frames and cancellation;
+/// returning `Err` aborts the fit at the step boundary.
+pub trait StepObserver {
+    /// One search step finished: `step` of `total` (1-based), measured
+    /// at `elapsed` wall clock.
+    fn step_done(&mut self, step: usize, total: usize, elapsed: std::time::Duration)
+        -> Result<()>;
+
+    /// The step loop completed (not called on abort): final sweep
+    /// counters for the fit.
+    fn sweep_done(&mut self, _counters: &SweepCounters) {}
+}
+
+/// The no-op observer (uninstrumented fits).
+pub struct NullObserver;
+
+impl StepObserver for NullObserver {
+    fn step_done(&mut self, _: usize, _: usize, _: std::time::Duration) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Adapter: any legacy `FnMut(step, total) -> Result<()>` progress
+/// closure observes steps (ignoring timing), so the pre-existing
+/// `*_observed` entry points keep their signatures.
+pub struct FnObserver<'a>(pub &'a mut dyn FnMut(usize, usize) -> Result<()>);
+
+impl StepObserver for FnObserver<'_> {
+    fn step_done(&mut self, step: usize, total: usize, _: std::time::Duration) -> Result<()> {
+        (self.0)(step, total)
+    }
+}
+
+// ---------------------------------------------------------------------
 // Stateless compatibility shim.
 // ---------------------------------------------------------------------
 

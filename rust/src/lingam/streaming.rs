@@ -78,7 +78,7 @@ use std::collections::VecDeque;
 use super::direct::DirectLingam;
 use super::engine::dot;
 use super::prune::PruneMethod;
-use super::session::IncrementalSession;
+use super::session::{FnObserver, IncrementalSession, NullObserver, StepObserver};
 use super::sweep::{SweepCounters, SweepStrategy};
 use super::var::var_fit;
 use crate::linalg::{lu_solve, Mat};
@@ -558,16 +558,29 @@ impl StreamingLingam {
     /// Ingest one sample. Returns `None` until the window is full, then
     /// one [`FrameOutcome`] per frame.
     pub fn ingest(&mut self, row: &[f64]) -> Result<Option<FrameOutcome>> {
-        self.ingest_observed(row, &mut |_, _| Ok(()))
+        self.ingest_stepped(row, &mut NullObserver)
     }
 
-    /// [`ingest`](Self::ingest) with a full-refit step observer — the
-    /// serve worker's cancel/progress hook, called per ordering step
-    /// exactly as in [`DirectLingam::fit_session_observed`].
+    /// [`ingest`](Self::ingest) with a full-refit step observer closure
+    /// — the ergonomic form over
+    /// [`ingest_stepped`](Self::ingest_stepped).
     pub fn ingest_observed(
         &mut self,
         row: &[f64],
         observer: &mut dyn FnMut(usize, usize) -> Result<()>,
+    ) -> Result<Option<FrameOutcome>> {
+        self.ingest_stepped(row, &mut FnObserver(observer))
+    }
+
+    /// [`ingest`](Self::ingest) with a typed [`StepObserver`] — the
+    /// serve worker's cancel/progress/timing hook, called per ordering
+    /// step of any full refit exactly as in
+    /// [`DirectLingam::fit_session_stepped`]. Incremental frames run no
+    /// ordering steps and report nothing.
+    pub fn ingest_stepped(
+        &mut self,
+        row: &[f64],
+        observer: &mut dyn StepObserver,
     ) -> Result<Option<FrameOutcome>> {
         self.window.push(row)?;
         if !self.window.is_full() {
@@ -596,12 +609,12 @@ impl StreamingLingam {
     fn refit_full_observed(
         &mut self,
         resynced: bool,
-        observer: &mut dyn FnMut(usize, usize) -> Result<()>,
+        observer: &mut dyn StepObserver,
     ) -> Result<FrameOutcome> {
         let panel = self.window.panel();
         let mut session = self.window.session(self.workers, self.strategy)?;
         let fit = DirectLingam::with_prune(self.prune)
-            .fit_session_observed(&panel, &mut session, observer);
+            .fit_session_stepped(&panel, &mut session, observer);
         let counters = session.counters();
         self.window.reclaim(session.into_workspace());
         let fit = fit?;
@@ -752,14 +765,24 @@ impl StreamingVarLingam {
     /// Ingest one raw sample x(t). Returns `None` until the embedded
     /// window is full (the first `lags` samples only build history).
     pub fn ingest(&mut self, row: &[f64]) -> Result<Option<VarFrameOutcome>> {
-        self.ingest_observed(row, &mut |_, _| Ok(()))
+        self.ingest_stepped(row, &mut NullObserver)
     }
 
-    /// [`ingest`](Self::ingest) with a full-refit step observer.
+    /// [`ingest`](Self::ingest) with a full-refit step observer closure.
     pub fn ingest_observed(
         &mut self,
         row: &[f64],
         observer: &mut dyn FnMut(usize, usize) -> Result<()>,
+    ) -> Result<Option<VarFrameOutcome>> {
+        self.ingest_stepped(row, &mut FnObserver(observer))
+    }
+
+    /// [`ingest`](Self::ingest) with a typed [`StepObserver`] — see
+    /// [`StreamingLingam::ingest_stepped`].
+    pub fn ingest_stepped(
+        &mut self,
+        row: &[f64],
+        observer: &mut dyn StepObserver,
     ) -> Result<Option<VarFrameOutcome>> {
         if !self.feed(row)? || !self.window.is_full() {
             return Ok(None);
@@ -819,7 +842,7 @@ impl StreamingVarLingam {
     fn refit_full_observed(
         &mut self,
         resynced: bool,
-        observer: &mut dyn FnMut(usize, usize) -> Result<()>,
+        observer: &mut dyn StepObserver,
     ) -> Result<VarFrameOutcome> {
         // Rebuild the exact series the embedded window covers: its
         // `len` newest z-rows span the last `len + lags` raw samples.
@@ -830,7 +853,7 @@ impl StreamingVarLingam {
         let mut session =
             IncrementalSession::with_strategy(&resid, self.workers, false, self.strategy)?;
         let fit = DirectLingam::with_prune(self.prune)
-            .fit_session_observed(&resid, &mut session, observer)?;
+            .fit_session_stepped(&resid, &mut session, observer)?;
         let b0 = fit.adjacency;
         let eye_minus = Mat::eye(self.d).sub(&b0);
         let b_tau: Vec<Mat> = m_tau.iter().map(|m| eye_minus.matmul(m)).collect();

@@ -10,10 +10,12 @@
 //!   ica        ICA-LiNGAM (the original estimator) on simulated data
 //!   serve      resident JSON-lines-over-TCP discovery service, with an
 //!              optional HTTP/1.1 + SSE front (--http-addr), a sharded
-//!              multi-process fleet (--shards N), and a disk-persistent
-//!              result cache (--cache-dir)
+//!              multi-process fleet (--shards N), a disk-persistent
+//!              result cache (--cache-dir), and structured stderr logs
+//!              (--log-level error|warn|info|debug, --log-json)
 //!   client     drive a running server (fit|bootstrap|varlingam|status|
-//!              metrics|cancel|shutdown as the second positional);
+//!              metrics|trace|cancel|shutdown as the second positional;
+//!              for trace, --job-id is the job or trace id to look up);
 //!              --timeout-ms bounds connect and every read/write
 //!   watch      streaming discovery over stdin CSV rows: sliding-window
 //!              moments, one `adjacency` frame per full-window sample,
@@ -387,7 +389,16 @@ fn serve_cmd(args: &Args) -> alingam::util::Result<()> {
         max_batch: args.usize("max-batch"),
         http_addr: args.get("http-addr"),
         cache_dir: args.get("cache-dir").map(std::path::PathBuf::from),
+        log_level: args.req("log-level"),
+        log_json: args.flag("log-json"),
     };
+    // the fleet front logs too (shard lifecycle events); the in-process
+    // server initializes the same way inside Server::start
+    alingam::obs::log::init(
+        alingam::obs::log::Level::parse(&cfg.log_level)
+            .unwrap_or(alingam::obs::log::Level::Warn),
+        cfg.log_json,
+    );
     let shards: usize = args.get_as("shards").unwrap_or(0);
     // a wedged worker must not hang the process forever on exit: past
     // this the drain is abandoned and the exit code says so
@@ -476,6 +487,9 @@ fn client_cmd(args: &Args) -> alingam::util::Result<()> {
     let request = match action.as_str() {
         "status" | "metrics" | "shutdown" => protocol::control_request(&action),
         "cancel" => protocol::cancel_request(&id),
+        // --job-id doubles as the lookup target: a job id or the 32-hex
+        // trace id a result frame's "timing" object reported
+        "trace" => protocol::trace_request(&id),
         "fit" | "bootstrap" | "varlingam" => {
             if let Some(path) = args.get("csv") {
                 if action != "fit" {
@@ -509,7 +523,7 @@ fn client_cmd(args: &Args) -> alingam::util::Result<()> {
         other => {
             eprintln!(
                 "unknown client action {other:?} \
-                 (fit|bootstrap|varlingam|status|metrics|cancel|shutdown)"
+                 (fit|bootstrap|varlingam|status|metrics|trace|cancel|shutdown)"
             );
             std::process::exit(2);
         }
@@ -517,7 +531,8 @@ fn client_cmd(args: &Args) -> alingam::util::Result<()> {
     stream.write_all(request.as_bytes())?;
     stream.write_all(b"\n")?;
 
-    let one_shot = matches!(action.as_str(), "status" | "metrics" | "shutdown" | "cancel");
+    let one_shot =
+        matches!(action.as_str(), "status" | "metrics" | "trace" | "shutdown" | "cancel");
     for line in reader.lines() {
         let line = line?;
         println!("{line}");

@@ -1,0 +1,288 @@
+//! Lock-free log-linear latency histogram.
+//!
+//! HdrHistogram-style bucketing: values (microseconds) below
+//! 2·`SUB` land in exact unit buckets; above that, each power-of-two
+//! octave splits into `SUB` = 16 linear sub-buckets, so the worst-case
+//! relative error of a bucket's midpoint representative is
+//! 1/(2·SUB) ≈ 3.1% — inside the ~4% budget the serve tier documents.
+//! Recording is one relaxed `fetch_add` per bucket plus a CAS-max, so
+//! the hot path (worker threads booking job/step latencies) never
+//! contends on a lock; readout goes through an owned [`Snapshot`],
+//! which also gives the shard supervisor its merge primitive: child
+//! snapshots serialize sparsely into the JSON metrics frame and sum
+//! bucket-wise at the front, and quantiles of the merged distribution
+//! are exact at bucket resolution (bucketing is deterministic, so the
+//! same value lands in the same bucket in every process).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Linear sub-buckets per octave (16 ⇒ ≤3.1% relative error).
+const SUB: usize = 16;
+const SUB_BITS: u32 = 4;
+/// Total buckets: unit buckets + 44 octaves of SUB sub-buckets each.
+/// The top bucket's low edge is ≈ 2^47 µs (≈ 4.5 years) — an effective
+/// +Inf bucket for latencies.
+pub const BUCKETS: usize = SUB * 45;
+
+/// Bucket index for a microsecond value. Total (never panics), clamps
+/// into the top bucket.
+fn index_for(us: u64) -> usize {
+    let v = us.max(1);
+    let msb = 63 - v.leading_zeros(); // v >= 1, so well-defined
+    if msb < SUB_BITS {
+        return v as usize; // exact unit buckets 1..=15 (0 unused)
+    }
+    let shift = msb - SUB_BITS;
+    let sub = (v >> shift) as usize - SUB; // linear position within the octave
+    ((shift as usize + 1) * SUB + sub).min(BUCKETS - 1)
+}
+
+/// Inclusive low edge and exclusive high edge of bucket `i`, in µs.
+fn bounds_for(i: usize) -> (u64, u64) {
+    if i < SUB {
+        return (i as u64, i as u64 + 1);
+    }
+    let block = (i / SUB) as u32; // >= 1
+    let sub = (i % SUB) as u64;
+    let low = (SUB as u64 + sub) << (block - 1);
+    (low, low + (1u64 << (block - 1)))
+}
+
+/// Concurrent latency histogram; see the module docs for the bucketing
+/// scheme. All methods take `&self`.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one duration.
+    pub fn record(&self, d: std::time::Duration) {
+        self.record_us(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    /// Record one microsecond value (0 is clamped to the 1 µs bucket so
+    /// a sub-microsecond event still counts).
+    pub fn record_us(&self, us: u64) {
+        self.buckets[index_for(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Owned copy of the current state. Not a point-in-time atomic cut
+    /// across buckets — concurrent records may straddle it — but every
+    /// count lands in exactly one snapshot eventually, which is all a
+    /// monotonic scrape needs.
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            max_us: self.max_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Owned histogram state: quantile readout, bucket-wise merge, and the
+/// sparse JSON form the shard supervisor aggregates.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Snapshot {
+    /// Rebuild a snapshot from its serialized parts (the supervisor's
+    /// deserialization path; pairs are `(bucket_index, count)`).
+    /// Out-of-range indices are dropped rather than panicking — the
+    /// frame came over a socket.
+    pub fn from_parts(count: u64, sum_us: u64, max_us: u64, pairs: &[(usize, u64)]) -> Snapshot {
+        let mut buckets = vec![0u64; BUCKETS];
+        for &(i, c) in pairs {
+            if i < BUCKETS {
+                buckets[i] += c;
+            }
+        }
+        Snapshot { buckets, count, sum_us, max_us }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Bucket-wise sum (the shard supervisor's aggregation).
+    pub fn merge(&mut self, other: &Snapshot) {
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; BUCKETS];
+        }
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// The `q`-quantile (q ∈ [0, 1]) in µs: midpoint of the bucket
+    /// holding the ⌈q·count⌉-th smallest recorded value, exact-rank at
+    /// bucket resolution. 0.0 on an empty snapshot.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                let (lo, hi) = bounds_for(i);
+                // midpoint, capped by the true max (the top recorded
+                // value is known exactly, so never report past it)
+                return ((lo + hi) as f64 / 2.0).min(self.max_us as f64).max(lo as f64);
+            }
+        }
+        self.max_us as f64
+    }
+
+    /// Sparse JSON object: totals, convenience quantiles (ms), and the
+    /// non-zero `[index, count]` bucket pairs a peer can
+    /// [`from_parts`](Snapshot::from_parts) back.
+    pub fn to_json(&self) -> String {
+        let pairs: Vec<String> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| format!("[{i},{c}]"))
+            .collect();
+        format!(
+            "{{\"count\":{},\"sum_us\":{},\"max_us\":{},\"p50_us\":{},\"p95_us\":{},\
+             \"p99_us\":{},\"buckets\":[{}]}}",
+            self.count,
+            self.sum_us,
+            self.max_us,
+            crate::util::table::json_f64(self.quantile_us(0.5)),
+            crate::util::table::json_f64(self.quantile_us(0.95)),
+            crate::util::table::json_f64(self.quantile_us(0.99)),
+            pairs.join(",")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_contiguous_and_monotone() {
+        // every index maps into a bucket whose bounds contain it, and
+        // bucket edges tile the line with no gaps
+        let mut prev_hi = 1u64;
+        for i in 1..BUCKETS {
+            let (lo, hi) = bounds_for(i);
+            assert_eq!(lo, prev_hi, "gap before bucket {i}");
+            assert!(hi > lo);
+            prev_hi = hi;
+            assert_eq!(index_for(lo), i, "low edge of bucket {i} maps elsewhere");
+            assert_eq!(index_for(hi - 1), i, "high edge of bucket {i} maps elsewhere");
+        }
+    }
+
+    #[test]
+    fn quantiles_hit_within_relative_error() {
+        let h = Histogram::new();
+        // geometric spread of values; exact-rank reference
+        let mut vals: Vec<u64> = (0..2000u64).map(|k| 1 + (k * k) % 900_000).collect();
+        for &v in &vals {
+            h.record_us(v);
+        }
+        vals.sort_unstable();
+        let s = h.snapshot();
+        assert_eq!(s.count(), 2000);
+        assert_eq!(s.max_us(), *vals.last().unwrap());
+        for q in [0.5, 0.95, 0.99] {
+            let rank = ((q * vals.len() as f64).ceil() as usize).max(1) - 1;
+            let truth = vals[rank] as f64;
+            let est = s.quantile_us(q);
+            assert!(
+                (est - truth).abs() <= 0.04 * truth + 1.0,
+                "q={q}: est {est} vs truth {truth}"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_equals_single_histogram_and_json_roundtrips() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let all = Histogram::new();
+        for v in 1..500u64 {
+            let target = if v % 2 == 0 { &a } else { &b };
+            target.record_us(v * 37);
+            all.record_us(v * 37);
+        }
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        let solo = all.snapshot();
+        assert_eq!(merged.count(), solo.count());
+        assert_eq!(merged.sum_us(), solo.sum_us());
+        assert_eq!(merged.max_us(), solo.max_us());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(merged.quantile_us(q), solo.quantile_us(q));
+        }
+        // sparse JSON carries every non-zero bucket
+        let json = merged.to_json();
+        assert!(json.contains("\"count\":499"));
+        assert!(json.contains("\"buckets\":[["));
+    }
+
+    #[test]
+    fn zero_and_huge_values_clamp_instead_of_panicking() {
+        let h = Histogram::new();
+        h.record_us(0);
+        h.record_us(u64::MAX);
+        let s = h.snapshot();
+        assert_eq!(s.count(), 2);
+        assert_eq!(s.max_us(), u64::MAX);
+        assert!(s.quantile_us(0.0) >= 0.0);
+        let empty = Histogram::new().snapshot();
+        assert_eq!(empty.quantile_us(0.5), 0.0);
+        assert_eq!(empty.mean_us(), 0.0);
+    }
+}

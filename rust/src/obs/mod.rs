@@ -1,0 +1,165 @@
+//! `obs` — observability primitives for the serve tier and the
+//! ordering engine: lock-free latency histograms ([`hist`]), per-job
+//! trace contexts with typed spans ([`trace`]), a leveled structured
+//! logger ([`log`]), and a Prometheus text-exposition builder
+//! ([`PromText`]). Std-only, like everything else in the crate.
+//!
+//! # Why a home-grown layer
+//!
+//! The paper's headline claim is a *measured* one — "up to a 32-fold
+//! speed-up" rests on knowing where wall-clock goes (the Figure-2
+//! "ordering is ≤96% of runtime" profile) — and the serve tier (queue,
+//! fusion window, shard fleet, disk cache, watch streams) adds queueing
+//! and batching stages the engine-side [`StageProfile`] never sees.
+//! `tracing`/`metrics`/`prometheus` crates are not in the offline crate
+//! set, so the three primitives they would provide are hand-rolled
+//! here, sized for exactly what the serve tier needs:
+//!
+//! - [`hist::Histogram`] — log-linear bucketed latency distribution
+//!   (`AtomicU64` buckets, ≈3% worst-case relative error) with
+//!   p50/p95/p99/max readout and a snapshot/merge API the shard
+//!   supervisor uses to aggregate per-child histograms.
+//! - [`trace::TraceBuilder`] — a 128-bit trace id minted at submit and
+//!   threaded through the job, accumulating typed span aggregates
+//!   (queue wait, fusion-window wait, cache probe, session acquire,
+//!   per-step ordering, regression, frame flush) that land on the
+//!   terminal `result` frame as a compact `"timing"` object and in a
+//!   bounded ring buffer served by `trace` requests / `GET /trace/<id>`.
+//! - [`log`] — a leveled key=value (or JSON) logger on stderr carrying
+//!   the trace id, replacing ad-hoc prints in the serve stack.
+//!
+//! [`StageProfile`]: crate::util::timer::StageProfile
+
+pub mod hist;
+pub mod log;
+pub mod trace;
+
+use crate::util::table::json_escape;
+
+/// Prometheus text-exposition (version 0.0.4) builder: `# HELP`/`# TYPE`
+/// headers, escaped label values, and summary rendering from a
+/// histogram snapshot. The output parses under `tools/check_prom.py`
+/// and any Prometheus scraper.
+#[derive(Default)]
+pub struct PromText {
+    out: String,
+}
+
+impl PromText {
+    pub fn new() -> PromText {
+        PromText::default()
+    }
+
+    /// Start a metric family: `# HELP` and `# TYPE` lines.
+    pub fn family(&mut self, name: &str, kind: &str, help: &str) -> &mut Self {
+        self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+        self
+    }
+
+    /// One sample line with optional labels.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) -> &mut Self {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                // label values share JSON's escape set (backslash,
+                // quote) plus escaped newlines — json_escape covers it
+                self.out.push_str(&format!("{k}=\"{}\"", json_escape(v)));
+            }
+            self.out.push('}');
+        }
+        self.out.push_str(&format!(" {}\n", fmt_value(value)));
+        self
+    }
+
+    /// Shorthand: family header plus one unlabeled sample.
+    pub fn single(&mut self, name: &str, kind: &str, help: &str, value: f64) -> &mut Self {
+        self.family(name, kind, help).sample(name, &[], value)
+    }
+
+    /// Render a histogram snapshot as a Prometheus `summary` in seconds:
+    /// `name{quantile="0.5|0.95|0.99"}`, `name_sum`, `name_count`, plus
+    /// a companion `name_max` gauge (summaries have no max series).
+    pub fn summary_seconds(&mut self, name: &str, help: &str, snap: &hist::Snapshot) -> &mut Self {
+        self.family(name, "summary", help);
+        for (label, q) in [("0.5", 0.5), ("0.95", 0.95), ("0.99", 0.99)] {
+            self.sample(name, &[("quantile", label)], snap.quantile_us(q) / 1e6);
+        }
+        self.sample(&format!("{name}_sum"), &[], snap.sum_us() as f64 / 1e6);
+        self.sample(&format!("{name}_count"), &[], snap.count() as f64);
+        self.single(
+            &format!("{name}_max"),
+            "gauge",
+            "Largest value recorded into the companion summary, in seconds.",
+            snap.max_us() as f64 / 1e6,
+        )
+    }
+
+    pub fn render(self) -> String {
+        self.out
+    }
+}
+
+/// Prometheus float formatting: plain decimal (Rust's `Display` for
+/// `f64` never emits exponents for the magnitudes booked here), with
+/// non-finite values spelled the way the exposition format expects.
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v.is_infinite() {
+        if v > 0.0 { "+Inf" } else { "-Inf" }.to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prom_text_renders_help_type_labels_and_values() {
+        let mut p = PromText::new();
+        p.single("alingam_up", "gauge", "Whether the server is up.", 1.0);
+        p.family("alingam_jobs_total", "counter", "Jobs.")
+            .sample("alingam_jobs_total", &[("kind", "fit")], 3.0)
+            .sample("alingam_jobs_total", &[("kind", "boot\"strap")], 0.5);
+        let text = p.render();
+        assert!(text.contains("# HELP alingam_up Whether the server is up.\n"));
+        assert!(text.contains("# TYPE alingam_up gauge\n"));
+        assert!(text.contains("alingam_up 1\n"));
+        assert!(text.contains("alingam_jobs_total{kind=\"fit\"} 3\n"));
+        // escaped quote inside a label value
+        assert!(text.contains("kind=\"boot\\\"strap\""));
+        assert!(text.contains("alingam_jobs_total{kind=\"boot\\\"strap\"} 0.5\n"));
+    }
+
+    #[test]
+    fn summary_renders_quantiles_sum_count_max() {
+        let h = hist::Histogram::new();
+        for us in [100u64, 200, 300, 400, 1000] {
+            h.record_us(us);
+        }
+        let mut p = PromText::new();
+        p.summary_seconds("alingam_job_latency_seconds", "Job latency.", &h.snapshot());
+        let text = p.render();
+        assert!(text.contains("# TYPE alingam_job_latency_seconds summary\n"));
+        assert!(text.contains("alingam_job_latency_seconds{quantile=\"0.5\"}"));
+        assert!(text.contains("alingam_job_latency_seconds{quantile=\"0.95\"}"));
+        assert!(text.contains("alingam_job_latency_seconds{quantile=\"0.99\"}"));
+        assert!(text.contains("alingam_job_latency_seconds_count 5\n"));
+        assert!(text.contains("alingam_job_latency_seconds_sum 0.002\n"));
+        assert!(text.contains("# TYPE alingam_job_latency_seconds_max gauge\n"));
+    }
+
+    #[test]
+    fn fmt_value_spells_nonfinite_the_prometheus_way() {
+        assert_eq!(fmt_value(f64::NAN), "NaN");
+        assert_eq!(fmt_value(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_value(f64::NEG_INFINITY), "-Inf");
+        assert_eq!(fmt_value(0.25), "0.25");
+    }
+}

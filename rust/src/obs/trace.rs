@@ -1,0 +1,336 @@
+//! Per-job trace contexts: a 128-bit trace id minted at submit, typed
+//! span aggregates accumulated as the job moves through the serve
+//! pipeline, and a bounded ring buffer of finished traces served by the
+//! `trace` request / `GET /trace/<id>` route.
+//!
+//! # Lifecycle
+//!
+//! 1. `submit` mints a [`TraceBuilder`] (id + start instant) and stamps
+//!    the id onto the `JobSpec`.
+//! 2. Pipeline stages record spans into it: one aggregate per
+//!    [`SpanKind`] (first-start offset, total duration, event count) —
+//!    compact by construction, so a d=1000 fit's 999 ordering steps are
+//!    one `order_step` span with `count = 999`, and the ring buffer
+//!    stays bounded regardless of job size.
+//! 3. The terminal `result` frame carries
+//!    [`TraceRecord::timing_json`] — spans plus an `other` filler for
+//!    unattributed time, so the span durations always sum to the
+//!    recorded wall clock.
+//! 4. [`TraceStore::insert`] parks the finished record; `trace`
+//!    requests replay it by trace id (or job id) until it ages out of
+//!    the ring.
+
+use crate::util::table::{json_escape, json_f64};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant, SystemTime};
+
+/// Typed pipeline stages a span can attribute time to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Submit → worker pop (or fusion-window tap).
+    QueueWait,
+    /// Time the fusion-window leader (or a tapped member) spent holding
+    /// the window open for same-shape peers.
+    FuseWait,
+    /// Result-cache lookups (submit-time short-circuit and the
+    /// worker-side re-check).
+    CacheProbe,
+    /// Session-pool acquire, or building a fresh session / engine.
+    SessionAcquire,
+    /// Ordering search steps (aggregated; `count` = steps run).
+    OrderStep,
+    /// The adjacency regression over the original panel.
+    Regression,
+    /// Writing progress/adjacency frames to the client sink.
+    FrameFlush,
+    /// Watch streams: ingesting rows between subscribe and terminal.
+    Stream,
+    /// Wall clock not covered by any recorded span (filler added at
+    /// finish so spans sum to the total).
+    Other,
+}
+
+impl SpanKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::FuseWait => "fuse_wait",
+            SpanKind::CacheProbe => "cache_probe",
+            SpanKind::SessionAcquire => "session_acquire",
+            SpanKind::OrderStep => "order_step",
+            SpanKind::Regression => "regression",
+            SpanKind::FrameFlush => "frame_flush",
+            SpanKind::Stream => "stream",
+            SpanKind::Other => "other",
+        }
+    }
+}
+
+/// One span aggregate inside a trace.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub kind: SpanKind,
+    /// Offset of the first event from the trace start, µs.
+    pub start_us: u64,
+    /// Total attributed duration, µs.
+    pub dur_us: u64,
+    /// Events aggregated into this span.
+    pub count: u64,
+}
+
+/// Mutable trace context for one in-flight job. Cheap to share
+/// (`Arc<TraceBuilder>`); recording locks a small per-job mutex, which
+/// is uncontended in practice (one worker drives a job at a time).
+pub struct TraceBuilder {
+    id: u128,
+    job: String,
+    t0: Instant,
+    spans: Mutex<Vec<Span>>,
+}
+
+/// Process-wide uniqueness counter for minted ids.
+static MINT_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// FNV-1a 128-bit, inlined so `obs` stays dependency-free.
+fn fnv128(chunks: &[&[u8]]) -> u128 {
+    const OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+    const PRIME: u128 = 0x0000000001000000000000000000013b;
+    let mut h = OFFSET;
+    for chunk in chunks {
+        for &b in *chunk {
+            h ^= b as u128;
+            h = h.wrapping_mul(PRIME);
+        }
+    }
+    h
+}
+
+impl TraceBuilder {
+    /// Mint a fresh trace for `job` at the current instant. The id
+    /// hashes wall-clock nanos, a process-wide sequence number and the
+    /// job id — unique across the fleet's processes without a shared
+    /// randomness source.
+    pub fn mint(job: &str) -> TraceBuilder {
+        let nanos = SystemTime::now()
+            .duration_since(SystemTime::UNIX_EPOCH)
+            .map(|d| d.as_nanos())
+            .unwrap_or(0);
+        let seq = MINT_SEQ.fetch_add(1, Ordering::Relaxed);
+        let pid = std::process::id();
+        let id = fnv128(&[
+            &nanos.to_le_bytes(),
+            &seq.to_le_bytes(),
+            &pid.to_le_bytes(),
+            job.as_bytes(),
+        ]);
+        TraceBuilder { id, job: job.to_string(), t0: Instant::now(), spans: Mutex::new(Vec::new()) }
+    }
+
+    pub fn id(&self) -> u128 {
+        self.id
+    }
+
+    /// The trace id as 32 lowercase hex chars (the wire form).
+    pub fn id_hex(&self) -> String {
+        format!("{:032x}", self.id)
+    }
+
+    /// The mint instant (= submit time; queue wait is measured from it).
+    pub fn started(&self) -> Instant {
+        self.t0
+    }
+
+    /// Record `dur` against `kind`, starting at `start`. Aggregates
+    /// into the existing span of that kind if one exists.
+    pub fn record_at(&self, kind: SpanKind, start: Instant, dur: Duration) {
+        let start_us = start.saturating_duration_since(self.t0).as_micros() as u64;
+        let dur_us = dur.as_micros() as u64;
+        let mut spans = self.spans.lock().expect("trace spans");
+        if let Some(s) = spans.iter_mut().find(|s| s.kind == kind) {
+            s.dur_us += dur_us;
+            s.count += 1;
+            s.start_us = s.start_us.min(start_us);
+        } else {
+            spans.push(Span { kind, start_us, dur_us, count: 1 });
+        }
+    }
+
+    /// Record a duration that ends now.
+    pub fn record(&self, kind: SpanKind, dur: Duration) {
+        let now = Instant::now();
+        self.record_at(kind, now.checked_sub(dur).unwrap_or(now), dur);
+    }
+
+    /// Freeze into a [`TraceRecord`]: total = mint → now, with an
+    /// `other` span filling whatever the recorded spans left
+    /// unattributed (so span durations sum to the total exactly).
+    pub fn finish(&self) -> TraceRecord {
+        let total = self.t0.elapsed();
+        let total_us = total.as_micros() as u64;
+        let mut spans = self.spans.lock().expect("trace spans").clone();
+        let attributed: u64 = spans.iter().map(|s| s.dur_us).sum();
+        if total_us > attributed {
+            spans.push(Span {
+                kind: SpanKind::Other,
+                start_us: 0,
+                dur_us: total_us - attributed,
+                count: 1,
+            });
+        }
+        spans.sort_by_key(|s| s.start_us);
+        TraceRecord { trace_hex: self.id_hex(), job: self.job.clone(), total_us, spans }
+    }
+}
+
+/// A finished trace: what `trace` requests replay and what the terminal
+/// `result` frame embeds as `"timing"`.
+#[derive(Clone, Debug)]
+pub struct TraceRecord {
+    pub trace_hex: String,
+    pub job: String,
+    pub total_us: u64,
+    pub spans: Vec<Span>,
+}
+
+impl TraceRecord {
+    fn spans_json(&self) -> String {
+        let spans: Vec<String> = self
+            .spans
+            .iter()
+            .map(|s| {
+                format!(
+                    "{{\"span\":\"{}\",\"start_ms\":{},\"ms\":{},\"count\":{}}}",
+                    s.kind.as_str(),
+                    json_f64(s.start_us as f64 / 1e3),
+                    json_f64(s.dur_us as f64 / 1e3),
+                    s.count
+                )
+            })
+            .collect();
+        spans.join(",")
+    }
+
+    /// Brace-less body shared by the `trace` frame and `GET /trace/<id>`:
+    /// `"trace":…,"job":…,"total_ms":…,"spans":[…]`.
+    pub fn body_json(&self) -> String {
+        format!(
+            "\"trace\":\"{}\",\"job\":\"{}\",\"total_ms\":{},\"spans\":[{}]",
+            self.trace_hex,
+            json_escape(&self.job),
+            json_f64(self.total_us as f64 / 1e3),
+            self.spans_json()
+        )
+    }
+
+    /// The compact object attached to terminal `result` frames.
+    pub fn timing_json(&self) -> String {
+        format!(
+            "{{\"trace\":\"{}\",\"total_ms\":{},\"spans\":[{}]}}",
+            self.trace_hex,
+            json_f64(self.total_us as f64 / 1e3),
+            self.spans_json()
+        )
+    }
+}
+
+/// Bounded ring of finished traces, queryable by trace id hex or job
+/// id (latest job id match wins — job ids are client-chosen and may
+/// repeat; trace ids are minted unique).
+pub struct TraceStore {
+    ring: Mutex<VecDeque<TraceRecord>>,
+    capacity: usize,
+}
+
+impl TraceStore {
+    pub fn new(capacity: usize) -> TraceStore {
+        TraceStore { ring: Mutex::new(VecDeque::new()), capacity: capacity.max(1) }
+    }
+
+    pub fn insert(&self, record: TraceRecord) {
+        let mut ring = self.ring.lock().expect("trace ring");
+        if ring.len() == self.capacity {
+            ring.pop_front();
+        }
+        ring.push_back(record);
+    }
+
+    pub fn get(&self, target: &str) -> Option<TraceRecord> {
+        let ring = self.ring.lock().expect("trace ring");
+        ring.iter().rev().find(|r| r.trace_hex == target || r.job == target).cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().expect("trace ring").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minted_ids_are_unique_and_hex_stable() {
+        let a = TraceBuilder::mint("same-job");
+        let b = TraceBuilder::mint("same-job");
+        assert_ne!(a.id(), b.id(), "sequence number must split identical mint inputs");
+        assert_eq!(a.id_hex().len(), 32);
+        assert_eq!(a.id_hex(), format!("{:032x}", a.id()));
+    }
+
+    #[test]
+    fn spans_aggregate_by_kind_and_other_fills_to_total() {
+        let t = TraceBuilder::mint("j1");
+        t.record(SpanKind::OrderStep, Duration::from_micros(300));
+        t.record(SpanKind::OrderStep, Duration::from_micros(200));
+        t.record(SpanKind::Regression, Duration::from_micros(100));
+        std::thread::sleep(Duration::from_millis(2));
+        let rec = t.finish();
+        let steps = rec.spans.iter().find(|s| s.kind == SpanKind::OrderStep).unwrap();
+        assert_eq!(steps.count, 2);
+        assert_eq!(steps.dur_us, 500);
+        let sum: u64 = rec.spans.iter().map(|s| s.dur_us).sum();
+        assert_eq!(sum, rec.total_us, "other must fill spans to the total exactly");
+        assert!(rec.spans.iter().any(|s| s.kind == SpanKind::Other));
+    }
+
+    #[test]
+    fn timing_json_carries_trace_spans_and_totals() {
+        let t = TraceBuilder::mint("j2");
+        t.record(SpanKind::QueueWait, Duration::from_micros(1500));
+        let rec = t.finish();
+        let timing = rec.timing_json();
+        assert!(timing.starts_with("{\"trace\":\""));
+        assert!(timing.contains("\"span\":\"queue_wait\""));
+        assert!(timing.contains("\"total_ms\":"));
+        let body = rec.body_json();
+        assert!(body.contains("\"job\":\"j2\""));
+        assert!(!body.starts_with('{'), "body form is brace-less for frame embedding");
+    }
+
+    #[test]
+    fn store_is_a_ring_queryable_by_trace_or_job_id() {
+        let store = TraceStore::new(2);
+        let mk = |job: &str| TraceBuilder::mint(job).finish();
+        let a = mk("a");
+        let a_hex = a.trace_hex.clone();
+        store.insert(a);
+        store.insert(mk("b"));
+        assert!(store.get(&a_hex).is_some());
+        assert!(store.get("b").is_some());
+        store.insert(mk("c")); // evicts a
+        assert_eq!(store.len(), 2);
+        assert!(store.get(&a_hex).is_none(), "ring must evict the oldest");
+        assert!(store.get("c").is_some());
+        // duplicate job ids: latest wins
+        store.insert(mk("c"));
+        let latest = store.get("c").unwrap();
+        assert_eq!(store.len(), 2);
+        assert_eq!(latest.job, "c");
+    }
+}

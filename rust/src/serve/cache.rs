@@ -120,6 +120,21 @@ impl CacheStats {
             self.hits as f64 / total as f64
         }
     }
+
+    /// Mean in-memory age of an evicted entry, in milliseconds — the
+    /// derived metric `eviction_age_ms_total` exists for, computable
+    /// now that the eviction *count* ships alongside the age total.
+    /// 0.0 when nothing has been evicted. Replay-time drops (entries
+    /// discarded at open because the segment held more than capacity)
+    /// count as evictions with zero in-memory age, so they pull the
+    /// mean down rather than silently vanishing.
+    pub fn mean_eviction_age_ms(&self) -> f64 {
+        if self.evictions == 0 {
+            0.0
+        } else {
+            self.eviction_age_ms_total as f64 / self.evictions as f64
+        }
+    }
 }
 
 /// One cached result and its bookkeeping.
@@ -270,7 +285,9 @@ impl ResultCache {
             live.push((key, payload));
         }
         // keep the most recent `capacity` (append order is recency
-        // order after the dedup above)
+        // order after the dedup above); the drops are evictions that
+        // happened to run at open, and are booked as such (with zero
+        // in-memory age — the entries never entered this store)
         let drop_n = live.len().saturating_sub(capacity);
         let live = live.split_off(drop_n);
         let file = write_segment(&path, &live)?;
@@ -291,7 +308,7 @@ impl ResultCache {
             capacity,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
-            evictions: AtomicU64::new(0),
+            evictions: AtomicU64::new(drop_n as u64),
             disk_hits: AtomicU64::new(0),
             eviction_age_ms_total: AtomicU64::new(0),
             recovered,
@@ -438,6 +455,20 @@ mod tests {
         assert_eq!(*c.get(7).unwrap(), "new");
         assert_eq!(c.stats().entries, 1);
         assert_eq!(c.stats().evictions, 0);
+    }
+
+    #[test]
+    fn mean_eviction_age_is_computable_and_nan_free() {
+        let c = ResultCache::new(1);
+        assert_eq!(c.stats().mean_eviction_age_ms(), 0.0, "no evictions yet");
+        c.put(1, v("1"));
+        std::thread::sleep(std::time::Duration::from_millis(3));
+        c.put(2, v("2")); // evicts 1 at age ≥ 3ms
+        let s = c.stats();
+        assert_eq!(s.evictions, 1);
+        let mean = s.mean_eviction_age_ms();
+        assert!(mean.is_finite() && mean >= 3.0, "mean age {mean}");
+        assert!((mean - s.eviction_age_ms_total as f64).abs() < 1e-9);
     }
 
     #[test]

@@ -11,7 +11,10 @@
 //! | `POST /watch`     | replay a `"frames"` array through a watch       |
 //! |                   | stream; one SSE `adjacency` event per frame     |
 //! | `GET  /status`    | one `status` frame as `application/json`        |
-//! | `GET  /metrics`   | one `metrics` frame as `application/json`       |
+//! | `GET  /metrics`   | one `metrics` frame as `application/json`; with |
+//! |                   | `?format=prometheus`, the text exposition       |
+//! | `GET  /trace/<t>` | replay a completed job's recorded trace (by     |
+//! |                   | trace id or job id); 404 when none matches      |
 //! | `GET  /healthz`   | liveness: `{"ok":true}` without touching the    |
 //! |                   | backend (safe for load-balancer probes)         |
 //! | `POST /cancel`    | flip cancel flags; ack as `application/json`    |
@@ -51,6 +54,7 @@
 
 use super::protocol::{self, Json};
 use super::{worker, Backend, WatchInput};
+use crate::util::table::json_escape;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::sync::{Arc, Condvar, Mutex};
@@ -69,11 +73,12 @@ pub const MAX_BODY_BYTES: usize = 64 * 1024 * 1024;
 /// backend guarantees a terminal frame on every submit path).
 const JOB_DEADLINE: Duration = Duration::from_secs(600);
 
-/// A parsed request: method + path (query string stripped), lowercased
-/// header names, and the full body.
+/// A parsed request: method, path, raw query string (empty when the
+/// target carried none), and the full body.
 struct HttpRequest {
     method: String,
     path: String,
+    query: String,
     body: String,
 }
 
@@ -114,8 +119,35 @@ pub(crate) fn handle_http(stream: TcpStream, backend: Arc<dyn Backend>) {
             write_simple(&mut out, 200, "OK", "application/json", &(frame + "\n"));
         }
         ("GET", "/metrics") => {
-            let frame = backend.metrics_frame(None);
-            write_simple(&mut out, 200, "OK", "application/json", &(frame + "\n"));
+            if query_has(&req.query, "format", "prometheus") {
+                let text = backend.prometheus_text();
+                write_simple(
+                    &mut out,
+                    200,
+                    "OK",
+                    "text/plain; version=0.0.4; charset=utf-8",
+                    &text,
+                );
+            } else {
+                let frame = backend.metrics_frame(None);
+                write_simple(&mut out, 200, "OK", "application/json", &(frame + "\n"));
+            }
+        }
+        ("GET", p) if p.strip_prefix("/trace/").is_some_and(|t| !t.is_empty()) => {
+            let target = p.strip_prefix("/trace/").unwrap_or("");
+            match backend.trace_lookup(target) {
+                Some(body) => {
+                    let payload = format!("{{\"event\":\"trace\",\"found\":true,{body}}}\n");
+                    write_simple(&mut out, 200, "OK", "application/json", &payload);
+                }
+                None => {
+                    let payload = format!(
+                        "{{\"event\":\"trace\",\"found\":false,\"target\":\"{}\"}}\n",
+                        json_escape(target)
+                    );
+                    write_simple(&mut out, 404, "Not Found", "application/json", &payload);
+                }
+            }
         }
         // liveness, not readiness: answered from this front thread alone
         // so a wedged backend (or a fleet mid-restart) never turns probe
@@ -185,7 +217,10 @@ fn read_request(
     if !version.starts_with("HTTP/1.") {
         return Err(reject(505, "HTTP Version Not Supported", "only HTTP/1.x is served"));
     }
-    let path = target.split('?').next().unwrap_or("").to_string();
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target, String::new()),
+    };
     let mut content_length: usize = 0;
     let mut expect_continue = false;
     let mut count = 0usize;
@@ -239,7 +274,7 @@ fn read_request(
     reader.read_exact(&mut body).map_err(|_| Reject::Gone)?;
     let body = String::from_utf8(body)
         .map_err(|_| reject(400, "Bad Request", "request body is not UTF-8"))?;
-    Ok(HttpRequest { method, path, body })
+    Ok(HttpRequest { method, path, query, body })
 }
 
 /// Write a complete non-streaming response.
@@ -251,6 +286,14 @@ fn write_simple(out: &mut TcpStream, code: u16, reason: &str, content_type: &str
         body.len(),
     );
     let _ = out.flush();
+}
+
+/// Does the query string carry exactly `key=value`? No percent-decoding
+/// — the only recognized pairs are plain ASCII literals.
+fn query_has(query: &str, key: &str, value: &str) -> bool {
+    query
+        .split('&')
+        .any(|pair| matches!(pair.split_once('='), Some((k, v)) if k == key && v == value))
 }
 
 /// Parse a (possibly empty) request body as one JSON object.
@@ -519,6 +562,16 @@ mod tests {
         assert!(parse_watch_frames(&protocol::parse_json("{\"frames\":[[\"x\"]]}").unwrap())
             .is_err());
         assert!(parse_watch_frames(&protocol::parse_json("{\"frames\":42}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn query_flags_match_exact_pairs_only() {
+        assert!(query_has("format=prometheus", "format", "prometheus"));
+        assert!(query_has("a=1&format=prometheus&b=2", "format", "prometheus"));
+        assert!(!query_has("", "format", "prometheus"));
+        assert!(!query_has("format=json", "format", "prometheus"));
+        assert!(!query_has("formats=prometheus", "format", "prometheus"));
+        assert!(!query_has("format", "format", "prometheus"));
     }
 
     #[test]

@@ -116,6 +116,75 @@
 //!   cheap per frame but each holds one worker slot while live
 //!   (`watch_streams` in the metrics frame is the live-stream gauge).
 //!
+//! # Observability
+//!
+//! The serve tier is instrumented end to end by the [`crate::obs`]
+//! layer; everything below is served by both fronts (TCP `trace` /
+//! `metrics` requests, HTTP `GET /trace/<id>` / `GET /metrics`).
+//!
+//! **Trace-id lifecycle.** [`Backend::submit`] mints a 128-bit trace id
+//! per job ([`crate::obs::trace::TraceBuilder`]) and threads it through
+//! [`protocol::JobSpec::trace`]. Every stage the job crosses records a
+//! typed span aggregate against it: `cache_probe` (submit-time lookup),
+//! `queue_wait` (pop − submit), `fuse_wait` (fusion window),
+//! `session_acquire` (pool checkout / session build), `order_step`
+//! (one aggregate over all d−1 search steps), `regression`,
+//! `frame_flush` (progress-frame writes), `stream` (watch ingest). At
+//! the terminal frame the builder closes (an `other` filler span
+//! absorbs unattributed time, so spans always sum to the job's total),
+//! the record lands in a bounded in-memory ring
+//! ([`crate::obs::trace::TraceStore`], capacity
+//! [`TRACE_CAPACITY`]), and `result` frames carry the breakdown
+//! inline as a compact `"timing"` object:
+//!
+//! ```json
+//! {"id":"a1","event":"result","cached":false,"elapsed_ms":12.5,
+//!  "timing":{"trace":"3f2a…32 hex…","total_ms":12.6,"spans":[
+//!    {"span":"queue_wait","start_ms":0.0,"ms":0.4,"count":1},
+//!    {"span":"order_step","start_ms":0.9,"ms":10.8,"count":31},…]},
+//!  "data":{…}}
+//! ```
+//!
+//! `{"cmd":"trace","target":"<trace-or-job-id>"}` (or
+//! `GET /trace/<id>`) replays the same spans later; through a shard
+//! fleet the supervisor fans the lookup out to every child.
+//!
+//! **Metric names.** `GET /metrics?format=prometheus` (and the same
+//! query on the TCP `metrics` frame's JSON twin) renders, in Prometheus
+//! text-exposition 0.0.4:
+//!
+//! | name | type | meaning |
+//! |---|---|---|
+//! | `alingam_jobs_submitted_total` … `_completed_total`, `_failed_total`, `_canceled_total` | counter | job terminals |
+//! | `alingam_cache_short_circuits_total` | counter | jobs answered at submit from the cache |
+//! | `alingam_queue_depth`, `alingam_in_flight`, `alingam_workers` | gauge | scheduler state |
+//! | `alingam_uptime_seconds`, `alingam_start_time_seconds` | gauge | process lifetime (start is unix epoch) |
+//! | `alingam_busy_seconds_total` | counter | summed per-job wall clock |
+//! | `alingam_cache_hits_total`, `_misses_total`, `_evictions_total`, `_disk_hits_total` | counter | cache traffic |
+//! | `alingam_cache_eviction_age_seconds_total` | counter | summed in-memory age at eviction |
+//! | `alingam_cache_entries`, `alingam_cache_capacity`, `alingam_cache_recovered_entries` | gauge | cache occupancy |
+//! | `alingam_sweep_pairs_total`, `_visited_total`, `_skipped_total` | counter | ordering sweep work |
+//! | `alingam_partition_blocks_formed_total`, `_boundary_pairs_total` | counter | partitioned-plan work |
+//! | `alingam_batches_dispatched_total`, `alingam_jobs_fused_total`, `alingam_fuse_wait_seconds_total` | counter | fusion window |
+//! | `alingam_watch_streams` | gauge | live watch subscriptions |
+//! | `alingam_watch_frames_ingested_total`, `_refits_incremental_total`, `_refits_full_total`, `_resyncs_total` | counter | watch traffic |
+//! | `alingam_job_latency_seconds`, `alingam_queue_wait_seconds`, `alingam_step_seconds`, `alingam_watch_frame_seconds` | summary | latency histograms (p50/p95/p99 + `_sum`/`_count`, companion `_max` gauge) |
+//! | `alingam_shards`, `alingam_shards_live`, `alingam_shard_restarts_total` | gauge/counter | fleet tier only |
+//!
+//! A shard supervisor serves the same exposition with counters summed
+//! and histograms snapshot-merged across children (bucketing is
+//! deterministic, so the merge is exact at bucket resolution).
+//!
+//! **Log records.** `--log-level`/`--log-json` configure the
+//! [`crate::obs::log`] logger (see its docs for the record schema);
+//! serve-stack events (`server_started`, `job_completed`, `job_failed`,
+//! `job_canceled`, `shard_spawned`, `shard_exit`, …) carry the trace id
+//! so a log line joins against `GET /trace/<id>` and the metrics it
+//! moved. Shard children inherit the supervisor's log flags; their
+//! stderr is currently discarded by the supervisor (a documented
+//! limitation — point children at a collector via their own invocation
+//! to keep their records).
+//!
 //! The `alingam serve` and `alingam client` subcommands wrap this module
 //! on the CLI; `Server::start` is the embeddable entry point the
 //! integration tests drive.
@@ -134,6 +203,8 @@ pub use self::queue::JobQueue;
 
 use crate::coordinator::{Engine, EngineChoice};
 use crate::lingam::SweepCounters;
+use crate::obs::trace::{SpanKind, TraceBuilder, TraceStore};
+use crate::obs::{hist, log, PromText};
 use crate::runtime::XlaEngine;
 use crate::util::table::{json_escape, json_f64};
 use crate::util::Result;
@@ -176,6 +247,12 @@ pub struct ServeConfig {
     /// Optional directory for the disk-persistent result cache (see
     /// [`cache`]); `None` keeps the cache memory-only.
     pub cache_dir: Option<PathBuf>,
+    /// Logger verbosity (`error|warn|info|debug`; see
+    /// [`crate::obs::log`]). The embedded default is `warn` so tests
+    /// and library embedders stay quiet; the CLI default is `info`.
+    pub log_level: String,
+    /// Emit log records as JSON objects instead of `key=value` text.
+    pub log_json: bool,
 }
 
 impl Default for ServeConfig {
@@ -189,6 +266,8 @@ impl Default for ServeConfig {
             max_batch: 8,
             http_addr: None,
             cache_dir: None,
+            log_level: "warn".to_string(),
+            log_json: false,
         }
     }
 }
@@ -233,6 +312,16 @@ pub struct ServeMetrics {
     pub(crate) refits_full: AtomicU64,
     /// Sliding-window moment resyncs across all watch streams.
     pub(crate) resyncs: AtomicU64,
+    /// Submit-to-terminal latency of every job (cached short-circuits
+    /// included — they are real client-observed latencies).
+    pub(crate) hist_job_latency: hist::Histogram,
+    /// Submit-to-pop wait (leaders at the queue pop, members at the
+    /// fusion-window gather).
+    pub(crate) hist_queue_wait: hist::Histogram,
+    /// Per-search-step ordering latency across all fit paths.
+    pub(crate) hist_step: hist::Histogram,
+    /// Watch-frame ingest latency (one observation per ingested row).
+    pub(crate) hist_watch_frame: hist::Histogram,
 }
 
 impl ServeMetrics {
@@ -359,6 +448,9 @@ impl CancelRegistry {
     }
 }
 
+/// Completed-job traces the ring buffer keeps for `trace` lookups.
+pub const TRACE_CAPACITY: usize = 256;
+
 /// State shared between the acceptor, the connection readers and the
 /// workers.
 pub(crate) struct Shared {
@@ -367,6 +459,11 @@ pub(crate) struct Shared {
     pub(crate) metrics: ServeMetrics,
     pub(crate) cancels: CancelRegistry,
     pub(crate) watches: WatchRegistry,
+    /// Completed-job trace ring (`trace` requests / `GET /trace/<id>`).
+    pub(crate) traces: TraceStore,
+    /// Unix epoch ms at [`Server::start`] (the `start_unix_ms` status
+    /// field and the `alingam_start_time_seconds` gauge).
+    pub(crate) start_unix_ms: u64,
     pub(crate) worker_count: usize,
     /// Fusion-window wait bound, ms (see [`ServeConfig::fuse_wait_ms`]).
     pub(crate) fuse_wait_ms: u64,
@@ -421,6 +518,14 @@ pub(crate) trait Backend: Send + Sync {
     fn status_frame(&self, id: Option<&str>) -> String;
     /// Render a `metrics` frame.
     fn metrics_frame(&self, id: Option<&str>) -> String;
+    /// Look up a completed job's trace by trace id (32 hex chars) or job
+    /// id. Returns the *brace-less* body
+    /// (`"trace":"…","job":"…","total_ms":…,"spans":[…]`) so each front
+    /// wraps it its own way; `None` when no recorded trace matches.
+    fn trace_lookup(&self, target: &str) -> Option<String>;
+    /// Render the full Prometheus text exposition (fleet tiers merge
+    /// their children's counters and histogram snapshots first).
+    fn prometheus_text(&self) -> String;
     /// Flip cancel flags for `target`; `true` if any job was known.
     fn cancel(&self, target: &str) -> bool;
     /// A client asked the whole service to shut down.
@@ -452,6 +557,14 @@ impl Backend for Shared {
         metrics_frame(id, self)
     }
 
+    fn trace_lookup(&self, target: &str) -> Option<String> {
+        self.traces.get(target).map(|r| r.body_json())
+    }
+
+    fn prometheus_text(&self) -> String {
+        prometheus_text(self)
+    }
+
     fn cancel(&self, target: &str) -> bool {
         self.cancels.cancel(target)
     }
@@ -462,11 +575,15 @@ impl Backend for Shared {
         self.stop_cv.notify_all();
     }
 
-    fn submit(&self, client: u64, _raw: &str, spec: protocol::JobSpec, sink: &worker::Sink) {
+    fn submit(&self, client: u64, _raw: &str, mut spec: protocol::JobSpec, sink: &worker::Sink) {
         self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        // every job gets its trace context here, cached or not — queue
+        // wait is measured from this mint instant
+        let trace = Arc::new(TraceBuilder::mint(&spec.id));
+        spec.trace = trace.id();
         let is_watch = matches!(spec.kind, protocol::JobKind::Watch { .. });
         // a stream is stateful: never cache-answered, never cached
-        if !is_watch && short_circuit(self, &spec, sink) {
+        if !is_watch && short_circuit(self, &spec, &trace, sink) {
             return;
         }
         let id = spec.id.clone();
@@ -486,7 +603,8 @@ impl Backend for Shared {
         // guarantees it precedes any frame the job itself emits,
         // whatever worker timing does
         sink(&protocol::frame_accepted(&id, self.queue.depth()));
-        let job = worker::Job { spec, cancel: cancel.clone(), sink: sink.clone(), watch_rx };
+        let job =
+            worker::Job { spec, cancel: cancel.clone(), sink: sink.clone(), watch_rx, trace };
         // push blocks at capacity: backpressure reaches the client
         // through its stalled connection
         if let Err(e) = self.queue.push(client, job) {
@@ -557,12 +675,19 @@ impl Server {
             Some(dir) => ResultCache::with_dir(cfg.cache_entries, dir)?,
             None => ResultCache::new(cfg.cache_entries),
         };
+        // first-call-wins: an embedder that initialized the logger
+        // earlier keeps its configuration
+        let level = log::Level::parse(&cfg.log_level).unwrap_or(log::Level::Warn);
+        log::init(level, cfg.log_json);
+        let start_unix_ms = unix_millis_now();
         let shared = Arc::new(Shared {
             queue: JobQueue::new(cfg.queue_capacity.max(1)),
             cache,
             metrics: ServeMetrics::default(),
             cancels: CancelRegistry::default(),
             watches: WatchRegistry::default(),
+            traces: TraceStore::new(TRACE_CAPACITY),
+            start_unix_ms,
             worker_count,
             fuse_wait_ms: cfg.fuse_wait_ms,
             max_batch: cfg.max_batch.max(1),
@@ -601,6 +726,14 @@ impl Server {
                 .spawn(move || accept_loop(l, backend, true))
                 .expect("spawn serve http acceptor")
         });
+        log::info(
+            "server_started",
+            &[
+                ("addr", &addr.to_string()),
+                ("http", &http_addr.map(|a| a.to_string()).unwrap_or_default()),
+                ("workers", &worker_count.to_string()),
+            ],
+        );
         Ok(Server { addr, http_addr, shared, accept: Some(accept), http_accept, workers })
     }
 
@@ -752,6 +885,19 @@ pub(crate) fn handle_connection(stream: TcpStream, backend: Arc<dyn Backend>) {
             Err(e) => sink(&protocol::frame_error(None, &e.to_string())),
             Ok(Request::Status { id }) => sink(&backend.status_frame(id.as_deref())),
             Ok(Request::Metrics { id }) => sink(&backend.metrics_frame(id.as_deref())),
+            Ok(Request::Trace { id, target }) => match backend.trace_lookup(&target) {
+                Some(body) => {
+                    let payload = format!("\"event\":\"trace\",\"found\":true,{body}");
+                    sink(&with_id(id.as_deref(), &payload));
+                }
+                None => {
+                    let payload = format!(
+                        "\"event\":\"trace\",\"found\":false,\"target\":\"{}\"",
+                        json_escape(&target)
+                    );
+                    sink(&with_id(id.as_deref(), &payload));
+                }
+            },
             Ok(Request::Cancel { id, target }) => {
                 let known = backend.cancel(&target);
                 sink(&protocol::frame_ack(id.as_deref(), "cancel", known));
@@ -789,7 +935,12 @@ pub(crate) fn handle_connection(stream: TcpStream, backend: Arc<dyn Backend>) {
 /// panels are hashed by the worker after loading instead, so disk reads
 /// stay off the connection thread). Returns `true` when the request was
 /// answered here.
-fn short_circuit(shared: &Shared, spec: &protocol::JobSpec, sink: &worker::Sink) -> bool {
+fn short_circuit(
+    shared: &Shared,
+    spec: &protocol::JobSpec,
+    trace: &TraceBuilder,
+    sink: &worker::Sink,
+) -> bool {
     let protocol::PanelSource::Inline(panel) = &spec.panel else {
         return false;
     };
@@ -797,15 +948,41 @@ fn short_circuit(shared: &Shared, spec: &protocol::JobSpec, sink: &worker::Sink)
         return false;
     };
     let choice = choice.resolve_workers(shared.worker_count);
+    let probe = Instant::now();
     let key = worker::cache_key(panel, choice, &spec.kind);
-    match shared.cache.get(key) {
+    let hit = shared.cache.get(key);
+    trace.record_at(SpanKind::CacheProbe, probe, probe.elapsed());
+    match hit {
         Some(hit) => {
             shared.metrics.cache_short_circuits.fetch_add(1, Ordering::Relaxed);
-            sink(&protocol::frame_result(Some(spec.id.as_str()), true, 0.0, &hit));
+            let rec = trace.finish();
+            sink(&protocol::frame_result_traced(
+                Some(spec.id.as_str()),
+                true,
+                0.0,
+                &hit,
+                Some(&rec.timing_json()),
+            ));
+            // a short-circuit is still a client-observed job latency
+            shared.metrics.hist_job_latency.record_us(rec.total_us.max(1));
+            log::info(
+                "job_completed",
+                &[("job", spec.id.as_str()), ("trace", &rec.trace_hex), ("cached", "true")],
+            );
+            shared.traces.insert(rec);
             true
         }
         None => false,
     }
+}
+
+/// Wall-clock Unix time in milliseconds (0 if the clock is before the
+/// epoch) — the `start_unix_ms` both serve tiers stamp at boot.
+pub(crate) fn unix_millis_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::SystemTime::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
 }
 
 fn with_id(id: Option<&str>, body: &str) -> String {
@@ -818,11 +995,12 @@ fn with_id(id: Option<&str>, body: &str) -> String {
 fn status_frame(id: Option<&str>, shared: &Shared) -> String {
     let body = format!(
         "\"event\":\"status\",\"queue_depth\":{},\"in_flight\":{},\"workers\":{},\
-         \"uptime_ms\":{},\"accepting\":{}",
+         \"uptime_ms\":{},\"start_unix_ms\":{},\"accepting\":{}",
         shared.queue.depth(),
         shared.metrics.in_flight.load(Ordering::Relaxed),
         shared.worker_count,
         shared.started.elapsed().as_millis(),
+        shared.start_unix_ms,
         shared.queue.is_open()
     );
     with_id(id, &body)
@@ -842,7 +1020,8 @@ fn metrics_frame(id: Option<&str>, shared: &Shared) -> String {
     );
     let cache = format!(
         "{{\"hits\":{},\"misses\":{},\"evictions\":{},\"entries\":{},\"capacity\":{},\
-         \"hit_rate\":{},\"disk_hits\":{},\"recovered\":{},\"eviction_age_ms_total\":{}}}",
+         \"hit_rate\":{},\"disk_hits\":{},\"recovered\":{},\"eviction_age_ms_total\":{},\
+         \"mean_eviction_age_ms\":{}}}",
         c.hits,
         c.misses,
         c.evictions,
@@ -852,6 +1031,7 @@ fn metrics_frame(id: Option<&str>, shared: &Shared) -> String {
         c.disk_hits,
         c.recovered,
         c.eviction_age_ms_total,
+        json_f64(c.mean_eviction_age_ms()),
     );
     let sweep = format!(
         "{{\"pairs_total\":{},\"pairs_visited\":{},\"pairs_skipped\":{}}}",
@@ -882,17 +1062,222 @@ fn metrics_frame(id: Option<&str>, shared: &Shared) -> String {
         m.refits_full.load(Ordering::Relaxed),
         m.resyncs.load(Ordering::Relaxed),
     );
+    // the histogram snapshots ride along so a shard supervisor can
+    // rebuild and merge them (`Snapshot::from_parts` — bucketing is
+    // deterministic, so the merge is exact at bucket resolution)
+    let obs = format!(
+        "{{\"job_latency\":{},\"queue_wait\":{},\"step\":{},\"watch_frame\":{}}}",
+        m.hist_job_latency.snapshot().to_json(),
+        m.hist_queue_wait.snapshot().to_json(),
+        m.hist_step.snapshot().to_json(),
+        m.hist_watch_frame.snapshot().to_json(),
+    );
     let body = format!(
-        "\"event\":\"metrics\",\"workers\":{},\"uptime_ms\":{},\"queue_depth\":{},\
-         \"in_flight\":{},\"busy_ms_total\":{},\"jobs\":{jobs},\"cache\":{cache},\
-         \"sweep\":{sweep},\"partition\":{partition},\"batch\":{batch},\"watch\":{watch}",
+        "\"event\":\"metrics\",\"workers\":{},\"uptime_ms\":{},\"start_unix_ms\":{},\
+         \"queue_depth\":{},\"in_flight\":{},\"busy_ms_total\":{},\"jobs\":{jobs},\
+         \"cache\":{cache},\"sweep\":{sweep},\"partition\":{partition},\"batch\":{batch},\
+         \"watch\":{watch},\"obs\":{obs}",
         shared.worker_count,
         shared.started.elapsed().as_millis(),
+        shared.start_unix_ms,
         shared.queue.depth(),
         m.in_flight.load(Ordering::Relaxed),
         m.busy_ms_total.load(Ordering::Relaxed),
     );
     with_id(id, &body)
+}
+
+/// Render the solo-tier Prometheus exposition (the names documented in
+/// the module docs; the fleet tier builds its own merged rendering in
+/// [`shard`]).
+fn prometheus_text(shared: &Shared) -> String {
+    let m = &shared.metrics;
+    let c = shared.cache.stats();
+    let ld = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
+    let mut p = PromText::new();
+    p.single(
+        "alingam_jobs_submitted_total",
+        "counter",
+        "Jobs accepted by submit.",
+        ld(&m.jobs_submitted),
+    );
+    p.single(
+        "alingam_jobs_completed_total",
+        "counter",
+        "Jobs that ended in a result frame.",
+        ld(&m.jobs_completed),
+    );
+    p.single(
+        "alingam_jobs_failed_total",
+        "counter",
+        "Jobs that ended in an error frame.",
+        ld(&m.jobs_failed),
+    );
+    p.single(
+        "alingam_jobs_canceled_total",
+        "counter",
+        "Jobs that ended in a canceled frame.",
+        ld(&m.jobs_canceled),
+    );
+    p.single(
+        "alingam_cache_short_circuits_total",
+        "counter",
+        "Jobs answered at submit time straight from the result cache.",
+        ld(&m.cache_short_circuits),
+    );
+    p.single(
+        "alingam_queue_depth",
+        "gauge",
+        "Jobs queued and not yet running.",
+        shared.queue.depth() as f64,
+    );
+    p.single("alingam_in_flight", "gauge", "Jobs currently executing.", ld(&m.in_flight));
+    p.single("alingam_workers", "gauge", "Worker threads.", shared.worker_count as f64);
+    p.single(
+        "alingam_uptime_seconds",
+        "gauge",
+        "Seconds since server start (monotonic clock).",
+        shared.started.elapsed().as_secs_f64(),
+    );
+    p.single(
+        "alingam_start_time_seconds",
+        "gauge",
+        "Unix time the server started, in seconds.",
+        shared.start_unix_ms as f64 / 1e3,
+    );
+    p.single(
+        "alingam_busy_seconds_total",
+        "counter",
+        "Summed per-job wall clock, in seconds.",
+        ld(&m.busy_ms_total) / 1e3,
+    );
+    p.single("alingam_cache_hits_total", "counter", "Result-cache hits.", c.hits as f64);
+    p.single("alingam_cache_misses_total", "counter", "Result-cache misses.", c.misses as f64);
+    p.single(
+        "alingam_cache_evictions_total",
+        "counter",
+        "Result-cache LRU evictions.",
+        c.evictions as f64,
+    );
+    p.single(
+        "alingam_cache_disk_hits_total",
+        "counter",
+        "Results recovered from the disk segment.",
+        c.disk_hits as f64,
+    );
+    p.single(
+        "alingam_cache_eviction_age_seconds_total",
+        "counter",
+        "Summed in-memory age of evicted cache entries, in seconds.",
+        c.eviction_age_ms_total as f64 / 1e3,
+    );
+    p.single("alingam_cache_entries", "gauge", "Live result-cache entries.", c.entries as f64);
+    p.single(
+        "alingam_cache_capacity",
+        "gauge",
+        "Result-cache capacity in entries.",
+        c.capacity as f64,
+    );
+    p.single(
+        "alingam_cache_recovered_entries",
+        "gauge",
+        "Entries recovered from the disk segment at startup.",
+        c.recovered as f64,
+    );
+    p.single(
+        "alingam_sweep_pairs_total",
+        "counter",
+        "Candidate pairs across all ordering sweeps.",
+        ld(&m.sweep_pairs_total),
+    );
+    p.single(
+        "alingam_sweep_pairs_visited_total",
+        "counter",
+        "Pairs actually scored.",
+        ld(&m.sweep_pairs_visited),
+    );
+    p.single(
+        "alingam_sweep_pairs_skipped_total",
+        "counter",
+        "Pairs skipped by bound pruning.",
+        ld(&m.sweep_pairs_skipped),
+    );
+    p.single(
+        "alingam_partition_blocks_formed_total",
+        "counter",
+        "Column blocks formed by partitioned fits.",
+        ld(&m.blocks_formed),
+    );
+    p.single(
+        "alingam_partition_boundary_pairs_total",
+        "counter",
+        "Cross-block boundary pairs partitioned fits visited.",
+        ld(&m.boundary_pairs),
+    );
+    p.single(
+        "alingam_batches_dispatched_total",
+        "counter",
+        "Fused groups driven through one batched session.",
+        ld(&m.batches_dispatched),
+    );
+    p.single(
+        "alingam_jobs_fused_total",
+        "counter",
+        "Jobs that ran inside a fused group.",
+        ld(&m.jobs_fused),
+    );
+    p.single(
+        "alingam_fuse_wait_seconds_total",
+        "counter",
+        "Total time batch leaders held the fusion window open, in seconds.",
+        ld(&m.fuse_wait_ms_total) / 1e3,
+    );
+    p.single("alingam_watch_streams", "gauge", "Live watch subscriptions.", ld(&m.watch_streams));
+    p.single(
+        "alingam_watch_frames_ingested_total",
+        "counter",
+        "Samples ingested across all watch streams.",
+        ld(&m.frames_ingested),
+    );
+    p.single(
+        "alingam_watch_refits_incremental_total",
+        "counter",
+        "Watch frames answered by the held-order fast path.",
+        ld(&m.refits_incremental),
+    );
+    p.single(
+        "alingam_watch_refits_full_total",
+        "counter",
+        "Watch frames that re-ran the full ordering sweep.",
+        ld(&m.refits_full),
+    );
+    p.single(
+        "alingam_watch_resyncs_total",
+        "counter",
+        "Sliding-window moment resyncs across all watch streams.",
+        ld(&m.resyncs),
+    );
+    p.summary_seconds(
+        "alingam_job_latency_seconds",
+        "Submit-to-terminal job latency (cached short-circuits included).",
+        &m.hist_job_latency.snapshot(),
+    );
+    p.summary_seconds(
+        "alingam_queue_wait_seconds",
+        "Submit-to-pop queue wait.",
+        &m.hist_queue_wait.snapshot(),
+    );
+    p.summary_seconds(
+        "alingam_step_seconds",
+        "Per-search-step ordering latency.",
+        &m.hist_step.snapshot(),
+    );
+    p.summary_seconds(
+        "alingam_watch_frame_seconds",
+        "Watch-frame ingest latency.",
+        &m.hist_watch_frame.snapshot(),
+    );
+    p.render()
 }
 
 #[cfg(test)]

@@ -456,6 +456,9 @@ pub struct JobSpec {
     /// Raw engine spec string (parsed/normalized by the worker).
     pub engine: String,
     pub kind: JobKind,
+    /// 128-bit trace id, minted server-side at submit (0 until then —
+    /// the parser never sets it; clients do not choose trace ids).
+    pub trace: u128,
 }
 
 /// A parsed request frame.
@@ -468,6 +471,9 @@ pub enum Request {
     End { id: String },
     Status { id: Option<String> },
     Metrics { id: Option<String> },
+    /// Look up a completed job's recorded trace by trace id (32 hex
+    /// chars) or by job id (latest trace under that id wins).
+    Trace { id: Option<String>, target: String },
     Cancel { id: Option<String>, target: String },
     Shutdown { id: Option<String> },
 }
@@ -507,6 +513,7 @@ pub fn request_from_parts(cmd: &str, j: &Json) -> Result<Request> {
                 .unwrap_or("parallel")
                 .to_string(),
             kind,
+            trace: 0,
         }))
     };
     match cmd {
@@ -576,6 +583,7 @@ pub fn request_from_parts(cmd: &str, j: &Json) -> Result<Request> {
                     .unwrap_or("parallel")
                     .to_string(),
                 kind: JobKind::Watch { dim, window, lags, resync_every, drift_tol, threshold },
+                trace: 0,
             }))
         }
         "frame" => {
@@ -604,6 +612,14 @@ pub fn request_from_parts(cmd: &str, j: &Json) -> Result<Request> {
         }
         "status" => Ok(Request::Status { id }),
         "metrics" => Ok(Request::Metrics { id }),
+        "trace" => {
+            let target = j
+                .get("target")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Parse("trace frame missing string \"target\"".into()))?
+                .to_string();
+            Ok(Request::Trace { id, target })
+        }
         "cancel" => {
             let target = j
                 .get("target")
@@ -615,7 +631,7 @@ pub fn request_from_parts(cmd: &str, j: &Json) -> Result<Request> {
         "shutdown" => Ok(Request::Shutdown { id }),
         other => Err(Error::Parse(format!(
             "unknown cmd {other:?} \
-             (fit|bootstrap|varlingam|watch|frame|end|status|metrics|cancel|shutdown)"
+             (fit|bootstrap|varlingam|watch|frame|end|status|metrics|trace|cancel|shutdown)"
         ))),
     }
 }
@@ -703,6 +719,29 @@ pub fn frame_result(id: Option<&str>, cached: bool, elapsed_ms: f64, data: &str)
         id_prefix(id),
         json_f64(elapsed_ms)
     )
+}
+
+/// [`frame_result`] with an optional `"timing"` object — the compact
+/// per-span breakdown the trace layer attaches to terminal result
+/// frames (`timing` must already be rendered JSON, e.g.
+/// [`TraceRecord::timing_json`](crate::obs::trace::TraceRecord::timing_json)).
+/// `None` renders byte-identically to [`frame_result`].
+pub fn frame_result_traced(
+    id: Option<&str>,
+    cached: bool,
+    elapsed_ms: f64,
+    data: &str,
+    timing: Option<&str>,
+) -> String {
+    match timing {
+        None => frame_result(id, cached, elapsed_ms, data),
+        Some(t) => format!(
+            "{{{}\"event\":\"result\",\"cached\":{cached},\"elapsed_ms\":{},\"timing\":{t},\
+             \"data\":{data}}}",
+            id_prefix(id),
+            json_f64(elapsed_ms)
+        ),
+    }
 }
 
 pub fn frame_error(id: Option<&str>, message: &str) -> String {
@@ -953,6 +992,12 @@ pub fn cancel_request(target: &str) -> String {
     format!("{{\"cmd\":\"cancel\",\"target\":\"{}\"}}", json_escape(target))
 }
 
+/// Client-side: look up a completed job's trace by trace id (32 hex
+/// chars) or job id.
+pub fn trace_request(target: &str) -> String {
+    format!("{{\"cmd\":\"trace\",\"target\":\"{}\"}}", json_escape(target))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1069,6 +1114,11 @@ mod tests {
             Request::Cancel { target, .. } => assert_eq!(target, "j1"),
             other => panic!("unexpected request {other:?}"),
         }
+        match parse_request(&trace_request("deadbeef")).unwrap() {
+            Request::Trace { target, .. } => assert_eq!(target, "deadbeef"),
+            other => panic!("unexpected request {other:?}"),
+        }
+        assert!(parse_request("{\"cmd\":\"trace\"}").is_err(), "trace needs a target");
         match parse_request(&csv_fit_request("c", "par", "/tmp/x.csv")).unwrap() {
             Request::Job(spec) => {
                 assert!(matches!(spec.panel, PanelSource::Csv(p) if p == "/tmp/x.csv"))
@@ -1271,5 +1321,24 @@ mod tests {
         let k = parse_json(&frame_ack(None, "shutdown", true)).unwrap();
         assert_eq!(k.get("of").and_then(Json::as_str), Some("shutdown"));
         assert_eq!(k.get("ok").and_then(Json::as_bool), Some(true));
+    }
+
+    #[test]
+    fn traced_result_frame_carries_timing_and_none_is_plain() {
+        let data = "{\"kind\":\"fit\"}";
+        // None must be byte-identical to the untimed builder, so every
+        // existing consumer of frame_result sees unchanged bytes
+        assert_eq!(
+            frame_result_traced(Some("a"), false, 1.5, data, None),
+            frame_result(Some("a"), false, 1.5, data)
+        );
+        let timing = "{\"trace\":\"00ff\",\"total_ms\":2.5,\"spans\":[]}";
+        let f = frame_result_traced(Some("a"), true, 2.5, data, Some(timing));
+        let j = parse_json(&f).unwrap();
+        assert_eq!(j.get("event").and_then(Json::as_str), Some("result"));
+        let t = j.get("timing").expect("timing object");
+        assert_eq!(t.get("trace").and_then(Json::as_str), Some("00ff"));
+        assert_eq!(t.get("total_ms").and_then(Json::as_f64), Some(2.5));
+        assert!(j.get("data").is_some());
     }
 }

@@ -38,10 +38,30 @@
 //! fleet-level `metrics` frame aggregates every live shard:
 //! `shards_live`, `shard_restarts`, summed job counters, and a
 //! `per_shard` array with each shard's queue depth.
+//!
+//! # Fleet observability
+//!
+//! The front answers `trace` lookups by fanning the query out to every
+//! live shard — trace ids are minted inside the shard that ran the job,
+//! so at most one child can know a given id — and relays the matching
+//! body verbatim. The Prometheus exposition is *re-rendered* rather
+//! than relayed: every child's `metrics` frame carries sparse latency
+//! histogram snapshots (see [`crate::obs::hist`]), which the front
+//! rebuilds with [`Snapshot::from_parts`](hist::Snapshot::from_parts)
+//! and sums bucket-wise — bucketing is deterministic across processes,
+//! so quantiles of the merged fleet distribution are exact at bucket
+//! resolution. Counters sum across children under the same metric names
+//! the solo tier exposes, and the fleet adds its own gauges:
+//! `alingam_shards`, `alingam_shards_live` and
+//! `alingam_shard_restarts_total`. Shard children inherit the front's
+//! `--log-level`/`--log-json` settings; their stderr (where log records
+//! go) is currently discarded, so per-shard records are only visible
+//! when connecting to a shard directly.
 
 use super::protocol::{self, Json};
 use super::worker::Sink;
 use super::{Backend, ServeConfig};
+use crate::obs::{hist, log, PromText};
 use crate::serve::cache::Fnv128;
 use crate::util::{Error, Result};
 use std::collections::{HashMap, HashSet};
@@ -92,6 +112,9 @@ pub(crate) struct Fleet {
     conns: Mutex<Vec<(u64, TcpStream)>>,
     next_client: AtomicU64,
     started: Instant,
+    /// Unix millis at front start (the `alingam_start_time_seconds`
+    /// gauge; the monotonic `started` drives uptime).
+    start_unix_ms: u64,
     /// Live relay links, keyed by (front client, shard index).
     links: Mutex<HashMap<(u64, usize), Link>>,
     exe: PathBuf,
@@ -191,8 +214,9 @@ fn route_hash(spec: &protocol::JobSpec) -> u64 {
 }
 
 /// One-shot control exchange with a shard: connect, send one frame,
-/// read one reply line.
-fn one_shot(addr: SocketAddr, line: &str) -> Option<Json> {
+/// read one raw reply line. Used directly when the front re-wraps the
+/// reply textually (trace relay) instead of re-parsing it.
+fn one_shot_raw(addr: SocketAddr, line: &str) -> Option<String> {
     let mut stream = TcpStream::connect_timeout(&addr, QUERY_TIMEOUT).ok()?;
     let _ = stream.set_read_timeout(Some(QUERY_TIMEOUT));
     let _ = stream.set_write_timeout(Some(QUERY_TIMEOUT));
@@ -201,7 +225,12 @@ fn one_shot(addr: SocketAddr, line: &str) -> Option<Json> {
     let mut reader = BufReader::new(stream);
     let mut reply = String::new();
     reader.read_line(&mut reply).ok()?;
-    protocol::parse_json(reply.trim_end()).ok()
+    Some(reply.trim_end().to_string())
+}
+
+/// [`one_shot_raw`], parsed.
+fn one_shot(addr: SocketAddr, line: &str) -> Option<Json> {
+    protocol::parse_json(&one_shot_raw(addr, line)?).ok()
 }
 
 fn get_u64(j: &Json, path: &[&str]) -> u64 {
@@ -213,6 +242,30 @@ fn get_u64(j: &Json, path: &[&str]) -> u64 {
         }
     }
     cur.as_u64().unwrap_or(0)
+}
+
+/// Rebuild a latency-histogram snapshot from the sparse JSON object a
+/// child's `metrics` frame carries under `"obs"`. Malformed or missing
+/// fields degrade to an empty snapshot — the frame came over a socket.
+fn snapshot_from_json(j: &Json) -> hist::Snapshot {
+    let pairs: Vec<(usize, u64)> = j
+        .get("buckets")
+        .and_then(Json::as_arr)
+        .map(|arr| {
+            arr.iter()
+                .filter_map(|p| {
+                    let p = p.as_arr()?;
+                    Some((p.first()?.as_usize()?, p.get(1)?.as_u64()?))
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    hist::Snapshot::from_parts(
+        get_u64(j, &["count"]),
+        get_u64(j, &["sum_us"]),
+        get_u64(j, &["max_us"]),
+        &pairs,
+    )
 }
 
 impl Backend for Fleet {
@@ -287,6 +340,164 @@ impl Backend for Fleet {
             per_shard.join(","),
         );
         super::with_id(id, &body)
+    }
+
+    fn trace_lookup(&self, target: &str) -> Option<String> {
+        // at most one shard minted this trace id (or ran this job id
+        // last); ask them all and relay the first hit's body verbatim
+        let req = protocol::trace_request(target);
+        for k in 0..self.slots.len() {
+            let Some(addr) = self.slot_addr(k) else { continue };
+            let Some(reply) = one_shot_raw(addr, &req) else { continue };
+            if let Some(body) = reply
+                .strip_prefix("{\"event\":\"trace\",\"found\":true,")
+                .and_then(|rest| rest.strip_suffix('}'))
+            {
+                return Some(body.to_string());
+            }
+        }
+        None
+    }
+
+    fn prometheus_text(&self) -> String {
+        // one metrics scrape per live shard feeds both the counter sums
+        // and the histogram merge
+        let mut frames = Vec::with_capacity(self.slots.len());
+        for k in 0..self.slots.len() {
+            let Some(addr) = self.slot_addr(k) else { continue };
+            let Some(j) = one_shot(addr, &protocol::control_request("metrics")) else { continue };
+            frames.push(j);
+        }
+        let live = frames.len();
+        let sum = |path: &[&str]| frames.iter().map(|j| get_u64(j, path)).sum::<u64>() as f64;
+        let merged = |name: &str| {
+            let mut s = hist::Snapshot::default();
+            for j in &frames {
+                if let Some(h) = j.get("obs").and_then(|o| o.get(name)) {
+                    s.merge(&snapshot_from_json(h));
+                }
+            }
+            s
+        };
+        // the same metric names the solo tier renders, summed across
+        // the fleet (keep names in sync with [`super::prometheus_text`];
+        // help strings here say "fleet-wide" where the sum spans shards)
+        let counters: [(&str, &str, &[&str], f64); 18] = [
+            ("alingam_jobs_submitted_total", "Jobs accepted.", &["jobs", "submitted"], 1.0),
+            (
+                "alingam_jobs_completed_total",
+                "Jobs ended in a result.",
+                &["jobs", "completed"],
+                1.0,
+            ),
+            ("alingam_jobs_failed_total", "Jobs ended in an error.", &["jobs", "failed"], 1.0),
+            ("alingam_jobs_canceled_total", "Jobs canceled.", &["jobs", "canceled"], 1.0),
+            (
+                "alingam_cache_short_circuits_total",
+                "Cached at submit.",
+                &["jobs", "cache_short_circuits"],
+                1.0,
+            ),
+            ("alingam_busy_seconds_total", "Summed job wall clock.", &["busy_ms_total"], 1e3),
+            ("alingam_cache_hits_total", "Result-cache hits.", &["cache", "hits"], 1.0),
+            ("alingam_cache_misses_total", "Result-cache misses.", &["cache", "misses"], 1.0),
+            ("alingam_cache_evictions_total", "Cache LRU evictions.", &["cache", "evictions"], 1.0),
+            ("alingam_cache_disk_hits_total", "Disk-segment hits.", &["cache", "disk_hits"], 1.0),
+            (
+                "alingam_cache_eviction_age_seconds_total",
+                "Evicted-entry age.",
+                &["cache", "eviction_age_ms_total"],
+                1e3,
+            ),
+            ("alingam_sweep_pairs_total", "Candidate sweep pairs.", &["sweep", "pairs_total"], 1.0),
+            (
+                "alingam_sweep_pairs_visited_total",
+                "Pairs scored.",
+                &["sweep", "pairs_visited"],
+                1.0,
+            ),
+            (
+                "alingam_sweep_pairs_skipped_total",
+                "Pairs pruned.",
+                &["sweep", "pairs_skipped"],
+                1.0,
+            ),
+            (
+                "alingam_partition_blocks_formed_total",
+                "Partition blocks.",
+                &["partition", "blocks_formed"],
+                1.0,
+            ),
+            (
+                "alingam_partition_boundary_pairs_total",
+                "Boundary pairs.",
+                &["partition", "boundary_pairs"],
+                1.0,
+            ),
+            (
+                "alingam_batches_dispatched_total",
+                "Fused groups run.",
+                &["batch", "batches_dispatched"],
+                1.0,
+            ),
+            ("alingam_jobs_fused_total", "Jobs run fused.", &["batch", "jobs_fused"], 1.0),
+        ];
+        let gauges: [(&str, &str, &[&str]); 5] = [
+            ("alingam_queue_depth", "Queued jobs, fleet-wide.", &["queue_depth"]),
+            ("alingam_in_flight", "Executing jobs, fleet-wide.", &["in_flight"]),
+            ("alingam_workers", "Worker threads across shards.", &["workers"]),
+            ("alingam_cache_entries", "Cache entries, fleet-wide.", &["cache", "entries"]),
+            ("alingam_cache_capacity", "Cache capacity, fleet-wide.", &["cache", "capacity"]),
+        ];
+        let mut p = PromText::new();
+        for (name, help, path, div) in counters {
+            p.single(name, "counter", help, sum(path) / div);
+        }
+        for (name, help, path) in gauges {
+            p.single(name, "gauge", help, sum(path));
+        }
+        p.single(
+            "alingam_fuse_wait_seconds_total",
+            "counter",
+            "Total time batch leaders held the fusion window open, in seconds.",
+            sum(&["batch", "fuse_wait_ms_total"]) / 1e3,
+        );
+        p.single(
+            "alingam_uptime_seconds",
+            "gauge",
+            "Seconds since the fleet front started (monotonic clock).",
+            self.started.elapsed().as_secs_f64(),
+        );
+        p.single(
+            "alingam_start_time_seconds",
+            "gauge",
+            "Unix time the fleet front started, in seconds.",
+            self.start_unix_ms as f64 / 1e3,
+        );
+        p.single("alingam_shards", "gauge", "Configured shard slots.", self.slots.len() as f64);
+        p.single("alingam_shards_live", "gauge", "Shards answering scrapes.", live as f64);
+        p.single(
+            "alingam_shard_restarts_total",
+            "counter",
+            "Shard children restarted after unexpected exits.",
+            self.restarts.load(Ordering::SeqCst) as f64,
+        );
+        p.summary_seconds(
+            "alingam_job_latency_seconds",
+            "Submit-to-terminal job latency, merged across shards.",
+            &merged("job_latency"),
+        );
+        p.summary_seconds(
+            "alingam_queue_wait_seconds",
+            "Submit-to-pop queue wait, merged across shards.",
+            &merged("queue_wait"),
+        );
+        p.summary_seconds(
+            "alingam_step_seconds",
+            "Per-search-step ordering latency, merged across shards.",
+            &merged("step"),
+        );
+        p.render()
     }
 
     fn cancel(&self, target: &str) -> bool {
@@ -456,6 +667,7 @@ fn monitor_loop(fleet: &Arc<Fleet>, k: usize) {
                 let _ = child.wait();
             }
         }
+        log::warn("shard_exited", &[("shard", &k.to_string())]);
         // sever this shard's relay links: their reader threads see EOF
         // and fail the pending jobs with terminal error frames
         fleet.links.lock().expect("shard links").retain(|(_, shard), link| {
@@ -489,6 +701,14 @@ fn monitor_loop(fleet: &Arc<Fleet>, k: usize) {
                 slot.child = Some(child);
                 drop(slot);
                 fleet.restarts.fetch_add(1, Ordering::SeqCst);
+                log::info(
+                    "shard_restarted",
+                    &[
+                        ("shard", &k.to_string()),
+                        ("pid", &pid.to_string()),
+                        ("addr", &addr.to_string()),
+                    ],
+                );
                 backoff = BACKOFF_START;
             }
             Err(_) => {
@@ -534,7 +754,7 @@ impl Supervisor {
             Some(l) => Some(l.local_addr()?),
             None => None,
         };
-        let child_args = vec![
+        let mut child_args = vec![
             "--serve-workers".to_string(),
             cfg.workers.to_string(),
             "--queue-cap".to_string(),
@@ -545,7 +765,12 @@ impl Supervisor {
             cfg.fuse_wait_ms.to_string(),
             "--max-batch".to_string(),
             cfg.max_batch.to_string(),
+            "--log-level".to_string(),
+            cfg.log_level.clone(),
         ];
+        if cfg.log_json {
+            child_args.push("--log-json".to_string());
+        }
         let fleet = Arc::new(Fleet {
             slots: (0..shards).map(|_| Mutex::new(Slot::default())).collect(),
             restarts: AtomicU64::new(0),
@@ -555,6 +780,7 @@ impl Supervisor {
             conns: Mutex::new(Vec::new()),
             next_client: AtomicU64::new(1),
             started: Instant::now(),
+            start_unix_ms: super::unix_millis_now(),
             links: Mutex::new(HashMap::new()),
             exe,
             child_args,
@@ -567,6 +793,15 @@ impl Supervisor {
                     slot.addr = Some(shard_addr);
                     slot.pid = Some(pid);
                     slot.child = Some(child);
+                    drop(slot);
+                    log::info(
+                        "shard_started",
+                        &[
+                            ("shard", &k.to_string()),
+                            ("pid", &pid.to_string()),
+                            ("addr", &shard_addr.to_string()),
+                        ],
+                    );
                 }
                 Err(e) => {
                     // roll back the shards already spawned
@@ -734,6 +969,7 @@ mod tests {
             panel,
             engine: "vectorized".to_string(),
             kind: protocol::JobKind::Fit,
+            trace: 0,
         }
     }
 

@@ -73,9 +73,11 @@ use crate::lingam::direct::validate_panel;
 use crate::lingam::prune::PruneMethod;
 use crate::lingam::{
     BatchedSession, DirectLingam, IncrementalSession, LingamFit, OrderingEngine, OrderingSession,
-    PartitionSpec, PartitionedPlan, RefitKind, SequentialEngine, StreamingConfig, StreamingLingam,
-    StreamingVarLingam, SweepCounters, SweepStrategy, VarLingam,
+    PartitionSpec, PartitionedPlan, RefitKind, SequentialEngine, StepObserver, StreamingConfig,
+    StreamingLingam, StreamingVarLingam, SweepCounters, SweepStrategy, VarLingam,
 };
+use crate::obs::log;
+use crate::obs::trace::{SpanKind, TraceBuilder, TraceRecord};
 use crate::util::{Error, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -99,6 +101,36 @@ pub struct Job {
     /// reader registered in the server's watch registry at submit time.
     /// `None` for every one-shot job kind.
     pub watch_rx: Option<Receiver<WatchInput>>,
+    /// The job's trace context, minted at submit (see [`crate::obs`]):
+    /// every pipeline stage records its span here, and the terminal
+    /// frame carries the closed record as `"timing"`.
+    pub trace: Arc<TraceBuilder>,
+}
+
+/// Close a job's trace at its terminal frame: book the submit-to-done
+/// latency, log the terminal event with the trace id, and park the
+/// record for `trace` lookups. Returns the record so `result` frames can
+/// embed its `timing_json` (error/cancel terminals drop it).
+fn finish_trace(shared: &Shared, job: &Job, event: &str) -> TraceRecord {
+    let rec = job.trace.finish();
+    shared.metrics.hist_job_latency.record_us(rec.total_us.max(1));
+    let fields = [("job", job.spec.id.as_str()), ("trace", rec.trace_hex.as_str())];
+    if event == "job_failed" {
+        log::warn(event, &fields);
+    } else {
+        log::info(event, &fields);
+    }
+    shared.traces.insert(rec.clone());
+    rec
+}
+
+/// Book the submit-to-pop wait into the job's trace and the queue-wait
+/// histogram (called at the queue pop for leaders, at the fusion-window
+/// tap for gathered members).
+fn record_queue_wait(shared: &Shared, job: &Job) {
+    let waited = job.trace.started().elapsed();
+    job.trace.record_at(SpanKind::QueueWait, job.trace.started(), waited);
+    shared.metrics.hist_queue_wait.record(waited);
 }
 
 /// Shape + engine configuration a parked workspace can be reused for.
@@ -124,6 +156,7 @@ const MAX_PARKED_SESSIONS: usize = 8;
 pub(super) fn worker_loop(shared: &Shared) {
     let mut pool: SessionPool = HashMap::new();
     while let Some((client, job)) = shared.queue.pop() {
+        record_queue_wait(shared, &job);
         match fuse_key(shared.worker_count, &job) {
             Some(key) if shared.max_batch > 1 => run_fused(shared, &mut pool, client, job, key),
             _ => {
@@ -171,10 +204,20 @@ fn answer_from_cache(shared: &Shared, job: &Job) -> bool {
         return false;
     };
     let choice = choice.resolve_workers(shared.worker_count);
-    match shared.cache.get(cache_key(panel, choice, &job.spec.kind)) {
+    let probe = Instant::now();
+    let hit = shared.cache.get(cache_key(panel, choice, &job.spec.kind));
+    job.trace.record_at(SpanKind::CacheProbe, probe, probe.elapsed());
+    match hit {
         Some(hit) => {
             shared.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
-            (job.sink)(&protocol::frame_result(Some(job.spec.id.as_str()), true, 0.0, &hit));
+            let rec = finish_trace(shared, job, "job_completed");
+            (job.sink)(&protocol::frame_result_traced(
+                Some(job.spec.id.as_str()),
+                true,
+                0.0,
+                &hit,
+                Some(&rec.timing_json()),
+            ));
             true
         }
         None => false,
@@ -193,6 +236,7 @@ fn run_fused(shared: &Shared, pool: &mut SessionPool, leader: u64, job: Job, key
     let deadline = t0 + Duration::from_millis(shared.fuse_wait_ms);
     if job.cancel.load(Ordering::Relaxed) {
         shared.metrics.jobs_canceled.fetch_add(1, Ordering::Relaxed);
+        finish_trace(shared, &job, "job_canceled");
         (job.sink)(&protocol::frame_canceled(&job.spec.id));
         shared.cancels.unregister(&job.spec.id, &job.cancel);
         shared.queue.done(leader);
@@ -205,6 +249,9 @@ fn run_fused(shared: &Shared, pool: &mut SessionPool, leader: u64, job: Job, key
     }
     let mut owed = vec![leader];
     let mut members: Vec<Job> = vec![job];
+    // when each member entered the window (leader: when it opened), so
+    // the fuse-wait span covers exactly tap → dispatch per job
+    let mut taps: Vec<Instant> = vec![t0];
     loop {
         let want = shared.max_batch.saturating_sub(members.len());
         if want == 0 {
@@ -220,17 +267,20 @@ fn run_fused(shared: &Shared, pool: &mut SessionPool, leader: u64, job: Job, key
             if !owed.contains(&c) {
                 owed.push(c);
             }
+            record_queue_wait(shared, &j);
             // ghost-slot fix: members answered before dispatch leave the
             // group immediately, so the next round refills their slots
             // instead of dispatching a batch below `max_batch`
             if j.cancel.load(Ordering::Relaxed) {
                 shared.metrics.jobs_canceled.fetch_add(1, Ordering::Relaxed);
+                finish_trace(shared, &j, "job_canceled");
                 (j.sink)(&protocol::frame_canceled(&j.spec.id));
                 shared.cancels.unregister(&j.spec.id, &j.cancel);
             } else if answer_from_cache(shared, &j) {
                 shared.cancels.unregister(&j.spec.id, &j.cancel);
             } else {
                 members.push(j);
+                taps.push(Instant::now());
             }
         }
     }
@@ -238,6 +288,9 @@ fn run_fused(shared: &Shared, pool: &mut SessionPool, leader: u64, job: Job, key
     if members.len() == 1 {
         run_job(shared, pool, &members[0]);
     } else {
+        for (j, tap) in members.iter().zip(&taps) {
+            j.trace.record_at(SpanKind::FuseWait, *tap, tap.elapsed());
+        }
         shared.metrics.add_batch(members.len() as u64, t0.elapsed().as_millis() as u64);
         run_batch(shared, &members, key.choice);
     }
@@ -275,14 +328,20 @@ fn run_batch(shared: &Shared, members: &[Job], choice: EngineChoice) {
             shared.metrics.jobs_failed.fetch_add(members.len() as u64, Ordering::Relaxed);
             let msg = e.to_string();
             for j in members {
+                finish_trace(shared, j, "job_failed");
                 (j.sink)(&protocol::frame_error(Some(j.spec.id.as_str()), &msg));
             }
             return;
         }
     };
+    // one lock step is every live member's ordering step: book it into
+    // the step histogram once and into each member's trace (a lane
+    // dropped mid-batch keeps accruing — its wall clock really does run
+    // until the batch finishes)
+    let mut obs = BatchStepObserver { shared, members };
     let total = session.steps_total();
     while !session.finished() {
-        session.step_live();
+        let _ = session.step_live_observed(&mut obs);
         let step = session.steps_done();
         for (p, j) in members.iter().enumerate() {
             if !session.live(p) {
@@ -292,7 +351,9 @@ fn run_batch(shared: &Shared, members: &[Job], choice: EngineChoice) {
                 let reason = Error::Canceled(format!("fit canceled at step {step}/{total}"));
                 session.drop_lane(p, reason);
             } else {
+                let f0 = Instant::now();
                 (j.sink)(&protocol::frame_progress(&j.spec.id, "ordering", step, total));
+                j.trace.record_at(SpanKind::FrameFlush, f0, f0.elapsed());
             }
         }
     }
@@ -315,17 +376,44 @@ fn run_batch(shared: &Shared, members: &[Job], choice: EngineChoice) {
                 }
                 shared.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
                 shared.metrics.busy_ms_total.fetch_add(ms.round() as u64, Ordering::Relaxed);
-                (j.sink)(&protocol::frame_result(Some(j.spec.id.as_str()), false, ms, &payload));
+                let rec = finish_trace(shared, j, "job_completed");
+                (j.sink)(&protocol::frame_result_traced(
+                    Some(j.spec.id.as_str()),
+                    false,
+                    ms,
+                    &payload,
+                    Some(&rec.timing_json()),
+                ));
             }
             Err(Error::Canceled(_)) => {
                 shared.metrics.jobs_canceled.fetch_add(1, Ordering::Relaxed);
+                finish_trace(shared, j, "job_canceled");
                 (j.sink)(&protocol::frame_canceled(&j.spec.id));
             }
             Err(e) => {
                 shared.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                finish_trace(shared, j, "job_failed");
                 (j.sink)(&protocol::frame_error(Some(j.spec.id.as_str()), &e.to_string()));
             }
         }
+    }
+}
+
+/// Observer installed on the batched lock-step loop: one histogram
+/// observation per lock step, one `order_step` span increment per
+/// member (see [`run_batch`]).
+struct BatchStepObserver<'a> {
+    shared: &'a Shared,
+    members: &'a [Job],
+}
+
+impl StepObserver for BatchStepObserver<'_> {
+    fn step_done(&mut self, _step: usize, _total: usize, elapsed: Duration) -> Result<()> {
+        self.shared.metrics.hist_step.record(elapsed);
+        for j in self.members {
+            j.trace.record(SpanKind::OrderStep, elapsed);
+        }
+        Ok(())
     }
 }
 
@@ -336,6 +424,7 @@ fn run_job(shared: &Shared, pool: &mut SessionPool, job: &Job) {
     let t0 = Instant::now();
     if job.cancel.load(Ordering::Relaxed) {
         shared.metrics.jobs_canceled.fetch_add(1, Ordering::Relaxed);
+        finish_trace(shared, job, "job_canceled");
         (job.sink)(&protocol::frame_canceled(id));
         return;
     }
@@ -350,14 +439,23 @@ fn run_job(shared: &Shared, pool: &mut SessionPool, job: &Job) {
             let ms = t0.elapsed().as_secs_f64() * 1e3;
             shared.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
             shared.metrics.busy_ms_total.fetch_add(ms.round() as u64, Ordering::Relaxed);
-            (job.sink)(&protocol::frame_result(Some(id.as_str()), cached, ms, &payload));
+            let rec = finish_trace(shared, job, "job_completed");
+            (job.sink)(&protocol::frame_result_traced(
+                Some(id.as_str()),
+                cached,
+                ms,
+                &payload,
+                Some(&rec.timing_json()),
+            ));
         }
         Err(Error::Canceled(_)) => {
             shared.metrics.jobs_canceled.fetch_add(1, Ordering::Relaxed);
+            finish_trace(shared, job, "job_canceled");
             (job.sink)(&protocol::frame_canceled(id));
         }
         Err(e) => {
             shared.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+            finish_trace(shared, job, "job_failed");
             (job.sink)(&protocol::frame_error(Some(id.as_str()), &e.to_string()));
         }
     }
@@ -377,8 +475,11 @@ fn execute(shared: &Shared, pool: &mut SessionPool, job: &Job) -> Result<(Arc<St
     // the reader already short-circuits inline panels, but the key is
     // re-checked here so CSV panels (hashable only after loading) and
     // identical inline jobs that were queued concurrently still hit
+    let probe = Instant::now();
     let key = cache_key(panel, choice, &job.spec.kind);
-    if let Some(hit) = shared.cache.get(key) {
+    let hit = shared.cache.get(key);
+    job.trace.record_at(SpanKind::CacheProbe, probe, probe.elapsed());
+    if let Some(hit) = hit {
         return Ok((hit, true));
     }
     let payload = match &job.spec.kind {
@@ -490,6 +591,7 @@ fn run_fit(
                 workers,
                 pruned: strategy == SweepStrategy::Pruned,
             };
+            let acquire = Instant::now();
             let mut session = match pool.remove(&key) {
                 Some(mut parked) => {
                     parked.reset(panel)?;
@@ -497,7 +599,8 @@ fn run_fit(
                 }
                 None => IncrementalSession::with_strategy(panel, workers, false, strategy)?,
             };
-            let outcome = drive_fit(&mut session, panel, job);
+            job.trace.record_at(SpanKind::SessionAcquire, acquire, acquire.elapsed());
+            let outcome = drive_fit(shared, &mut session, panel, job);
             let counters = session.sweep_counters();
             if pool.len() >= MAX_PARKED_SESSIONS {
                 if let Some(evict) = pool.keys().next().copied() {
@@ -510,6 +613,7 @@ fn run_fit(
         None => {
             let seq_engine;
             let xla_engine;
+            let acquire = Instant::now();
             let mut session: Box<dyn OrderingSession + '_> = match choice {
                 EngineChoice::Sequential => {
                     seq_engine = SequentialEngine;
@@ -520,7 +624,8 @@ fn run_fit(
                     xla_engine.session(panel)?
                 }
             };
-            let outcome = drive_fit(session.as_mut(), panel, job);
+            job.trace.record_at(SpanKind::SessionAcquire, acquire, acquire.elapsed());
+            let outcome = drive_fit(shared, session.as_mut(), panel, job);
             let counters = session.sweep_counters();
             (outcome, counters)
         }
@@ -529,21 +634,48 @@ fn run_fit(
     // fit's visited pairs show up in the server metrics
     shared.metrics.add_sweep(&counters);
     let fit = outcome?;
+    // the regression is timed inside the fit's stage profile; lift it
+    // into the trace post hoc (it runs after the last observed step)
+    let reg = fit.profile.secs("regression");
+    if reg > 0.0 {
+        job.trace.record(SpanKind::Regression, Duration::from_secs_f64(reg));
+    }
     Ok(protocol::fit_data(&spec, &fit.order, &fit.adjacency, &counters))
 }
 
-/// The serve fit driver: `DirectLingam::fit_session_observed` — the one
-/// shared d−1-step loop — with the observer streaming per-step progress
-/// frames and turning a raised cancel flag into [`Error::Canceled`] at
-/// the step boundary.
-fn drive_fit(session: &mut dyn OrderingSession, panel: &Mat, job: &Job) -> Result<LingamFit> {
-    DirectLingam::new().fit_session_observed(panel, session, &mut |step, total| {
-        if job.cancel.load(Ordering::Relaxed) {
+/// Observer installed on the solo fit loop: per-step latency into the
+/// step histogram and the job's `order_step` span, progress frames
+/// (timed as `frame_flush`), and a raised cancel flag turned into
+/// [`Error::Canceled`] at the step boundary.
+struct ServeStepObserver<'a> {
+    shared: &'a Shared,
+    job: &'a Job,
+}
+
+impl StepObserver for ServeStepObserver<'_> {
+    fn step_done(&mut self, step: usize, total: usize, elapsed: Duration) -> Result<()> {
+        self.shared.metrics.hist_step.record(elapsed);
+        self.job.trace.record(SpanKind::OrderStep, elapsed);
+        if self.job.cancel.load(Ordering::Relaxed) {
             return Err(Error::Canceled(format!("fit canceled at step {step}/{total}")));
         }
-        (job.sink)(&protocol::frame_progress(&job.spec.id, "ordering", step, total));
+        let f0 = Instant::now();
+        (self.job.sink)(&protocol::frame_progress(&self.job.spec.id, "ordering", step, total));
+        self.job.trace.record_at(SpanKind::FrameFlush, f0, f0.elapsed());
         Ok(())
-    })
+    }
+}
+
+/// The serve fit driver: `DirectLingam::fit_session_stepped` — the one
+/// shared d−1-step loop — with [`ServeStepObserver`] installed.
+fn drive_fit(
+    shared: &Shared,
+    session: &mut dyn OrderingSession,
+    panel: &Mat,
+    job: &Job,
+) -> Result<LingamFit> {
+    let mut obs = ServeStepObserver { shared, job };
+    DirectLingam::new().fit_session_stepped(panel, session, &mut obs)
 }
 
 /// Partitioned fit: route through [`DirectLingam::fit_plan`] with a
@@ -776,6 +908,7 @@ fn run_watch(shared: &Shared, job: &Job) {
     };
     let fail = |msg: &str| {
         shared.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+        finish_trace(shared, job, "job_failed");
         (job.sink)(&protocol::frame_error(Some(id.as_str()), msg));
     };
     let Some(rx) = job.watch_rx.as_ref() else {
@@ -839,7 +972,10 @@ fn run_watch(shared: &Shared, job: &Job) {
                 ingested += 1;
                 shared.metrics.frames_ingested.fetch_add(1, Ordering::Relaxed);
                 let fit = driver.ingest(&row, &job.cancel);
-                let ms = f0.elapsed().as_secs_f64() * 1e3;
+                let dt = f0.elapsed();
+                job.trace.record_at(SpanKind::Stream, f0, dt);
+                shared.metrics.hist_watch_frame.record(dt);
+                let ms = dt.as_secs_f64() * 1e3;
                 busy_ms += ms;
                 match fit {
                     // window still warming: no frame to emit yet
@@ -857,6 +993,7 @@ fn run_watch(shared: &Shared, job: &Job) {
                         if frame.resynced {
                             shared.metrics.resyncs.fetch_add(1, Ordering::Relaxed);
                         }
+                        let w0 = Instant::now();
                         (job.sink)(&protocol::frame_adjacency(
                             id,
                             ingested,
@@ -866,6 +1003,7 @@ fn run_watch(shared: &Shared, job: &Job) {
                             ms,
                             &frame.data,
                         ));
+                        job.trace.record_at(SpanKind::FrameFlush, w0, w0.elapsed());
                     }
                     Err(Error::Canceled(_)) => break WatchEnd::Canceled,
                     Err(e) => break WatchEnd::Failed(e),
@@ -889,14 +1027,23 @@ fn run_watch(shared: &Shared, job: &Job) {
                 driver.resyncs(),
             );
             let ms = t0.elapsed().as_secs_f64() * 1e3;
-            (job.sink)(&protocol::frame_result(Some(id.as_str()), false, ms, &data));
+            let rec = finish_trace(shared, job, "job_completed");
+            (job.sink)(&protocol::frame_result_traced(
+                Some(id.as_str()),
+                false,
+                ms,
+                &data,
+                Some(&rec.timing_json()),
+            ));
         }
         WatchEnd::Canceled | WatchEnd::Disconnected => {
             shared.metrics.jobs_canceled.fetch_add(1, Ordering::Relaxed);
+            finish_trace(shared, job, "job_canceled");
             (job.sink)(&protocol::frame_canceled(id));
         }
         WatchEnd::Failed(e) => {
             shared.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+            finish_trace(shared, job, "job_failed");
             (job.sink)(&protocol::frame_error(Some(id.as_str()), &e.to_string()));
         }
     }
@@ -964,10 +1111,11 @@ mod tests {
 
     fn job(engine: &str, panel: PanelSource, kind: JobKind) -> Job {
         Job {
-            spec: JobSpec { id: "j".into(), panel, engine: engine.into(), kind },
+            spec: JobSpec { id: "j".into(), panel, engine: engine.into(), kind, trace: 0 },
             cancel: Arc::new(AtomicBool::new(false)),
             sink: Arc::new(|_| {}),
             watch_rx: None,
+            trace: Arc::new(TraceBuilder::mint("j")),
         }
     }
 

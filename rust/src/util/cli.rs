@@ -159,9 +159,9 @@ pub fn engine_opt() -> OptSpec {
 
 /// Option specs for the `serve`/`client` subcommands — one shared list
 /// so the binary and any future driver advertise the same grammar.
-/// (`--json`, being a bare flag, is deliberately not an `OptSpec`:
-/// specs consume a following value, which would swallow a positional
-/// subcommand.)
+/// (`--json` and `--log-json`, being bare flags, are deliberately not
+/// `OptSpec`s: specs consume a following value, which would swallow a
+/// positional subcommand.)
 pub fn serve_opts() -> Vec<OptSpec> {
     vec![
         opt("addr", "serve/client: TCP address (port 0 picks a free port)", Some("127.0.0.1:0")),
@@ -182,6 +182,7 @@ pub fn serve_opts() -> Vec<OptSpec> {
         opt("resync-every", "watch: full resync every K frames (0 = drift-only)", Some("64")),
         opt("drift-tol", "watch: relative moment-drift bound that forces a resync", Some("1e-8")),
         opt("edge-threshold", "watch: |beta| threshold for streamed adjacency edges", Some("0.05")),
+        opt("log-level", "serve: stderr log level (error|warn|info|debug)", Some("warn")),
     ]
 }
 
@@ -241,6 +242,8 @@ mod tests {
         assert_eq!(a.usize("resync-every"), 64);
         assert!((a.f64("drift-tol") - 1e-8).abs() < 1e-20);
         assert!((a.f64("edge-threshold") - 0.05).abs() < 1e-12);
+        assert_eq!(a.req("log-level"), "warn");
+        assert!(!a.flag("log-json"), "log-json is a bare flag, absent by default");
     }
 
     #[test]

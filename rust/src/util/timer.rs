@@ -52,12 +52,23 @@ impl StageProfile {
     }
 
     /// Fraction of total time spent in one stage (the Figure-2 number).
+    ///
+    /// Always finite, never NaN. When the profile has accumulated zero
+    /// total duration but *has* recorded entries (stages timed below
+    /// clock resolution — common for micro panels), the fraction falls
+    /// back to the stage's share of recorded entries, so a stage that
+    /// was genuinely exercised does not read as 0.0 just because it was
+    /// fast. An empty profile (no entries anywhere) reports 0.0.
     pub fn fraction(&self, stage: &str) -> f64 {
         let t = self.total_secs();
-        if t == 0.0 {
+        if t > 0.0 {
+            return self.secs(stage) / t;
+        }
+        let entries: u64 = self.counts.values().sum();
+        if entries == 0 {
             0.0
         } else {
-            self.secs(stage) / t
+            self.count(stage) as f64 / entries as f64
         }
     }
 
@@ -134,6 +145,26 @@ mod tests {
         let s = bench(16, 0.2, || (0..1000).sum::<u64>());
         assert!(s.iters >= 1);
         assert!(s.min_secs <= s.mean_secs && s.mean_secs <= s.max_secs);
+    }
+
+    #[test]
+    fn fraction_is_nan_free_on_zero_total() {
+        // empty profile: nothing recorded anywhere → 0.0, not NaN
+        let empty = StageProfile::new();
+        assert_eq!(empty.fraction("ordering"), 0.0);
+        // zero-duration entries: stages were exercised but the clock
+        // read 0 — fraction falls back to the entry-count share
+        let mut p = StageProfile::new();
+        p.add("ordering", Duration::ZERO);
+        p.add("ordering", Duration::ZERO);
+        p.add("regression", Duration::ZERO);
+        let f = p.fraction("ordering");
+        assert!(f.is_finite());
+        assert!((f - 2.0 / 3.0).abs() < 1e-12, "got {f}");
+        assert_eq!(p.fraction("absent"), 0.0);
+        // once real time lands, the time-weighted fraction takes over
+        p.add("ordering", Duration::from_millis(3));
+        assert!((p.fraction("ordering") - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -304,3 +304,73 @@ fn prop_interpolated_values_within_endpoints() {
         }
     });
 }
+
+// --------------------------------------------------- obs histograms
+
+#[test]
+fn prop_hist_quantiles_track_exact_ranks() {
+    use alingam::obs::hist::Histogram;
+    props("hist quantile error", 30, |g: &mut Gen| {
+        let n = g.usize_in(50, 400);
+        // log-uniform latencies spanning µs to tens of seconds — the
+        // regime the log-bucketed histogram is built for
+        let mut values: Vec<u64> = (0..n)
+            .map(|_| 10f64.powf(g.f64_in(0.0, 7.0)).round().max(1.0) as u64)
+            .collect();
+        let h = Histogram::new();
+        for &v in &values {
+            h.record_us(v);
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), n as u64);
+        assert_eq!(snap.sum_us(), values.iter().sum::<u64>());
+        assert_eq!(snap.max_us(), *values.iter().max().unwrap());
+        values.sort_unstable();
+        for q in [0.5, 0.95, 0.99] {
+            let rank = (((n as f64) * q).ceil() as usize).clamp(1, n) - 1;
+            let exact = values[rank] as f64;
+            let est = snap.quantile_us(q);
+            // bucket width is 2^(1/16) ≈ 4.4%; the midpoint readout
+            // halves that, and adjacent ranks inside one bucket add no
+            // error — 5% + 1µs covers rounding at the bottom bucket
+            let tol = 0.05 * exact + 1.0;
+            assert!(
+                (est - exact).abs() <= tol,
+                "q={q}: estimate {est} vs exact {exact} (n={n})"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_hist_merge_equals_single_histogram() {
+    use alingam::obs::hist::Histogram;
+    props("hist merge", 30, |g: &mut Gen| {
+        let n = g.usize_in(2, 300);
+        let split = g.usize_in(1, n - 1);
+        let values: Vec<u64> =
+            (0..n).map(|_| 10f64.powf(g.f64_in(0.0, 6.0)).round().max(1.0) as u64).collect();
+        let (a, b) = (Histogram::new(), Histogram::new());
+        let whole = Histogram::new();
+        for (i, &v) in values.iter().enumerate() {
+            if i < split {
+                a.record_us(v);
+            } else {
+                b.record_us(v);
+            }
+            whole.record_us(v);
+        }
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        let direct = whole.snapshot();
+        assert_eq!(merged.count(), direct.count());
+        assert_eq!(merged.sum_us(), direct.sum_us());
+        assert_eq!(merged.max_us(), direct.max_us());
+        // bucket-exact: the merged rendering is byte-identical, so the
+        // fleet supervisor's re-render loses nothing
+        assert_eq!(merged.to_json(), direct.to_json());
+        for q in [0.5, 0.9, 0.99] {
+            assert_eq!(merged.quantile_us(q), direct.quantile_us(q), "q={q}");
+        }
+    });
+}

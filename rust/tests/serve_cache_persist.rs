@@ -30,8 +30,8 @@ fn start_with_dir(dir: &PathBuf) -> Server {
         cache_entries: 8,
         fuse_wait_ms: 0,
         max_batch: 1,
-        http_addr: None,
         cache_dir: Some(dir.clone()),
+        ..ServeConfig::default()
     })
     .expect("server start")
 }

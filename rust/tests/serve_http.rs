@@ -24,7 +24,7 @@ fn start_http(workers: usize) -> Server {
         fuse_wait_ms: 0,
         max_batch: 1,
         http_addr: Some("127.0.0.1:0".to_string()),
-        cache_dir: None,
+        ..ServeConfig::default()
     })
     .expect("server start")
 }
@@ -236,8 +236,7 @@ fn two_shard_fleet_survives_a_kill_and_books_the_restart() {
         cache_entries: 8,
         fuse_wait_ms: 0,
         max_batch: 1,
-        http_addr: None,
-        cache_dir: None,
+        ..ServeConfig::default()
     };
     // the test harness binary is not `alingam`; point the supervisor at
     // the real one Cargo built for this test run
@@ -321,8 +320,7 @@ fn all_shards_dead_errors_promptly_then_supervisor_recovers() {
         cache_entries: 8,
         fuse_wait_ms: 0,
         max_batch: 1,
-        http_addr: None,
-        cache_dir: None,
+        ..ServeConfig::default()
     };
     let exe = std::path::PathBuf::from(env!("CARGO_BIN_EXE_alingam"));
     let sup = Supervisor::start(cfg, 2, Some(exe)).expect("fleet start");

@@ -1,0 +1,461 @@
+//! Observability integration over real sockets: a fit answered over
+//! HTTP carries a `timing` object whose span durations sum to the job's
+//! observed wall clock, `GET /trace/<t>` replays the same spans (by
+//! trace id and by job id), the JSON metrics frame and the Prometheus
+//! exposition are complete over mixed fit/cache-hit/bootstrap/watch/
+//! cancel traffic, and a 2-shard fleet merges per-child histograms and
+//! relays trace lookups through the front.
+
+use alingam::linalg::Mat;
+use alingam::serve::protocol::{self, Json};
+use alingam::serve::{ServeConfig, Server};
+use alingam::sim::{sample_from_dag, Noise};
+use alingam::util::rng::Pcg64;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Instant;
+
+fn start(workers: usize, cache: usize, http: bool) -> Server {
+    Server::start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers,
+        queue_capacity: 16,
+        cache_entries: cache,
+        fuse_wait_ms: 0,
+        max_batch: 1,
+        http_addr: http.then(|| "127.0.0.1:0".to_string()),
+        ..ServeConfig::default()
+    })
+    .expect("server start")
+}
+
+fn chain_panel(n: usize, d: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    sample_from_dag(&alingam::graph::chain_dag(d, 1.0), Noise::Uniform01, n, &mut rng)
+}
+
+// ------------------------------------------------------ socket helpers
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+        Client { reader, writer: stream }
+    }
+
+    fn send(&mut self, line: &str) {
+        self.writer.write_all(line.as_bytes()).expect("send");
+        self.writer.write_all(b"\n").expect("send");
+    }
+
+    fn recv(&mut self) -> Json {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("recv");
+        assert!(n > 0, "connection closed mid-stream");
+        protocol::parse_json(line.trim_end()).expect("server frames must be valid json")
+    }
+
+    fn recv_terminal(&mut self, id: &str) -> (String, Json) {
+        loop {
+            let f = self.recv();
+            if f.get("id").and_then(Json::as_str) != Some(id) {
+                continue;
+            }
+            if let Some(ev @ ("result" | "error" | "canceled")) =
+                f.get("event").and_then(Json::as_str)
+            {
+                let ev = ev.to_string();
+                return (ev, f);
+            }
+        }
+    }
+
+    fn recv_event(&mut self, event: &str) -> Json {
+        loop {
+            let f = self.recv();
+            if f.get("event").and_then(Json::as_str) == Some(event) {
+                return f;
+            }
+        }
+    }
+}
+
+fn http_exchange(addr: SocketAddr, request: &str) -> String {
+    let mut stream = TcpStream::connect(addr).expect("connect http");
+    stream.write_all(request.as_bytes()).expect("send http request");
+    let mut response = String::new();
+    stream.read_to_string(&mut response).expect("read http response");
+    response
+}
+
+fn http_get(addr: SocketAddr, path: &str) -> String {
+    http_exchange(addr, &format!("GET {path} HTTP/1.1\r\nHost: test\r\n\r\n"))
+}
+
+fn http_post(addr: SocketAddr, path: &str, body: &str) -> String {
+    http_exchange(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nHost: test\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+fn status_line(response: &str) -> &str {
+    response.lines().next().unwrap_or("")
+}
+
+fn response_body(response: &str) -> &str {
+    response.split("\r\n\r\n").nth(1).unwrap_or("")
+}
+
+fn sse_frames(response: &str) -> Vec<Json> {
+    response_body(response)
+        .lines()
+        .filter_map(|l| l.strip_prefix("data: "))
+        .map(|l| protocol::parse_json(l).expect("sse events must be valid frames"))
+        .collect()
+}
+
+fn event_of(frame: &Json) -> &str {
+    frame.get("event").and_then(Json::as_str).unwrap_or("")
+}
+
+/// Sum of the `ms` fields across a timing/trace `spans` array.
+fn span_ms_sum(spans: &Json) -> f64 {
+    spans
+        .as_arr()
+        .expect("spans array")
+        .iter()
+        .map(|s| s.get("ms").and_then(Json::as_f64).expect("span ms"))
+        .sum()
+}
+
+// ------------------------------------------------- timing + trace route
+
+/// The tentpole acceptance criterion: a fit over HTTP returns a
+/// `timing` object whose span durations sum (within 5%) to the job's
+/// observed wall clock, and `GET /trace/<id>` replays the same spans —
+/// addressable by trace id and by job id.
+#[test]
+fn http_fit_timing_sums_to_wall_clock_and_trace_route_replays_it() {
+    let server = start(1, 8, true);
+    let http = server.http_local_addr().expect("http listener");
+    let body = protocol::fit_request("t1", "vectorized", &chain_panel(500, 8, 11));
+
+    let wall_start = Instant::now();
+    let resp = http_post(http, "/fit", &body);
+    let wall_ms = wall_start.elapsed().as_secs_f64() * 1e3;
+    assert!(status_line(&resp).starts_with("HTTP/1.1 200"), "got {}", status_line(&resp));
+
+    let frames = sse_frames(&resp);
+    let result = frames.last().expect("terminal frame");
+    assert_eq!(event_of(result), "result");
+    let timing = result.get("timing").expect("result frame must carry a timing object");
+    let trace_hex = timing.get("trace").and_then(Json::as_str).expect("trace id").to_string();
+    assert_eq!(trace_hex.len(), 32, "trace ids are 128-bit lowercase hex");
+    let total_ms = timing.get("total_ms").and_then(Json::as_f64).expect("total_ms");
+    assert!(total_ms > 0.0, "a real fit takes measurable time");
+    // the job's wall clock (submit → terminal flush) is bounded by the
+    // client-observed exchange, and the spans partition it: their sum
+    // must land within 5% of the observed total
+    assert!(
+        total_ms <= wall_ms + 5.0,
+        "job wall {total_ms}ms cannot exceed the client-observed {wall_ms}ms"
+    );
+    let sum_ms = span_ms_sum(timing.get("spans").expect("spans"));
+    let drift = (sum_ms - total_ms).abs();
+    assert!(
+        drift <= 0.05 * total_ms + 0.1,
+        "span sum {sum_ms}ms must be within 5% of the observed wall {total_ms}ms"
+    );
+    let names: Vec<&str> = timing
+        .get("spans")
+        .and_then(Json::as_arr)
+        .expect("spans array")
+        .iter()
+        .map(|s| s.get("span").and_then(Json::as_str).unwrap_or(""))
+        .collect();
+    assert!(names.contains(&"order_step"), "fit timing must attribute ordering steps: {names:?}");
+    assert!(names.contains(&"queue_wait"), "fit timing must attribute queue wait: {names:?}");
+
+    // replay by trace id: the same spans come back from the trace ring
+    let resp = http_get(http, &format!("/trace/{trace_hex}"));
+    assert!(status_line(&resp).starts_with("HTTP/1.1 200"), "got {}", status_line(&resp));
+    let replay = protocol::parse_json(response_body(&resp).trim()).expect("trace json");
+    assert_eq!(event_of(&replay), "trace");
+    assert_eq!(replay.get("found").and_then(Json::as_bool), Some(true));
+    assert_eq!(replay.get("trace").and_then(Json::as_str), Some(trace_hex.as_str()));
+    assert_eq!(replay.get("job").and_then(Json::as_str), Some("t1"));
+    assert_eq!(
+        replay.get("spans").expect("replayed spans").render(),
+        timing.get("spans").expect("timing spans").render(),
+        "the trace route must replay exactly the spans attached to the result frame"
+    );
+
+    // the job id is an alias for the latest trace under that id
+    let resp = http_get(http, "/trace/t1");
+    let by_job = protocol::parse_json(response_body(&resp).trim()).expect("trace json");
+    assert_eq!(by_job.get("trace").and_then(Json::as_str), Some(trace_hex.as_str()));
+
+    // unknown ids answer 404 with a found:false body
+    let resp = http_get(http, "/trace/no-such-job");
+    assert!(status_line(&resp).starts_with("HTTP/1.1 404"), "got {}", status_line(&resp));
+    let miss = protocol::parse_json(response_body(&resp).trim()).expect("miss json");
+    assert_eq!(miss.get("found").and_then(Json::as_bool), Some(false));
+    server.shutdown();
+}
+
+/// The same trace is queryable over the TCP protocol (`trace` request),
+/// and a cache-short-circuited job still gets a trace (no spans beyond
+/// the probe, but a real record).
+#[test]
+fn tcp_trace_request_finds_jobs_and_cache_hits_get_traces_too() {
+    let server = start(1, 8, false);
+    let mut c = Client::connect(server.local_addr());
+    let panel = chain_panel(400, 6, 12);
+    c.send(&protocol::fit_request("q1", "vectorized", &panel));
+    let (ev, first) = c.recv_terminal("q1");
+    assert_eq!(ev, "result");
+    let first_timing = first.get("timing").expect("timing");
+    let first_trace = first_timing.get("trace").and_then(Json::as_str).unwrap().to_string();
+
+    // byte-identical re-fit: answered from the cache, with its own trace
+    c.send(&protocol::fit_request("q2", "vectorized", &panel));
+    let (ev, second) = c.recv_terminal("q2");
+    assert_eq!(ev, "result");
+    assert_eq!(second.get("cached").and_then(Json::as_bool), Some(true));
+    let second_timing = second.get("timing").expect("cache hits carry timing too");
+    let second_trace = second_timing.get("trace").and_then(Json::as_str).unwrap().to_string();
+    assert_ne!(first_trace, second_trace, "every submission mints a fresh trace");
+
+    c.send(&protocol::trace_request(&first_trace));
+    let t = c.recv_event("trace");
+    assert_eq!(t.get("found").and_then(Json::as_bool), Some(true));
+    assert_eq!(t.get("job").and_then(Json::as_str), Some("q1"));
+
+    // by job id the ring answers the *latest* trace for that id
+    c.send(&protocol::trace_request("q2"));
+    let t = c.recv_event("trace");
+    assert_eq!(t.get("trace").and_then(Json::as_str), Some(second_trace.as_str()));
+
+    c.send(&protocol::trace_request("missing"));
+    let t = c.recv_event("trace");
+    assert_eq!(t.get("found").and_then(Json::as_bool), Some(false));
+    assert_eq!(t.get("target").and_then(Json::as_str), Some("missing"));
+    server.shutdown();
+}
+
+// ------------------------------------------------ metrics completeness
+
+/// Drive fit / cache-hit / bootstrap / watch / cancel traffic, then
+/// scrape both the JSON metrics frame and the Prometheus exposition and
+/// assert every observability family is present and populated.
+#[test]
+fn metrics_and_prometheus_are_complete_over_mixed_traffic() {
+    // cache_entries=1 forces a real eviction (satellite: the eviction
+    // age total must make mean_eviction_age_ms computable)
+    let server = start(1, 1, true);
+    let http = server.http_local_addr().expect("http listener");
+    let mut c = Client::connect(server.local_addr());
+
+    let p1 = chain_panel(300, 5, 21);
+    c.send(&protocol::fit_request("f1", "vectorized", &p1));
+    assert_eq!(c.recv_terminal("f1").0, "result");
+    c.send(&protocol::fit_request("f2", "vectorized", &p1)); // cache hit
+    let (_, f2) = c.recv_terminal("f2");
+    assert_eq!(f2.get("cached").and_then(Json::as_bool), Some(true));
+    let p2 = chain_panel(300, 5, 22);
+    c.send(&protocol::fit_request("f3", "vectorized", &p2)); // evicts p1
+    assert_eq!(c.recv_terminal("f3").0, "result");
+    c.send(&protocol::bootstrap_request("b1", "vectorized", &p2, 4, 7, 0.5));
+    assert_eq!(c.recv_terminal("b1").0, "result");
+
+    // cancel: a queued fit behind a running bootstrap is dropped
+    c.send(&protocol::bootstrap_request("b2", "vectorized", &chain_panel(400, 6, 23), 500, 1, 0.5));
+    c.send(&protocol::fit_request("c1", "vectorized", &chain_panel(300, 5, 24)));
+    c.send(&protocol::cancel_request("c1"));
+    c.send(&protocol::cancel_request("b2"));
+    assert_eq!(c.recv_terminal("b2").0, "canceled");
+    assert_eq!(c.recv_terminal("c1").0, "canceled");
+
+    // watch: subscribe, stream a window's worth of rows, end
+    let rows = chain_panel(12, 3, 25);
+    let mut w = Client::connect(server.local_addr());
+    w.send(&protocol::watch_request("w1", "vectorized", 3, 8, 0, 0, 1e-3, 0.05));
+    let _ = w.recv_event("accepted");
+    for i in 0..rows.rows() {
+        let row: Vec<f64> = (0..3).map(|j| rows[(i, j)]).collect();
+        w.send(&protocol::watch_frame_request("w1", &row));
+    }
+    w.send(&protocol::watch_end_request("w1"));
+    let (ev, _) = w.recv_terminal("w1");
+    assert_eq!(ev, "result", "a drained watch stream ends in a result summary");
+
+    // ---- JSON metrics frame
+    c.send(&protocol::control_request("metrics"));
+    let m = c.recv_event("metrics");
+    assert!(m.get("start_unix_ms").and_then(Json::as_u64).unwrap_or(0) > 0);
+    assert!(m.get("uptime_ms").and_then(Json::as_u64).is_some());
+    let jobs = m.get("jobs").expect("jobs object");
+    assert!(jobs.get("completed").and_then(Json::as_u64).unwrap_or(0) >= 4);
+    assert!(jobs.get("canceled").and_then(Json::as_u64).unwrap_or(0) >= 2);
+    assert!(jobs.get("cache_short_circuits").and_then(Json::as_u64).unwrap_or(0) >= 1);
+    let cache = m.get("cache").expect("cache object");
+    assert!(cache.get("evictions").and_then(Json::as_u64).unwrap_or(0) >= 1);
+    assert!(
+        cache.get("mean_eviction_age_ms").and_then(Json::as_f64).is_some(),
+        "mean eviction age must be computable: {}",
+        cache.render()
+    );
+    let obs = m.get("obs").expect("obs histograms object");
+    for hist in ["job_latency", "queue_wait", "step", "watch_frame"] {
+        let h = obs.get(hist).unwrap_or_else(|| panic!("missing obs.{hist}"));
+        assert!(
+            h.get("count").and_then(Json::as_u64).unwrap_or(0) > 0,
+            "obs.{hist} must have observations: {}",
+            h.render()
+        );
+        assert!(h.get("p50_us").and_then(Json::as_u64).is_some(), "obs.{hist} p50");
+        assert!(h.get("p99_us").and_then(Json::as_u64).is_some(), "obs.{hist} p99");
+    }
+
+    // status frame carries the uptime fields too (satellite b)
+    c.send(&protocol::control_request("status"));
+    let s = c.recv_event("status");
+    assert!(s.get("start_unix_ms").and_then(Json::as_u64).unwrap_or(0) > 0);
+    assert!(s.get("uptime_ms").and_then(Json::as_u64).is_some());
+
+    // ---- Prometheus exposition
+    let resp = http_get(http, "/metrics?format=prometheus");
+    assert!(status_line(&resp).starts_with("HTTP/1.1 200"), "got {}", status_line(&resp));
+    assert!(resp.contains("Content-Type: text/plain; version=0.0.4"));
+    let text = response_body(&resp);
+    for needle in [
+        "# TYPE alingam_jobs_completed_total counter",
+        "# TYPE alingam_job_latency_seconds summary",
+        "alingam_job_latency_seconds{quantile=\"0.5\"}",
+        "alingam_job_latency_seconds{quantile=\"0.95\"}",
+        "alingam_job_latency_seconds{quantile=\"0.99\"}",
+        "alingam_job_latency_seconds_count",
+        "alingam_queue_wait_seconds{quantile=\"0.5\"}",
+        "alingam_step_seconds{quantile=\"0.5\"}",
+        "alingam_watch_frame_seconds{quantile=\"0.5\"}",
+        "alingam_cache_evictions_total",
+        "alingam_cache_eviction_age_seconds_total",
+        "alingam_uptime_seconds",
+        "alingam_start_time_seconds",
+        "alingam_jobs_canceled_total",
+    ] {
+        assert!(text.contains(needle), "prometheus text missing {needle:?}:\n{text}");
+    }
+    // quantiles carry real observations, not zeros
+    let count_line = text
+        .lines()
+        .find(|l| l.starts_with("alingam_job_latency_seconds_count"))
+        .expect("job latency count sample");
+    let count: f64 =
+        count_line.split_whitespace().nth(1).expect("sample value").parse().expect("float");
+    assert!(count >= 4.0, "job latency histogram must cover the completed jobs: {count_line}");
+
+    // plain GET /metrics (no query) still answers the JSON frame
+    let resp = http_get(http, "/metrics");
+    assert!(resp.contains("Content-Type: application/json"));
+    assert_eq!(
+        protocol::parse_json(response_body(&resp).trim()).map(|f| event_of(&f).to_string()).ok(),
+        Some("metrics".to_string())
+    );
+    server.shutdown();
+}
+
+// -------------------------------------------------------- fleet merge
+
+/// Through a 2-shard fleet: the front's Prometheus exposition is the
+/// snapshot-merge of per-child histograms (count covers every job run
+/// anywhere in the fleet), fleet gauges are present, and `GET
+/// /trace/<id>` relays the owning shard's trace verbatim.
+#[cfg(unix)]
+#[test]
+fn fleet_front_merges_histograms_and_relays_traces() {
+    use alingam::serve::shard::Supervisor;
+
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 1,
+        queue_capacity: 16,
+        cache_entries: 8,
+        fuse_wait_ms: 0,
+        max_batch: 1,
+        http_addr: Some("127.0.0.1:0".to_string()),
+        ..ServeConfig::default()
+    };
+    let exe = std::path::PathBuf::from(env!("CARGO_BIN_EXE_alingam"));
+    let sup = Supervisor::start(cfg, 2, Some(exe)).expect("fleet start");
+    let http = sup.http_local_addr().expect("fleet http front");
+
+    // several distinct panels so the panel-hash router exercises shards
+    let mut traces = Vec::new();
+    for (i, seed) in [31u64, 32, 33, 34].iter().enumerate() {
+        let id = format!("fl{i}");
+        let mut c = Client::connect(sup.local_addr());
+        c.send(&protocol::fit_request(&id, "vectorized", &chain_panel(400, 6, *seed)));
+        let (ev, frame) = c.recv_terminal(&id);
+        assert_eq!(ev, "result", "fleet fit {id} failed: {}", frame.render());
+        let timing = frame.get("timing").expect("fleet results relay timing");
+        traces.push((
+            id,
+            timing.get("trace").and_then(Json::as_str).expect("trace id").to_string(),
+        ));
+    }
+
+    // trace relay: the front fans the lookup out to the owning shard —
+    // by trace id over HTTP, by job id over TCP
+    let (job, trace_hex) = &traces[0];
+    let resp = http_get(http, &format!("/trace/{trace_hex}"));
+    assert!(status_line(&resp).starts_with("HTTP/1.1 200"), "got {}", status_line(&resp));
+    let replay = protocol::parse_json(response_body(&resp).trim()).expect("trace json");
+    assert_eq!(replay.get("found").and_then(Json::as_bool), Some(true));
+    assert_eq!(replay.get("job").and_then(Json::as_str), Some(job.as_str()));
+    assert!(replay.get("spans").and_then(Json::as_arr).is_some_and(|s| !s.is_empty()));
+
+    let mut c = Client::connect(sup.local_addr());
+    c.send(&protocol::trace_request(job));
+    let t = c.recv_event("trace");
+    assert_eq!(t.get("found").and_then(Json::as_bool), Some(true));
+    c.send(&protocol::trace_request("nowhere"));
+    let t = c.recv_event("trace");
+    assert_eq!(t.get("found").and_then(Json::as_bool), Some(false));
+
+    // merged Prometheus: job-latency count covers jobs run on *both*
+    // shards (4 distinct panels over 2 shards), fleet gauges present
+    let resp = http_get(http, "/metrics?format=prometheus");
+    assert!(status_line(&resp).starts_with("HTTP/1.1 200"), "got {}", status_line(&resp));
+    let text = response_body(&resp);
+    for needle in [
+        "alingam_job_latency_seconds{quantile=\"0.5\"}",
+        "alingam_job_latency_seconds_count",
+        "alingam_queue_wait_seconds_count",
+        "alingam_step_seconds_count",
+        "alingam_shards 2",
+        "alingam_shards_live 2",
+        "# TYPE alingam_shard_restarts_total counter",
+        "alingam_start_time_seconds",
+    ] {
+        assert!(text.contains(needle), "fleet prometheus missing {needle:?}:\n{text}");
+    }
+    let count_line = text
+        .lines()
+        .find(|l| l.starts_with("alingam_job_latency_seconds_count"))
+        .expect("merged job latency count");
+    let count: f64 =
+        count_line.split_whitespace().nth(1).expect("sample value").parse().expect("float");
+    assert!(count >= 4.0, "merged histogram must cover all fleet jobs: {count_line}");
+    assert!(sup.shutdown_within(std::time::Duration::from_secs(60)), "fleet drains cleanly");
+}

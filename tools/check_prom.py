@@ -1,0 +1,168 @@
+#!/usr/bin/env python3
+"""Validate a Prometheus text-format (version 0.0.4) exposition.
+
+CI pipes the serve tier's ``GET /metrics?format=prometheus`` output
+through this checker after the smoke fits, so a malformed rendering (bad
+escaping, samples before their ``# TYPE``, duplicate families, garbage
+values) fails the build instead of silently breaking scrapes::
+
+    curl -sf 'http://127.0.0.1:PORT/metrics?format=prometheus' \\
+        | python3 tools/check_prom.py --require alingam_job_latency_seconds
+
+Checks, per the exposition-format spec:
+
+* metric names match ``[a-zA-Z_:][a-zA-Z0-9_:]*``, label names match
+  ``[a-zA-Z_][a-zA-Z0-9_]*``;
+* label values are well-formed quoted strings (``\\\\``, ``\\"`` and
+  ``\\n`` escapes only);
+* sample values parse as floats (``NaN``, ``+Inf`` and ``-Inf``
+  included);
+* every sample's family has a ``# TYPE`` line *before* it, of a valid
+  type (``counter``/``gauge``/``summary``/``histogram``/``untyped``),
+  and no family declares ``# TYPE`` twice — summaries may suffix the
+  family name with ``_sum``/``_count`` (histograms also ``_bucket``);
+* each ``--require NAME`` (repeatable) names a family that must be
+  present *with at least one sample*.
+
+Stdlib only — no third-party dependencies. Exits non-zero with a
+line-numbered message on the first violation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+
+METRIC_NAME = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+LABEL_NAME = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+VALID_TYPES = {"counter", "gauge", "summary", "histogram", "untyped"}
+# suffixes that attach a sample to a base family declared by # TYPE
+FAMILY_SUFFIXES = ("_bucket", "_sum", "_count", "_max")
+
+
+class FormatError(Exception):
+    """A violation, carrying the 1-based line number."""
+
+    def __init__(self, lineno: int, message: str):
+        super().__init__(f"line {lineno}: {message}")
+
+
+def parse_labels(lineno: int, raw: str) -> None:
+    """Validate the inside of a ``{...}`` label block."""
+    i, n = 0, len(raw)
+    while i < n:
+        m = re.match(r"[a-zA-Z_][a-zA-Z0-9_]*", raw[i:])
+        if not m:
+            raise FormatError(lineno, f"bad label name at {raw[i:]!r}")
+        i += m.end()
+        if i >= n or raw[i] != "=":
+            raise FormatError(lineno, "label name not followed by '='")
+        i += 1
+        if i >= n or raw[i] != '"':
+            raise FormatError(lineno, "label value must be quoted")
+        i += 1
+        while i < n and raw[i] != '"':
+            if raw[i] == "\\":
+                if i + 1 >= n or raw[i + 1] not in ('\\', '"', "n"):
+                    raise FormatError(lineno, f"bad escape in label value: {raw[i:i+2]!r}")
+                i += 2
+            else:
+                i += 1
+        if i >= n:
+            raise FormatError(lineno, "unterminated label value")
+        i += 1  # closing quote
+        if i < n:
+            if raw[i] != ",":
+                raise FormatError(lineno, f"expected ',' between labels, got {raw[i]!r}")
+            i += 1
+
+
+def parse_value(lineno: int, token: str) -> float:
+    if token in ("NaN", "+Inf", "-Inf", "Inf"):
+        return float(token.replace("Inf", "inf"))
+    try:
+        return float(token)
+    except ValueError:
+        raise FormatError(lineno, f"bad sample value {token!r}") from None
+
+
+def base_family(name: str, typed: dict[str, str]) -> str:
+    """Resolve a sample name to its ``# TYPE``-declared family."""
+    if name in typed:
+        return name
+    for suffix in FAMILY_SUFFIXES:
+        if name.endswith(suffix) and name[: -len(suffix)] in typed:
+            return name[: -len(suffix)]
+    return name
+
+
+def check(text: str, required: list[str]) -> None:
+    typed: dict[str, str] = {}
+    sampled: set[str] = set()
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4:
+                raise FormatError(lineno, "TYPE line must be '# TYPE <name> <type>'")
+            _, _, name, mtype = parts
+            if not METRIC_NAME.match(name):
+                raise FormatError(lineno, f"bad metric name {name!r}")
+            if mtype not in VALID_TYPES:
+                raise FormatError(lineno, f"bad metric type {mtype!r}")
+            if name in typed:
+                raise FormatError(lineno, f"duplicate TYPE for {name!r}")
+            if name in sampled:
+                raise FormatError(lineno, f"TYPE for {name!r} after its samples")
+            typed[name] = mtype
+            continue
+        if line.startswith("# HELP "):
+            parts = line.split(maxsplit=3)
+            if len(parts) < 3 or not METRIC_NAME.match(parts[2]):
+                raise FormatError(lineno, "HELP line must be '# HELP <name> <text>'")
+            continue
+        if line.startswith("#"):
+            continue  # free-form comment
+        # sample: name[{labels}] value [timestamp]
+        m = re.match(r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{([^}]*)\})?\s+(\S+)(\s+-?\d+)?\s*$", line)
+        if not m:
+            raise FormatError(lineno, f"unparseable sample line {line!r}")
+        name, _, labels, value, _ = m.groups()
+        if labels:
+            parse_labels(lineno, labels)
+        parse_value(lineno, value)
+        family = base_family(name, typed)
+        if family not in typed:
+            raise FormatError(lineno, f"sample {name!r} has no preceding # TYPE")
+        sampled.add(family)
+    missing = [r for r in required if r not in sampled]
+    if missing:
+        raise FormatError(0, f"required families absent or sample-less: {', '.join(missing)}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("path", nargs="?", help="exposition file (default: stdin)")
+    ap.add_argument(
+        "--require",
+        action="append",
+        default=[],
+        metavar="NAME",
+        help="family that must be present with samples (repeatable)",
+    )
+    args = ap.parse_args()
+    text = open(args.path, encoding="utf-8").read() if args.path else sys.stdin.read()
+    try:
+        check(text, args.require)
+    except FormatError as e:
+        print(f"check_prom: {e}", file=sys.stderr)
+        return 1
+    families = len({f for f in text.splitlines() if f.startswith('# TYPE ')})
+    print(f"check_prom: OK ({families} families)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
